@@ -1,0 +1,66 @@
+//! Allreduce micro-benchmark sweep (Figures 4 and 6) with configurable
+//! ranks/cluster, printing the same series the paper plots plus the
+//! headline-ratio checks (H1/H2).
+//!
+//! Run: `cargo run --release --example allreduce_microbench -- \
+//!       [--ranks 16] [--cluster ri2] [--max 256MB] [--json]`
+
+use mpi_dnn_train::bench;
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::nccl::NcclWorld;
+use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
+use mpi_dnn_train::util::bytes::{fmt_bytes, msg_size_sweep, parse_bytes};
+use mpi_dnn_train::util::cli::Args;
+use mpi_dnn_train::util::stats::geomean;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let ranks = args.get_usize("ranks", 16).map_err(anyhow::Error::msg)?;
+    let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
+    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(anyhow::Error::msg)?;
+    let json = args.get_bool("json");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    // the canonical Figure 6 table
+    let t = bench::fig6()?;
+    if json {
+        println!("{}", t.to_json());
+    } else {
+        println!("{t}");
+    }
+
+    // per-rank/cluster custom sweep + aggregate ratios
+    let stock = MpiWorld::new(MpiFlavor::Mvapich2, cluster.clone());
+    let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, cluster.clone());
+    let nccl = NcclWorld::new(cluster.clone()).ok();
+    let mut small_ratios = Vec::new();
+    let mut all_rows = Vec::new();
+    for bytes in msg_size_sweep(max) {
+        let s = stock.allreduce_latency(ranks, bytes).time.as_us();
+        let o = opt.allreduce_latency(ranks, bytes).time.as_us();
+        let n = nccl.as_ref().map(|w| w.allreduce_latency(ranks, bytes).time.as_us());
+        if bytes <= 128 * 1024 {
+            if let Some(n) = n {
+                small_ratios.push(n / o);
+            }
+        }
+        all_rows.push((bytes, s, o, n));
+    }
+    println!("custom sweep: {} ranks on {}", ranks, cluster.name);
+    for (bytes, s, o, n) in &all_rows {
+        println!(
+            "  {:>6}  stock {:>12.1}us  opt {:>12.1}us  nccl {}",
+            fmt_bytes(*bytes),
+            s,
+            o,
+            n.map(|v| format!("{v:>12.1}us")).unwrap_or_else(|| "n/a".into())
+        );
+    }
+    if !small_ratios.is_empty() {
+        println!(
+            "geomean NCCL2/MPI-Opt over small/medium sizes: {:.1}x (paper: 5-17x band)",
+            geomean(&small_ratios)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Figure-9 style application-level sweep on the simulated Piz Daint:
+//! all four approaches × three DNNs × 1..128 GPUs, plus the H4 throughput
+//! ratios and the config-file launcher path (writes + runs a TOML config,
+//! demonstrating the `experiment` machinery end-to-end).
+//!
+//! Run: `cargo run --release --example pizdaint_sweep`
+
+use mpi_dnn_train::bench;
+use mpi_dnn_train::config::ExperimentConfig;
+use mpi_dnn_train::models;
+use mpi_dnn_train::strategies::{self, WorldSpec};
+
+fn main() -> anyhow::Result<()> {
+    for m in ["nasnet", "resnet50", "mobilenet"] {
+        println!("{}", bench::fig9(m)?);
+    }
+
+    // H4 headline: Horovod-MPI vs gRPC at 128 GPUs
+    let cluster = mpi_dnn_train::cluster::presets::piz_daint();
+    for (model_name, paper_ratio) in [("resnet50", 1.8), ("mobilenet", 3.2)] {
+        let model = models::by_name(model_name)?;
+        let ws = WorldSpec::new(cluster.clone(), model, 128);
+        let h = strategies::by_name("horovod-cray")?.iteration(&ws)?;
+        let g = strategies::by_name("grpc")?.iteration(&ws)?;
+        println!(
+            "H4 {model_name}: Horovod-MPI/gRPC = {:.2}x (paper: {paper_ratio}x)",
+            h.imgs_per_sec / g.imgs_per_sec
+        );
+    }
+
+    // the launcher path: a TOML experiment config, parsed and executed
+    let cfg_text = r#"
+name = "pizdaint-resnet50-readme"
+
+[workload]
+cluster = "pizdaint"
+model = "resnet50"
+gpus = [1, 8, 64, 128]
+
+[comm]
+strategies = ["grpc", "baidu", "horovod-cray"]
+"#;
+    let path = std::env::temp_dir().join("pizdaint_sweep_example.toml");
+    std::fs::write(&path, cfg_text)?;
+    let cfg = ExperimentConfig::from_file(&path)?;
+    println!(
+        "\nlauncher demo: experiment `{}` on {} ({} strategies, {} world sizes) parsed OK",
+        cfg.name,
+        cfg.cluster.name,
+        cfg.strategies.len(),
+        cfg.gpus.len()
+    );
+    for &gpus in &cfg.gpus {
+        let ws = WorldSpec::new(cfg.cluster.clone(), cfg.model.clone(), gpus);
+        let mut line = format!("  {gpus:>4} GPUs:");
+        for name in &cfg.strategies {
+            let r = strategies::by_name(name)?.iteration(&ws)?;
+            line += &format!("  {name} {:.0} img/s", r.imgs_per_sec);
+        }
+        println!("{line}");
+    }
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

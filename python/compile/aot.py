@@ -1,0 +1,156 @@
+"""AOT bridge: lower JAX/Pallas computations to HLO TEXT for the rust runtime.
+
+HLO *text* (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published `xla` crate) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py, which this module generalizes.
+
+Artifacts produced per model config <cfg> (all consumed by rust/src/runtime):
+
+  artifacts/train_step_<cfg>.hlo.txt   (params[N], tokens[B,S+1]) -> (loss, grads[N])
+  artifacts/sgd_<cfg>.hlo.txt          (w[N], v[N], g[N], scale[1]) -> (w', v')
+  artifacts/params_<cfg>.bin           little-endian f32 initial parameters
+  artifacts/meta_<cfg>.json            shapes + hyperparameters for the rust side
+
+plus model-independent reduction kernels (the paper's §V-A contribution):
+
+  artifacts/reduce_sum_<n>.hlo.txt     (x[n], y[n]) -> (x ⊕ y)  for n in CHUNKS
+
+Run: `cd python && python -m compile.aot --config small` (see Makefile).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import reduce as K_reduce
+from .kernels import sgd as K_sgd
+
+#: Chunk sizes (f32 elements) for which a standalone reduction-kernel
+#: artifact is emitted.  The rust GPU-kernel reduction backend picks the
+#: largest chunk that fits and loops; 4 KiB .. 4 MiB spans the RSA chunk
+#: sizes that occur for the paper's message range (4B .. 256MB, 2..128 ranks).
+REDUCE_CHUNKS = (4096, 65536, 1048576)
+
+#: Optimizer constants baked into the SGD artifact (tf_cnn_benchmarks
+#: defaults: momentum SGD, lr tuned per model; scale=1/world_size stays a
+#: runtime input so one artifact serves every world size).
+SGD_LR = 0.05
+SGD_MU = 0.9
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def emit_train_step(cfg: M.ModelConfig, out_dir: str) -> int:
+    n = M.param_count(cfg)
+    step = M.make_train_step(cfg)
+    params_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    lowered = jax.jit(step).lower(params_spec, tokens_spec)
+    _write(os.path.join(out_dir, f"train_step_{cfg.name}.hlo.txt"), to_hlo_text(lowered))
+    return n
+
+
+def emit_sgd(cfg: M.ModelConfig, n: int, out_dir: str) -> None:
+    def update(w, v, g, scale):
+        return K_sgd.sgd_momentum(w, v, g, scale, lr=SGD_LR, mu=SGD_MU)
+
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    scal = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(update).lower(vec, vec, vec, scal)
+    _write(os.path.join(out_dir, f"sgd_{cfg.name}.hlo.txt"), to_hlo_text(lowered))
+
+
+def emit_reduce_kernels(out_dir: str) -> None:
+    for n in REDUCE_CHUNKS:
+        # §Perf (EXPERIMENTS.md): interpret-mode pallas pays per-grid-step
+        # overhead, so the AOT artifact uses the largest tile that stays
+        # within a VMEM budget (256K f32 × 3 operands = 3 MB of ~16 MB)
+        # instead of the default BLOCK — 16× fewer grid steps at 1M elems.
+        block = min(n, 256 * 1024)
+
+        def red(x, y):
+            return K_reduce.reduce_pairwise(x, y, op="sum", block=block)
+
+        vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        lowered = jax.jit(red).lower(vec, vec)
+        _write(os.path.join(out_dir, f"reduce_sum_{n}.hlo.txt"), to_hlo_text(lowered))
+
+
+def emit_params(cfg: M.ModelConfig, n: int, out_dir: str, seed: int) -> None:
+    import numpy as np
+
+    flat = np.asarray(M.init_params(cfg, seed=seed), dtype="<f4")
+    assert flat.shape == (n,)
+    path = os.path.join(out_dir, f"params_{cfg.name}.bin")
+    flat.tofile(path)
+    print(f"  wrote {path} ({flat.nbytes} bytes)")
+
+
+def emit_meta(cfg: M.ModelConfig, n: int, out_dir: str) -> None:
+    meta = {
+        "config": cfg.name,
+        "param_count": n,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "tokens_shape": [cfg.batch, cfg.seq + 1],
+        "sgd_lr": SGD_LR,
+        "sgd_mu": SGD_MU,
+        "reduce_chunks": list(REDUCE_CHUNKS),
+    }
+    path = os.path.join(out_dir, f"meta_{cfg.name}.json")
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  wrote {path}")
+
+
+def build(config: str, out_dir: str, seed: int = 0, skip_reduce: bool = False) -> None:
+    cfg = M.CONFIGS[config]
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] lowering config={cfg.name} ...")
+    n = emit_train_step(cfg, out_dir)
+    emit_sgd(cfg, n, out_dir)
+    emit_params(cfg, n, out_dir, seed)
+    emit_meta(cfg, n, out_dir)
+    if not skip_reduce:
+        emit_reduce_kernels(out_dir)
+    print(f"[aot] done: config={cfg.name} param_count={n}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="small", choices=sorted(M.CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-reduce", action="store_true",
+                    help="skip the model-independent reduction kernels")
+    args = ap.parse_args()
+    build(args.config, args.out_dir, args.seed, args.skip_reduce)
+
+
+if __name__ == "__main__":
+    main()

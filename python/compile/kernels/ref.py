@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here written
+with nothing but jax.numpy; pytest (python/tests/test_kernel.py) asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes, dtypes, and op types.  The rust-side reduction backends are in turn
+pinned to the same semantics through the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def reduce_pairwise_ref(x, y, op: str = "sum"):
+    if op == "sum":
+        return x + y
+    if op == "prod":
+        return x * y
+    if op == "max":
+        return jnp.maximum(x, y)
+    if op == "min":
+        return jnp.minimum(x, y)
+    raise ValueError(f"unsupported op {op}")
+
+
+def reduce_parts_ref(parts):
+    return jnp.sum(parts, axis=0)
+
+
+def sgd_momentum_ref(w, v, g, scale, lr: float = 0.01, mu: float = 0.9):
+    g = g * jnp.asarray(scale, w.dtype)
+    v2 = mu * v + g
+    w2 = w - lr * v2
+    return w2, v2

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused SGD-with-momentum parameter update.
+
+After the Allreduce aggregates gradients, every worker applies the same
+optimizer step.  tf_cnn_benchmarks uses stock momentum-SGD; we fuse the
+whole update (grad scale + momentum accumulate + param axpy) into a single
+bandwidth-bound Pallas kernel so params/velocity stream through VMEM once:
+
+    v' = mu * v + g / world_size
+    w' = w - lr * v'
+
+Same VMEM-tiling scheme as kernels.reduce — see that module and DESIGN.md
+§Hardware-Adaptation for the CUDA→TPU mapping rationale.  interpret=True
+for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .reduce import BLOCK, _pad_to_block
+
+
+def _sgd_kernel(w_ref, v_ref, g_ref, scale_ref, w_out_ref, v_out_ref, *, lr, mu):
+    """One tile of the fused momentum update (scale is 1/world_size)."""
+    g = g_ref[...] * scale_ref[0]
+    v = mu * v_ref[...] + g
+    v_out_ref[...] = v
+    w_out_ref[...] = w_ref[...] - lr * v
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "mu", "block"))
+def sgd_momentum(w, v, g, scale, lr: float = 0.01, mu: float = 0.9, block: int = BLOCK):
+    """Fused momentum-SGD over flat 1-D params; returns (w', v').
+
+    `scale` is a scalar array (1/world_size) kept as a runtime input so the
+    same AOT artifact serves any world size.  lr/mu are compile-time
+    constants (they select the artifact variant, mirroring how the paper's
+    training scripts fix hyperparameters per run).
+    """
+    if not (w.shape == v.shape == g.shape) or w.ndim != 1:
+        raise ValueError(f"expect equal 1-D shapes, got {w.shape}/{v.shape}/{g.shape}")
+    n = w.shape[0]
+    wp = _pad_to_block(w, block)
+    vp = _pad_to_block(v, block)
+    gp = _pad_to_block(g, block)
+    scale = jnp.asarray(scale, w.dtype).reshape((1,))
+    grid = (wp.shape[0] // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    w2, v2 = pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=lr, mu=mu),
+        out_shape=(
+            jax.ShapeDtypeStruct(wp.shape, w.dtype),
+            jax.ShapeDtypeStruct(vp.shape, v.dtype),
+        ),
+        grid=grid,
+        in_specs=[spec, spec, spec, scalar_spec],
+        out_specs=(spec, spec),
+        interpret=True,
+    )(wp, vp, gp, scale)
+    return w2[:n], v2[:n]

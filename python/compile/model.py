@@ -1,0 +1,224 @@
+"""L2: JAX model fwd/bwd — the real DNN workload behind the simulator.
+
+The paper trains convnets (ResNet-50 / MobileNet / NASNet) through
+tf_cnn_benchmarks with synthetic input data, measuring pure
+(GPU compute) + (gradient communication).  Our end-to-end real workload is
+a decoder-only transformer LM trained on synthetic token data: the same
+"synthetic data ⇒ measure compute+comm only" methodology, sized to mirror
+the paper's models (the `medium` config ≈ ResNet-50's 25.6M parameters).
+
+Interface contract with the rust coordinator (runtime/step.rs):
+
+    train_step : (params f32[N], tokens i32[B, S+1]) -> (loss f32[], grads f32[N])
+
+Parameters live in ONE flat f32 vector.  This makes the rust side of
+data-parallel training trivial and faithful to the paper: the gradient
+Allreduce operates on a flat buffer exactly like Horovod's fusion buffer,
+and the optimizer is a single fused Pallas kernel over the flat vector
+(kernels/sgd.py).
+
+The L1 Pallas reduction kernel (kernels/reduce.py) is called INSIDE the
+model (embedding + positional-encoding add) so it lowers into the same HLO
+artifact — proving the L1→L2 composition — wrapped in a custom_vjp since
+pallas_call is not auto-differentiable.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.reduce import reduce_pairwise
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyperparameters (static ⇒ baked into HLO)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Artifact presets.  `tiny` drives unit tests; `small` the CI-speed demos;
+#: `medium` ≈ ResNet-50's 25.6M params for the end-to-end run; `large`
+#: ≈100M-class for users with more compute (compiled by `make artifacts-large`).
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=128, seq=32, batch=4),
+    "small": ModelConfig("small", vocab=8192, d_model=256, n_layers=4, n_heads=8, d_ff=1024, seq=64, batch=4),
+    "medium": ModelConfig("medium", vocab=16384, d_model=384, n_layers=8, n_heads=8, d_ff=1536, seq=64, batch=2),
+    "large": ModelConfig("large", vocab=32768, d_model=512, n_layers=16, n_heads=8, d_ff=2048, seq=128, batch=2),
+}
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) layout of the flat parameter vector."""
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+        ]
+    specs += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def unflatten(flat, cfg: ModelConfig):
+    """Static-slice the flat vector into a {name: array} dict."""
+    params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    assert off == flat.shape[0], f"flat vector has {flat.shape[0]} elems, layout wants {off}"
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize the flat parameter vector (scaled-normal / zeros layout)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for d in shape:
+            size *= d
+        if name.endswith((".b1", ".b2", "_b")):
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        elif name.endswith("_g"):
+            chunks.append(jnp.ones((size,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            chunks.append(std * jax.random.normal(sub, (size,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Pallas-add with custom VJP (pallas_call is not auto-differentiable)
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _pallas_add(x, y):
+    return reduce_pairwise(x, y, op="sum")
+
+
+def _pallas_add_fwd(x, y):
+    return _pallas_add(x, y), None
+
+
+def _pallas_add_bwd(_, g):
+    return g, g
+
+
+_pallas_add.defvjp(_pallas_add_fwd, _pallas_add_bwd)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, prefix, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[f"{prefix}.wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ p[f"{prefix}.wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ p[f"{prefix}.wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / (dh**0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[f"{prefix}.wo"]
+
+
+def _block(x, p, i, cfg: ModelConfig):
+    h = _layernorm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+    x = x + _attention(h, p, f"l{i}", cfg)
+    h = _layernorm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    ff = jax.nn.gelu(h @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    return x + ff
+
+
+def forward(flat, tokens, cfg: ModelConfig):
+    """Logits for next-token prediction.  tokens: i32[B, S]."""
+    p = unflatten(flat, cfg)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens]  # [B, S, D]
+    pos = jnp.broadcast_to(p["pos_emb"][:s], (b, s, cfg.d_model))
+    # L1 Pallas kernel on the L2 path: embedding + positional add.
+    x = _pallas_add(x.reshape(-1), pos.reshape(-1)).reshape(b, s, cfg.d_model)
+    for i in range(cfg.n_layers):
+        x = _block(x, p, i, cfg)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def loss_fn(flat, tokens, cfg: ModelConfig):
+    """Mean cross-entropy of next-token prediction.  tokens: i32[B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(flat, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def train_step(flat, tokens, cfg: ModelConfig):
+    """(loss, flat_grads) — the artifact the rust workers execute."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    return loss, grads
+
+
+def make_train_step(cfg: ModelConfig):
+    """Jittable closure with the config baked in (for lowering/AOT)."""
+
+    @functools.wraps(train_step)
+    def step(flat, tokens):
+        return train_step(flat, tokens, cfg)
+
+    return step

@@ -1,0 +1,106 @@
+"""Kernel vs. pure-jnp oracle — the CORE L1 correctness signal.
+
+hypothesis sweeps shapes (including non-tile-multiple lengths), dtypes, op
+types, and part counts; every case asserts allclose between the Pallas
+kernel (interpret=True) and kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.reduce import OPS, reduce_pairwise, reduce_parts
+from compile.kernels.sgd import sgd_momentum
+
+jax.config.update("jax_enable_x64", False)
+
+# Cover: below one tile, exactly one tile, crossing tiles, odd lengths.
+LENGTHS = st.sampled_from([1, 3, 255, 4096, 4097, 10000, 65536])
+SMALL_BLOCKS = st.sampled_from([8, 64, 4096])
+
+
+def _vec(rng, n, dtype):
+    v = rng.standard_normal(n).astype(dtype)
+    if dtype == np.int32:
+        v = (v * 100).astype(np.int32)
+    return v
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=LENGTHS, op=st.sampled_from(OPS), seed=st.integers(0, 2**31 - 1),
+       block=SMALL_BLOCKS)
+def test_reduce_pairwise_matches_ref(n, op, seed, block):
+    rng = np.random.default_rng(seed)
+    x = _vec(rng, n, np.float32)
+    y = _vec(rng, n, np.float32)
+    got = reduce_pairwise(jnp.asarray(x), jnp.asarray(y), op=op, block=block)
+    want = ref.reduce_pairwise_ref(jnp.asarray(x), jnp.asarray(y), op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([1, 255, 4096, 5001]),
+       p=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_reduce_parts_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    parts = rng.standard_normal((p, n)).astype(np.float32)
+    got = reduce_parts(jnp.asarray(parts), block=4096)
+    want = ref.reduce_parts_ref(jnp.asarray(parts))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_reduce_pairwise_int32_sum():
+    x = jnp.arange(5000, dtype=jnp.int32)
+    y = jnp.ones(5000, dtype=jnp.int32)
+    got = reduce_pairwise(x, y, op="sum")
+    np.testing.assert_array_equal(np.asarray(got), np.arange(5000) + 1)
+
+
+def test_reduce_pairwise_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        reduce_pairwise(jnp.zeros((4, 4)), jnp.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        reduce_pairwise(jnp.zeros(4), jnp.zeros(5))
+
+
+def test_reduce_pairwise_associativity_chain():
+    """Chained pairwise reductions == one fused parts reduction (the RSA
+    invariant the rust allreduce relies on)."""
+    rng = np.random.default_rng(7)
+    parts = rng.standard_normal((6, 3000)).astype(np.float32)
+    acc = jnp.asarray(parts[0])
+    for i in range(1, 6):
+        acc = reduce_pairwise(acc, jnp.asarray(parts[i]), op="sum")
+    fused = reduce_parts(jnp.asarray(parts))
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(fused), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([1, 100, 4096, 9999]),
+       seed=st.integers(0, 2**31 - 1),
+       lr=st.sampled_from([0.01, 0.05, 0.5]),
+       mu=st.sampled_from([0.0, 0.9, 0.99]),
+       scale=st.sampled_from([1.0, 0.25, 0.0078125]))
+def test_sgd_momentum_matches_ref(n, seed, lr, mu, scale):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(n).astype(np.float32)
+    v = rng.standard_normal(n).astype(np.float32)
+    g = rng.standard_normal(n).astype(np.float32)
+    w2, v2 = sgd_momentum(jnp.asarray(w), jnp.asarray(v), jnp.asarray(g),
+                          scale, lr=lr, mu=mu, block=4096)
+    w2r, v2r = ref.sgd_momentum_ref(jnp.asarray(w), jnp.asarray(v), jnp.asarray(g),
+                                    scale, lr=lr, mu=mu)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v2r), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w2r), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_zero_grad_pure_momentum_decay():
+    w = jnp.ones(100)
+    v = jnp.full((100,), 2.0)
+    g = jnp.zeros(100)
+    w2, v2 = sgd_momentum(w, v, g, 1.0, lr=0.1, mu=0.5)
+    np.testing.assert_allclose(np.asarray(v2), 1.0)
+    np.testing.assert_allclose(np.asarray(w2), 1.0 - 0.1)

@@ -1,0 +1,110 @@
+"""L2 model correctness: shapes, layout round-trip, loss/grad sanity,
+and the data-parallel equivalence invariant the whole paper rests on:
+allreduce-of-shard-gradients == gradient-of-full-batch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return M.init_params(CFG, seed=0)
+
+
+def _tokens(seed, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or CFG.batch
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, CFG.seq + 1)), jnp.int32)
+
+
+def test_param_count_matches_layout(flat):
+    assert flat.shape == (M.param_count(CFG),)
+
+
+def test_unflatten_roundtrip(flat):
+    p = M.unflatten(flat, CFG)
+    names = [n for n, _ in M.param_specs(CFG)]
+    assert set(p) == set(names)
+    reflat = jnp.concatenate([p[n].reshape(-1) for n in names])
+    np.testing.assert_array_equal(np.asarray(reflat), np.asarray(flat))
+
+
+def test_forward_shape(flat):
+    toks = _tokens(1)[:, :-1]
+    logits = M.forward(flat, toks, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(flat):
+    """Random init ⇒ loss ≈ ln(vocab)."""
+    loss = M.loss_fn(flat, _tokens(2), CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_grads_finite_and_nonzero(flat):
+    loss, grads = M.train_step(flat, _tokens(3), CFG)
+    assert grads.shape == flat.shape
+    assert bool(jnp.all(jnp.isfinite(grads)))
+    assert float(jnp.linalg.norm(grads)) > 1e-4
+
+
+def test_loss_decreases_under_sgd(flat):
+    """A few full-batch steps on a fixed batch must reduce loss."""
+    toks = _tokens(4)
+    w = flat
+    losses = []
+    for _ in range(5):
+        loss, g = M.train_step(w, toks, CFG)
+        losses.append(float(loss))
+        w = w - 0.5 * g
+    assert losses[-1] < losses[0]
+
+
+def test_data_parallel_gradient_equivalence(flat):
+    """sum_k grad(shard_k)/K == grad(full batch) — the invariant that makes
+    allreduce-based data parallelism (the paper's subject) correct."""
+    b = 4
+    toks = _tokens(5, batch=b)
+    cfg = M.ModelConfig(**{**CFG.__dict__, "batch": b})
+    _, g_full = M.train_step(flat, toks, cfg)
+    cfg1 = M.ModelConfig(**{**CFG.__dict__, "batch": 1})
+    shard_grads = []
+    for k in range(b):
+        _, gk = M.train_step(flat, toks[k : k + 1], cfg1)
+        shard_grads.append(gk)
+    g_avg = sum(shard_grads) / b
+    np.testing.assert_allclose(np.asarray(g_avg), np.asarray(g_full), rtol=2e-4, atol=2e-5)
+
+
+def test_pallas_add_custom_vjp_matches_plain_add(flat):
+    """The L1 kernel embedded in the L2 graph must be AD-transparent."""
+    x = jnp.arange(12.0)
+    y = jnp.ones(12)
+
+    def f_pallas(x, y):
+        return jnp.sum(M._pallas_add(x, y) ** 2)
+
+    def f_plain(x, y):
+        return jnp.sum((x + y) ** 2)
+
+    gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx, gy = jax.grad(f_plain, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gy_p), np.asarray(gy), rtol=1e-6)
+
+
+def test_configs_param_counts_sane():
+    counts = {name: M.param_count(c) for name, c in M.CONFIGS.items()}
+    assert counts["tiny"] < 1_000_000
+    assert 5_000_000 < counts["small"] < 15_000_000
+    # `medium` mirrors ResNet-50's 25.6M parameters (paper's main workload).
+    assert 20_000_000 < counts["medium"] < 35_000_000
+    assert counts["large"] > 70_000_000

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 2 (batch-size sweep) and time the generator.
+use mpi_dnn_train::bench;
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig2();
+    println!("{table}");
+    let mut b = Bencher::new("fig2");
+    b.bench("generate", || {
+        black_box(bench::fig2());
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 3 (six approaches on RI2) and time it.
+use mpi_dnn_train::bench;
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig3().expect("fig3");
+    println!("{table}");
+    let mut b = Bencher::new("fig3");
+    b.bench("generate", || {
+        black_box(bench::fig3().unwrap());
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 4 (MPI vs NCCL2 allreduce baseline).
+use mpi_dnn_train::bench;
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig4().expect("fig4");
+    println!("{table}");
+    let mut b = Bencher::new("fig4");
+    b.bench("generate", || {
+        black_box(bench::fig4().unwrap());
+    });
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Figure 6 (the paper's §V MPI-Opt comparison) and
+//! verify the headline ratios stay in band on every run.
+use mpi_dnn_train::bench;
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::nccl::NcclWorld;
+use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig6().expect("fig6");
+    println!("{table}");
+
+    // headline guards (H1/H2) — fail loudly if a regression breaks them
+    let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+    let nccl = NcclWorld::new(presets::ri2()).unwrap();
+    let r8 = nccl.allreduce_latency(16, 8).time.as_us() / opt.allreduce_latency(16, 8).time.as_us();
+    assert!(r8 > 5.0, "H1 regression: 8B ratio {r8:.1}x");
+    let big = 256 << 20;
+    let rl = nccl.allreduce_latency(16, big).time.as_us() / opt.allreduce_latency(16, big).time.as_us();
+    assert!(rl > 1.15, "H2 regression: 256MB ratio {rl:.2}x");
+    println!("H1 8B NCCL2/Opt = {r8:.1}x (paper 17x)   H2 256MB = {rl:.2}x (paper ~1.4x)");
+
+    let mut b = Bencher::new("fig6");
+    b.bench("generate", || {
+        black_box(bench::fig6().unwrap());
+    });
+    b.bench("allreduce_latency_256MB_16r", || {
+        black_box(opt.allreduce_latency(16, big));
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 7 (Horovod variants on RI2).
+use mpi_dnn_train::bench;
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig7().expect("fig7");
+    println!("{table}");
+    let mut b = Bencher::new("fig7");
+    b.bench("generate", || {
+        black_box(bench::fig7().unwrap());
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Figure 8 (Owens, 64 P100s) + H3 efficiency guard.
+use mpi_dnn_train::bench;
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::models;
+use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    let table = bench::fig8().expect("fig8");
+    println!("{table}");
+    let ws = WorldSpec::new(presets::owens(), models::by_name("resnet50").unwrap(), 64);
+    let eff = strategies::by_name("horovod-mpi-opt")
+        .unwrap()
+        .iteration(&ws)
+        .unwrap()
+        .scaling_efficiency;
+    assert!(eff > 0.8, "H3 regression: Owens@64 eff {eff:.2}");
+    println!("H3 Owens@64 MPI-Opt efficiency = {:.0}% (paper ~90%)", eff * 100.0);
+    let mut b = Bencher::new("fig8");
+    b.bench("generate", || {
+        black_box(bench::fig8().unwrap());
+    });
+}

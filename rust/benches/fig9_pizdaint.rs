@@ -1,0 +1,25 @@
+//! Bench: regenerate Figure 9 (Piz Daint, 3 models × 4 approaches) +
+//! the H4/H6 headline guards.
+use mpi_dnn_train::bench;
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::models;
+use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+
+fn main() {
+    for m in ["nasnet", "resnet50", "mobilenet"] {
+        println!("{}", bench::fig9(m).expect("fig9"));
+    }
+    let eff = |name: &str| {
+        let ws = WorldSpec::new(presets::piz_daint(), models::by_name(name).unwrap(), 128);
+        strategies::by_name("horovod-cray").unwrap().iteration(&ws).unwrap().scaling_efficiency
+    };
+    let (n, r, m) = (eff("nasnet"), eff("resnet50"), eff("mobilenet"));
+    assert!(n > r && r > m, "H6 regression");
+    println!("H6 efficiency @128: nasnet {:.0}% > resnet {:.0}% > mobilenet {:.0}% (paper 92/71/16)",
+        n * 100.0, r * 100.0, m * 100.0);
+    let mut b = Bencher::new("fig9");
+    b.bench("generate_mobilenet", || {
+        black_box(bench::fig9("mobilenet").unwrap());
+    });
+}

@@ -1,0 +1,115 @@
+//! Hot-path micro-benchmarks for the §Perf pass (EXPERIMENTS.md):
+//!  * real-buffer allreduce inner loops (ring/RHD reductions)
+//!  * the event-engine throughput (events/s)
+//!  * pointer-cache resolve latency
+//!  * PS fan-in simulation cost
+//!  * PJRT train_step + reduce-kernel execution (when artifacts exist)
+//!
+//! Run: `cargo bench --offline` (or this target alone via
+//! `cargo bench --bench hotpath`).
+
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::allreduce::{rhd_allreduce, ring_allreduce, AllreduceCtx, ReducePlace, TransportMode};
+use mpi_dnn_train::comm::ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
+use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
+use mpi_dnn_train::models;
+use mpi_dnn_train::sim::{Engine, SimTime};
+use mpi_dnn_train::strategies::{PsStrategy, Strategy, WorldSpec};
+use mpi_dnn_train::util::bench::{black_box, Bencher};
+use mpi_dnn_train::util::prng::Rng;
+
+fn ctx() -> AllreduceCtx {
+    let c = presets::ri2();
+    AllreduceCtx::new(
+        c.fabric.clone(),
+        c.gpu.clone(),
+        TransportMode::Gdr,
+        ReducePlace::Gpu,
+        CacheMode::Intercept,
+        c.driver_query_us,
+    )
+}
+
+fn main() {
+    let mut b = Bencher::new("hotpath");
+    let mut rng = Rng::new(7);
+
+    // --- L3 hot loop 1: real-data allreduce (16 ranks × 1M f32 = 64MB) ---
+    let base: Vec<Vec<f32>> = (0..16).map(|_| rng.f32_vec(1 << 20)).collect();
+    b.bench("rhd_allreduce_16r_4MB_each", || {
+        let mut bufs = base.clone();
+        let mut c = ctx();
+        black_box(rhd_allreduce(&mut bufs, &mut c));
+    });
+    b.bench("ring_allreduce_16r_4MB_each", || {
+        let mut bufs = base.clone();
+        let mut c = ctx();
+        black_box(ring_allreduce(&mut bufs, &mut c));
+    });
+
+    // --- shadow-path latency model (the strategies' inner call) ---
+    let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+    b.bench("shadow_latency_128r_256MB", || {
+        black_box(opt.allreduce_latency(128, 256 << 20));
+    });
+
+    // --- event engine throughput ---
+    b.bench("engine_100k_events", || {
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        for i in 0..100_000u64 {
+            e.at(SimTime(i * 10), move |e| {
+                e.serve(r, 64.0, |_| {});
+            });
+        }
+        black_box(e.run());
+    });
+
+    // --- pointer cache resolve (the §V-B critical-path op) ---
+    let mut driver = CudaDriverSim::new(1.0);
+    let mut cache = PointerCache::new(CacheMode::Intercept);
+    let ptrs: Vec<u64> = (0..1024).map(|_| driver.cu_malloc(4096)).collect();
+    for &p in &ptrs {
+        cache.on_malloc(p, BufKind::Device);
+    }
+    b.bench("ptrcache_resolve_x1024", || {
+        for &p in &ptrs {
+            black_box(cache.resolve(p, &mut driver));
+        }
+    });
+
+    // --- PS fan-in DES (gRPC, ResNet-50, 16 workers) ---
+    let model = models::by_name("resnet50").unwrap();
+    b.bench("ps_grpc_iteration_16w", || {
+        let ws = WorldSpec::new(presets::ri2(), model.clone(), 16);
+        black_box(PsStrategy::grpc().iteration(&ws).unwrap());
+    });
+
+    // --- PJRT execution (L1/L2 artifacts), when built ---
+    if let Ok(dir) = mpi_dnn_train::runtime::artifacts_dir() {
+        if mpi_dnn_train::runtime::config_available(&dir, "tiny") {
+            let client = mpi_dnn_train::runtime::client::shared().unwrap();
+            let step =
+                mpi_dnn_train::runtime::TrainStep::load(&client, &dir, "tiny").unwrap();
+            let params = step.meta.load_params(&dir).unwrap();
+            let tokens = rng.tokens(step.meta.tokens_len(), step.meta.vocab as u32);
+            b.bench("pjrt_train_step_tiny", || {
+                black_box(step.run(&params, &tokens).unwrap());
+            });
+            if dir.join("reduce_sum_1048576.hlo.txt").is_file() {
+                let k = mpi_dnn_train::runtime::ReduceKernel::load(
+                    &client,
+                    &dir,
+                    &[1048576],
+                )
+                .unwrap();
+                let mut acc = rng.f32_vec(1 << 20);
+                let x = rng.f32_vec(1 << 20);
+                b.bench("pjrt_pallas_reduce_1M", || {
+                    k.accumulate(&mut acc, &x).unwrap();
+                    black_box(acc[0]);
+                });
+            }
+        }
+    }
+}

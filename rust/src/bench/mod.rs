@@ -1,0 +1,9 @@
+//! Figure-regeneration harness: one function per table/figure in the
+//! paper's evaluation, each returning a `Table` the CLI prints (and can
+//! emit as JSON).  `rust/benches/fig*.rs` are thin wrappers over these.
+
+pub mod figures;
+pub mod table;
+
+pub use figures::*;
+pub use table::Table;

@@ -1,0 +1,108 @@
+//! Aligned-text + JSON table rendering for the figure harness.
+
+use std::fmt;
+
+use crate::util::json::{arr, obj, s, Json};
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes printed under the table (paper-vs-measured remarks).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row<I: IntoIterator<Item = String>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().collect();
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch in `{}`", self.title);
+        self.rows.push(row);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("headers", arr(self.headers.iter().map(|h| s(h)))),
+            (
+                "rows",
+                arr(self.rows.iter().map(|r| arr(r.iter().map(|c| s(c))))),
+            ),
+            ("notes", arr(self.notes.iter().map(|n| s(n)))),
+        ])
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        writeln!(f, "== {} ==", self.title)?;
+        let line = |f: &mut fmt::Formatter<'_>, cells: &[String]| -> fmt::Result {
+            for (i, c) in cells.iter().enumerate() {
+                write!(f, "{:>w$}  ", c, w = widths[i])?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.headers)?;
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        writeln!(f, "{}", "-".repeat(total))?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long_header"]);
+        t.row(["1".into(), "2".into()]);
+        t.row(["100".into(), "x".into()]);
+        t.note("hello");
+        let out = t.to_string();
+        assert!(out.contains("demo"));
+        assert!(out.contains("long_header"));
+        assert!(out.contains("note: hello"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(["only-one".into()]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Table::new("j", &["h"]);
+        t.row(["v".into()]);
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"title\":\"j\""));
+        assert!(j.contains("\"rows\":[[\"v\"]]"));
+    }
+}

@@ -1,0 +1,172 @@
+//! GPU compute model: saturating-efficiency roofline.
+//!
+//! Iteration time for a DNN on one GPU:
+//!
+//!   t_iter(b) = launch·L + (b · flops_per_sample) / (peak · eff(b))
+//!   eff(b)    = eff_max · b / (b + b_half)
+//!
+//! The hyperbolic efficiency term captures what Figure 2 of the paper
+//! shows: throughput rises with batch size and flattens past a sweet spot,
+//! and *faster* GPUs need *larger* batches to saturate (bigger `b_half`).
+//! Constants are calibrated so ResNet-50 at batch 64 lands on the
+//! era-published tf_cnn_benchmarks throughputs (K80 ≈ 52, P100 ≈ 190,
+//! V100 ≈ 330 img/s, fp32, TF 1.10).
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// Peak fp32 throughput in GFLOP/s.
+    pub peak_gflops: f64,
+    /// HBM/GDDR bandwidth in GB/s (reduction kernels are BW-bound).
+    pub mem_bw_gbs: f64,
+    /// Device memory in GiB (bounds feasible batch size).
+    pub mem_gib: f64,
+    /// CUDA kernel launch overhead, µs (paid per launched kernel).
+    pub launch_us: f64,
+    /// Peak fraction achieved at b → ∞ for DNN workloads.
+    pub eff_max: f64,
+    /// Batch size at which efficiency reaches eff_max/2.
+    pub b_half: f64,
+}
+
+impl GpuModel {
+    pub const fn k80() -> GpuModel {
+        // One GK210 die of the dual-die K80 board (what TF sees as a device).
+        GpuModel {
+            name: "K80",
+            peak_gflops: 2800.0,
+            mem_bw_gbs: 240.0,
+            mem_gib: 12.0,
+            launch_us: 8.0,
+            eff_max: 0.50,
+            b_half: 8.0,
+        }
+    }
+
+    pub const fn p100() -> GpuModel {
+        GpuModel {
+            name: "P100",
+            peak_gflops: 9300.0,
+            mem_bw_gbs: 732.0,
+            mem_gib: 16.0,
+            launch_us: 6.0,
+            eff_max: 0.56,
+            b_half: 10.0,
+        }
+    }
+
+    pub const fn v100() -> GpuModel {
+        GpuModel {
+            name: "V100",
+            peak_gflops: 14000.0,
+            mem_bw_gbs: 900.0,
+            mem_gib: 16.0,
+            launch_us: 5.0,
+            eff_max: 0.66,
+            b_half: 12.0,
+        }
+    }
+
+    /// Achieved fraction of peak at batch size `b`.
+    pub fn efficiency(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        self.eff_max * b / (b + self.b_half)
+    }
+
+    /// Forward+backward time for one iteration of a workload described by
+    /// (flops per sample fwd+bwd, kernel launches per iteration).
+    pub fn iter_time(&self, flops_per_sample: f64, kernel_launches: usize, batch: usize) -> SimTime {
+        // flops_per_sample is in GFLOP; peak is GFLOP/s ⇒ seconds ⇒ µs.
+        let compute_us =
+            batch as f64 * flops_per_sample / (self.peak_gflops * self.efficiency(batch)) * 1e6;
+        let launch_us = self.launch_us * kernel_launches as f64;
+        SimTime::from_us(compute_us + launch_us)
+    }
+
+    /// Images (samples) per second at the given batch size.
+    pub fn throughput(&self, flops_per_sample: f64, kernel_launches: usize, batch: usize) -> f64 {
+        batch as f64 / self.iter_time(flops_per_sample, kernel_launches, batch).as_secs()
+    }
+
+    /// Time for the on-device reduction of `bytes` (the §V-A CUDA-kernel
+    /// reduction): streams 2 reads + 1 write per element through HBM.
+    pub fn reduce_time(&self, bytes: usize) -> SimTime {
+        SimTime::from_us(self.launch_us + 3.0 * bytes as f64 / (self.mem_bw_gbs * 1e3))
+    }
+
+    /// Rough feasibility bound: does a `batch`-sized ResNet-50-class
+    /// workload fit in device memory?  (~62 MB activations per sample +
+    /// ~400 MB weights/optimizer state; coarse, per paper Fig 2's axis.)
+    pub fn batch_fits(&self, bytes_per_sample: f64, batch: usize) -> bool {
+        let need_gib = (400e6 + bytes_per_sample * batch as f64) / (1u64 << 30) as f64;
+        need_gib <= self.mem_gib * 0.9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RESNET50_FLOPS_FB: f64 = 24.6; // GFLOP fwd+bwd per image (8.2 fwd × 3, 2·MACs)
+
+    #[test]
+    fn efficiency_monotone_saturating() {
+        let g = GpuModel::p100();
+        let e1 = g.efficiency(1);
+        let e64 = g.efficiency(64);
+        let e256 = g.efficiency(256);
+        assert!(e1 < e64 && e64 < e256);
+        assert!(e256 < g.eff_max);
+    }
+
+    #[test]
+    fn resnet50_batch64_calibration() {
+        // Paper Fig 2 era numbers: K80 ≈ 50, P100 ≈ 190, V100 ≈ 330 img/s.
+        let cases = [
+            (GpuModel::k80(), 40.0, 65.0),
+            (GpuModel::p100(), 160.0, 230.0),
+            (GpuModel::v100(), 280.0, 390.0),
+        ];
+        for (g, lo, hi) in cases {
+            let t = g.throughput(RESNET50_FLOPS_FB, 250, 64);
+            assert!(t > lo && t < hi, "{}: {t} img/s not in [{lo}, {hi}]", g.name);
+        }
+    }
+
+    #[test]
+    fn faster_gpus_keep_gaining_at_larger_batch() {
+        // Fig 2 insight: V100 gains more than K80 when going 32 → 128.
+        let gain = |g: &GpuModel| {
+            g.throughput(RESNET50_FLOPS_FB, 250, 128) / g.throughput(RESNET50_FLOPS_FB, 250, 32)
+        };
+        assert!(gain(&GpuModel::v100()) > gain(&GpuModel::k80()));
+    }
+
+    #[test]
+    fn diminishing_returns_past_sweet_spot() {
+        let g = GpuModel::k80();
+        let t64 = g.throughput(RESNET50_FLOPS_FB, 250, 64);
+        let t128 = g.throughput(RESNET50_FLOPS_FB, 250, 128);
+        assert!(t128 / t64 < 1.10, "gain past 64 should be <10%, got {}", t128 / t64);
+    }
+
+    #[test]
+    fn reduce_time_bandwidth_bound() {
+        let g = GpuModel::p100();
+        let t_small = g.reduce_time(1024);
+        let t_large = g.reduce_time(256 * 1024 * 1024);
+        // small reductions are launch-dominated
+        assert!((t_small.as_us() - g.launch_us).abs() < 1.0);
+        // large: 3·256MB / 732GB/s ≈ 1.1ms
+        assert!(t_large.as_ms() > 0.8 && t_large.as_ms() < 1.5, "{t_large}");
+    }
+
+    #[test]
+    fn memory_bound_on_batch() {
+        let g = GpuModel::k80();
+        assert!(g.batch_fits(62e6, 64));
+        assert!(!g.batch_fits(62e6, 256));
+    }
+}

@@ -1,0 +1,180 @@
+//! Interconnect models: α–β links plus the host-staging path.
+//!
+//! A point-to-point transfer of `n` bytes costs `α + n/β`.  CUDA-Aware
+//! paths with GPUDirect RDMA (GDR) go NIC↔GPU directly; non-CUDA-aware
+//! paths stage through host memory, adding PCIe copies each way — the
+//! paper's §II-B motivation for CUDA-Aware MPI.
+
+use crate::sim::SimTime;
+
+/// One α–β link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub name: &'static str,
+    /// One-way latency, µs.
+    pub alpha_us: f64,
+    /// Effective bandwidth, GB/s.
+    pub beta_gbs: f64,
+}
+
+impl Link {
+    pub const fn new(name: &'static str, alpha_us: f64, beta_gbs: f64) -> Link {
+        Link { name, alpha_us, beta_gbs }
+    }
+
+    /// Time to move `bytes` over this link.
+    pub fn transfer(&self, bytes: usize) -> SimTime {
+        SimTime::from_us(self.alpha_us + bytes as f64 / (self.beta_gbs * 1e3))
+    }
+
+    /// Bandwidth-only component (µs), for overlap math.
+    pub fn wire_us(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.beta_gbs * 1e3)
+    }
+
+    // ---- presets (era-appropriate published characteristics) ----
+
+    /// InfiniBand EDR (100 Gb/s): native verbs path.
+    pub const fn ib_edr() -> Link {
+        Link::new("IB-EDR", 2.5, 10.5)
+    }
+
+    /// IP-over-IB on the same EDR HCA: the TCP/IP stack costs both
+    /// latency and bandwidth (single-stream IPoIB in the TF 1.x era
+    /// delivered ~1.4 GB/s, far below the 12.5 GB/s wire rate).
+    pub const fn ipoib_edr() -> Link {
+        Link::new("IPoIB-EDR", 25.0, 1.4)
+    }
+
+    /// Cray Aries (Piz Daint dragonfly).
+    pub const fn aries() -> Link {
+        Link::new("Aries", 1.8, 9.0)
+    }
+
+    /// PCIe gen3 x16 host↔device staging copies.
+    pub const fn pcie3() -> Link {
+        Link::new("PCIe3x16", 5.0, 11.0)
+    }
+}
+
+/// The communication fabric of one cluster: inter-node link, the host
+/// staging link, and whether GPUDirect RDMA is available.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    pub inter: Link,
+    /// TCP/IP-style path on the same wires (gRPC rides this: IPoIB on IB
+    /// machines, the TCP service on Aries).
+    pub tcp: Link,
+    pub pcie: Link,
+    /// GPUDirect RDMA available (NIC reads/writes GPU memory directly).
+    pub gdr: bool,
+    /// IB verbs available (NCCL2 inter-node requires it — absent on Aries,
+    /// which is why Horovod-NCCL cannot run on Piz Daint, §VI-D).
+    pub ib_verbs: bool,
+    /// Congestion coefficient for collective traffic at scale: effective
+    /// β divides by `1 + contention·log₂(p/8)` for p > 8 ranks.  Zero on
+    /// the non-blocking EDR fat-trees (RI2/Owens); positive on the Aries
+    /// dragonfly, where the paper notes "placement ... is random and can
+    /// influence the actual execution time" (§VI-D).
+    pub contention: f64,
+}
+
+impl Fabric {
+    pub const fn ib_edr_gdr() -> Fabric {
+        Fabric {
+            inter: Link::ib_edr(),
+            tcp: Link::ipoib_edr(),
+            pcie: Link::pcie3(),
+            gdr: true,
+            ib_verbs: true,
+            contention: 0.0,
+        }
+    }
+
+    pub const fn aries() -> Fabric {
+        Fabric {
+            inter: Link::aries(),
+            tcp: Link::new("Aries-TCP", 18.0, 1.4),
+            pcie: Link::pcie3(),
+            gdr: false,
+            ib_verbs: false,
+            contention: 0.35,
+        }
+    }
+
+    /// Effective β divisor for a `p`-rank collective on this fabric.
+    pub fn contention_factor(&self, p: usize) -> f64 {
+        if p > 8 && self.contention > 0.0 {
+            1.0 + self.contention * (p as f64 / 8.0).log2()
+        } else {
+            1.0
+        }
+    }
+
+    /// GPU-to-GPU p2p transfer time for `bytes`, CUDA-aware path.
+    /// With GDR: straight over the NIC.  Without: staged D2H → wire → H2D.
+    pub fn p2p_cuda_aware(&self, bytes: usize) -> SimTime {
+        if self.gdr {
+            self.inter.transfer(bytes)
+        } else {
+            self.staged(bytes)
+        }
+    }
+
+    /// Host-staged GPU-to-GPU transfer: D2H copy, wire, H2D copy.
+    pub fn staged(&self, bytes: usize) -> SimTime {
+        self.pcie.transfer(bytes) + self.inter.transfer(bytes) + self.pcie.transfer(bytes)
+    }
+
+    /// Host-to-host transfer (CPU buffers, already staged).
+    pub fn host_to_host(&self, bytes: usize) -> SimTime {
+        self.inter.transfer(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_alpha_dominates_small() {
+        let l = Link::ib_edr();
+        let t = l.transfer(8);
+        assert!((t.as_us() - l.alpha_us).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn transfer_beta_dominates_large() {
+        let l = Link::ib_edr();
+        let bytes = 256 * 1024 * 1024;
+        let t = l.transfer(bytes);
+        let wire = bytes as f64 / (l.beta_gbs * 1e3);
+        assert!((t.as_us() - wire) / wire < 0.001);
+        // 256MB over 10.5 GB/s ≈ 25.6ms
+        assert!(t.as_ms() > 20.0 && t.as_ms() < 30.0);
+    }
+
+    #[test]
+    fn ipoib_slower_than_verbs() {
+        let n = 1 << 20;
+        assert!(Link::ipoib_edr().transfer(n) > Link::ib_edr().transfer(n));
+        assert!(Link::ipoib_edr().alpha_us > 5.0 * Link::ib_edr().alpha_us);
+    }
+
+    #[test]
+    fn gdr_beats_staging() {
+        let f = Fabric::ib_edr_gdr();
+        let n = 1 << 22;
+        let direct = f.p2p_cuda_aware(n);
+        let staged = f.staged(n);
+        assert!(staged.as_us() > 2.5 * direct.as_us(), "staged {staged} vs direct {direct}");
+    }
+
+    #[test]
+    fn aries_has_no_verbs_or_gdr() {
+        let f = Fabric::aries();
+        assert!(!f.ib_verbs && !f.gdr);
+        // non-GDR fabric: CUDA-aware p2p falls back to staging
+        assert_eq!(f.p2p_cuda_aware(1024), f.staged(1024));
+    }
+}

@@ -1,0 +1,18 @@
+//! Hardware substrate models: GPUs, interconnects, node topology, and the
+//! three testbeds of the paper (RI2, Owens, Piz Daint).
+//!
+//! Substitution note (DESIGN.md §2): these are analytic cost models
+//! calibrated against the era-appropriate published numbers (tf_cnn_
+//! benchmarks throughputs, IB EDR / Aries link specs).  The *figures* of
+//! the paper depend only on the relative composition of compute and
+//! communication, which these models reproduce; the *numerics* of training
+//! are exercised for real through the PJRT runtime.
+
+pub mod gpu;
+pub mod interconnect;
+pub mod presets;
+pub mod topology;
+
+pub use gpu::GpuModel;
+pub use interconnect::{Fabric, Link};
+pub use topology::ClusterSpec;

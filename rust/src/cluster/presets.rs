@@ -1,0 +1,87 @@
+//! The paper's three testbeds (§VI).
+
+use super::gpu::GpuModel;
+use super::interconnect::Fabric;
+use super::topology::ClusterSpec;
+
+/// RI2 @ OSU: 20 nodes, 1× K80 each, IB EDR, MVAPICH2-GDR capable.
+/// The paper uses up to 16 GPUs here (Figures 3, 4, 6, 7).
+pub fn ri2() -> ClusterSpec {
+    ClusterSpec {
+        name: "RI2",
+        gpu: GpuModel::k80(),
+        nodes: 20,
+        gpus_per_node: 1,
+        fabric: Fabric::ib_edr_gdr(),
+        driver_query_us: 1.0,
+    }
+}
+
+/// Owens @ OSC: 160 GPU nodes, 1× P100 each, IB EDR (Figure 8, ≤64 GPUs).
+pub fn owens() -> ClusterSpec {
+    ClusterSpec {
+        name: "Owens",
+        gpu: GpuModel::p100(),
+        nodes: 160,
+        gpus_per_node: 1,
+        fabric: Fabric::ib_edr_gdr(),
+        driver_query_us: 1.0,
+    }
+}
+
+/// Piz Daint @ CSCS: 1× P100 per node, Cray Aries dragonfly — no IB verbs
+/// (so no NCCL2) and no GDR for the stock MPI (Figure 9, ≤128 GPUs).
+pub fn piz_daint() -> ClusterSpec {
+    ClusterSpec {
+        name: "PizDaint",
+        gpu: GpuModel::p100(),
+        nodes: 5704,
+        gpus_per_node: 1,
+        fabric: Fabric::aries(),
+        driver_query_us: 1.2,
+    }
+}
+
+/// Look a preset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> anyhow::Result<ClusterSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "ri2" => Ok(ri2()),
+        "owens" => Ok(owens()),
+        "pizdaint" | "piz_daint" | "piz-daint" => Ok(piz_daint()),
+        other => anyhow::bail!("unknown cluster `{other}` (ri2 | owens | pizdaint)"),
+    }
+}
+
+pub fn all() -> Vec<ClusterSpec> {
+    vec![ri2(), owens(), piz_daint()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_hardware() {
+        let r = ri2();
+        assert_eq!(r.gpu.name, "K80");
+        assert!(r.max_gpus() >= 16);
+        assert!(r.fabric.ib_verbs);
+
+        let o = owens();
+        assert_eq!(o.gpu.name, "P100");
+        assert!(o.max_gpus() >= 64);
+
+        let p = piz_daint();
+        assert_eq!(p.gpu.name, "P100");
+        assert!(p.max_gpus() >= 128);
+        assert!(!p.fabric.ib_verbs, "NCCL2 must be unavailable on Piz Daint");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("RI2").unwrap().name, "RI2");
+        assert_eq!(by_name("piz-daint").unwrap().name, "PizDaint");
+        assert!(by_name("summit").is_err());
+        assert_eq!(all().len(), 3);
+    }
+}

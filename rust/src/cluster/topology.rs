@@ -1,0 +1,71 @@
+//! Cluster topology: nodes × GPUs-per-node over a fabric.
+
+use super::gpu::GpuModel;
+use super::interconnect::Fabric;
+
+/// One testbed (all three of the paper's systems are 1 GPU per node, which
+/// keeps rank == node; the struct still carries `gpus_per_node` so denser
+/// systems like DGX boxes can be expressed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub gpu: GpuModel,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub fabric: Fabric,
+    /// CUDA driver pointer-attribute query cost, µs (the §V-B overhead the
+    /// pointer cache removes; per-query, and MPI issues several per call).
+    pub driver_query_us: f64,
+}
+
+impl ClusterSpec {
+    pub fn max_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Rank → node placement (block distribution).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Are two ranks on the same node?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Validate a requested world size against the machine.
+    pub fn check_world(&self, world: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(world >= 1, "world size must be ≥ 1");
+        anyhow::ensure!(
+            world <= self.max_gpus(),
+            "{} has only {} GPUs (requested {world})",
+            self.name,
+            self.max_gpus()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets;
+
+    #[test]
+    fn placement_block_distribution() {
+        let mut c = presets::ri2();
+        c.gpus_per_node = 2;
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(1), 0);
+        assert_eq!(c.node_of(2), 1);
+        assert!(c.same_node(0, 1));
+        assert!(!c.same_node(1, 2));
+    }
+
+    #[test]
+    fn world_bounds_enforced() {
+        let c = presets::ri2();
+        assert!(c.check_world(16).is_ok());
+        assert!(c.check_world(0).is_err());
+        assert!(c.check_world(10_000).is_err());
+    }
+}

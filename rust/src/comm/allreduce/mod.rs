@@ -1,0 +1,254 @@
+//! Allreduce algorithms over real buffers with modeled time.
+//!
+//! Three algorithm families from the paper (§V-A):
+//!  * `ring`  — ring reduce-scatter-allgather (NCCL, Baidu): 2(p−1) steps,
+//!    bandwidth-optimal, latency-heavy at scale.
+//!  * `rhd`   — recursive vector halving/doubling RSA (MPICH, MVAPICH2,
+//!    and the paper's optimized design): 2·log₂p steps.
+//!  * `tree`  — binomial reduce+broadcast for small messages.
+//!
+//! Every implementation moves **real f32 data** between the per-rank
+//! buffers and is pinned to `serial_oracle` by tests; the returned
+//! `AllreduceReport` carries the virtual-clock cost on the configured
+//! fabric (DESIGN.md §5's cost model).
+
+pub mod reduce;
+pub mod rhd;
+pub mod ring;
+pub mod shadow;
+pub mod tree;
+
+pub use reduce::{ReducePlace, TransportMode};
+pub use rhd::rhd_allreduce;
+pub use ring::ring_allreduce;
+pub use shadow::shadow_cost;
+pub use tree::tree_allreduce;
+
+use crate::cluster::{Fabric, GpuModel, Link};
+use crate::comm::ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
+use crate::comm::CostBreakdown;
+use crate::sim::SimTime;
+
+/// Everything an allreduce needs to know about the machine + runtime
+/// configuration.  Owns the *real* simulated-driver + pointer-cache state
+/// so query counts and staleness behaviour are exercised, not assumed.
+pub struct AllreduceCtx {
+    pub fabric: Fabric,
+    pub gpu: GpuModel,
+    /// Link used for the collective's inter-node hops (usually
+    /// `fabric.inter`; NCCL substitutes its own effective link).
+    pub wire: Link,
+    pub transport: TransportMode,
+    pub reduce: ReducePlace,
+    /// Pointer-attribute resolves per buffer per p2p operation (paper
+    /// Fig 5 shows several driver-module hops; stock MVAPICH2 re-queries
+    /// each time).  NCCL-style implementations set 0.
+    pub attrs_per_buffer: usize,
+    /// Fixed per-p2p-op software overhead, µs (matching, tag lookup).
+    pub p2p_sw_us: f64,
+    pub driver: CudaDriverSim,
+    pub cache: PointerCache,
+    /// Registered (send, recv) device pointers, one pair per rank.
+    bufs: Vec<(u64, u64)>,
+}
+
+impl AllreduceCtx {
+    pub fn new(
+        fabric: Fabric,
+        gpu: GpuModel,
+        transport: TransportMode,
+        reduce: ReducePlace,
+        cache_mode: CacheMode,
+        driver_query_us: f64,
+    ) -> Self {
+        let wire = fabric.inter;
+        AllreduceCtx {
+            fabric,
+            gpu,
+            wire,
+            transport,
+            reduce,
+            attrs_per_buffer: 4,
+            p2p_sw_us: 0.5,
+            driver: CudaDriverSim::new(driver_query_us),
+            cache: PointerCache::new(cache_mode),
+            bufs: Vec::new(),
+        }
+    }
+
+    /// Register per-rank send/recv buffers with the simulated driver (what
+    /// the application's cudaMalloc would have done).  In `Intercept` mode
+    /// the pointer cache learns them here — off the critical path.
+    pub fn register_ranks(&mut self, p: usize, bytes: u64) {
+        self.bufs.clear();
+        for _ in 0..p {
+            let s = self.driver.cu_malloc(bytes.max(4));
+            let r = self.driver.cu_malloc(bytes.max(4));
+            self.cache.on_malloc(s, BufKind::Device);
+            self.cache.on_malloc(r, BufKind::Device);
+            self.bufs.push((s, r));
+        }
+    }
+
+    /// Charge the driver-query cost a rank pays for one p2p operation
+    /// (resolving both its send and recv buffer `attrs_per_buffer` times,
+    /// as the stock runtime does on every MPI call).
+    pub fn driver_cost_us(&mut self, rank: usize) -> f64 {
+        if self.attrs_per_buffer == 0 || self.bufs.is_empty() {
+            return 0.0;
+        }
+        let (s, r) = self.bufs[rank % self.bufs.len()];
+        let mut us = 0.0;
+        for _ in 0..self.attrs_per_buffer {
+            us += self.cache.resolve(s, &mut self.driver).1;
+            us += self.cache.resolve(r, &mut self.driver).1;
+        }
+        us
+    }
+
+    /// Cost of one synchronous sendrecv of `bytes` between two ranks
+    /// (symmetric, so charged once per step): wire + optional staging.
+    pub fn sendrecv_cost(&self, bytes: usize) -> CostBreakdown {
+        let mut c = CostBreakdown { sw_us: self.p2p_sw_us, ..Default::default() };
+        c.wire_us = self.wire.alpha_us + self.wire.wire_us(bytes);
+        if self.transport == TransportMode::Staged {
+            // D2H before send + H2D after recv
+            c.staging_us = 2.0 * (self.fabric.pcie.alpha_us + self.fabric.pcie.wire_us(bytes));
+        }
+        c
+    }
+
+    /// Reduce `x` into `acc` (REAL data) and account its cost.
+    pub fn reduce_into(&mut self, acc: &mut [f32], x: &[f32]) -> CostBreakdown {
+        self.reduce.clone().reduce_into(self, acc, x)
+    }
+}
+
+/// Result of one allreduce call.
+#[derive(Debug, Clone, Default)]
+pub struct AllreduceReport {
+    pub algo: &'static str,
+    pub time: SimTime,
+    pub cost: CostBreakdown,
+    pub steps: usize,
+    /// Bytes each rank put on the wire (for BW-optimality checks).
+    pub wire_bytes_per_rank: usize,
+}
+
+/// Ground truth: elementwise sum across ranks.
+pub fn serial_oracle(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let n = bufs[0].len();
+    let mut out = vec![0.0f32; n];
+    for b in bufs {
+        assert_eq!(b.len(), n);
+        for (o, x) in out.iter_mut().zip(b) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Max |a−b| against the oracle — used by tests and the `validate` CLI.
+pub fn max_abs_err(bufs: &[Vec<f32>], oracle: &[f32]) -> f32 {
+    bufs.iter()
+        .flat_map(|b| b.iter().zip(oracle).map(|(x, o)| (x - o).abs()))
+        .fold(0.0, f32::max)
+}
+
+/// Algorithm choice, in the shape MVAPICH2-like runtimes select by size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Tree,
+    Ring,
+    Rhd,
+}
+
+pub fn run_algo(
+    algo: Algo,
+    bufs: &mut [Vec<f32>],
+    ctx: &mut AllreduceCtx,
+) -> AllreduceReport {
+    match algo {
+        Algo::Tree => tree_allreduce(bufs, ctx),
+        Algo::Ring => ring_allreduce(bufs, ctx),
+        Algo::Rhd => rhd_allreduce(bufs, ctx),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::cluster::presets;
+
+    /// A default CUDA-aware GDR context on RI2 hardware.
+    pub fn ctx_gdr() -> AllreduceCtx {
+        let c = presets::ri2();
+        AllreduceCtx::new(
+            c.fabric.clone(),
+            c.gpu.clone(),
+            TransportMode::Gdr,
+            ReducePlace::Gpu,
+            CacheMode::Intercept,
+            c.driver_query_us,
+        )
+    }
+
+    /// Random per-rank buffers.
+    pub fn make_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        (0..p).map(|_| rng.f32_vec(n)).collect()
+    }
+
+    pub fn assert_allreduced(bufs: &[Vec<f32>], oracle: &[f32], tol: f32) {
+        let err = max_abs_err(bufs, oracle);
+        assert!(err <= tol, "allreduce mismatch: max err {err} > {tol}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_sums_ranks() {
+        let bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        assert_eq!(serial_oracle(&bufs), vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn max_err_detects_mismatch() {
+        let oracle = vec![1.0, 1.0];
+        let good = vec![vec![1.0, 1.0]];
+        let bad = vec![vec![1.0, 1.5]];
+        assert_eq!(max_abs_err(&good, &oracle), 0.0);
+        assert!((max_abs_err(&bad, &oracle) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ctx_registers_and_charges_queries() {
+        let mut ctx = testutil::ctx_gdr();
+        ctx.register_ranks(4, 1024);
+        // Intercept mode: resolves are hash probes
+        let us = ctx.driver_cost_us(0);
+        assert!(us < 0.5, "intercepted resolve should be cheap, got {us}");
+        assert_eq!(ctx.driver.queries, 0);
+    }
+
+    #[test]
+    fn no_cache_charges_driver() {
+        let c = crate::cluster::presets::ri2();
+        let mut ctx = AllreduceCtx::new(
+            c.fabric.clone(),
+            c.gpu.clone(),
+            TransportMode::Staged,
+            ReducePlace::Cpu { gbs: 3.0 },
+            CacheMode::None,
+            c.driver_query_us,
+        );
+        ctx.register_ranks(2, 64);
+        let us = ctx.driver_cost_us(0);
+        // 4 attrs × 2 buffers × 1.0us
+        assert!((us - 8.0).abs() < 1e-9, "got {us}");
+        assert_eq!(ctx.driver.queries, 8);
+    }
+}

@@ -1,0 +1,173 @@
+//! Ring reduce-scatter-allgather (Patarasuk & Yuan) — the algorithm behind
+//! NCCL and Baidu's mpi_collectives.  Bandwidth-optimal (each rank moves
+//! 2·n·(p−1)/p bytes) but pays 2(p−1) α-steps, which is what sinks it for
+//! small messages at scale (Figure 4/6's small-message regime).
+
+use super::{AllreduceCtx, AllreduceReport};
+use crate::sim::SimTime;
+
+/// Split `n` elements into `p` nearly-equal contiguous chunks.
+fn chunk_ranges(n: usize, p: usize) -> Vec<(usize, usize)> {
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+/// In-place ring allreduce over `bufs[p][n]` (sum).
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let p = bufs.len();
+    assert!(p >= 1);
+    let n = bufs[0].len();
+    let mut report = AllreduceReport { algo: "ring", ..Default::default() };
+
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+
+    let chunks = chunk_ranges(n, p);
+    let max_chunk_bytes = chunks.iter().map(|(a, b)| (b - a) * 4).max().unwrap();
+
+    // ---- reduce-scatter: p−1 steps ----
+    // At step s, rank r sends chunk (r − s) mod p to its right neighbour
+    // (r+1) mod p and reduces the chunk it receives from the left.
+    for s in 0..p - 1 {
+        // snapshot the outgoing chunk of every rank (synchronous step)
+        let outgoing: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let c = (r + p - s) % p;
+                let (lo, hi) = chunks[c];
+                bufs[r][lo..hi].to_vec()
+            })
+            .collect();
+        let mut step_cost = ctx.sendrecv_cost(max_chunk_bytes);
+        step_cost.driver_us = ctx.driver_cost_us(0);
+        // every rank reduces its received chunk; identical work, charge once
+        let mut reduce_cost = Default::default();
+        for r in 0..p {
+            let left = (r + p - 1) % p;
+            let c = (left + p - s) % p;
+            let (lo, hi) = chunks[c];
+            let incoming = &outgoing[left];
+            let mut acc = std::mem::take(&mut bufs[r]);
+            let rc = ctx.reduce_into(&mut acc[lo..hi], incoming);
+            bufs[r] = acc;
+            reduce_cost = rc; // same every rank
+        }
+        step_cost.add(&reduce_cost);
+        report.cost.add(&step_cost);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_chunk_bytes;
+    }
+
+    // ---- allgather: p−1 steps ----
+    // After reduce-scatter, rank r owns fully-reduced chunk (r+1) mod p.
+    for s in 0..p - 1 {
+        let outgoing: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let c = (r + 1 + p - s) % p;
+                let (lo, hi) = chunks[c];
+                bufs[r][lo..hi].to_vec()
+            })
+            .collect();
+        let mut step_cost = ctx.sendrecv_cost(max_chunk_bytes);
+        step_cost.driver_us = ctx.driver_cost_us(0);
+        for r in 0..p {
+            let left = (r + p - 1) % p;
+            let c = (left + 1 + p - s) % p;
+            let (lo, hi) = chunks[c];
+            bufs[r][lo..hi].copy_from_slice(&outgoing[left]);
+        }
+        report.cost.add(&step_cost);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_chunk_bytes;
+    }
+
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_allreduced, ctx_gdr, make_bufs};
+    use super::super::serial_oracle;
+    use super::*;
+
+    #[test]
+    fn correct_for_various_p_and_n() {
+        for p in [1, 2, 3, 4, 5, 8, 16] {
+            for n in [0, 1, 7, 64, 1000] {
+                let mut bufs = make_bufs(p, n, (p * 1000 + n) as u64);
+                let oracle = serial_oracle(&bufs);
+                let mut ctx = ctx_gdr();
+                ring_allreduce(&mut bufs, &mut ctx);
+                assert_allreduced(&bufs, &oracle, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn step_count_is_2_p_minus_1() {
+        let mut bufs = make_bufs(8, 64, 1);
+        let mut ctx = ctx_gdr();
+        let r = ring_allreduce(&mut bufs, &mut ctx);
+        assert_eq!(r.steps, 14);
+    }
+
+    #[test]
+    fn bandwidth_optimal_wire_bytes() {
+        // each rank moves ~2·n·(p−1)/p bytes
+        let (p, n) = (8, 8000);
+        let mut bufs = make_bufs(p, n, 2);
+        let mut ctx = ctx_gdr();
+        let r = ring_allreduce(&mut bufs, &mut ctx);
+        let ideal = 2 * n * 4 * (p - 1) / p;
+        let rel = (r.wire_bytes_per_rank as f64 - ideal as f64).abs() / ideal as f64;
+        assert!(rel < 0.01, "{} vs ideal {ideal}", r.wire_bytes_per_rank);
+    }
+
+    #[test]
+    fn single_rank_is_noop() {
+        let mut bufs = vec![vec![1.0, 2.0, 3.0]];
+        let mut ctx = ctx_gdr();
+        let r = ring_allreduce(&mut bufs, &mut ctx);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.steps, 0);
+        assert_eq!(r.time, crate::sim::SimTime::ZERO);
+    }
+
+    #[test]
+    fn latency_grows_linearly_with_p_for_small_msgs() {
+        let mut ctx = ctx_gdr();
+        let t = |p: usize, ctx: &mut super::AllreduceCtx| {
+            let mut bufs = make_bufs(p, 2, 3);
+            ring_allreduce(&mut bufs, ctx).time.as_us()
+        };
+        let t4 = t(4, &mut ctx);
+        let t16 = t(16, &mut ctx);
+        // 2(p−1) steps: 30/6 = 5× more steps
+        let ratio = t16 / t4;
+        assert!(ratio > 3.5 && ratio < 6.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn chunks_cover_everything() {
+        for (n, p) in [(10, 3), (7, 7), (5, 8), (100, 16)] {
+            let c = chunk_ranges(n, p);
+            assert_eq!(c.len(), p);
+            assert_eq!(c[0].0, 0);
+            assert_eq!(c[p - 1].1, n);
+            for w in c.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+}

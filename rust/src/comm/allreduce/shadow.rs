@@ -1,0 +1,236 @@
+//! Shadow (data-free) cost evaluation of the allreduce algorithms.
+//!
+//! The figure harness sweeps message sizes up to 256 MB across up to 128
+//! ranks; materializing real per-rank buffers there would mean tens of
+//! gigabytes per point.  These functions replay the *exact* step/cost
+//! structure of ring.rs / rhd.rs / tree.rs without touching data.
+//! `tests::shadow_matches_real` pins them to the real implementations
+//! bit-for-bit on the virtual clock, so they cannot drift silently.
+
+use super::{Algo, AllreduceCtx, AllreduceReport};
+use crate::sim::SimTime;
+
+/// Cost of an `Algo` allreduce of `n` f32 elements across `p` ranks.
+pub fn shadow_cost(algo: Algo, p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    match algo {
+        Algo::Ring => ring_shadow(p, n, ctx),
+        Algo::Rhd => rhd_shadow(p, n, ctx),
+        Algo::Tree => tree_shadow(p, n, ctx),
+    }
+}
+
+fn chunk_len(n: usize, p: usize, i: usize) -> usize {
+    n / p + usize::from(i < n % p)
+}
+
+fn ring_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let mut report = AllreduceReport { algo: "ring", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let max_chunk_bytes = 4 * chunk_len(n, p, 0);
+    for s in 0..p - 1 {
+        let mut step = ctx.sendrecv_cost(max_chunk_bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        // real code keeps the reduce cost of the LAST rank (r = p−1)
+        let left = p - 2;
+        let c = (left + p - s) % p;
+        step.add(&ctx.reduce.clone().cost(ctx, 4 * chunk_len(n, p, c)));
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_chunk_bytes;
+    }
+    for _s in 0..p - 1 {
+        let mut step = ctx.sendrecv_cost(max_chunk_bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_chunk_bytes;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+fn rhd_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let mut report = AllreduceReport { algo: "rhd", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let p2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+    let rem = p - p2;
+    let full_bytes = n * 4;
+
+    if rem > 0 {
+        let mut step = ctx.sendrecv_cost(full_bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        step.add(&ctx.reduce.clone().cost(ctx, full_bytes));
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += full_bytes;
+    }
+
+    let mut range = vec![(0usize, n); p2];
+    let mut pre: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p2];
+    let mut masks = Vec::new();
+    let mut mask = p2 >> 1;
+    while mask > 0 {
+        masks.push(mask);
+        // max over ranks of the larger half (mirrors the real snapshot)
+        let mut max_half = 0usize;
+        let mut last_red_bytes = 0usize;
+        for (a, &(lo, hi)) in range.iter().enumerate() {
+            let mid = lo + (hi - lo) / 2;
+            let send = if a & mask == 0 { hi - mid } else { mid - lo };
+            max_half = max_half.max(send.max((hi - lo) - send));
+            last_red_bytes = 4 * if a & mask == 0 { mid - lo } else { hi - mid };
+        }
+        let mut step = ctx.sendrecv_cost(max_half * 4);
+        step.driver_us = ctx.driver_cost_us(0);
+        step.add(&ctx.reduce.clone().cost(ctx, last_red_bytes));
+        for a in 0..p2 {
+            let (lo, hi) = range[a];
+            let mid = lo + (hi - lo) / 2;
+            pre[a].push((lo, hi));
+            range[a] = if a & mask == 0 { (lo, mid) } else { (mid, hi) };
+        }
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_half * 4;
+        mask >>= 1;
+    }
+
+    for &_mask in masks.iter().rev() {
+        let max_seg = range.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
+        let mut step = ctx.sendrecv_cost(max_seg * 4);
+        step.driver_us = ctx.driver_cost_us(0);
+        for a in 0..p2 {
+            range[a] = pre[a].pop().expect("range history underflow");
+        }
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_seg * 4;
+    }
+
+    if rem > 0 {
+        let mut step = ctx.sendrecv_cost(full_bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += full_bytes;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+fn tree_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let mut report = AllreduceReport { algo: "tree", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let bytes = n * 4;
+    let mut dist = 1;
+    while dist < p {
+        let any = (0..p).any(|r| r % (2 * dist) == dist);
+        if any {
+            let mut step = ctx.sendrecv_cost(bytes);
+            step.driver_us = ctx.driver_cost_us(0);
+            step.add(&ctx.reduce.clone().cost(ctx, bytes));
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist *= 2;
+    }
+    let mut dist = p.next_power_of_two() / 2;
+    while dist >= 1 {
+        let any = (0..p).step_by(2 * dist).any(|src| src + dist < p);
+        if any {
+            let mut step = ctx.sendrecv_cost(bytes);
+            step.driver_us = ctx.driver_cost_us(0);
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist /= 2;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{ctx_gdr, make_bufs};
+    use super::super::{rhd_allreduce, ring_allreduce, tree_allreduce};
+    use super::*;
+
+    /// THE pin: shadow cost == real-data cost on the virtual clock.
+    #[test]
+    fn shadow_matches_real() {
+        for p in [2usize, 3, 4, 5, 8, 13, 16] {
+            for n in [1usize, 7, 255, 4096, 100_000] {
+                for algo in [Algo::Ring, Algo::Rhd, Algo::Tree] {
+                    let mut bufs = make_bufs(p, n, (p * 31 + n) as u64);
+                    let mut ctx_real = ctx_gdr();
+                    let real = match algo {
+                        Algo::Ring => ring_allreduce(&mut bufs, &mut ctx_real),
+                        Algo::Rhd => rhd_allreduce(&mut bufs, &mut ctx_real),
+                        Algo::Tree => tree_allreduce(&mut bufs, &mut ctx_real),
+                    };
+                    let mut ctx_shadow = ctx_gdr();
+                    let shadow = shadow_cost(algo, p, n, &mut ctx_shadow);
+                    assert_eq!(real.steps, shadow.steps, "{algo:?} p={p} n={n} steps");
+                    assert_eq!(
+                        real.wire_bytes_per_rank, shadow.wire_bytes_per_rank,
+                        "{algo:?} p={p} n={n} wire bytes"
+                    );
+                    let d = (real.cost.total_us() - shadow.cost.total_us()).abs();
+                    assert!(d < 1e-6, "{algo:?} p={p} n={n}: real {} vs shadow {}",
+                        real.cost.total_us(), shadow.cost.total_us());
+                }
+            }
+        }
+    }
+
+    /// Shadow also matches under the stock (staged + CPU + no-cache) ctx,
+    /// where driver-query state evolves per step.
+    #[test]
+    fn shadow_matches_real_stock_ctx() {
+        use crate::cluster::presets;
+        use crate::comm::allreduce::{ReducePlace, TransportMode};
+        use crate::comm::ptrcache::CacheMode;
+        let mk = || {
+            let c = presets::ri2();
+            AllreduceCtx::new(
+                c.fabric.clone(),
+                c.gpu.clone(),
+                TransportMode::Staged,
+                ReducePlace::Cpu { gbs: 2.0 },
+                CacheMode::None,
+                c.driver_query_us,
+            )
+        };
+        for p in [4usize, 6, 16] {
+            for n in [16usize, 9999] {
+                let mut bufs = make_bufs(p, n, 3);
+                let mut c1 = mk();
+                let real = rhd_allreduce(&mut bufs, &mut c1);
+                let mut c2 = mk();
+                let shadow = shadow_cost(Algo::Rhd, p, n, &mut c2);
+                let d = (real.cost.total_us() - shadow.cost.total_us()).abs();
+                assert!(d < 1e-6, "p={p} n={n}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn shadow_huge_sizes_cheap() {
+        // 256MB × 128 ranks — must run in microseconds of wall time.
+        let mut ctx = ctx_gdr();
+        let r = shadow_cost(Algo::Rhd, 128, 64 << 20, &mut ctx);
+        assert!(r.time.as_ms() > 1.0);
+        assert_eq!(r.steps, 14);
+    }
+}

@@ -1,0 +1,118 @@
+//! Binomial-tree reduce + broadcast — the small-message algorithm in
+//! MPICH-family runtimes (latency-optimal: 2·⌈log₂p⌉ α-steps, but each
+//! step carries the FULL vector, so it loses to RSA once n/β matters).
+
+use super::{AllreduceCtx, AllreduceReport};
+use crate::sim::SimTime;
+
+/// In-place binomial-tree allreduce over `bufs[p][n]` (sum, root 0).
+pub fn tree_allreduce(bufs: &mut [Vec<f32>], ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let p = bufs.len();
+    assert!(p >= 1);
+    let n = bufs[0].len();
+    let mut report = AllreduceReport { algo: "tree", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let bytes = n * 4;
+
+    // ---- reduce to root (rank 0) ----
+    // round k: ranks where bit k is the lowest set bit send to r − 2^k.
+    let mut dist = 1;
+    while dist < p {
+        let mut any = false;
+        let mut step = ctx.sendrecv_cost(bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        let mut red = Default::default();
+        let senders: Vec<usize> = (0..p)
+            .filter(|r| r % (2 * dist) == dist)
+            .collect();
+        for &src in &senders {
+            let dst = src - dist;
+            let incoming = bufs[src].clone();
+            let mut acc = std::mem::take(&mut bufs[dst]);
+            red = ctx.reduce_into(&mut acc, &incoming);
+            bufs[dst] = acc;
+            any = true;
+        }
+        if any {
+            step.add(&red);
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist *= 2;
+    }
+
+    // ---- broadcast from root ----
+    let mut dist = p.next_power_of_two() / 2;
+    while dist >= 1 {
+        let mut any = false;
+        let mut step = ctx.sendrecv_cost(bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        for src in (0..p).step_by(2 * dist) {
+            let dst = src + dist;
+            if dst < p {
+                let data = bufs[src].clone();
+                bufs[dst].copy_from_slice(&data);
+                any = true;
+            }
+        }
+        if any {
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist /= 2;
+    }
+
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_allreduced, ctx_gdr, make_bufs};
+    use super::super::{rhd_allreduce, serial_oracle};
+    use super::*;
+
+    #[test]
+    fn correct_for_various_p() {
+        for p in [1, 2, 3, 4, 5, 7, 8, 13, 16] {
+            for n in [0, 1, 33, 500] {
+                let mut bufs = make_bufs(p, n, (p * 13 + n) as u64);
+                let oracle = serial_oracle(&bufs);
+                let mut ctx = ctx_gdr();
+                tree_allreduce(&mut bufs, &mut ctx);
+                assert_allreduced(&bufs, &oracle, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn step_count_2_ceil_log2() {
+        let mut ctx = ctx_gdr();
+        for (p, want) in [(2, 2), (4, 4), (8, 6), (16, 8), (5, 6)] {
+            let mut bufs = make_bufs(p, 16, 3);
+            let r = tree_allreduce(&mut bufs, &mut ctx);
+            assert_eq!(r.steps, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn beats_rsa_only_on_small_messages() {
+        let p = 16;
+        // tiny message: tree (log steps, full-but-tiny vector) ≈ RHD —
+        // both are α-bound; large message: tree must lose (full vector
+        // every step).
+        let t = |algo: fn(&mut [Vec<f32>], &mut super::AllreduceCtx) -> AllreduceReport,
+                 n: usize| {
+            let mut bufs = make_bufs(p, n, 4);
+            let mut ctx = ctx_gdr();
+            algo(&mut bufs, &mut ctx).time.as_us()
+        };
+        let large = 1 << 20;
+        assert!(t(tree_allreduce, large) > 2.0 * t(rhd_allreduce, large));
+    }
+}

@@ -1,0 +1,298 @@
+//! The rest of the MPI/NCCL collective set (§II-B: "broadcast, all-gather,
+//! reduce, reduce-scatter, and all-reduce").  Allreduce — the paper's
+//! focus — lives in `allreduce/`; these are the remaining primitives the
+//! substrate needs to be a credible MPI runtime (Horovod itself uses
+//! broadcast for initial parameter sync, which the trainer exercises).
+//!
+//! Same contract as the allreduce family: REAL data movement over the
+//! per-rank buffers, modeled time on the configured fabric.
+
+use crate::comm::allreduce::{AllreduceCtx, AllreduceReport};
+use crate::sim::SimTime;
+
+/// Binomial-tree broadcast from `root`: ⌈log₂p⌉ full-vector steps.
+/// After the call every rank holds root's data (Horovod's parameter
+/// broadcast at initialization).
+pub fn bcast(bufs: &mut [Vec<f32>], root: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let p = bufs.len();
+    assert!(root < p, "root {root} out of range for {p} ranks");
+    let n = bufs[0].len();
+    let mut report = AllreduceReport { algo: "bcast", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let bytes = n * 4;
+    // relabel so the root acts as rank 0
+    let rel = |v: usize| (v + root) % p;
+    let mut dist = p.next_power_of_two() / 2;
+    while dist >= 1 {
+        let mut any = false;
+        for src in (0..p).step_by(2 * dist) {
+            let dst = src + dist;
+            if dst < p {
+                let data = bufs[rel(src)].clone();
+                bufs[rel(dst)].copy_from_slice(&data);
+                any = true;
+            }
+        }
+        if any {
+            let mut step = ctx.sendrecv_cost(bytes);
+            step.driver_us = ctx.driver_cost_us(0);
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist /= 2;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+/// Binomial-tree reduce to `root` (sum): ⌈log₂p⌉ steps with a reduction
+/// each.  Non-root buffers are left in an unspecified partial state, as
+/// with MPI_Reduce.
+pub fn reduce(bufs: &mut [Vec<f32>], root: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+    let p = bufs.len();
+    assert!(root < p);
+    let n = bufs[0].len();
+    let mut report = AllreduceReport { algo: "reduce", ..Default::default() };
+    if p == 1 || n == 0 {
+        return report;
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let bytes = n * 4;
+    let rel = |v: usize| (v + root) % p;
+    let mut dist = 1;
+    while dist < p {
+        let mut any = false;
+        let mut red = Default::default();
+        for r in (0..p).filter(|r| r % (2 * dist) == dist) {
+            let dst = rel(r - dist);
+            let src = rel(r);
+            let incoming = bufs[src].clone();
+            let mut acc = std::mem::take(&mut bufs[dst]);
+            red = ctx.reduce_into(&mut acc, &incoming);
+            bufs[dst] = acc;
+            any = true;
+        }
+        if any {
+            let mut step = ctx.sendrecv_cost(bytes);
+            step.driver_us = ctx.driver_cost_us(0);
+            step.add(&red);
+            report.cost.add(&step);
+            report.steps += 1;
+            report.wire_bytes_per_rank += bytes;
+        }
+        dist *= 2;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    report
+}
+
+/// Ring allgather: every rank contributes its own vector; all ranks end
+/// with the p·n concatenation (rank-major).  p−1 steps of n elements.
+pub fn allgather(contribs: &[Vec<f32>], ctx: &mut AllreduceCtx) -> (Vec<Vec<f32>>, AllreduceReport) {
+    let p = contribs.len();
+    let n = contribs.first().map(Vec::len).unwrap_or(0);
+    let mut report = AllreduceReport { algo: "allgather", ..Default::default() };
+    let mut out = vec![vec![0.0f32; p * n]; p];
+    for (r, c) in contribs.iter().enumerate() {
+        assert_eq!(c.len(), n, "ragged allgather contribution");
+        out[r][r * n..(r + 1) * n].copy_from_slice(c);
+    }
+    if p == 1 || n == 0 {
+        report.time = SimTime::ZERO;
+        return (out, report);
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    let bytes = n * 4;
+    // step s: rank r forwards block (r − s) mod p to its right neighbour
+    for s in 0..p - 1 {
+        let outgoing: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let b = (r + p - s) % p;
+                out[r][b * n..(b + 1) * n].to_vec()
+            })
+            .collect();
+        for r in 0..p {
+            let left = (r + p - 1) % p;
+            let b = (left + p - s) % p;
+            out[r][b * n..(b + 1) * n].copy_from_slice(&outgoing[left]);
+        }
+        let mut step = ctx.sendrecv_cost(bytes);
+        step.driver_us = ctx.driver_cost_us(0);
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += bytes;
+    }
+    report.time = SimTime::from_us(report.cost.total_us());
+    (out, report)
+}
+
+/// Ring reduce-scatter (sum): rank r ends with the fully-reduced r-th
+/// block of the input vectors.  p−1 steps of n/p elements.
+pub fn reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    ctx: &mut AllreduceCtx,
+) -> (Vec<Vec<f32>>, AllreduceReport) {
+    let p = bufs.len();
+    let n = bufs.first().map(Vec::len).unwrap_or(0);
+    let mut report = AllreduceReport { algo: "reduce_scatter", ..Default::default() };
+    if p == 1 {
+        let own = bufs.first().cloned().unwrap_or_default();
+        return (vec![own], report);
+    }
+    ctx.register_ranks(p, (n * 4) as u64);
+    // block ranges (nearly equal)
+    let base = n / p;
+    let rem = n % p;
+    let range = |i: usize| {
+        let lo = i * base + i.min(rem);
+        let len = base + usize::from(i < rem);
+        (lo, lo + len)
+    };
+    let max_block = 4 * (base + usize::from(rem > 0));
+    for s in 0..p - 1 {
+        let outgoing: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let b = (r + p - s) % p;
+                let (lo, hi) = range(b);
+                bufs[r][lo..hi].to_vec()
+            })
+            .collect();
+        let mut red = Default::default();
+        for r in 0..p {
+            let left = (r + p - 1) % p;
+            let b = (left + p - s) % p;
+            let (lo, hi) = range(b);
+            let mut acc = std::mem::take(&mut bufs[r]);
+            red = ctx.reduce_into(&mut acc[lo..hi], &outgoing[left]);
+            bufs[r] = acc;
+        }
+        let mut step = ctx.sendrecv_cost(max_block);
+        step.driver_us = ctx.driver_cost_us(0);
+        step.add(&red);
+        report.cost.add(&step);
+        report.steps += 1;
+        report.wire_bytes_per_rank += max_block;
+    }
+    // rank r now owns fully-reduced block (r+1) mod p
+    let owned: Vec<Vec<f32>> = (0..p)
+        .map(|r| {
+            let b = (r + 1) % p;
+            let (lo, hi) = range(b);
+            bufs[r][lo..hi].to_vec()
+        })
+        .collect();
+    report.time = SimTime::from_us(report.cost.total_us());
+    // return in block order (block i from the rank that owns it)
+    let mut blocks = vec![Vec::new(); p];
+    for (r, data) in owned.into_iter().enumerate() {
+        blocks[(r + 1) % p] = data;
+    }
+    (blocks, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::allreduce::testutil::{ctx_gdr, make_bufs};
+
+    #[test]
+    fn bcast_replicates_root_any_root() {
+        for p in [1usize, 2, 3, 5, 8, 13] {
+            for root in [0, p / 2, p - 1] {
+                let mut bufs = make_bufs(p, 100, (p * 7 + root) as u64);
+                let want = bufs[root].clone();
+                let mut ctx = ctx_gdr();
+                let r = bcast(&mut bufs, root, &mut ctx);
+                for b in &bufs {
+                    assert_eq!(b, &want, "p={p} root={root}");
+                }
+                if p > 1 {
+                    assert_eq!(r.steps, (p.next_power_of_two()).trailing_zeros() as usize);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sums_to_root() {
+        for p in [2usize, 3, 7, 16] {
+            for root in [0, p - 1] {
+                let mut bufs = make_bufs(p, 333, (p + root) as u64);
+                let oracle = crate::comm::allreduce::serial_oracle(&bufs);
+                let mut ctx = ctx_gdr();
+                reduce(&mut bufs, root, &mut ctx);
+                for (x, o) in bufs[root].iter().zip(&oracle) {
+                    assert!((x - o).abs() < 1e-4, "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_everywhere() {
+        for p in [1usize, 2, 4, 7] {
+            let contribs = make_bufs(p, 50, p as u64);
+            let mut want = Vec::new();
+            for c in &contribs {
+                want.extend_from_slice(c);
+            }
+            let mut ctx = ctx_gdr();
+            let (out, r) = allgather(&contribs, &mut ctx);
+            for o in &out {
+                assert_eq!(o, &want, "p={p}");
+            }
+            if p > 1 {
+                assert_eq!(r.steps, p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_blocks_match_oracle() {
+        for p in [2usize, 3, 8] {
+            for n in [16usize, 100, 101] {
+                let mut bufs = make_bufs(p, n, (p * n) as u64);
+                let oracle = crate::comm::allreduce::serial_oracle(&bufs);
+                let mut ctx = ctx_gdr();
+                let (blocks, _) = reduce_scatter(&mut bufs, &mut ctx);
+                let flat: Vec<f32> = blocks.concat();
+                assert_eq!(flat.len(), n);
+                for (x, o) in flat.iter().zip(&oracle) {
+                    assert!((x - o).abs() < 1e-4, "p={p} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_equals_allreduce() {
+        // the RSA identity the whole paper builds on
+        let p = 8;
+        let n = 240;
+        let mut bufs = make_bufs(p, n, 99);
+        let oracle = crate::comm::allreduce::serial_oracle(&bufs);
+        let mut ctx = ctx_gdr();
+        let (blocks, _) = reduce_scatter(&mut bufs, &mut ctx);
+        let mut ctx2 = ctx_gdr();
+        let (gathered, _) = allgather(&blocks, &mut ctx2);
+        // blocks are unequal size when n % p != 0 → use concat of blocks
+        let flat: Vec<f32> = blocks.concat();
+        for (x, o) in flat.iter().zip(&oracle) {
+            assert!((x - o).abs() < 1e-4);
+        }
+        drop(gathered);
+    }
+
+    #[test]
+    fn broadcast_cost_log_steps_full_vector() {
+        let mut bufs = make_bufs(16, 1 << 16, 5);
+        let mut ctx = ctx_gdr();
+        let r = bcast(&mut bufs, 0, &mut ctx);
+        assert_eq!(r.steps, 4);
+        assert_eq!(r.wire_bytes_per_rank, 4 * (1 << 16) * 4);
+    }
+}

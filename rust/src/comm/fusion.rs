@@ -1,0 +1,125 @@
+//! Horovod "Tensor Fusion" (§III-C2): pack many small gradient tensors
+//! into one fusion buffer so the Allreduce pays one α instead of dozens.
+//! The threshold is a runtime knob the paper tunes per platform; the
+//! ablation bench sweeps it.
+//!
+//! Real packing: f32 payloads are copied into a contiguous buffer and
+//! scattered back after the collective — pack/unpack is round-trip tested.
+
+/// One packed buffer: which tensors it holds and where.
+#[derive(Debug, Clone)]
+pub struct FusionBuffer {
+    /// (tensor id, offset, len) for each packed tensor.
+    pub layout: Vec<(usize, usize, usize)>,
+    pub data: Vec<f32>,
+}
+
+impl FusionBuffer {
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn tensor_ids(&self) -> Vec<usize> {
+        self.layout.iter().map(|&(id, _, _)| id).collect()
+    }
+}
+
+/// Greedily pack tensors (in arrival order, like Horovod's per-cycle
+/// negotiation) into buffers of at most `threshold_bytes`.  A tensor
+/// larger than the threshold gets a buffer of its own — fusion never
+/// splits tensors.
+pub fn fuse(tensors: &[(usize, &[f32])], threshold_bytes: usize) -> Vec<FusionBuffer> {
+    let mut out = Vec::new();
+    let mut cur = FusionBuffer { layout: Vec::new(), data: Vec::new() };
+    for &(id, data) in tensors {
+        let bytes = data.len() * 4;
+        if !cur.data.is_empty() && cur.bytes() + bytes > threshold_bytes {
+            out.push(std::mem::replace(&mut cur, FusionBuffer { layout: Vec::new(), data: Vec::new() }));
+        }
+        let off = cur.data.len();
+        cur.layout.push((id, off, data.len()));
+        cur.data.extend_from_slice(data);
+    }
+    if !cur.data.is_empty() || !cur.layout.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Scatter a (reduced) fusion buffer back into per-tensor storage.
+/// `sink(tensor_id, data)` receives each unpacked slice.
+pub fn unfuse(buf: &FusionBuffer, mut sink: impl FnMut(usize, &[f32])) {
+    for &(id, off, len) in &buf.layout {
+        sink(id, &buf.data[off..off + len]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors(sizes: &[usize]) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Rng::new(11);
+        sizes.iter().map(|&n| rng.f32_vec(n)).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let data = tensors(&[10, 300, 1, 77, 2048]);
+        let refs: Vec<(usize, &[f32])> =
+            data.iter().enumerate().map(|(i, d)| (i, d.as_slice())).collect();
+        let bufs = fuse(&refs, 1024); // 256 floats per buffer
+        let mut seen = vec![None; data.len()];
+        for b in &bufs {
+            unfuse(b, |id, slice| seen[id] = Some(slice.to_vec()));
+        }
+        for (i, orig) in data.iter().enumerate() {
+            assert_eq!(seen[i].as_ref().unwrap(), orig, "tensor {i} corrupted");
+        }
+    }
+
+    #[test]
+    fn respects_threshold() {
+        let data = tensors(&[100; 20]);
+        let refs: Vec<(usize, &[f32])> =
+            data.iter().enumerate().map(|(i, d)| (i, d.as_slice())).collect();
+        let threshold = 1600; // 400 floats = 4 tensors
+        let bufs = fuse(&refs, threshold);
+        assert_eq!(bufs.len(), 5);
+        for b in &bufs {
+            assert!(b.bytes() <= threshold);
+        }
+    }
+
+    #[test]
+    fn oversize_tensor_gets_own_buffer() {
+        let data = tensors(&[10, 5000, 10]);
+        let refs: Vec<(usize, &[f32])> =
+            data.iter().enumerate().map(|(i, d)| (i, d.as_slice())).collect();
+        let bufs = fuse(&refs, 400);
+        // 10 | 5000 | 10 — the big one unsplit in its own buffer
+        assert_eq!(bufs.len(), 3);
+        assert_eq!(bufs[1].layout.len(), 1);
+        assert_eq!(bufs[1].data.len(), 5000);
+    }
+
+    #[test]
+    fn order_preserved_and_everything_packed() {
+        let data = tensors(&[3, 3, 3, 3]);
+        let refs: Vec<(usize, &[f32])> =
+            data.iter().enumerate().map(|(i, d)| (i, d.as_slice())).collect();
+        let bufs = fuse(&refs, usize::MAX);
+        assert_eq!(bufs.len(), 1);
+        assert_eq!(bufs[0].tensor_ids(), vec![0, 1, 2, 3]);
+        assert_eq!(bufs[0].data.len(), 12);
+    }
+
+    #[test]
+    fn huge_threshold_one_alpha_small_threshold_many() {
+        let data = tensors(&[64; 32]);
+        let refs: Vec<(usize, &[f32])> =
+            data.iter().enumerate().map(|(i, d)| (i, d.as_slice())).collect();
+        assert_eq!(fuse(&refs, usize::MAX).len(), 1);
+        assert_eq!(fuse(&refs, 64 * 4).len(), 32);
+    }
+}

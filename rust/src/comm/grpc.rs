@@ -1,0 +1,206 @@
+//! gRPC transport + tensor-table semantics (§III-A).
+//!
+//! TensorFlow's parameter-server model moves tensors with a **pull**
+//! protocol: the producer parks a computed tensor in a table; the consumer
+//! sends a request RPC and the producer answers with the tensor payload.
+//! gRPC offers no CUDA-aware path, so every GPU tensor is staged to host
+//! memory and protobuf-encoded before it touches the wire (and decoded +
+//! staged back up on the other side).
+//!
+//! Both halves are implemented here: the *cost model* (`rpc_time`,
+//! `tensor_pull_time`) and the *semantics* (`TensorTable`, a real
+//! pending-request table exercised by the PS strategy and its tests).
+
+use std::collections::HashMap;
+
+use crate::cluster::Link;
+use crate::comm::CostBreakdown;
+use crate::sim::SimTime;
+
+/// gRPC channel characteristics over a given TCP-capable link.
+#[derive(Debug, Clone)]
+pub struct GrpcTransport {
+    /// The TCP path (IPoIB on IB clusters — §III-A notes gRPC can ride
+    /// IPoIB transparently).
+    pub link: Link,
+    /// Per-RPC software overhead, µs (HTTP/2 framing, dispatch, threads).
+    pub rpc_overhead_us: f64,
+    /// protobuf encode/decode throughput, GB/s.
+    pub encode_gbs: f64,
+    /// Host↔device staging link.
+    pub pcie: Link,
+}
+
+impl GrpcTransport {
+    pub fn new(link: Link, pcie: Link) -> Self {
+        GrpcTransport { link, rpc_overhead_us: 90.0, encode_gbs: 1.0, pcie }
+    }
+
+    /// Cost of one one-way RPC carrying `bytes` of tensor payload where
+    /// the payload originates in GPU memory and lands in GPU memory.
+    pub fn tensor_rpc_cost(&self, bytes: usize) -> CostBreakdown {
+        let mut c = CostBreakdown::default();
+        c.sw_us = self.rpc_overhead_us
+            // encode at the producer + decode at the consumer
+            + 2.0 * bytes as f64 / (self.encode_gbs * 1e3);
+        // D2H at producer, H2D at consumer
+        c.staging_us = 2.0 * (self.pcie.alpha_us + self.pcie.wire_us(bytes));
+        c.wire_us = self.link.alpha_us + self.link.wire_us(bytes);
+        c
+    }
+
+    /// Full pull-model round trip: tiny request RPC + tensor response.
+    pub fn tensor_pull_cost(&self, bytes: usize) -> CostBreakdown {
+        let mut c = self.tensor_rpc_cost(bytes);
+        // the request leg: no payload, no staging
+        c.sw_us += self.rpc_overhead_us;
+        c.wire_us += self.link.alpha_us;
+        c
+    }
+
+    pub fn tensor_pull_time(&self, bytes: usize) -> SimTime {
+        self.tensor_pull_cost(bytes).total()
+    }
+}
+
+/// Key identifying one tensor in flight (step, producer, tensor id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorKey {
+    pub step: u64,
+    pub producer: usize,
+    pub tensor: usize,
+}
+
+/// The producer-side waiting table of TF's rendezvous protocol (§III-A):
+/// tensors wait for requests, requests wait for tensors.
+#[derive(Debug, Default)]
+pub struct TensorTable {
+    ready: HashMap<TensorKey, Vec<f32>>,
+    pending: HashMap<TensorKey, Vec<usize>>, // consumers waiting
+    pub served: u64,
+}
+
+/// What happened when a tensor or request arrived.
+#[derive(Debug, PartialEq)]
+pub enum TableEvent {
+    /// Tensor parked; nobody asked yet.
+    Parked,
+    /// Request matched instantly; payload returned to these consumers.
+    Served(Vec<usize>),
+    /// Request queued; producer hasn't computed the tensor yet.
+    Queued,
+}
+
+impl TensorTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Producer publishes a tensor.  If requests are pending they are all
+    /// served immediately and the tensor is removed (TF step 3); otherwise
+    /// it parks (TF steps 1–2).
+    pub fn publish(&mut self, key: TensorKey, data: Vec<f32>) -> TableEvent {
+        if let Some(waiters) = self.pending.remove(&key) {
+            self.served += waiters.len() as u64;
+            TableEvent::Served(waiters)
+        } else {
+            self.ready.insert(key, data);
+            TableEvent::Parked
+        }
+    }
+
+    /// Consumer requests a tensor.  Served immediately if parked (and the
+    /// entry is removed), queued otherwise.
+    pub fn request(&mut self, key: TensorKey, consumer: usize) -> (TableEvent, Option<Vec<f32>>) {
+        if let Some(data) = self.ready.remove(&key) {
+            self.served += 1;
+            (TableEvent::Served(vec![consumer]), Some(data))
+        } else {
+            self.pending.entry(key).or_default().push(consumer);
+            (TableEvent::Queued, None)
+        }
+    }
+
+    pub fn parked(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Fabric;
+
+    fn transport() -> GrpcTransport {
+        let f = Fabric::ib_edr_gdr();
+        GrpcTransport::new(f.tcp, f.pcie)
+    }
+
+    #[test]
+    fn pull_cost_components() {
+        let t = transport();
+        let c = t.tensor_pull_cost(1 << 20);
+        assert!(c.sw_us > 2.0 * t.rpc_overhead_us - 1e-9, "two RPC dispatches");
+        assert!(c.staging_us > 0.0, "gRPC always stages GPU tensors");
+        assert!(c.wire_us > 0.0);
+        // encode cost scales with size
+        let c2 = t.tensor_pull_cost(2 << 20);
+        assert!(c2.sw_us > c.sw_us);
+    }
+
+    #[test]
+    fn grpc_slower_than_verbs_path() {
+        // the whole reason for gRPC+X: IPoIB + protobuf + staging ≫ verbs
+        let t = transport();
+        let verbs = Link::ib_edr();
+        let n = 4 << 20;
+        assert!(t.tensor_pull_time(n).as_us() > 2.0 * verbs.transfer(n).as_us());
+    }
+
+    #[test]
+    fn table_pull_model_tensor_first() {
+        let mut tab = TensorTable::new();
+        let k = TensorKey { step: 1, producer: 0, tensor: 7 };
+        assert_eq!(tab.publish(k, vec![1.0, 2.0]), TableEvent::Parked);
+        assert_eq!(tab.parked(), 1);
+        let (ev, data) = tab.request(k, 3);
+        assert_eq!(ev, TableEvent::Served(vec![3]));
+        assert_eq!(data.unwrap(), vec![1.0, 2.0]);
+        assert_eq!(tab.parked(), 0, "served tensors leave the table");
+    }
+
+    #[test]
+    fn table_pull_model_request_first() {
+        let mut tab = TensorTable::new();
+        let k = TensorKey { step: 2, producer: 1, tensor: 0 };
+        let (ev, data) = tab.request(k, 5);
+        assert_eq!(ev, TableEvent::Queued);
+        assert!(data.is_none());
+        assert_eq!(tab.waiting(), 1);
+        // multiple waiters accumulate
+        tab.request(k, 6);
+        assert_eq!(tab.waiting(), 2);
+        match tab.publish(k, vec![9.0]) {
+            TableEvent::Served(w) => assert_eq!(w, vec![5, 6]),
+            other => panic!("expected Served, got {other:?}"),
+        }
+        assert_eq!(tab.waiting(), 0);
+        assert_eq!(tab.served, 2);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let mut tab = TensorTable::new();
+        let k1 = TensorKey { step: 1, producer: 0, tensor: 0 };
+        let k2 = TensorKey { step: 1, producer: 0, tensor: 1 };
+        tab.publish(k1, vec![1.0]);
+        let (ev, _) = tab.request(k2, 0);
+        assert_eq!(ev, TableEvent::Queued);
+        assert_eq!(tab.parked(), 1);
+        assert_eq!(tab.waiting(), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Communication substrates: the libraries the paper characterizes
+//! (gRPC, MPI, Verbs, NCCL) and the one it contributes (the truly
+//! CUDA-Aware `MPI_Allreduce` — allreduce/rhd.rs + ptrcache.rs).
+//!
+//! All collectives run over **real f32 buffers** (correctness is pinned to
+//! a serial oracle by unit + property tests); the virtual clock rides
+//! along with the data so the same call yields both the reduced tensor and
+//! the modeled latency on the target fabric.
+
+pub mod allreduce;
+pub mod collectives;
+pub mod fusion;
+pub mod grpc;
+pub mod mpi;
+pub mod nccl;
+pub mod ptrcache;
+pub mod verbs;
+
+pub use mpi::{MpiFlavor, MpiWorld};
+pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
+
+use crate::sim::SimTime;
+
+/// Where the latency of a communication operation went — the breakdown the
+/// paper's §V analysis reasons about.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// Wire/link time (α + n/β terms).
+    pub wire_us: f64,
+    /// Host-staging copies (D2H/H2D over PCIe) for non-CUDA-aware paths.
+    pub staging_us: f64,
+    /// Reduction compute (CPU loop or GPU kernel).
+    pub reduce_us: f64,
+    /// CUDA driver pointer-attribute queries (what the pointer cache kills).
+    pub driver_us: f64,
+    /// Kernel-launch overheads (NCCL pays one per ring step).
+    pub launch_us: f64,
+    /// Software overhead (protobuf encode, RPC dispatch, negotiation).
+    pub sw_us: f64,
+}
+
+impl CostBreakdown {
+    pub fn total_us(&self) -> f64 {
+        self.wire_us + self.staging_us + self.reduce_us + self.driver_us + self.launch_us + self.sw_us
+    }
+
+    pub fn total(&self) -> SimTime {
+        SimTime::from_us(self.total_us())
+    }
+
+    pub fn add(&mut self, other: &CostBreakdown) {
+        self.wire_us += other.wire_us;
+        self.staging_us += other.staging_us;
+        self.reduce_us += other.reduce_us;
+        self.driver_us += other.driver_us;
+        self.launch_us += other.launch_us;
+        self.sw_us += other.sw_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums() {
+        let mut a = CostBreakdown { wire_us: 1.0, staging_us: 2.0, ..Default::default() };
+        let b = CostBreakdown { reduce_us: 3.0, driver_us: 4.0, launch_us: 5.0, sw_us: 6.0, ..Default::default() };
+        a.add(&b);
+        assert!((a.total_us() - 21.0).abs() < 1e-12);
+        assert_eq!(a.total(), SimTime::from_us(21.0));
+    }
+}

@@ -1,0 +1,231 @@
+//! MPI library personalities (§II-B, §III): algorithm selection +
+//! transport/reduction configuration per flavor.  One `rhd`/`ring`/`tree`
+//! code path serves every library; the flavor only changes the
+//! `AllreduceCtx` — exactly the paper's framing that the *design choices*
+//! (where to reduce, whether to cache pointers) explain the performance
+//! gaps, not the algorithm skeleton.
+
+use crate::cluster::ClusterSpec;
+use crate::comm::allreduce::{
+    rhd_allreduce, ring_allreduce, tree_allreduce, Algo, AllreduceCtx, AllreduceReport,
+    ReducePlace, TransportMode,
+};
+use crate::comm::ptrcache::CacheMode;
+use crate::comm::CostBreakdown;
+use crate::sim::SimTime;
+
+/// Which MPI implementation personality to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MpiFlavor {
+    /// Stock MVAPICH2 2.x: CUDA-aware but host-staged transfers, CPU
+    /// reductions, driver query on every call (the Figure 4 baseline).
+    Mvapich2,
+    /// MVAPICH2-GDR 2.3rc1 with the paper's optimizations: GDR transport,
+    /// GPU-kernel reductions for large messages, intercept pointer cache.
+    Mvapich2GdrOpt,
+    /// Cray-MPICH 7.6 (Piz Daint): CUDA-aware over Aries, CPU reductions,
+    /// no GDR, no IB verbs.
+    CrayMpich,
+    /// Plain MPICH: naive GPU support (always staged, CPU reduce).
+    Mpich,
+}
+
+impl MpiFlavor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MpiFlavor::Mvapich2 => "MVAPICH2",
+            MpiFlavor::Mvapich2GdrOpt => "MVAPICH2-GDR-Opt",
+            MpiFlavor::CrayMpich => "Cray-MPICH",
+            MpiFlavor::Mpich => "MPICH",
+        }
+    }
+}
+
+/// Message-size threshold below which latency-optimal trees beat RSA.
+pub const SMALL_MSG_BYTES: usize = 32 * 1024;
+
+/// The optimized library switches to the GPU-kernel RSA path earlier: its
+/// large-message path is cheap enough that the GDRCopy eager window only
+/// pays off for truly tiny payloads.
+pub const SMALL_MSG_BYTES_OPT: usize = 8 * 1024;
+
+/// An MPI communicator over a cluster: the Allreduce entry point the
+/// Horovod/Baidu strategies call.
+#[derive(Debug, Clone)]
+pub struct MpiWorld {
+    pub flavor: MpiFlavor,
+    pub cluster: ClusterSpec,
+}
+
+impl MpiWorld {
+    pub fn new(flavor: MpiFlavor, cluster: ClusterSpec) -> Self {
+        MpiWorld { flavor, cluster }
+    }
+
+    /// Build the execution context + algorithm for a message of `bytes`.
+    pub fn plan(&self, bytes: usize) -> (Algo, AllreduceCtx) {
+        let c = &self.cluster;
+        let small = if self.flavor == MpiFlavor::Mvapich2GdrOpt {
+            bytes <= SMALL_MSG_BYTES_OPT
+        } else {
+            bytes <= SMALL_MSG_BYTES
+        };
+        let (transport, reduce, cache) = match self.flavor {
+            MpiFlavor::Mvapich2 => (
+                TransportMode::Staged,
+                ReducePlace::Cpu { gbs: 2.0 },
+                CacheMode::None,
+            ),
+            MpiFlavor::Mvapich2GdrOpt => {
+                if small {
+                    // eager GDRCopy path + host reduce of tiny payloads
+                    (TransportMode::Gdr, ReducePlace::Cpu { gbs: 6.0 }, CacheMode::Intercept)
+                } else {
+                    // §V-A: GPU-kernel reduction, GDR transport
+                    (TransportMode::Gdr, ReducePlace::Gpu, CacheMode::Intercept)
+                }
+            }
+            MpiFlavor::CrayMpich => (
+                TransportMode::Staged,
+                ReducePlace::Cpu { gbs: 2.5 },
+                CacheMode::None,
+            ),
+            MpiFlavor::Mpich => (
+                TransportMode::Staged,
+                ReducePlace::Cpu { gbs: 2.0 },
+                CacheMode::None,
+            ),
+        };
+        let algo = if small { Algo::Tree } else { Algo::Rhd };
+        let ctx = AllreduceCtx::new(
+            c.fabric.clone(),
+            c.gpu.clone(),
+            transport,
+            reduce,
+            cache,
+            c.driver_query_us,
+        );
+        (algo, ctx)
+    }
+
+    /// Allreduce over real per-rank buffers.
+    pub fn allreduce(&self, bufs: &mut [Vec<f32>]) -> AllreduceReport {
+        let bytes = bufs.first().map(|b| b.len() * 4).unwrap_or(0);
+        let (algo, mut ctx) = self.plan(bytes);
+        match algo {
+            Algo::Tree => tree_allreduce(bufs, &mut ctx),
+            Algo::Ring => ring_allreduce(bufs, &mut ctx),
+            Algo::Rhd => rhd_allreduce(bufs, &mut ctx),
+        }
+    }
+
+    /// Latency of an allreduce of `bytes` across `p` ranks — the
+    /// micro-benchmark primitive behind Figures 4 and 6.  Uses the shadow
+    /// cost path (pinned to the real-data implementations by
+    /// `shadow::tests`) so 256MB × 128-rank points stay cheap.  Applies
+    /// the fabric's at-scale contention factor to the wire.
+    pub fn allreduce_latency(&self, p: usize, bytes: usize) -> AllreduceReport {
+        let n = (bytes / 4).max(1);
+        let (algo, mut ctx) = self.plan(bytes);
+        ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p);
+        crate::comm::allreduce::shadow_cost(algo, p, n, &mut ctx)
+    }
+
+    /// CUDA-aware point-to-point send/recv cost (used by the Baidu ring
+    /// built on MPI_Send/MPI_Irecv and the gRPC+MPI tensor offload).
+    pub fn p2p_cost(&self, bytes: usize) -> CostBreakdown {
+        let (_, mut ctx) = self.plan(bytes);
+        ctx.register_ranks(2, bytes.max(4) as u64);
+        let mut c = ctx.sendrecv_cost(bytes);
+        c.driver_us = ctx.driver_cost_us(0);
+        c
+    }
+
+    pub fn p2p_time(&self, bytes: usize) -> SimTime {
+        self.p2p_cost(bytes).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::comm::allreduce::{max_abs_err, serial_oracle};
+
+    fn bufs(p: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Rng::new(7);
+        (0..p).map(|_| rng.f32_vec(n)).collect()
+    }
+
+    #[test]
+    fn every_flavor_reduces_correctly() {
+        for flavor in [
+            MpiFlavor::Mvapich2,
+            MpiFlavor::Mvapich2GdrOpt,
+            MpiFlavor::CrayMpich,
+            MpiFlavor::Mpich,
+        ] {
+            let w = MpiWorld::new(flavor, presets::ri2());
+            for (p, n) in [(2, 4), (5, 1000), (16, 20000)] {
+                let mut b = bufs(p, n);
+                let oracle = serial_oracle(&b);
+                w.allreduce(&mut b);
+                let err = max_abs_err(&b, &oracle);
+                assert!(err < 1e-3, "{}: err {err}", flavor.name());
+            }
+        }
+    }
+
+    #[test]
+    fn algorithm_selection_by_size() {
+        let w = MpiWorld::new(MpiFlavor::Mvapich2, presets::ri2());
+        assert_eq!(w.plan(8).0, Algo::Tree);
+        assert_eq!(w.plan(SMALL_MSG_BYTES).0, Algo::Tree);
+        assert_eq!(w.plan(SMALL_MSG_BYTES + 1).0, Algo::Rhd);
+        assert_eq!(w.plan(256 << 20).0, Algo::Rhd);
+    }
+
+    #[test]
+    fn opt_beats_stock_small_messages() {
+        // Fig 6 left panel: ~4× from the pointer cache + GDR eager path.
+        let stock = MpiWorld::new(MpiFlavor::Mvapich2, presets::ri2());
+        let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+        let t_stock = stock.allreduce_latency(16, 8).time.as_us();
+        let t_opt = opt.allreduce_latency(16, 8).time.as_us();
+        let speedup = t_stock / t_opt;
+        assert!(speedup > 2.5, "expected ≥2.5× at 8B, got {speedup:.2}× ({t_stock} vs {t_opt})");
+    }
+
+    #[test]
+    fn opt_beats_stock_large_messages() {
+        // Fig 6 right panel: GPU-kernel reduction vs CPU-staged, ~4–8×.
+        let stock = MpiWorld::new(MpiFlavor::Mvapich2, presets::ri2());
+        let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+        let bytes = 64 << 20;
+        let t_stock = stock.allreduce_latency(16, bytes).time.as_ms();
+        let t_opt = opt.allreduce_latency(16, bytes).time.as_ms();
+        let speedup = t_stock / t_opt;
+        assert!(speedup > 3.0, "expected ≥3× at 64MB, got {speedup:.2}×");
+    }
+
+    #[test]
+    fn p2p_cost_cuda_aware_vs_staged() {
+        let stock = MpiWorld::new(MpiFlavor::Mvapich2, presets::ri2());
+        let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+        let n = 4 << 20;
+        assert!(stock.p2p_time(n).as_us() > opt.p2p_time(n).as_us());
+    }
+
+    #[test]
+    fn driver_queries_counted_only_without_cache() {
+        let stock = MpiWorld::new(MpiFlavor::Mvapich2, presets::ri2());
+        let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+        let d_stock = stock.allreduce_latency(8, 8).cost.driver_us;
+        let d_opt = opt.allreduce_latency(8, 8).cost.driver_us;
+        assert!(d_stock > 10.0, "stock pays the driver per call, got {d_stock}us");
+        assert!(
+            d_opt < d_stock / 10.0,
+            "cache should kill ≥90% of query time: {d_opt} vs {d_stock}"
+        );
+    }
+}

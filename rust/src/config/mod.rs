@@ -1,0 +1,9 @@
+//! Experiment configuration: a TOML-subset parser (offline environment —
+//! DESIGN.md §7) plus the typed experiment schema the CLI and launcher
+//! consume.
+
+pub mod schema;
+pub mod toml_lite;
+
+pub use schema::ExperimentConfig;
+pub use toml_lite::{TomlValue, parse_toml};

@@ -1,0 +1,142 @@
+//! Typed experiment configuration loaded from a TOML file — the "config
+//! system + launcher" surface of the framework (README quickstart).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::toml_lite::{parse_toml, TomlDoc};
+use crate::cluster::{presets, ClusterSpec};
+use crate::models::{self, ModelProfile};
+
+/// One experiment: a cluster, a workload, a strategy set and a GPU sweep.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub cluster: ClusterSpec,
+    pub model: ModelProfile,
+    pub gpus: Vec<usize>,
+    pub batch_per_gpu: usize,
+    pub strategies: Vec<String>,
+    /// Horovod fusion threshold override, bytes (0 = default).
+    pub fusion_bytes: usize,
+    pub json_output: bool,
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse_toml(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        ExperimentConfig::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let root = doc.get("").context("missing root table")?;
+        let name = root
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("experiment")
+            .to_string();
+
+        let wl = doc.get("workload").context("missing [workload] table")?;
+        let cluster = presets::by_name(
+            wl.get("cluster").and_then(|v| v.as_str()).unwrap_or("ri2"),
+        )?;
+        let model =
+            models::by_name(wl.get("model").and_then(|v| v.as_str()).unwrap_or("resnet50"))?;
+        let gpus: Vec<usize> = wl
+            .get("gpus")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|x| x.as_int()).map(|i| i as usize).collect())
+            .unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
+        anyhow::ensure!(!gpus.is_empty(), "empty gpu sweep");
+        for &g in &gpus {
+            cluster.check_world(g)?;
+        }
+        let batch_per_gpu = wl
+            .get("batch")
+            .and_then(|v| v.as_int())
+            .map(|b| b as usize)
+            .unwrap_or(model.default_batch);
+
+        let comm = doc.get("comm").cloned().unwrap_or_default();
+        let strategies = comm
+            .get("strategies")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_else(|| vec!["horovod-mpi".into(), "horovod-mpi-opt".into()]);
+        for s in &strategies {
+            crate::strategies::by_name(s)?; // validate early
+        }
+        let fusion_bytes = comm
+            .get("fusion_mb")
+            .and_then(|v| v.as_float())
+            .map(|mb| (mb * 1024.0 * 1024.0) as usize)
+            .unwrap_or(0);
+
+        Ok(ExperimentConfig {
+            name,
+            cluster,
+            model,
+            gpus,
+            batch_per_gpu,
+            strategies,
+            fusion_bytes,
+            json_output: root.get("json").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<ExperimentConfig> {
+        ExperimentConfig::from_doc(&parse_toml(s).unwrap())
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let c = parse(
+            r#"
+name = "fig9-resnet"
+json = true
+
+[workload]
+cluster = "pizdaint"
+model = "resnet50"
+gpus = [1, 32, 128]
+batch = 64
+
+[comm]
+strategies = ["grpc", "horovod-cray"]
+fusion_mb = 32.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.name, "fig9-resnet");
+        assert_eq!(c.cluster.name, "PizDaint");
+        assert_eq!(c.gpus, vec![1, 32, 128]);
+        assert_eq!(c.batch_per_gpu, 64);
+        assert_eq!(c.strategies.len(), 2);
+        assert_eq!(c.fusion_bytes, 32 << 20);
+        assert!(c.json_output);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = parse("[workload]\nmodel = \"mobilenet\"").unwrap();
+        assert_eq!(c.cluster.name, "RI2");
+        assert_eq!(c.batch_per_gpu, 64);
+        assert!(!c.strategies.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_strategy_and_oversized_world() {
+        assert!(parse("[workload]\ngpus = [100000]").is_err());
+        assert!(
+            parse("[workload]\nmodel=\"resnet50\"\n[comm]\nstrategies=[\"bogus\"]").is_err()
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! Minimal TOML parser: tables, key = value with strings / integers /
+//! floats / booleans / flat arrays, `#` comments.  Covers everything the
+//! experiment configs use; nested tables-of-tables and datetimes are out
+//! of scope (and rejected loudly rather than misparsed).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// table name ("" for the root) → key → value.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse_toml(src: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut table = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?;
+            if name.starts_with('[') {
+                return Err(format!("line {}: array-of-tables not supported", lineno + 1));
+            }
+            table = name.trim().to_string();
+            doc.entry(table.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.get_mut(&table).unwrap().insert(k.trim().to_string(), value);
+        } else {
+            return Err(format!("line {}: expected `key = value` or `[table]`", lineno + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split on commas that are not inside quotes (flat arrays only).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_config_shape() {
+        let doc = parse_toml(
+            r#"
+# figure 9 sweep
+name = "pizdaint"
+
+[workload]
+model = "resnet50"      # batch from model default
+gpus = [1, 2, 4, 8]
+batch = 64
+
+[comm]
+fusion_mb = 64.5
+nccl = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("pizdaint".into()));
+        assert_eq!(doc["workload"]["model"].as_str(), Some("resnet50"));
+        assert_eq!(doc["workload"]["gpus"].as_array().unwrap().len(), 4);
+        assert_eq!(doc["workload"]["batch"].as_int(), Some(64));
+        assert!((doc["comm"]["fusion_mb"].as_float().unwrap() - 64.5).abs() < 1e-9);
+        assert_eq!(doc["comm"]["nccl"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let doc = parse_toml(r#"k = "a # not comment \" quote""#).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some(r#"a # not comment " quote"#));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_toml("just words").is_err());
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("k = ").is_err());
+        assert!(parse_toml("[[aot]]").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let doc = parse_toml("n = 1_000_000").unwrap();
+        assert_eq!(doc[""]["n"].as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse_toml("a = []").unwrap();
+        assert_eq!(doc[""]["a"].as_array().unwrap().len(), 0);
+    }
+}

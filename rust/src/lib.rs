@@ -1,0 +1,31 @@
+//! # mpi-dnn-train
+//!
+//! A production-shaped reproduction of **"Scalable Distributed DNN Training
+//! using TensorFlow and CUDA-Aware MPI: Characterization, Designs, and
+//! Performance Evaluation"** (Awan et al., CCGrid 2019) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: a deterministic discrete-event
+//!   cluster simulator, MPI/gRPC/Verbs/NCCL communication substrates, the
+//!   paper's optimized Allreduce (recursive halving/doubling RSA with
+//!   GPU-kernel reductions + pointer cache), all seven distributed-training
+//!   strategies, DNN workload profiles, a real data-parallel trainer, and a
+//!   figure-regeneration bench harness.
+//! * **L2** — a JAX transformer (python/compile/model.py) AOT-lowered to
+//!   HLO text, executed here via the PJRT CPU client.
+//! * **L1** — Pallas kernels (python/compile/kernels/) for the reduction
+//!   and the fused optimizer, lowered into the same artifacts.
+//!
+//! See DESIGN.md for the experiment index and the substitution ledger
+//! (real GPU clusters → simulated substrates).
+
+pub mod bench;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod strategies;
+pub mod trainer;
+pub mod util;

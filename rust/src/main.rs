@@ -1,0 +1,282 @@
+//! mpi-dnn-train CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! mpi-dnn-train figure 6               # regenerate a paper figure
+//! mpi-dnn-train figure all --json
+//! mpi-dnn-train microbench --ranks 16 --max 256MB
+//! mpi-dnn-train train --config small --world 4 --steps 100
+//! mpi-dnn-train experiment cfgs/fig9.toml
+//! mpi-dnn-train ablation --cluster owens --world 64
+//! mpi-dnn-train validate               # artifacts + numerics smoke
+//! mpi-dnn-train list
+//! ```
+
+use anyhow::{Context, Result};
+
+use mpi_dnn_train::bench::{self, Table};
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::nccl::NcclWorld;
+use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
+use mpi_dnn_train::config::ExperimentConfig;
+use mpi_dnn_train::runtime;
+use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::trainer::{TrainConfig, Trainer};
+use mpi_dnn_train::util::bytes::{fmt_bytes, parse_bytes};
+use mpi_dnn_train::util::cli::Args;
+
+fn main() {
+    mpi_dnn_train::util::logger::init_from_env();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn emit(t: &Table, json: bool) {
+    if json {
+        println!("{}", t.to_json());
+    } else {
+        println!("{t}");
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("figure") => cmd_figure(&args),
+        Some("microbench") => cmd_microbench(&args),
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("list") => cmd_list(&args),
+        Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
+        None => {
+            println!(
+                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|validate|list> [flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let json = args.get_bool("json");
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    let mut tables: Vec<Table> = Vec::new();
+    match which {
+        "2" => tables.push(bench::fig2()),
+        "3" => tables.push(bench::fig3()?),
+        "4" => tables.push(bench::fig4()?),
+        "6" => tables.push(bench::fig6()?),
+        "7" => tables.push(bench::fig7()?),
+        "8" => tables.push(bench::fig8()?),
+        "9" => {
+            for m in ["nasnet", "resnet50", "mobilenet"] {
+                tables.push(bench::fig9(m)?);
+            }
+        }
+        "all" => {
+            tables.push(bench::fig2());
+            tables.push(bench::fig3()?);
+            tables.push(bench::fig4()?);
+            tables.push(bench::fig6()?);
+            tables.push(bench::fig7()?);
+            tables.push(bench::fig8()?);
+            for m in ["nasnet", "resnet50", "mobilenet"] {
+                tables.push(bench::fig9(m)?);
+            }
+        }
+        other => anyhow::bail!("unknown figure `{other}` (2|3|4|6|7|8|9|all)"),
+    }
+    for t in &tables {
+        emit(t, json);
+    }
+    Ok(())
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    let ranks = args.get_usize("ranks", 16).map_err(anyhow::Error::msg)?;
+    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(anyhow::Error::msg)?;
+    let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
+    let json = args.get_bool("json");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let mpi = MpiWorld::new(MpiFlavor::Mvapich2, cluster.clone());
+    let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, cluster.clone());
+    let nccl = NcclWorld::new(cluster.clone()).ok();
+    let mut t = Table::new(
+        &format!("Allreduce microbenchmark, {} ranks on {}", ranks, cluster.name),
+        &["size", "MPI (us)", "MPI-Opt (us)", "NCCL2 (us)"],
+    );
+    for bytes in mpi_dnn_train::util::bytes::msg_size_sweep(max) {
+        t.row([
+            fmt_bytes(bytes),
+            format!("{:.1}", mpi.allreduce_latency(ranks, bytes).time.as_us()),
+            format!("{:.1}", opt.allreduce_latency(ranks, bytes).time.as_us()),
+            match &nccl {
+                Some(n) => format!("{:.1}", n.allreduce_latency(ranks, bytes).time.as_us()),
+                None => "n/a".into(),
+            },
+        ]);
+    }
+    emit(&t, json);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        model_config: args.get_or("config", "small"),
+        world: args.get_usize("world", 4).map_err(anyhow::Error::msg)?,
+        steps: args.get_usize("steps", 100).map_err(anyhow::Error::msg)?,
+        seed: args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64,
+        flavor: parse_flavor(&args.get_or("flavor", "mvapich2-gdr-opt"))?,
+        cluster: presets::by_name(&args.get_or("cluster", "ri2"))?,
+        pjrt_reduce: args.get_bool("pjrt-reduce"),
+        log_every: args.get_usize("log-every", 10).map_err(anyhow::Error::msg)?,
+        checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
+        checkpoint_path: args.get("checkpoint").map(std::path::PathBuf::from),
+    };
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let client = mpi_dnn_train::runtime::client::shared()?;
+    println!(
+        "training config={} world={} steps={} on simulated {} (PJRT platform: {})",
+        cfg.model_config,
+        cfg.world,
+        cfg.steps,
+        cfg.cluster.name,
+        client.platform()
+    );
+    let mut trainer = Trainer::new(&client, cfg)?;
+    let r = trainer.train()?;
+    println!(
+        "done: {} params, loss {:.4} -> {:.4}, simulated cluster time {}, wall {:.1}s",
+        r.param_count,
+        r.initial_loss(),
+        r.final_loss(),
+        r.sim_time,
+        r.wall_secs
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: experiment <config.toml>")?;
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    let cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+    let mut headers = vec!["gpus".to_string(), "ideal".to_string()];
+    headers.extend(cfg.strategies.iter().cloned());
+    let mut t = Table::new(
+        &format!("experiment `{}`: {} on {}", cfg.name, cfg.model.name, cfg.cluster.name),
+        &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
+    );
+    for &gpus in &cfg.gpus {
+        let mut ws = WorldSpec::new(cfg.cluster.clone(), cfg.model.clone(), gpus);
+        ws.batch_per_gpu = cfg.batch_per_gpu;
+        let ideal = gpus as f64 * ws.throughput_1gpu();
+        let mut row = vec![gpus.to_string(), format!("{ideal:.0}")];
+        for name in &cfg.strategies {
+            let s = strategies::by_name(name)?;
+            row.push(match s.iteration(&ws) {
+                Ok(r) => format!("{:.0}", r.imgs_per_sec),
+                Err(_) => "n/a".into(),
+            });
+        }
+        t.row(row);
+    }
+    emit(&t, cfg.json_output);
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let cluster = args.get_or("cluster", "owens");
+    let world = args.get_usize("world", 64).map_err(anyhow::Error::msg)?;
+    let json = args.get_bool("json");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    emit(&bench::ablation_fusion(&cluster, world)?, json);
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    // 1. artifacts present?
+    let dir = runtime::artifacts_dir()?;
+    println!("artifacts dir: {}", dir.display());
+    for cfg in ["tiny", "small", "medium", "large"] {
+        println!(
+            "  config {cfg:<7} {}",
+            if runtime::config_available(&dir, cfg) { "present" } else { "missing" }
+        );
+    }
+    // 2. allreduce numerics vs serial oracle across every flavor
+    use mpi_dnn_train::comm::allreduce::{max_abs_err, serial_oracle};
+    let mut rng = mpi_dnn_train::util::prng::Rng::new(1);
+    for flavor in [
+        MpiFlavor::Mvapich2,
+        MpiFlavor::Mvapich2GdrOpt,
+        MpiFlavor::CrayMpich,
+        MpiFlavor::Mpich,
+    ] {
+        let w = MpiWorld::new(flavor, presets::ri2());
+        let mut bufs: Vec<Vec<f32>> = (0..16).map(|_| rng.f32_vec(10_000)).collect();
+        let oracle = serial_oracle(&bufs);
+        w.allreduce(&mut bufs);
+        let err = max_abs_err(&bufs, &oracle);
+        println!("  allreduce {:<18} max err {err:.2e}", w.flavor.name());
+        anyhow::ensure!(err < 1e-3, "{} numerics off", w.flavor.name());
+    }
+    // 3. PJRT round trip on the tiny model
+    if runtime::config_available(&dir, "tiny") {
+        let client = mpi_dnn_train::runtime::client::shared()?;
+        let step = runtime::TrainStep::load(&client, &dir, "tiny")?;
+        let params = step.meta.load_params(&dir)?;
+        let tokens = rng.tokens(step.meta.tokens_len(), step.meta.vocab as u32);
+        let (loss, grads) = step.run(&params, &tokens)?;
+        println!("  pjrt train_step(tiny): loss {loss:.3}, |g| {} elems", grads.len());
+        anyhow::ensure!(loss.is_finite());
+    } else {
+        println!("  (tiny artifacts missing — PJRT smoke skipped; run `make artifacts`)");
+    }
+    println!("validate: OK");
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    println!("clusters:");
+    for c in presets::all() {
+        println!(
+            "  {:<10} {} × {}  fabric {} (verbs: {}, gdr: {})",
+            c.name,
+            c.nodes,
+            c.gpu.name,
+            c.fabric.inter.name,
+            c.fabric.ib_verbs,
+            c.fabric.gdr
+        );
+    }
+    println!("models: resnet50, mobilenet, nasnet (+ transformer via train --config)");
+    println!(
+        "strategies: grpc, grpc+mpi, grpc+verbs, baidu, horovod-mpi, horovod-nccl, horovod-mpi-opt, horovod-cray"
+    );
+    println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
+    Ok(())
+}
+
+fn parse_flavor(s: &str) -> Result<MpiFlavor> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "mvapich2" => MpiFlavor::Mvapich2,
+        "mvapich2-gdr-opt" | "opt" | "mpi-opt" => MpiFlavor::Mvapich2GdrOpt,
+        "cray-mpich" | "cray" => MpiFlavor::CrayMpich,
+        "mpich" => MpiFlavor::Mpich,
+        other => anyhow::bail!("unknown flavor `{other}`"),
+    })
+}

@@ -1,0 +1,111 @@
+//! Layer/tensor building blocks shared by the architecture constructors.
+
+/// One trainable tensor (weight or bias/BN) — the unit of gradient
+/// communication.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub elems: usize,
+}
+
+impl TensorSpec {
+    pub fn new(name: impl Into<String>, elems: usize) -> TensorSpec {
+        TensorSpec { name: name.into(), elems }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems * 4
+    }
+}
+
+/// Running tally while walking an architecture: tensors + MACs.
+#[derive(Debug, Default)]
+pub struct NetBuilder {
+    pub tensors: Vec<TensorSpec>,
+    pub macs: f64,
+    pub launches: usize,
+}
+
+impl NetBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// 2-D convolution: k×k, cin→cout, producing out_hw² spatial outputs.
+    /// Registers weight (+ BN scale/shift when `bn`) and counts MACs.
+    pub fn conv(&mut self, name: &str, k: usize, cin: usize, cout: usize, out_hw: usize, bn: bool) {
+        self.tensors.push(TensorSpec::new(format!("{name}.w"), k * k * cin * cout));
+        if bn {
+            self.tensors.push(TensorSpec::new(format!("{name}.bn_g"), cout));
+            self.tensors.push(TensorSpec::new(format!("{name}.bn_b"), cout));
+        }
+        self.macs += (k * k * cin * cout * out_hw * out_hw) as f64;
+        self.launches += if bn { 3 } else { 1 }; // conv + bn + relu
+    }
+
+    /// Depthwise convolution: k×k per-channel filter over c channels.
+    pub fn dwconv(&mut self, name: &str, k: usize, c: usize, out_hw: usize, bn: bool) {
+        self.tensors.push(TensorSpec::new(format!("{name}.dw"), k * k * c));
+        if bn {
+            self.tensors.push(TensorSpec::new(format!("{name}.bn_g"), c));
+            self.tensors.push(TensorSpec::new(format!("{name}.bn_b"), c));
+        }
+        self.macs += (k * k * c * out_hw * out_hw) as f64;
+        self.launches += if bn { 3 } else { 1 };
+    }
+
+    /// Fully connected layer with bias.
+    pub fn fc(&mut self, name: &str, cin: usize, cout: usize) {
+        self.tensors.push(TensorSpec::new(format!("{name}.w"), cin * cout));
+        self.tensors.push(TensorSpec::new(format!("{name}.b"), cout));
+        self.macs += (cin * cout) as f64;
+        self.launches += 1;
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems).sum()
+    }
+
+    /// GFLOPs forward (2·MACs convention).
+    pub fn gflops_fwd(&self) -> f64 {
+        2.0 * self.macs / 1e9
+    }
+
+    /// Tensors in backward (reverse) emission order.
+    pub fn tensors_bwd_order(mut self) -> Vec<TensorSpec> {
+        self.tensors.reverse();
+        self.tensors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_arithmetic() {
+        let mut b = NetBuilder::new();
+        b.conv("c1", 3, 16, 32, 10, true);
+        assert_eq!(b.param_count(), 3 * 3 * 16 * 32 + 32 + 32);
+        assert!((b.macs - (3 * 3 * 16 * 32 * 100) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn dwconv_much_cheaper_than_conv() {
+        let mut dense = NetBuilder::new();
+        dense.conv("c", 3, 256, 256, 14, false);
+        let mut dw = NetBuilder::new();
+        dw.dwconv("d", 3, 256, 14, false);
+        assert!(dense.macs > 100.0 * dw.macs);
+    }
+
+    #[test]
+    fn bwd_order_reverses() {
+        let mut b = NetBuilder::new();
+        b.fc("a", 2, 2);
+        b.fc("z", 2, 2);
+        let t = b.tensors_bwd_order();
+        assert_eq!(t[0].name, "z.b");
+        assert_eq!(t.last().unwrap().name, "a.w");
+    }
+}

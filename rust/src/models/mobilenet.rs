@@ -1,0 +1,83 @@
+//! MobileNet v1 (Howard et al.) — the paper's communication-bound extreme:
+//! small parameter set (4.2M), tiny per-image compute (≈0.57 GMACs), and
+//! depthwise convolutions that utilize dense-conv hardware poorly.  This
+//! is the model whose gradients "cannot be hidden behind the relatively
+//! smaller computation" (§VI-D), giving the worst scaling in Figure 9.
+
+use super::layer::NetBuilder;
+use super::ModelProfile;
+
+pub fn mobilenet_v1() -> ModelProfile {
+    let mut b = NetBuilder::new();
+    // stem: 3×3/2 conv, 3→32, 224→112
+    b.conv("conv1", 3, 3, 32, 112, true);
+    // depthwise-separable stack: (cin, cout, out_hw after this layer)
+    let layers: [(usize, usize, usize); 13] = [
+        (32, 64, 112),
+        (64, 128, 56),
+        (128, 128, 56),
+        (128, 256, 28),
+        (256, 256, 28),
+        (256, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 1024, 7),
+        (1024, 1024, 7),
+    ];
+    for (i, &(cin, cout, hw)) in layers.iter().enumerate() {
+        b.dwconv(&format!("ds{i}.dw"), 3, cin, hw, true);
+        b.conv(&format!("ds{i}.pw"), 1, cin, cout, hw, true);
+    }
+    b.fc("fc", 1024, 1000);
+
+    let gflops_fwd = b.gflops_fwd();
+    let kernel_launches = b.launches;
+    ModelProfile {
+        name: "MobileNet".to_string(),
+        gflops_fwd,
+        kernel_launches,
+        eff_mult: 0.5, // depthwise convs run dense-conv pipelines poorly
+        act_bytes_per_sample: 25e6,
+        default_batch: 64,
+        tensors: b.tensors_bwd_order(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_published() {
+        let m = mobilenet_v1();
+        let p = m.param_count();
+        // published: 4.24M (1.0 width, 224)
+        assert!((4_000_000..=4_500_000).contains(&p), "MobileNet params {p} ≈ 4.2M");
+    }
+
+    #[test]
+    fn gflops_matches_published() {
+        let m = mobilenet_v1();
+        // 569M MACs ⇒ ≈1.14 GFLOPs fwd
+        assert!(m.gflops_fwd > 0.9 && m.gflops_fwd < 1.4, "got {}", m.gflops_fwd);
+    }
+
+    #[test]
+    fn mostly_tiny_tensors() {
+        // the communication pathology: many small gradient tensors
+        let m = mobilenet_v1();
+        assert_eq!(m.tensors.len(), 83); // stem(3) + 13·(dw 3 + pw 3) + fc(2)
+        let tiny = m.tensors.iter().filter(|t| t.bytes() < 16 * 1024).count();
+        assert!(tiny as f64 > 0.55 * m.tensors.len() as f64, "{tiny}/83 tiny");
+    }
+
+    #[test]
+    fn much_faster_than_resnet_per_image() {
+        let m = mobilenet_v1();
+        let r = super::super::resnet::resnet50();
+        assert!(r.gflops_fwd / m.gflops_fwd > 5.0);
+    }
+}

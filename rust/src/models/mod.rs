@@ -1,0 +1,109 @@
+//! DNN workload profiles: the gradient-tensor inventory and FLOP budget of
+//! the networks the paper trains (ResNet-50, MobileNet, NASNet-large) plus
+//! the transformer our real end-to-end runs use.
+//!
+//! Profiles are *constructed from the architectures* (conv/fc shape
+//! arithmetic), not hard-coded totals — the tests pin the derived
+//! parameter counts and FLOPs to the published numbers.
+
+pub mod layer;
+pub mod mobilenet;
+pub mod nasnet;
+pub mod resnet;
+pub mod transformer;
+
+pub use layer::TensorSpec;
+
+/// Everything the strategies need to know about one DNN workload.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Gradient tensors in *backward* emission order (last layer first) —
+    /// the order Horovod sees them become ready.
+    pub tensors: Vec<TensorSpec>,
+    /// Forward-pass GFLOPs per sample (2·MACs convention).
+    pub gflops_fwd: f64,
+    /// Kernel launches per fwd+bwd iteration (pipelining overhead term).
+    pub kernel_launches: usize,
+    /// Utilization multiplier vs the GPU's dense-conv efficiency curve
+    /// (depthwise convolutions and fragmented cells run the MXU/SM array
+    /// poorly: MobileNet ≈ 0.5, NASNet ≈ 0.6).
+    pub eff_mult: f64,
+    /// Activation bytes per sample (for batch-feasibility checks).
+    pub act_bytes_per_sample: f64,
+    /// The batch size the paper's runs use for this model.
+    pub default_batch: usize,
+}
+
+impl ModelProfile {
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems).sum()
+    }
+
+    pub fn grad_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// fwd+bwd GFLOPs per sample (backward ≈ 2× forward).
+    pub fn gflops_fwd_bwd(&self) -> f64 {
+        3.0 * self.gflops_fwd
+    }
+
+    /// Compute time for one iteration on `gpu` at `batch`.
+    pub fn compute_time(&self, gpu: &crate::cluster::GpuModel, batch: usize) -> crate::sim::SimTime {
+        let eff = gpu.efficiency(batch) * self.eff_mult;
+        let compute_us =
+            batch as f64 * self.gflops_fwd_bwd() / (gpu.peak_gflops * eff) * 1e6;
+        crate::sim::SimTime::from_us(compute_us + gpu.launch_us * self.kernel_launches as f64)
+    }
+
+    /// Single-GPU throughput (samples/s) — the "ideal" scaling baseline.
+    pub fn throughput_1gpu(&self, gpu: &crate::cluster::GpuModel, batch: usize) -> f64 {
+        batch as f64 / self.compute_time(gpu, batch).as_secs()
+    }
+}
+
+/// Look up a workload by name.
+pub fn by_name(name: &str) -> anyhow::Result<ModelProfile> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet50" | "resnet-50" | "resnet" => Ok(resnet::resnet50()),
+        "mobilenet" => Ok(mobilenet::mobilenet_v1()),
+        "nasnet" | "nasnet-large" => Ok(nasnet::nasnet_large()),
+        other => anyhow::bail!("unknown model `{other}` (resnet50 | mobilenet | nasnet)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    #[test]
+    fn lookup_works() {
+        assert!(by_name("ResNet-50").is_ok());
+        assert!(by_name("mobilenet").is_ok());
+        assert!(by_name("nasnet").is_ok());
+        assert!(by_name("vgg").is_err());
+    }
+
+    #[test]
+    fn relative_speeds_sane() {
+        // samples/s: MobileNet > ResNet-50 > NASNet on every GPU
+        let gpu = GpuModel::p100();
+        let m = mobilenet::mobilenet_v1();
+        let r = resnet::resnet50();
+        let n = nasnet::nasnet_large();
+        let tm = m.throughput_1gpu(&gpu, m.default_batch);
+        let tr = r.throughput_1gpu(&gpu, r.default_batch);
+        let tn = n.throughput_1gpu(&gpu, n.default_batch);
+        assert!(tm > tr && tr > tn, "mobilenet {tm} > resnet {tr} > nasnet {tn}");
+    }
+
+    #[test]
+    fn grad_sizes_ordered_like_param_counts() {
+        let m = mobilenet::mobilenet_v1().grad_bytes();
+        let r = resnet::resnet50().grad_bytes();
+        let n = nasnet::nasnet_large().grad_bytes();
+        assert!(m < r && r < n);
+    }
+}

@@ -1,0 +1,101 @@
+//! ResNet-50 (He et al.) — the paper's primary workload.  Constructed
+//! block-by-block; the derived totals are pinned to the published numbers
+//! (25.56M parameters, ≈4.1 GMACs for 224×224).
+
+use super::layer::NetBuilder;
+use super::ModelProfile;
+
+/// Bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ optional projection
+/// shortcut).  `hw` is the output spatial size of the block.
+fn bottleneck(b: &mut NetBuilder, name: &str, cin: usize, w: usize, hw: usize, project: bool) {
+    b.conv(&format!("{name}.a"), 1, cin, w, hw, true);
+    b.conv(&format!("{name}.b"), 3, w, w, hw, true);
+    b.conv(&format!("{name}.c"), 1, w, 4 * w, hw, true);
+    if project {
+        b.conv(&format!("{name}.proj"), 1, cin, 4 * w, hw, true);
+    }
+}
+
+pub fn resnet50() -> ModelProfile {
+    let mut b = NetBuilder::new();
+    // stem: 7×7/2 conv, 64 ch, 224→112
+    b.conv("conv1", 7, 3, 64, 112, true);
+    // stage configs: (blocks, width, output hw)   — 112→56→28→14→7
+    let stages = [(3usize, 64usize, 56usize), (4, 128, 28), (6, 256, 14), (3, 512, 7)];
+    let mut cin = 64;
+    for (s, &(blocks, w, hw)) in stages.iter().enumerate() {
+        for i in 0..blocks {
+            bottleneck(&mut b, &format!("s{s}b{i}"), cin, w, hw, i == 0);
+            cin = 4 * w;
+        }
+    }
+    b.fc("fc", 2048, 1000);
+
+    let gflops_fwd = b.gflops_fwd();
+    let kernel_launches = b.launches;
+    ModelProfile {
+        name: "ResNet-50".to_string(),
+        gflops_fwd,
+        kernel_launches,
+        eff_mult: 1.0,
+        act_bytes_per_sample: 62e6,
+        default_batch: 64,
+        tensors: b.tensors_bwd_order(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_published() {
+        let m = resnet50();
+        let p = m.param_count();
+        // torchvision resnet50: 25,557,032
+        assert!(
+            (24_500_000..=26_500_000).contains(&p),
+            "ResNet-50 params {p} should be ≈25.56M"
+        );
+    }
+
+    #[test]
+    fn gflops_matches_published() {
+        let m = resnet50();
+        // ≈4.1 GMACs ⇒ ≈8.2 GFLOPs fwd (2·MACs)
+        assert!(
+            m.gflops_fwd > 7.0 && m.gflops_fwd < 9.5,
+            "ResNet-50 fwd GFLOPs {} should be ≈8.2",
+            m.gflops_fwd
+        );
+    }
+
+    #[test]
+    fn tensor_inventory_shape() {
+        let m = resnet50();
+        // 53 convs + 53·2 BN + fc w/b = 161 tensors
+        assert_eq!(m.tensors.len(), 161);
+        // backward order: fc bias first, stem conv last
+        assert_eq!(m.tensors[0].name, "fc.b");
+        assert_eq!(m.tensors.last().unwrap().name, "conv1.w");
+        // largest single tensor is the s3 expand / fc region (~2M)
+        let max = m.tensors.iter().map(|t| t.elems).max().unwrap();
+        assert!(max >= 2_000_000 && max < 3_000_000);
+    }
+
+    #[test]
+    fn throughput_calibration_batch64() {
+        // Fig 2 era numbers (fp32, TF 1.10 synthetic): K80 ≈ 50, P100 ≈
+        // 195, V100 ≈ 330 img/s.
+        use crate::cluster::GpuModel;
+        let m = resnet50();
+        for (gpu, lo, hi) in [
+            (GpuModel::k80(), 35.0, 70.0),
+            (GpuModel::p100(), 150.0, 240.0),
+            (GpuModel::v100(), 260.0, 400.0),
+        ] {
+            let t = m.throughput_1gpu(&gpu, 64);
+            assert!(t > lo && t < hi, "{}: {t:.0} img/s not in [{lo}, {hi}]", gpu.name);
+        }
+    }
+}

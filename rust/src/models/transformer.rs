@@ -1,0 +1,87 @@
+//! Transformer profile derived from the L2 artifact metadata — the
+//! workload our *real* end-to-end runs train.  The tensor layout mirrors
+//! python/compile/model.py's `param_specs` exactly; the cross-language
+//! test pins the rust-side reconstruction to the python-side
+//! `param_count` recorded in meta_<cfg>.json.
+
+use super::layer::TensorSpec;
+use super::ModelProfile;
+use crate::runtime::ModelMeta;
+
+/// Reconstruct the flat-vector layout of python/compile/model.py.
+pub fn param_specs(m: &ModelMeta) -> Vec<TensorSpec> {
+    let mut s = Vec::new();
+    s.push(TensorSpec::new("tok_emb", m.vocab * m.d_model));
+    s.push(TensorSpec::new("pos_emb", m.seq * m.d_model));
+    for i in 0..m.n_layers {
+        s.push(TensorSpec::new(format!("l{i}.ln1_g"), m.d_model));
+        s.push(TensorSpec::new(format!("l{i}.ln1_b"), m.d_model));
+        for w in ["wq", "wk", "wv", "wo"] {
+            s.push(TensorSpec::new(format!("l{i}.{w}"), m.d_model * m.d_model));
+        }
+        s.push(TensorSpec::new(format!("l{i}.ln2_g"), m.d_model));
+        s.push(TensorSpec::new(format!("l{i}.ln2_b"), m.d_model));
+        s.push(TensorSpec::new(format!("l{i}.w1"), m.d_model * m.d_ff));
+        s.push(TensorSpec::new(format!("l{i}.b1"), m.d_ff));
+        s.push(TensorSpec::new(format!("l{i}.w2"), m.d_ff * m.d_model));
+        s.push(TensorSpec::new(format!("l{i}.b2"), m.d_model));
+    }
+    s.push(TensorSpec::new("lnf_g", m.d_model));
+    s.push(TensorSpec::new("lnf_b", m.d_model));
+    s.push(TensorSpec::new("head", m.d_model * m.vocab));
+    s
+}
+
+/// Workload profile for the strategies/simulator (a "sample" is one
+/// sequence; fwd FLOPs ≈ 2·params·seq).
+pub fn profile(meta: &ModelMeta) -> ModelProfile {
+    let mut tensors = param_specs(meta);
+    let n: usize = tensors.iter().map(|t| t.elems).sum();
+    tensors.reverse(); // backward emission order
+    ModelProfile {
+        name: format!("Transformer-{}", meta.config),
+        gflops_fwd: 2.0 * n as f64 * meta.seq as f64 / 1e9,
+        kernel_launches: 12 * meta.n_layers + 8,
+        eff_mult: 1.0,
+        act_bytes_per_sample: (meta.seq * meta.d_model * (meta.n_layers + 2) * 4) as f64,
+        default_batch: meta.batch,
+        tensors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_dir, config_available};
+
+    #[test]
+    fn layout_matches_python_param_count() {
+        // CROSS-LANGUAGE INVARIANT: rust reconstruction == python layout.
+        let Ok(dir) = artifacts_dir() else { return };
+        for cfg in ["tiny", "small", "medium"] {
+            if !config_available(&dir, cfg) {
+                continue;
+            }
+            let meta = ModelMeta::load(&dir, cfg).unwrap();
+            let total: usize = param_specs(&meta).iter().map(|t| t.elems).sum();
+            assert_eq!(
+                total, meta.param_count,
+                "{cfg}: rust layout {total} != python {}",
+                meta.param_count
+            );
+        }
+    }
+
+    #[test]
+    fn profile_tensor_order_is_backward() {
+        let Ok(dir) = artifacts_dir() else { return };
+        if !config_available(&dir, "tiny") {
+            return;
+        }
+        let meta = ModelMeta::load(&dir, "tiny").unwrap();
+        let p = profile(&meta);
+        assert_eq!(p.tensors[0].name, "head");
+        assert_eq!(p.tensors.last().unwrap().name, "tok_emb");
+        assert_eq!(p.param_count(), meta.param_count);
+    }
+}

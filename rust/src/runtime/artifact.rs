@@ -1,0 +1,60 @@
+//! One compiled HLO artifact: load text, compile once, execute many.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled PJRT executable plus its provenance.
+pub struct Artifact {
+    pub path: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Parse HLO text and compile it on `client`.
+    pub fn compile(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact { path: path.display().to_string(), exe })
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple of outputs.
+    ///
+    /// jax lowering uses `return_tuple=True`, so the single device output
+    /// is always a tuple literal — we decompose it for callers.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.path))?;
+        lit.decompose_tuple().map_err(Into::into)
+    }
+}
+
+/// Build an f32 vector literal of the given length.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build a rank-2 i32 literal `[rows, cols]` from row-major data.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch: {} != {rows}x{cols}", v.len());
+    xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]).map_err(Into::into)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(Into::into)
+}
+
+/// Extract the single f32 scalar from a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(Into::into)
+}

@@ -1,0 +1,69 @@
+//! PJRT client wrapper.  One process-wide CPU client; compiling an HLO
+//! module is expensive, so executables are cached per artifact path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Artifact;
+
+/// Per-thread PJRT client + executable cache.
+///
+/// `xla::PjRtClient` is `Rc`-based (not `Send`/`Sync`), which suits the
+/// deterministic single-threaded simulator: every simulated worker shares
+/// one compilation of each artifact (matches the paper's setup where every
+/// rank runs the same compiled graph).
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Artifact>>>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO-text artifact (cached by absolute path).
+    pub fn load(&self, path: &Path) -> Result<Rc<Artifact>> {
+        let key = path
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {}", path.display()))?;
+        if let Some(a) = self.cache.borrow().get(&key) {
+            return Ok(a.clone());
+        }
+        let artifact = Rc::new(Artifact::compile(&self.client, &key)?);
+        self.cache.borrow_mut().insert(key, artifact.clone());
+        Ok(artifact)
+    }
+}
+
+thread_local! {
+    static SHARED: RefCell<Option<Rc<RuntimeClient>>> = const { RefCell::new(None) };
+}
+
+/// Per-thread shared client for the common case (tests, examples, benches).
+pub fn shared() -> Result<Rc<RuntimeClient>> {
+    SHARED.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Rc::new(RuntimeClient::cpu()?));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}

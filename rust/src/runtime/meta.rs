@@ -1,0 +1,102 @@
+//! Model metadata sidecar (`artifacts/meta_<cfg>.json`) parsed with the
+//! in-tree JSON parser — the contract between aot.py and the rust trainer.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub config: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub sgd_lr: f64,
+    pub sgd_mu: f64,
+    pub reduce_chunks: Vec<usize>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path, config: &str) -> Result<ModelMeta> {
+        let path = dir.join(format!("meta_{config}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Ok(ModelMeta {
+            config: j
+                .get("config")
+                .and_then(Json::as_str)
+                .context("missing `config`")?
+                .to_string(),
+            param_count: j.req_usize("param_count")?,
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            seq: j.req_usize("seq")?,
+            batch: j.req_usize("batch")?,
+            sgd_lr: j.req_f64("sgd_lr")?,
+            sgd_mu: j.req_f64("sgd_mu")?,
+            reduce_chunks: j
+                .get("reduce_chunks")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Tokens-per-step shape the train_step artifact expects: [batch, seq+1].
+    pub fn tokens_len(&self) -> usize {
+        self.batch * (self.seq + 1)
+    }
+
+    /// Gradient payload in bytes (f32) — what the Allreduce carries.
+    pub fn grad_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+
+    /// Load the initial flat parameter vector (little-endian f32 .bin).
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<f32>> {
+        let path = dir.join(format!("params_{}.bin", self.config));
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.param_count * 4,
+            "param file {} has {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            self.param_count * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_meta_when_present() {
+        let Ok(dir) = crate::runtime::artifacts_dir() else { return };
+        if !crate::runtime::config_available(&dir, "tiny") {
+            return;
+        }
+        let m = ModelMeta::load(&dir, "tiny").unwrap();
+        assert_eq!(m.config, "tiny");
+        assert!(m.param_count > 0);
+        assert_eq!(m.tokens_len(), m.batch * (m.seq + 1));
+        let params = m.load_params(&dir).unwrap();
+        assert_eq!(params.len(), m.param_count);
+        assert!(params.iter().all(|x| x.is_finite()));
+    }
+}

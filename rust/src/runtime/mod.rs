@@ -1,0 +1,52 @@
+//! Runtime layer: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the PJRT CPU client from the rust hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format —
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids).
+//!
+//! Python never runs here; after `make artifacts` the binary is
+//! self-contained.
+
+pub mod artifact;
+pub mod client;
+pub mod meta;
+pub mod step;
+
+pub use artifact::Artifact;
+pub use client::RuntimeClient;
+pub use meta::ModelMeta;
+pub use step::{ReduceKernel, SgdUpdate, TrainStep};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$MPI_DNN_ARTIFACTS`, else `./artifacts`
+/// walking up from cwd (so tests/benches work from any target dir).
+pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
+    if let Ok(p) = std::env::var("MPI_DNN_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        anyhow::ensure!(p.is_dir(), "MPI_DNN_ARTIFACTS={} is not a directory", p.display());
+        return Ok(p);
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/ not found (run `make artifacts` or set MPI_DNN_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// True when the artifact set for `config` exists (lets tests skip
+/// gracefully rather than fail when only some configs were built).
+pub fn config_available(dir: &Path, config: &str) -> bool {
+    dir.join(format!("train_step_{config}.hlo.txt")).is_file()
+        && dir.join(format!("meta_{config}.json")).is_file()
+        && dir.join(format!("params_{config}.bin")).is_file()
+}

@@ -1,0 +1,208 @@
+//! Typed wrappers over the three artifact families: train_step, sgd, and
+//! the standalone Pallas reduction kernels (the paper's "CUDA kernel-
+//! enabled reduction", §V-A).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{lit_f32, lit_i32_2d, to_f32, to_scalar_f32, Artifact};
+use super::client::RuntimeClient;
+use super::meta::ModelMeta;
+
+/// `(params[N], tokens[B,S+1]) -> (loss, grads[N])`
+pub struct TrainStep {
+    artifact: Rc<Artifact>,
+    pub meta: ModelMeta,
+}
+
+impl TrainStep {
+    pub fn load(client: &RuntimeClient, dir: &Path, config: &str) -> Result<TrainStep> {
+        let meta = ModelMeta::load(dir, config)?;
+        let artifact = client.load(&dir.join(format!("train_step_{config}.hlo.txt")))?;
+        Ok(TrainStep { artifact, meta })
+    }
+
+    /// Execute one fwd/bwd step; returns (loss, flat gradient).
+    pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(
+            params.len() == self.meta.param_count,
+            "params len {} != {}",
+            params.len(),
+            self.meta.param_count
+        );
+        anyhow::ensure!(
+            tokens.len() == self.meta.tokens_len(),
+            "tokens len {} != {}",
+            tokens.len(),
+            self.meta.tokens_len()
+        );
+        let p = lit_f32(params);
+        let t = lit_i32_2d(tokens, self.meta.batch, self.meta.seq + 1)?;
+        let outs = self.artifact.run(&[p, t])?;
+        anyhow::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
+        let loss = to_scalar_f32(&outs[0]).context("loss output")?;
+        let grads = to_f32(&outs[1]).context("grads output")?;
+        Ok((loss, grads))
+    }
+}
+
+/// `(w[N], v[N], g[N], scale[1]) -> (w', v')` — fused Pallas SGD-momentum.
+pub struct SgdUpdate {
+    artifact: Rc<Artifact>,
+    pub n: usize,
+}
+
+impl SgdUpdate {
+    pub fn load(client: &RuntimeClient, dir: &Path, config: &str, n: usize) -> Result<SgdUpdate> {
+        let artifact = client.load(&dir.join(format!("sgd_{config}.hlo.txt")))?;
+        Ok(SgdUpdate { artifact, n })
+    }
+
+    /// In-place momentum update; `scale` is 1/world_size.
+    pub fn run(&self, w: &mut Vec<f32>, v: &mut Vec<f32>, g: &[f32], scale: f32) -> Result<()> {
+        anyhow::ensure!(w.len() == self.n && v.len() == self.n && g.len() == self.n);
+        let outs = self
+            .artifact
+            .run(&[lit_f32(w), lit_f32(v), lit_f32(g), lit_f32(&[scale])])?;
+        anyhow::ensure!(outs.len() == 2, "sgd returned {} outputs", outs.len());
+        *w = to_f32(&outs[0])?;
+        *v = to_f32(&outs[1])?;
+        Ok(())
+    }
+}
+
+/// `(x[n], y[n]) -> x + y` — the standalone Pallas reduction kernel, used
+/// by the GPU-kernel reduction backend of the Allreduce implementations.
+pub struct ReduceKernel {
+    /// (chunk_len, executable) sorted ascending by chunk length.
+    kernels: Vec<(usize, Rc<Artifact>)>,
+}
+
+impl ReduceKernel {
+    pub fn load(client: &RuntimeClient, dir: &Path, chunks: &[usize]) -> Result<ReduceKernel> {
+        let mut kernels = Vec::new();
+        for &n in chunks {
+            let a = client.load(&dir.join(format!("reduce_sum_{n}.hlo.txt")))?;
+            kernels.push((n, a));
+        }
+        kernels.sort_by_key(|(n, _)| *n);
+        anyhow::ensure!(!kernels.is_empty(), "no reduce kernels found");
+        Ok(ReduceKernel { kernels })
+    }
+
+    /// `acc += x`, chunked over the fixed-size kernels (largest first,
+    /// smallest kernel padded for the tail).
+    pub fn accumulate(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        anyhow::ensure!(acc.len() == x.len(), "length mismatch");
+        let mut off = 0;
+        while off < acc.len() {
+            let remaining = acc.len() - off;
+            // largest kernel that fits, else the smallest one (padded tail)
+            let (n, artifact) = self
+                .kernels
+                .iter()
+                .rev()
+                .find(|(n, _)| *n <= remaining)
+                .unwrap_or(&self.kernels[0])
+                .clone();
+            let take = remaining.min(n);
+            let (xa, ya);
+            if take == n {
+                xa = lit_f32(&acc[off..off + n]);
+                ya = lit_f32(&x[off..off + n]);
+            } else {
+                // tail: pad with zeros (identity of sum)
+                let mut xb = vec![0.0f32; n];
+                let mut yb = vec![0.0f32; n];
+                xb[..take].copy_from_slice(&acc[off..off + take]);
+                yb[..take].copy_from_slice(&x[off..off + take]);
+                xa = lit_f32(&xb);
+                ya = lit_f32(&yb);
+            }
+            let outs = artifact.run(&[xa, ya])?;
+            let z = to_f32(&outs[0])?;
+            acc[off..off + take].copy_from_slice(&z[..take]);
+            off += take;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_dir, config_available};
+
+    fn client() -> Option<Rc<RuntimeClient>> {
+        super::super::client::shared().ok()
+    }
+
+    #[test]
+    fn reduce_kernel_matches_scalar_sum() {
+        let Ok(dir) = artifacts_dir() else { return };
+        if !dir.join("reduce_sum_4096.hlo.txt").is_file() {
+            return;
+        }
+        let c = client().unwrap();
+        let k = ReduceKernel::load(&c, &dir, &[4096]).unwrap();
+        let mut rng = crate::util::prng::Rng::new(1);
+        for n in [1usize, 100, 4096, 5000] {
+            let mut acc = rng.f32_vec(n);
+            let x = rng.f32_vec(n);
+            let want: Vec<f32> = acc.iter().zip(&x).map(|(a, b)| a + b).collect();
+            k.accumulate(&mut acc, &x).unwrap();
+            for (g, w) in acc.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_tiny_runs_and_loss_sane() {
+        let Ok(dir) = artifacts_dir() else { return };
+        if !config_available(&dir, "tiny") {
+            return;
+        }
+        let c = client().unwrap();
+        let step = TrainStep::load(&c, &dir, "tiny").unwrap();
+        let params = step.meta.load_params(&dir).unwrap();
+        let mut rng = crate::util::prng::Rng::new(2);
+        let tokens = rng.tokens(step.meta.tokens_len(), step.meta.vocab as u32);
+        let (loss, grads) = step.run(&params, &tokens).unwrap();
+        // random init ⇒ loss ≈ ln(vocab)
+        let expect = (step.meta.vocab as f32).ln();
+        assert!((loss - expect).abs() < 1.0, "loss={loss} expect≈{expect}");
+        assert_eq!(grads.len(), step.meta.param_count);
+        assert!(grads.iter().all(|g| g.is_finite()));
+        let norm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(norm > 1e-4, "gradient should be nonzero, norm={norm}");
+    }
+
+    #[test]
+    fn sgd_matches_scalar_reference() {
+        let Ok(dir) = artifacts_dir() else { return };
+        if !config_available(&dir, "tiny") {
+            return;
+        }
+        let c = client().unwrap();
+        let meta = ModelMeta::load(&dir, "tiny").unwrap();
+        let sgd = SgdUpdate::load(&c, &dir, "tiny", meta.param_count).unwrap();
+        let mut rng = crate::util::prng::Rng::new(3);
+        let n = meta.param_count;
+        let mut w = rng.f32_vec(n);
+        let mut v = rng.f32_vec(n);
+        let g = rng.f32_vec(n);
+        let (w0, v0) = (w.clone(), v.clone());
+        let scale = 0.25f32;
+        sgd.run(&mut w, &mut v, &g, scale).unwrap();
+        let (lr, mu) = (meta.sgd_lr as f32, meta.sgd_mu as f32);
+        for i in (0..n).step_by(997) {
+            let ve = mu * v0[i] + g[i] * scale;
+            let we = w0[i] - lr * ve;
+            assert!((v[i] - ve).abs() < 1e-5, "v[{i}]: {} vs {ve}", v[i]);
+            assert!((w[i] - we).abs() < 1e-5, "w[{i}]: {} vs {we}", w[i]);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Event heap + FIFO resources — the core of the cluster simulator.
+//!
+//! Events are `FnOnce(&mut Engine)` closures ordered by (time, sequence);
+//! the sequence number makes simultaneous events fire in scheduling order,
+//! which is what makes whole-cluster runs bit-reproducible.
+//!
+//! `Resource` models a serialized server (a NIC, a PCIe link, a single
+//! gRPC service thread): `serve()` requests are queued FIFO and each
+//! occupies the resource for `bytes / rate` — this is how parameter-server
+//! fan-in congestion and the single-threaded gRPC+MPI bottleneck (paper
+//! §VI-D) arise in the model.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+type Action = Box<dyn FnOnce(&mut Engine)>;
+
+/// Heap entry carrying its action inline (§Perf: the original design
+/// parked actions in a HashMap side table keyed by seq — one hash insert
+/// + one hash remove per event; inlining them into the heap entry with an
+/// order that ignores the closure removed both).
+struct Event {
+    at: SimTime,
+    seq: u64,
+    action: Action,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Handle to a FIFO-serialized resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(usize);
+
+struct ResourceState {
+    /// Bytes per microsecond (i.e. MB/s / 1e... we keep it as bytes/us).
+    rate_bytes_per_us: f64,
+    /// Per-service fixed overhead.
+    overhead: SimTime,
+    busy_until: SimTime,
+    served: u64,
+    busy_time: SimTime,
+}
+
+/// Discrete-event engine with a virtual clock.
+#[derive(Default)]
+pub struct Engine {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Event>>,
+    resources: Vec<ResourceState>,
+    executed: u64,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far (per-run metric; also the §Perf
+    /// events/s denominator).
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `action` at absolute time `at` (>= now).
+    pub fn at(&mut self, at: SimTime, action: impl FnOnce(&mut Engine) + 'static) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { at, seq, action: Box::new(action) }));
+    }
+
+    /// Schedule `action` after a delay.
+    pub fn after(&mut self, dt: SimTime, action: impl FnOnce(&mut Engine) + 'static) {
+        self.at(self.now + dt, action);
+    }
+
+    /// Run until the event queue drains; returns the final clock.
+    pub fn run(&mut self) -> SimTime {
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            self.now = ev.at;
+            self.executed += 1;
+            (ev.action)(self);
+        }
+        self.now
+    }
+
+    /// Define a FIFO resource with service rate `bytes_per_us` and fixed
+    /// per-request `overhead`.
+    pub fn resource(&mut self, bytes_per_us: f64, overhead: SimTime) -> ResourceId {
+        assert!(bytes_per_us > 0.0);
+        self.resources.push(ResourceState {
+            rate_bytes_per_us: bytes_per_us,
+            overhead,
+            busy_until: SimTime::ZERO,
+            served: 0,
+            busy_time: SimTime::ZERO,
+        });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    /// Enqueue a `bytes`-sized request on resource `r`; `done` fires when
+    /// the request finishes service (FIFO order, serialized).
+    pub fn serve(&mut self, r: ResourceId, bytes: f64, done: impl FnOnce(&mut Engine) + 'static) {
+        let state = &mut self.resources[r.0];
+        let start = state.busy_until.max(self.now);
+        let service = SimTime::from_us(bytes / state.rate_bytes_per_us) + state.overhead;
+        let end = start + service;
+        state.busy_until = end;
+        state.served += 1;
+        state.busy_time += service;
+        self.at(end, done);
+    }
+
+    /// When would a `bytes` request complete if enqueued now (without
+    /// actually enqueuing)?  Used by analytic shortcuts in the strategies.
+    pub fn peek_completion(&self, r: ResourceId, bytes: f64) -> SimTime {
+        let state = &self.resources[r.0];
+        let start = state.busy_until.max(self.now);
+        start + SimTime::from_us(bytes / state.rate_bytes_per_us) + state.overhead
+    }
+
+    /// (requests served, cumulative busy time) — utilization metrics.
+    pub fn resource_stats(&self, r: ResourceId) -> (u64, SimTime) {
+        let s = &self.resources[r.0];
+        (s.served, s.busy_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for (t, tag) in [(30.0, "c"), (10.0, "a"), (20.0, "b")] {
+            let log = log.clone();
+            e.at(SimTime::from_us(t), move |_| log.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec!["a", "b", "c"]);
+        assert_eq!(e.executed(), 3);
+    }
+
+    #[test]
+    fn simultaneous_events_fire_in_scheduling_order() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for tag in ["first", "second", "third"] {
+            let log = log.clone();
+            e.at(SimTime::from_us(5.0), move |_| log.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn chained_events_advance_clock() {
+        let mut e = Engine::new();
+        let seen = Rc::new(RefCell::new(SimTime::ZERO));
+        let seen2 = seen.clone();
+        e.after(SimTime::from_us(10.0), move |e| {
+            let seen3 = seen2.clone();
+            e.after(SimTime::from_us(5.0), move |e| {
+                *seen3.borrow_mut() = e.now();
+            });
+        });
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(15.0));
+        assert_eq!(*seen.borrow(), SimTime::from_us(15.0));
+    }
+
+    #[test]
+    fn resource_serializes_fifo() {
+        // Two 100-byte requests at rate 10 bytes/us, no overhead: the
+        // second must wait for the first → completions at 10us and 20us.
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..2 {
+            let done = done.clone();
+            e.serve(r, 100.0, move |e| done.borrow_mut().push(e.now().as_us()));
+        }
+        e.run();
+        assert_eq!(*done.borrow(), vec![10.0, 20.0]);
+        let (served, busy) = e.resource_stats(r);
+        assert_eq!(served, 2);
+        assert_eq!(busy, SimTime::from_us(20.0));
+    }
+
+    #[test]
+    fn resource_overhead_applies_per_request() {
+        let mut e = Engine::new();
+        let r = e.resource(100.0, SimTime::from_us(3.0));
+        let done = Rc::new(RefCell::new(0.0));
+        let d2 = done.clone();
+        e.serve(r, 100.0, move |e| *d2.borrow_mut() = e.now().as_us());
+        e.run();
+        assert!((*done.borrow() - 4.0).abs() < 1e-9); // 1us transfer + 3us overhead
+    }
+
+    #[test]
+    fn resource_idle_gap_not_counted_busy() {
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        e.serve(r, 50.0, |_| {}); // completes at 5us
+        e.at(SimTime::from_us(100.0), move |e| {
+            e.serve(r, 50.0, |_| {}); // completes at 105us
+        });
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(105.0));
+        let (_, busy) = e.resource_stats(r);
+        assert_eq!(busy, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn peek_does_not_mutate() {
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        let t1 = e.peek_completion(r, 100.0);
+        let t2 = e.peek_completion(r, 100.0);
+        assert_eq!(t1, t2);
+        assert_eq!(t1, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn determinism_same_program_same_trace() {
+        fn run_once() -> Vec<f64> {
+            let mut e = Engine::new();
+            let r = e.resource(7.0, SimTime::from_us(0.5));
+            let out = Rc::new(RefCell::new(Vec::new()));
+            for i in 0..20 {
+                let out = out.clone();
+                e.after(SimTime::from_us(i as f64 * 0.3), move |e| {
+                    let out2 = out.clone();
+                    e.serve(r, 64.0 * (i % 5 + 1) as f64, move |e| {
+                        out2.borrow_mut().push(e.now().as_us());
+                    });
+                });
+            }
+            e.run();
+            let v = out.borrow().clone();
+            v
+        }
+        assert_eq!(run_once(), run_once());
+    }
+}

@@ -1,0 +1,16 @@
+//! Deterministic discrete-event simulator.
+//!
+//! The paper's measurements come from real clusters (RI2 / Owens /
+//! Piz Daint); repro band 0 means we substitute a simulated substrate
+//! (DESIGN.md §2).  Everything time-related in the repo flows through this
+//! engine: strategies schedule compute and communication activities as
+//! events, FIFO resources model NIC/PCIe serialization (parameter-server
+//! fan-in!), and the virtual clock yields the iteration times the figures
+//! plot.  Runs are bit-deterministic: ties break on sequence number, no
+//! wall-clock anywhere.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::{Engine, ResourceId};
+pub use time::SimTime;

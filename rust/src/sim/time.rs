@@ -1,0 +1,102 @@
+//! Virtual time: integer nanoseconds (total order, no float drift in the
+//! event heap).  Cost models compute in f64 microseconds and convert at
+//! the boundary.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Nanoseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_us(us: f64) -> SimTime {
+        debug_assert!(us >= 0.0 && us.is_finite(), "bad duration: {us}us");
+        SimTime((us * 1e3).round() as u64)
+    }
+
+    pub fn from_ms(ms: f64) -> SimTime {
+        SimTime::from_us(ms * 1e3)
+    }
+
+    pub fn from_secs(s: f64) -> SimTime {
+        SimTime::from_us(s * 1e6)
+    }
+
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("SimTime underflow"))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::bytes::fmt_us(self.as_us()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        let t = SimTime::from_us(123.456);
+        assert!((t.as_us() - 123.456).abs() < 1e-3);
+        assert_eq!(SimTime::from_ms(1.0), SimTime::from_us(1000.0));
+        assert_eq!(SimTime::from_secs(1.0), SimTime::from_ms(1000.0));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_us(10.0);
+        let b = SimTime::from_us(4.0);
+        assert_eq!((a + b).as_us(), 14.0);
+        assert_eq!((a - b).as_us(), 6.0);
+        assert_eq!(a.max(b), a);
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = SimTime::from_us(1.0) - SimTime::from_us(2.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Horovod (§III-C2): allreduce-based data parallelism with tensor fusion
+//! and a background communication thread.
+//!
+//! Model: gradient tensors become ready back-to-front during the backward
+//! pass; ready tensors are greedily packed into fusion buffers (threshold
+//! = `fusion_bytes`); each buffer costs one coordination round (the
+//! rank-0 negotiation of §III-C2) plus one Allreduce on the configured
+//! backend.  The background thread serializes buffers, so buffer *i*
+//! starts at max(ready_i, end_{i−1}).  Iteration ends when both compute
+//! and the last Allreduce finish — whatever communication didn't fit under
+//! the backward pass is the "exposed" time that erodes scaling efficiency
+//! (the Figure 9 story: MobileNet exposes almost everything, NASNet almost
+//! nothing).
+
+use anyhow::Result;
+
+use super::{IterationReport, Strategy, WorldSpec};
+use crate::cluster::ClusterSpec;
+use crate::comm::nccl::NcclWorld;
+use crate::comm::{MpiFlavor, MpiWorld};
+use crate::sim::SimTime;
+
+/// Which collective library backs the Allreduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HorovodBackend {
+    Mpi(MpiFlavor),
+    Nccl,
+}
+
+#[derive(Debug, Clone)]
+pub struct Horovod {
+    pub backend: HorovodBackend,
+    /// Tensor-fusion buffer threshold (Horovod default 64 MB; the paper
+    /// tunes it per platform — the ablation bench sweeps it).
+    pub fusion_bytes: usize,
+    /// Fusion cycle period, µs (HOROVOD_CYCLE_TIME, 5 ms in this era):
+    /// tensors becoming ready within one cycle window fuse together; a
+    /// buffer launches no earlier than its cycle boundary.
+    pub cycle_us: f64,
+    /// Per-cycle coordination cost coefficients: the rank-0 coordinator
+    /// gathers readiness bitmaps and broadcasts the fusion plan.
+    pub coord_alpha_hops: f64,
+    pub coord_per_rank_us: f64,
+    /// TF-runtime dilation of distributed steps (graph-rewrite operators,
+    /// stream synchronization): iter compute is stretched by
+    /// `1 + tax·(1 − 1/p)`.  Calibrated against the paper's ≈98% RI2@16
+    /// and ≈90% Owens@64 efficiencies.
+    pub runtime_tax: f64,
+    /// Per-iteration synchronization skew, µs per rank: every synchronous
+    /// step ends with an implicit barrier, and the slowest of p ranks
+    /// (stragglers, OS noise, placement) sets the pace.  This fixed cost
+    /// is why *short-iteration* models (MobileNet) scale worst in Figure 9
+    /// — the paper's "communication cannot be hidden behind the relatively
+    /// smaller computation".
+    pub skew_us_per_rank: f64,
+}
+
+impl Horovod {
+    pub fn mpi(flavor: MpiFlavor) -> Horovod {
+        Horovod {
+            backend: HorovodBackend::Mpi(flavor),
+            fusion_bytes: 64 << 20,
+            cycle_us: 5_000.0,
+            coord_alpha_hops: 2.0,
+            coord_per_rank_us: 0.4,
+            runtime_tax: 0.02,
+            skew_us_per_rank: 470.0,
+        }
+    }
+
+    pub fn nccl() -> Horovod {
+        Horovod { backend: HorovodBackend::Nccl, ..Horovod::mpi(MpiFlavor::Mvapich2) }
+    }
+
+    fn backend_name(&self) -> String {
+        match self.backend {
+            HorovodBackend::Mpi(MpiFlavor::Mvapich2) => "Horovod-MPI".into(),
+            HorovodBackend::Mpi(MpiFlavor::Mvapich2GdrOpt) => "Horovod-MPI-Opt".into(),
+            HorovodBackend::Mpi(MpiFlavor::CrayMpich) => "Horovod-MPI (Cray)".into(),
+            HorovodBackend::Mpi(MpiFlavor::Mpich) => "Horovod-MPICH".into(),
+            HorovodBackend::Nccl => "Horovod-NCCL".into(),
+        }
+    }
+
+    /// Allreduce latency of one fused buffer on the backend:
+    /// (total µs, host-staging µs).  The staging share rides the same
+    /// PCIe links the training stream needs, so it cannot hide behind
+    /// compute — the strategy adds it to the critical path.
+    fn allreduce_us(&self, ws: &WorldSpec, bytes: usize) -> Result<(f64, f64)> {
+        let r = match self.backend {
+            HorovodBackend::Mpi(flavor) => {
+                let w = MpiWorld::new(flavor, ws.cluster.clone());
+                w.allreduce_latency(ws.world, bytes)
+            }
+            HorovodBackend::Nccl => {
+                let w = NcclWorld::new(ws.cluster.clone())?;
+                w.allreduce_latency(ws.world, bytes)
+            }
+        };
+        // only the bandwidth share of staging contends with compute; the
+        // per-copy DMA-setup α's pipeline away
+        let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
+        let staging_crit = (4.0 * bytes as f64 / pcie).min(r.cost.staging_us);
+        Ok((r.time.as_us(), staging_crit))
+    }
+
+    /// Coordination cost per fusion cycle at world size `p`.
+    fn coord_us(&self, ws: &WorldSpec) -> f64 {
+        let p = ws.world as f64;
+        let hops = (ws.world.max(2) as f64).log2().ceil();
+        self.coord_alpha_hops * hops * ws.cluster.fabric.inter.alpha_us
+            + self.coord_per_rank_us * p
+    }
+
+    /// Pack ready tensors into fusion buffers: (ready_time, bytes).
+    /// A buffer closes when it would exceed the threshold OR when the
+    /// next tensor lands in a later fusion cycle.
+    pub fn fusion_schedule(&self, ws: &WorldSpec) -> Vec<(SimTime, usize)> {
+        let cycle_of = |t: SimTime| (t.as_us() / self.cycle_us).floor() as i64;
+        let mut buffers = Vec::new();
+        let mut cur_bytes = 0usize;
+        let mut cur_ready = SimTime::ZERO;
+        for (i, ready) in ws.tensor_readiness() {
+            let bytes = ws.model.tensors[i].bytes();
+            let splits = cur_bytes > 0
+                && (cur_bytes + bytes > self.fusion_bytes || cycle_of(ready) != cycle_of(cur_ready));
+            if splits {
+                // the buffer launches at its cycle boundary
+                let launch = SimTime::from_us(
+                    (cycle_of(cur_ready) + 1) as f64 * self.cycle_us,
+                );
+                buffers.push((cur_ready.max(launch.min(ws.compute_time())), cur_bytes));
+                cur_bytes = 0;
+            }
+            cur_bytes += bytes;
+            cur_ready = ready; // buffer is ready when its LAST tensor is
+        }
+        if cur_bytes > 0 {
+            buffers.push((cur_ready, cur_bytes));
+        }
+        buffers
+    }
+}
+
+impl Strategy for Horovod {
+    fn name(&self) -> String {
+        self.backend_name()
+    }
+
+    fn available(&self, cluster: &ClusterSpec) -> bool {
+        match self.backend {
+            HorovodBackend::Nccl => cluster.fabric.ib_verbs,
+            HorovodBackend::Mpi(_) => true,
+        }
+    }
+
+    fn iteration(&self, ws: &WorldSpec) -> Result<IterationReport> {
+        anyhow::ensure!(
+            self.available(&ws.cluster),
+            "{} unavailable on {}",
+            self.name(),
+            ws.cluster.name
+        );
+        if ws.world == 1 {
+            return Ok(IterationReport::from_times(self.name(), ws, ws.compute_time()));
+        }
+        let coord = self.coord_us(ws);
+        let mut thread_free = 0.0f64; // background comm thread timeline, µs
+        let mut staging_total = 0.0f64;
+        for (ready, bytes) in self.fusion_schedule(ws) {
+            let start = thread_free.max(ready.as_us());
+            let (total, staging) = self.allreduce_us(ws, bytes)?;
+            thread_free = start + coord + total;
+            staging_total += staging;
+        }
+        let dilated = ws.compute_time().as_us()
+            * (1.0 + self.runtime_tax * (1.0 - 1.0 / ws.world as f64));
+        let skew = self.skew_us_per_rank * ws.world as f64;
+        // host-staged copies contend with the training stream on PCIe:
+        // they extend the compute-side critical path even when the wire
+        // time hides under the backward pass.
+        let iter = SimTime::from_us(thread_free.max(dilated + staging_total) + skew);
+        Ok(IterationReport::from_times(self.name(), ws, iter))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::models::{mobilenet, nasnet, resnet};
+
+    #[test]
+    fn single_gpu_is_ideal() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 1);
+        let r = Horovod::mpi(MpiFlavor::Mvapich2).iteration(&ws).unwrap();
+        assert!((r.scaling_efficiency - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nccl_rejected_on_piz_daint() {
+        let ws = WorldSpec::new(presets::piz_daint(), resnet::resnet50(), 8);
+        assert!(Horovod::nccl().iteration(&ws).is_err());
+        assert!(!Horovod::nccl().available(&presets::piz_daint()));
+    }
+
+    #[test]
+    fn opt_beats_stock_mpi_resnet_ri2() {
+        // Figure 7's key comparison (on the slow K80s the difference is
+        // small — most comm hides under the 1.2s iteration).
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 16);
+        let stock = Horovod::mpi(MpiFlavor::Mvapich2).iteration(&ws).unwrap();
+        let opt = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt).iteration(&ws).unwrap();
+        assert!(
+            opt.imgs_per_sec >= stock.imgs_per_sec,
+            "opt {} < stock {}",
+            opt.imgs_per_sec,
+            stock.imgs_per_sec
+        );
+        assert!(opt.scaling_efficiency > 0.85, "RI2@16 opt eff {}", opt.scaling_efficiency);
+    }
+
+    #[test]
+    fn opt_beats_stock_mpi_resnet_owens64() {
+        // Figure 8: on the fast P100s at 64 GPUs the comm difference
+        // surfaces — MPI-Opt must win strictly and land ≈90% efficiency.
+        let ws = WorldSpec::new(presets::owens(), resnet::resnet50(), 64);
+        let stock = Horovod::mpi(MpiFlavor::Mvapich2).iteration(&ws).unwrap();
+        let opt = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt).iteration(&ws).unwrap();
+        assert!(
+            opt.imgs_per_sec > stock.imgs_per_sec,
+            "opt {} <= stock {}",
+            opt.imgs_per_sec,
+            stock.imgs_per_sec
+        );
+        assert!(
+            opt.scaling_efficiency > 0.80 && opt.scaling_efficiency <= 1.0,
+            "Owens@64 opt eff {} (paper ≈0.90)",
+            opt.scaling_efficiency
+        );
+    }
+
+    #[test]
+    fn efficiency_ordering_nasnet_resnet_mobilenet() {
+        // Figure 9: NASNet ≈ 92% > ResNet-50 ≈ 71% > MobileNet ≈ 16%.
+        let eff = |m: crate::models::ModelProfile| {
+            let ws = WorldSpec::new(presets::piz_daint(), m, 128);
+            Horovod::mpi(MpiFlavor::CrayMpich).iteration(&ws).unwrap().scaling_efficiency
+        };
+        let n = eff(nasnet::nasnet_large());
+        let r = eff(resnet::resnet50());
+        let m = eff(mobilenet::mobilenet_v1());
+        assert!(n > r && r > m, "ordering broken: nasnet {n:.2}, resnet {r:.2}, mobilenet {m:.2}");
+        // paper: 92% / 71% / 16%.  Our simulator reproduces the ordering
+        // and the near-ideal NASNet; the MobileNet magnitude is compressed
+        // (EXPERIMENTS.md discusses the residual).
+        assert!(n > 0.80, "NASNet should scale near-ideally, got {n:.2}");
+        assert!(m < 0.68, "MobileNet should scale poorly, got {m:.2}");
+    }
+
+    #[test]
+    fn fusion_reduces_buffer_count() {
+        let ws = WorldSpec::new(presets::ri2(), mobilenet::mobilenet_v1(), 8);
+        let mut h = Horovod::mpi(MpiFlavor::Mvapich2);
+        let fused = h.fusion_schedule(&ws).len();
+        h.fusion_bytes = 1; // effectively per-tensor
+        let unfused = h.fusion_schedule(&ws).len();
+        assert!(fused < unfused / 4, "fusion {fused} vs per-tensor {unfused}");
+        assert_eq!(unfused, ws.model.tensors.len());
+    }
+
+    #[test]
+    fn fused_bytes_conserved() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        let h = Horovod::mpi(MpiFlavor::Mvapich2);
+        let total: usize = h.fusion_schedule(&ws).iter().map(|&(_, b)| b).sum();
+        assert_eq!(total, ws.model.grad_bytes());
+    }
+}

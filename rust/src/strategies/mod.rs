@@ -1,0 +1,184 @@
+//! Distributed-training strategies (§III's taxonomy, Figure 1):
+//!
+//! ```text
+//! gRPC-based   : ps.rs        — parameter server over gRPC (TF default)
+//! gRPC+X       : ps.rs        — PS with tensor transfers offloaded to
+//!                               MPI (single-threaded!) or RDMA verbs
+//! No-gRPC      : baidu.rs     — per-tensor ring allreduce over MPI p2p
+//!                horovod.rs   — fused allreduce over MPI or NCCL,
+//!                               including the paper's MPI-Opt variant
+//! ```
+//!
+//! A strategy maps a `WorldSpec` (cluster × model × world size × batch) to
+//! an `IterationReport` (iteration time, exposed communication, scaling
+//! efficiency) by scheduling one training step's compute + communication
+//! on the cost models — PS variants on the discrete-event engine (fan-in
+//! contention is a queueing effect), allreduce variants on a pipelined
+//! timeline (Horovod's background-thread serialization).
+
+pub mod baidu;
+pub mod horovod;
+pub mod ps;
+
+pub use baidu::Baidu;
+pub use horovod::{Horovod, HorovodBackend};
+pub use ps::{PsTransport, PsStrategy};
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelProfile;
+use crate::sim::SimTime;
+
+/// One experiment point.
+#[derive(Debug, Clone)]
+pub struct WorldSpec {
+    pub cluster: ClusterSpec,
+    pub model: ModelProfile,
+    pub world: usize,
+    pub batch_per_gpu: usize,
+}
+
+impl WorldSpec {
+    pub fn new(cluster: ClusterSpec, model: ModelProfile, world: usize) -> Self {
+        let batch = model.default_batch;
+        WorldSpec { cluster, model, world, batch_per_gpu: batch }
+    }
+
+    /// Per-worker fwd+bwd time (data parallelism keeps local batch fixed).
+    pub fn compute_time(&self) -> SimTime {
+        self.model.compute_time(&self.cluster.gpu, self.batch_per_gpu)
+    }
+
+    /// Single-GPU throughput — the paper's "Ideal = 1-GPU × N" baseline.
+    pub fn throughput_1gpu(&self) -> f64 {
+        self.model.throughput_1gpu(&self.cluster.gpu, self.batch_per_gpu)
+    }
+
+    /// When each gradient tensor becomes ready during the backward pass,
+    /// in emission (bwd) order: fwd takes ⅓ of compute, bwd ⅔, and tensor
+    /// readiness advances with the cumulative parameter volume.
+    pub fn tensor_readiness(&self) -> Vec<(usize, SimTime)> {
+        let compute = self.compute_time().as_us();
+        let fwd = compute / 3.0;
+        let bwd = compute - fwd;
+        let total: usize = self.model.tensors.iter().map(|t| t.elems).sum();
+        let mut cum = 0usize;
+        self.model
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                cum += t.elems;
+                (i, SimTime::from_us(fwd + bwd * cum as f64 / total as f64))
+            })
+            .collect()
+    }
+}
+
+/// The outcome of simulating one training iteration at steady state.
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    pub strategy: String,
+    pub compute: SimTime,
+    pub iter: SimTime,
+    /// Communication time not hidden behind compute.
+    pub exposed_comm: SimTime,
+    /// Aggregate images (samples) per second across the world.
+    pub imgs_per_sec: f64,
+    /// imgs_per_sec / (world × single-GPU imgs_per_sec).
+    pub scaling_efficiency: f64,
+}
+
+impl IterationReport {
+    pub fn from_times(strategy: String, ws: &WorldSpec, iter: SimTime) -> IterationReport {
+        let compute = ws.compute_time();
+        let imgs = ws.world as f64 * ws.batch_per_gpu as f64 / iter.as_secs();
+        let ideal = ws.world as f64 * ws.throughput_1gpu();
+        IterationReport {
+            strategy,
+            compute,
+            exposed_comm: iter.saturating_sub(compute),
+            iter,
+            imgs_per_sec: imgs,
+            scaling_efficiency: imgs / ideal,
+        }
+    }
+}
+
+/// Object-safe strategy interface — what the bench harness iterates over.
+pub trait Strategy {
+    fn name(&self) -> String;
+    /// Some designs are hardware-gated (NCCL2 needs IB verbs — §VI-D).
+    fn available(&self, cluster: &ClusterSpec) -> bool {
+        let _ = cluster;
+        true
+    }
+    fn iteration(&self, ws: &WorldSpec) -> anyhow::Result<IterationReport>;
+}
+
+/// All approaches the paper compares, in Figure-3 order.
+pub fn all_strategies() -> Vec<Box<dyn Strategy>> {
+    vec![
+        Box::new(PsStrategy::grpc()),
+        Box::new(PsStrategy::grpc_mpi()),
+        Box::new(PsStrategy::grpc_verbs()),
+        Box::new(Baidu::new()),
+        Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2)),
+        Box::new(Horovod::nccl()),
+        Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2GdrOpt)),
+    ]
+}
+
+/// Strategy lookup for the CLI (`--strategy horovod-mpi-opt` etc.).
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Strategy>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "grpc" => Box::new(PsStrategy::grpc()),
+        "grpc+mpi" | "grpc-mpi" => Box::new(PsStrategy::grpc_mpi()),
+        "grpc+verbs" | "grpc-verbs" => Box::new(PsStrategy::grpc_verbs()),
+        "baidu" | "baidu-mpi" => Box::new(Baidu::new()),
+        "horovod-mpi" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2)),
+        "horovod-nccl" => Box::new(Horovod::nccl()),
+        "horovod-mpi-opt" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2GdrOpt)),
+        "horovod-cray" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::CrayMpich)),
+        other => anyhow::bail!(
+            "unknown strategy `{other}` (grpc | grpc+mpi | grpc+verbs | baidu | \
+             horovod-mpi | horovod-nccl | horovod-mpi-opt | horovod-cray)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::models::resnet;
+
+    #[test]
+    fn readiness_monotone_and_spans_compute() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        let r = ws.tensor_readiness();
+        assert_eq!(r.len(), ws.model.tensors.len());
+        for w in r.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let compute = ws.compute_time();
+        assert!(r.first().unwrap().1 > SimTime::from_us(compute.as_us() / 3.0 - 1.0));
+        assert_eq!(r.last().unwrap().1, compute);
+    }
+
+    #[test]
+    fn report_efficiency_is_compute_over_iter() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        let compute = ws.compute_time();
+        let iter = SimTime::from_us(compute.as_us() * 1.25);
+        let rep = IterationReport::from_times("x".into(), &ws, iter);
+        assert!((rep.scaling_efficiency - 0.8).abs() < 0.01);
+        assert_eq!(rep.exposed_comm, iter - compute);
+    }
+
+    #[test]
+    fn lookup_and_inventory() {
+        assert_eq!(all_strategies().len(), 7);
+        assert!(by_name("horovod-mpi-opt").is_ok());
+        assert!(by_name("gloo").is_err());
+    }
+}

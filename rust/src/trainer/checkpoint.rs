@@ -1,0 +1,115 @@
+//! Training-state checkpointing (§III-A: TF's PS support classes exist
+//! "for checkpointing (saving) the training state or for fault tolerance
+//! in case a worker node crashes" — the trainer provides the same).
+//!
+//! Format: a small header (magic, version, step, param count) followed by
+//! little-endian f32 params and velocity.  Self-validating on restore.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+const MAGIC: &[u8; 8] = b"MPIDNNv1";
+
+/// A resumable training state snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            self.params.len() == self.velocity.len(),
+            "params/velocity length mismatch"
+        );
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+            for v in self.params.iter().chain(self.velocity.iter()) {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        // atomic publish: a crash mid-save never corrupts the previous one
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a checkpoint file: bad magic");
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        f.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        anyhow::ensure!(n < (1 << 31), "implausible param count {n}");
+        let mut read_vec = |len: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes).context("truncated checkpoint")?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let params = read_vec(n)?;
+        let velocity = read_vec(n)?;
+        Ok(Checkpoint { step, params, velocity })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mpidnn_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let ck = Checkpoint { step: 123, params: rng.f32_vec(1000), velocity: rng.f32_vec(1000) };
+        let p = tmp("rt.bin");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        // truncated: valid header, missing payload
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        bytes.extend_from_slice(&100u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let e = Checkpoint::load(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mismatched_lengths_refused_on_save() {
+        let ck = Checkpoint { step: 0, params: vec![1.0], velocity: vec![] };
+        assert!(ck.save(&tmp("mm.bin")).is_err());
+    }
+}

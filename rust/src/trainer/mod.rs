@@ -1,0 +1,14 @@
+//! The real data-parallel trainer: every simulated worker executes the
+//! AOT-compiled JAX/Pallas train_step through PJRT, gradients are
+//! aggregated with the *actual* allreduce implementations from `comm`,
+//! and the fused Pallas SGD kernel applies the update — the full
+//! L1→L2→L3 composition, with the virtual clock estimating what the same
+//! iteration would cost on the paper's clusters.
+
+pub mod checkpoint;
+pub mod data;
+pub mod run;
+
+pub use checkpoint::Checkpoint;
+pub use data::ShardedTokens;
+pub use run::{TrainConfig, TrainResult, Trainer};

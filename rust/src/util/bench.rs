@@ -1,0 +1,142 @@
+//! Criterion-like micro-benchmark harness (no criterion offline;
+//! DESIGN.md §7): warmup, timed samples, distribution summary, and an
+//! opaque `black_box` to defeat const-folding.
+//!
+//! Used by `rust/benches/*` (all `harness = false`) and the `hotpath`
+//! profiling pass (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use crate::util::stats::{Samples, Summary};
+
+/// Prevent the optimizer from deleting the benchmarked computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations batched per sample (amortizes the Instant overhead for
+    /// nanosecond-scale bodies).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, samples: 20, iters_per_sample: 1 }
+    }
+}
+
+impl BenchConfig {
+    /// Scale sample counts down for CI-speed runs (set `MPI_DNN_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("MPI_DNN_BENCH_FAST").is_ok() {
+            BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One benchmark result (times are in microseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        Bencher { cfg: BenchConfig::from_env(), results: Vec::new(), group: group.to_string() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Self {
+        let mut b = Bencher::new(group);
+        b.cfg = cfg;
+        b
+    }
+
+    /// Time `f` and record under `name`.  `f` is a full iteration body.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.iters_per_sample {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64() * 1e6 / self.cfg.iters_per_sample as f64;
+            samples.push(dt);
+        }
+        let summary = samples.summary();
+        println!(
+            "{:<44} mean {:>10.2}us  p50 {:>10.2}us  p95 {:>10.2}us  (n={})",
+            format!("{}/{}", self.group, name),
+            summary.mean,
+            summary.p50,
+            summary.p95,
+            summary.n
+        );
+        self.results.push(BenchResult { name: name.to_string(), summary });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bencher::with_config(
+            "test",
+            BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 2 },
+        );
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.mean_us() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn summary_fields_consistent() {
+        let mut b = Bencher::with_config(
+            "test2",
+            BenchConfig { warmup_iters: 0, samples: 8, iters_per_sample: 1 },
+        );
+        let r = b.bench("noop", || {
+            black_box(1 + 1);
+        });
+        let s = r.summary;
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert_eq!(s.n, 8);
+    }
+}

@@ -1,0 +1,104 @@
+//! Byte-size formatting/parsing for message-size sweeps ("4B".."256MB"),
+//! matching the axis labels of the paper's Allreduce figures.
+
+/// Format a byte count the way the paper's figures label their x-axis
+/// (power-of-two units: 1024 bytes = 1KB there).
+pub fn fmt_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if v.fract() == 0.0 {
+        format!("{}{}", v as u64, UNITS[u])
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+/// Parse "8", "8B", "128K", "128KB", "64M", "1G" (case-insensitive).
+pub fn parse_bytes(s: &str) -> Result<usize, String> {
+    let t = s.trim().to_ascii_uppercase();
+    let digits_end = t.find(|c: char| !c.is_ascii_digit() && c != '.').unwrap_or(t.len());
+    let (num, suffix) = t.split_at(digits_end);
+    let base: f64 = num.parse().map_err(|_| format!("bad size `{s}`"))?;
+    let mult = match suffix.trim_end_matches('B') {
+        "" => 1.0,
+        "K" => 1024.0,
+        "M" => 1024.0 * 1024.0,
+        "G" => 1024.0_f64.powi(3),
+        "T" => 1024.0_f64.powi(4),
+        _ => return Err(format!("bad size suffix in `{s}`")),
+    };
+    Ok((base * mult) as usize)
+}
+
+/// Duration in microseconds → human string (the paper reports Allreduce
+/// latency in µs/ms).
+pub fn fmt_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1}us")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// The standard message-size sweep used by Figures 4 and 6: powers of two
+/// from 4B to `max` bytes.
+pub fn msg_size_sweep(max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut n = 4usize;
+    while n <= max {
+        v.push(n);
+        n *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_roundtrip_common() {
+        for (n, s) in [(4, "4B"), (1024, "1KB"), (128 * 1024, "128KB"), (256 * 1024 * 1024, "256MB")] {
+            assert_eq!(fmt_bytes(n), s);
+            assert_eq!(parse_bytes(s).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes("8").unwrap(), 8);
+        assert_eq!(parse_bytes("128k").unwrap(), 131072);
+        assert_eq!(parse_bytes(" 2MB ").unwrap(), 2 * 1024 * 1024);
+        assert!(parse_bytes("12X").is_err());
+        assert!(parse_bytes("").is_err());
+    }
+
+    #[test]
+    fn fractional_fmt() {
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+    }
+
+    #[test]
+    fn us_formatting() {
+        assert_eq!(fmt_us(12.34), "12.3us");
+        assert_eq!(fmt_us(12_345.0), "12.35ms");
+        assert_eq!(fmt_us(2_000_000.0), "2.000s");
+    }
+
+    #[test]
+    fn sweep_is_pow2_4b_up() {
+        let s = msg_size_sweep(64);
+        assert_eq!(s, vec![4, 8, 16, 32, 64]);
+        let big = msg_size_sweep(256 * 1024 * 1024);
+        assert_eq!(*big.first().unwrap(), 4);
+        assert_eq!(*big.last().unwrap(), 256 * 1024 * 1024);
+        assert_eq!(big.len(), 27);
+    }
+}

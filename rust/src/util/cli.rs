@@ -1,0 +1,150 @@
+//! Minimal CLI argument parser (no clap offline; DESIGN.md §7).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value | --key=value] [pos..]`.
+//! Unknown flags are errors (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw argv (without program name).  The first token not starting
+    /// with `--` becomes the subcommand; later bare tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    // boolean flag
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got `{v}`")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true" | "1" | "yes"))
+    }
+
+    /// Comma-separated list flag, e.g. `--gpus 1,2,4,8`.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+
+    /// Error on flags that no `get_*` consulted — typo protection.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<_> =
+            self.flags.keys().filter(|k| !seen.contains(k)).cloned().collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flag(s): {}", unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --steps 100 --config=small --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get("config"), Some("small"));
+        assert!(a.get_bool("verbose"));
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("figure 4 6");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["4", "6"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert!((a.get_f64("f", 1.5).unwrap() - 1.5).abs() < 1e-12);
+        assert!(!a.get_bool("nope"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("x --typo 3");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("x --gpus 1,2,4, 8");
+        assert_eq!(a.get_list("gpus").unwrap(), vec!["1", "2", "4"]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-written substrates.
+//!
+//! The build environment is offline (crates.io unreachable; only the `xla`
+//! crate's closure is vendored), so everything a production system would
+//! normally pull from the ecosystem — PRNG, statistics, JSON, CLI parsing,
+//! byte-size formatting, logging, a micro-benchmark harness — is
+//! implemented here from scratch (DESIGN.md §7).
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod stats;

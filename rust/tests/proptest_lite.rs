@@ -1,0 +1,282 @@
+//! Property-based tests over the core invariants, using a small seeded
+//! generator kit (crates.io `proptest` is unavailable offline —
+//! DESIGN.md §7).  Each property runs CASES random cases; failures print
+//! the case seed so they reproduce exactly.
+
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::allreduce::{
+    max_abs_err, rhd_allreduce, ring_allreduce, serial_oracle, tree_allreduce, AllreduceCtx,
+    ReducePlace, TransportMode,
+};
+use mpi_dnn_train::comm::fusion::{fuse, unfuse};
+use mpi_dnn_train::comm::ptrcache::CacheMode;
+use mpi_dnn_train::sim::{Engine, SimTime};
+use mpi_dnn_train::util::json::Json;
+use mpi_dnn_train::util::prng::Rng;
+
+const CASES: u64 = 60;
+
+fn ctx() -> AllreduceCtx {
+    let c = presets::ri2();
+    AllreduceCtx::new(
+        c.fabric.clone(),
+        c.gpu.clone(),
+        TransportMode::Gdr,
+        ReducePlace::Gpu,
+        CacheMode::Intercept,
+        c.driver_query_us,
+    )
+}
+
+/// prop: every allreduce algorithm equals the serial oracle, for random
+/// world sizes (incl. non-powers-of-two) and lengths (incl. 0, 1, odd).
+#[test]
+fn prop_allreduce_equals_oracle() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA001 + case);
+        let p = 1 + rng.next_below(20) as usize;
+        let n = rng.next_below(5000) as usize;
+        let bufs: Vec<Vec<f32>> = (0..p).map(|_| rng.f32_vec(n)).collect();
+        let oracle = serial_oracle(&bufs);
+        for (name, algo) in [
+            ("ring", ring_allreduce as fn(&mut [Vec<f32>], &mut AllreduceCtx) -> _),
+            ("rhd", rhd_allreduce as fn(&mut [Vec<f32>], &mut AllreduceCtx) -> _),
+            ("tree", tree_allreduce as fn(&mut [Vec<f32>], &mut AllreduceCtx) -> _),
+        ] {
+            let mut b = bufs.clone();
+            let mut c = ctx();
+            algo(&mut b, &mut c);
+            let err = max_abs_err(&b, &oracle);
+            assert!(
+                err < 1e-3 * (p as f32).sqrt(),
+                "case {case} ({name}, p={p}, n={n}): err {err}"
+            );
+        }
+    }
+}
+
+/// prop: all ranks end with IDENTICAL buffers (not just near the oracle) —
+/// the consistency property synchronous data parallelism relies on.
+#[test]
+fn prop_allreduce_ranks_agree_bitwise() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA002 + case);
+        let p = 2 + rng.next_below(15) as usize;
+        let n = 1 + rng.next_below(3000) as usize;
+        let mut bufs: Vec<Vec<f32>> = (0..p).map(|_| rng.f32_vec(n)).collect();
+        let mut c = ctx();
+        rhd_allreduce(&mut bufs, &mut c);
+        for r in 1..p {
+            assert_eq!(bufs[0], bufs[r], "case {case}: rank {r} differs (p={p}, n={n})");
+        }
+    }
+}
+
+/// prop: ring and RHD move (near-)bandwidth-optimal wire bytes.
+#[test]
+fn prop_wire_bytes_bounded() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA003 + case);
+        let p = 2 + rng.next_below(15) as usize;
+        let n = 64 + rng.next_below(100_000) as usize;
+        let mut bufs: Vec<Vec<f32>> = (0..p).map(|_| rng.f32_vec(n)).collect();
+        let mut c = ctx();
+        let r = ring_allreduce(&mut bufs, &mut c);
+        let optimal = 2.0 * (n * 4) as f64 * (p as f64 - 1.0) / p as f64;
+        assert!(
+            (r.wire_bytes_per_rank as f64) < optimal * 1.2 + (p * 8) as f64,
+            "case {case}: ring moved {} vs optimal {optimal}",
+            r.wire_bytes_per_rank
+        );
+    }
+}
+
+/// prop: fusion pack/unpack is lossless for arbitrary tensor shapes and
+/// thresholds, preserves order, and never exceeds the threshold unless a
+/// single tensor does.
+#[test]
+fn prop_fusion_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xF001 + case);
+        let k = 1 + rng.next_below(40) as usize;
+        let tensors: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let len = 1 + rng.next_below(2000) as usize;
+                rng.f32_vec(len)
+            })
+            .collect();
+        let refs: Vec<(usize, &[f32])> =
+            tensors.iter().enumerate().map(|(i, t)| (i, t.as_slice())).collect();
+        let threshold = 4 * (1 + rng.next_below(4000) as usize);
+        let bufs = fuse(&refs, threshold);
+        // lossless + ordered
+        let mut seen = Vec::new();
+        for b in &bufs {
+            assert!(
+                b.layout.len() == 1 || b.bytes() <= threshold,
+                "case {case}: buffer over threshold with {} tensors",
+                b.layout.len()
+            );
+            unfuse(b, |id, data| {
+                assert_eq!(data, tensors[id].as_slice(), "case {case}: tensor {id} corrupted");
+                seen.push(id);
+            });
+        }
+        assert_eq!(seen, (0..k).collect::<Vec<_>>(), "case {case}: order broken");
+    }
+}
+
+/// prop: the pointer cache (Intercept) always agrees with the driver,
+/// under random alloc/free/query interleavings — while MpiLevel may not.
+#[test]
+fn prop_intercept_cache_coherent() {
+    use mpi_dnn_train::comm::ptrcache::{BufKind, CudaDriverSim, PointerCache};
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xC001 + case);
+        let mut driver = CudaDriverSim::new(1.0);
+        let mut cache = PointerCache::new(CacheMode::Intercept);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            match rng.next_below(4) {
+                0 => {
+                    let kind =
+                        if rng.next_below(2) == 0 { BufKind::Device } else { BufKind::Host };
+                    let len = 1 + rng.next_below(4096);
+                    let p = match kind {
+                        BufKind::Device => driver.cu_malloc(len),
+                        BufKind::Host => driver.host_malloc(len),
+                    };
+                    cache.on_malloc(p, kind);
+                    live.push(p);
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.next_below(live.len() as u64) as usize;
+                    let p = live.swap_remove(i);
+                    driver.cu_free(p).unwrap();
+                    cache.on_free(p);
+                }
+                _ if !live.is_empty() => {
+                    let i = rng.next_below(live.len() as u64) as usize;
+                    let p = live[i];
+                    let truth = driver.query(p).0.unwrap();
+                    let (got, _) = cache.resolve(p, &mut driver);
+                    assert_eq!(got, truth, "case {case}: cache incoherent at {p:#x}");
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// prop: the event engine is deterministic and clock-monotone for random
+/// schedules.
+#[test]
+fn prop_engine_deterministic_and_monotone() {
+    for case in 0..CASES {
+        let run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut e = Engine::new();
+            let r = e.resource(5.0 + rng.next_f64() * 10.0, SimTime::from_us(rng.next_f64()));
+            let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            for _ in 0..50 {
+                let at = SimTime::from_us(rng.next_f64() * 100.0);
+                let bytes = 1.0 + rng.next_f64() * 1000.0;
+                let log = log.clone();
+                e.at(at, move |e| {
+                    let log = log.clone();
+                    e.serve(r, bytes, move |e| log.borrow_mut().push(e.now()));
+                });
+            }
+            e.run();
+            let v = log.borrow().clone();
+            v
+        };
+        let a = run(0xE001 + case);
+        let b = run(0xE001 + case);
+        assert_eq!(a, b, "case {case}: nondeterministic");
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1], "case {case}: FIFO completions out of order");
+        }
+    }
+}
+
+/// prop: JSON parse∘print is identity on random JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => Json::Num((rng.next_below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.next_below(12) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.next_below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7501 + case);
+        let j = gen(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(j, back, "case {case}: roundtrip mismatch\n{text}");
+    }
+}
+
+/// prop: TOML-lite accepts what it prints conceptually — random flat
+/// configs parse back to the same values.
+#[test]
+fn prop_toml_numbers_strings() {
+    use mpi_dnn_train::config::parse_toml;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x70_01 + case);
+        let i = rng.next_below(1_000_000) as i64 - 500_000;
+        let f = (rng.next_below(1_000_000) as f64) / 997.0;
+        let src = format!("a = {i}\nb = {f:.6}\nc = \"v{case}\"\nd = [{i}, {i}]\n");
+        let doc = parse_toml(&src).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(doc[""]["a"].as_int(), Some(i));
+        assert!((doc[""]["b"].as_float().unwrap() - f).abs() < 1e-4);
+        assert_eq!(doc[""]["c"].as_str(), Some(format!("v{case}").as_str()));
+        assert_eq!(doc[""]["d"].as_array().unwrap().len(), 2);
+    }
+}
+
+/// prop: PRNG uniformity bounds (chi-square-ish coarse check) and
+/// Lemire bound correctness for random bounds.
+#[test]
+fn prop_prng_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x9001 + case);
+        let bound = 1 + rng.next_below(1000);
+        let mut counts = vec![0u32; bound.min(16) as usize];
+        for _ in 0..2000 {
+            let v = rng.next_below(bound);
+            assert!(v < bound, "case {case}: {v} >= {bound}");
+            if (v as usize) < counts.len() {
+                counts[v as usize] += 1;
+            }
+        }
+        if bound <= 16 {
+            let expect = 2000.0 / bound as f64;
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(
+                    (c as f64) > expect * 0.5 && (c as f64) < expect * 1.6,
+                    "case {case}: bucket {i} count {c} vs expect {expect}"
+                );
+            }
+        }
+    }
+}
