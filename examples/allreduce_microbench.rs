@@ -13,13 +13,13 @@ use mpi_dnn_train::util::bytes::{fmt_bytes, msg_size_sweep, parse_bytes};
 use mpi_dnn_train::util::cli::Args;
 use mpi_dnn_train::util::stats::geomean;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
-    let ranks = args.get_usize("ranks", 16).map_err(anyhow::Error::msg)?;
+fn main() -> mpi_dnn_train::util::error::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(mpi_dnn_train::util::error::Error::msg)?;
+    let ranks = args.get_usize("ranks", 16).map_err(mpi_dnn_train::util::error::Error::msg)?;
     let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
-    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(anyhow::Error::msg)?;
+    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(mpi_dnn_train::util::error::Error::msg)?;
     let json = args.get_bool("json");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(mpi_dnn_train::util::error::Error::msg)?;
 
     // the canonical Figure 6 table
     let t = bench::fig6()?;

@@ -8,9 +8,9 @@
 use mpi_dnn_train::bench;
 use mpi_dnn_train::config::ExperimentConfig;
 use mpi_dnn_train::models;
-use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::strategies::{self, Strategy as _, WorldSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpi_dnn_train::util::error::Result<()> {
     for m in ["nasnet", "resnet50", "mobilenet"] {
         println!("{}", bench::fig9(m)?);
     }

@@ -12,7 +12,7 @@ use mpi_dnn_train::comm::nccl::NcclWorld;
 use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
 use mpi_dnn_train::trainer::{TrainConfig, Trainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpi_dnn_train::util::error::Result<()> {
     // --- real training through PJRT + the real Allreduce ---
     let client = mpi_dnn_train::runtime::client::shared()?;
     let cfg = TrainConfig {

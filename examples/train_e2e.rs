@@ -21,22 +21,22 @@ use mpi_dnn_train::comm::MpiFlavor;
 use mpi_dnn_train::trainer::{TrainConfig, Trainer};
 use mpi_dnn_train::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mpi_dnn_train::util::error::Result<()> {
     mpi_dnn_train::util::logger::init_from_env();
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(std::env::args().skip(1)).map_err(mpi_dnn_train::util::error::Error::msg)?;
     let cfg = TrainConfig {
         model_config: args.get_or("config", "medium"),
-        world: args.get_usize("world", 4).map_err(anyhow::Error::msg)?,
-        steps: args.get_usize("steps", 200).map_err(anyhow::Error::msg)?,
+        world: args.get_usize("world", 4).map_err(mpi_dnn_train::util::error::Error::msg)?,
+        steps: args.get_usize("steps", 200).map_err(mpi_dnn_train::util::error::Error::msg)?,
         seed: 42,
         flavor: MpiFlavor::Mvapich2GdrOpt,
         cluster: presets::ri2(),
         pjrt_reduce: args.get_bool("pjrt-reduce"),
-        log_every: args.get_usize("log-every", 10).map_err(anyhow::Error::msg)?,
-        checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
+        log_every: args.get_usize("log-every", 10).map_err(mpi_dnn_train::util::error::Error::msg)?,
+        checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(mpi_dnn_train::util::error::Error::msg)?,
         checkpoint_path: args.get("checkpoint").map(std::path::PathBuf::from),
     };
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(mpi_dnn_train::util::error::Error::msg)?;
 
     let client = mpi_dnn_train::runtime::client::shared()?;
     let mut trainer = Trainer::new(&client, cfg.clone())?;
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         cfg.world * meta.batch * meta.seq
     );
     println!("wrote e2e_loss.csv");
-    anyhow::ensure!(
+    mpi_dnn_train::ensure!(
         r.final_loss() < r.initial_loss(),
         "training failed to reduce loss"
     );

@@ -3,7 +3,7 @@
 use mpi_dnn_train::bench;
 use mpi_dnn_train::cluster::presets;
 use mpi_dnn_train::models;
-use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::strategies::{self, Strategy as _, WorldSpec};
 use mpi_dnn_train::util::bench::{black_box, Bencher};
 
 fn main() {

@@ -2,7 +2,7 @@
 //! Each returns the same rows/series the paper plots; EXPERIMENTS.md
 //! records paper-vs-measured for the headline numbers.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::table::Table;
 use crate::cluster::{presets, GpuModel};
@@ -11,6 +11,7 @@ use crate::comm::{MpiFlavor, MpiWorld};
 use crate::models::{mobilenet, nasnet, resnet, ModelProfile};
 use crate::strategies::{Baidu, Horovod, PsStrategy, Strategy, WorldSpec};
 use crate::util::bytes::{fmt_bytes, fmt_us, msg_size_sweep};
+use crate::util::par::par_map_ordered;
 
 /// Figure 2: effect of batch size on single-GPU throughput for three GPU
 /// generations (ResNet-50).
@@ -47,7 +48,7 @@ pub fn fig3() -> Result<Table> {
         "Fig 3: ResNet-50 img/s by approach (RI2, K80 + IB EDR)",
         &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
     );
-    for gpus in [1usize, 2, 4, 8, 16] {
+    let rows = par_map_ordered([1usize, 2, 4, 8, 16], |gpus| {
         let ws = WorldSpec::new(cluster.clone(), model.clone(), gpus);
         let ideal = gpus as f64 * ws.throughput_1gpu();
         let mut row = vec![gpus.to_string(), format!("{ideal:.0}")];
@@ -57,6 +58,9 @@ pub fn fig3() -> Result<Table> {
                 Err(_) => "n/a".into(),
             });
         }
+        row
+    });
+    for row in rows {
         t.row(row);
     }
     t.note("paper insight 1: No-gRPC (Baidu/Horovod) > gRPC family for most configs");
@@ -160,7 +164,7 @@ pub fn fig9(model_name: &str) -> Result<Table> {
         "nasnet" => nasnet::nasnet_large(),
         "resnet50" => resnet::resnet50(),
         "mobilenet" => mobilenet::mobilenet_v1(),
-        other => anyhow::bail!("fig9 model must be nasnet|resnet50|mobilenet, got {other}"),
+        other => crate::bail!("fig9 model must be nasnet|resnet50|mobilenet, got {other}"),
     };
     scaling_table(
         &format!("Fig 9: {} on Piz Daint (Cray Aries, ≤128 GPUs)", model.name),
@@ -193,7 +197,10 @@ fn scaling_table(
     }
     let mut t =
         Table::new(title, &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>());
-    for &gpus in gpu_counts {
+    // Every sweep point owns its engine, so points fan out across threads;
+    // joining in order keeps the table (and the emitted JSON) identical to
+    // the sequential run.
+    let rows = par_map_ordered(gpu_counts.iter().copied(), |gpus| {
         let ws = WorldSpec::new(cluster.clone(), model.clone(), gpus);
         let ideal = gpus as f64 * ws.throughput_1gpu();
         let mut row = vec![gpus.to_string(), format!("{ideal:.0}")];
@@ -209,6 +216,9 @@ fn scaling_table(
                 }
             }
         }
+        row
+    });
+    for row in rows {
         t.row(row);
     }
     t.note(note);
@@ -236,6 +246,86 @@ pub fn ablation_fusion(cluster_name: &str, world: usize) -> Result<Table> {
         ]);
     }
     t.note("fusion amortizes per-collective latency; oversize thresholds delay the pipeline");
+    Ok(t)
+}
+
+/// Scenario comparison: every strategy under pristine vs perturbed
+/// conditions on one (cluster, model, world) point — the table behind
+/// `mpi-dnn-train scenario straggler|hetero|jitter|link-load`.
+pub fn scenario_compare(
+    title: &str,
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    world: usize,
+    sc: &crate::strategies::Scenario,
+) -> Result<Table> {
+    let ws = WorldSpec::new(cluster, model, world);
+    let strategies = crate::strategies::all_strategies();
+    let mut t = Table::new(
+        title,
+        &["strategy", "img/s", "img/s (scenario)", "slowdown", "eff", "eff (scenario)"],
+    );
+    let rows = par_map_ordered(strategies.iter(), |s| {
+        // unavailable / failing strategies keep their row with "n/a"
+        // cells, same convention as the figure sweeps
+        match (s.iteration(&ws), s.iteration_in(&ws, sc)) {
+            (Ok(base), Ok(pert)) => vec![
+                s.name(),
+                format!("{:.0}", base.imgs_per_sec),
+                format!("{:.0}", pert.imgs_per_sec),
+                format!("{:.2}x", pert.iter.as_us() / base.iter.as_us()),
+                format!("{:.0}%", 100.0 * base.scaling_efficiency),
+                format!("{:.0}%", 100.0 * pert.scaling_efficiency),
+            ],
+            _ => vec![
+                s.name(),
+                "n/a".into(),
+                "n/a".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ],
+        }
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(format!("{sc:?}"));
+    Ok(t)
+}
+
+/// Two identical Horovod jobs sharing one fabric — the link-sharing run
+/// the `CommOp`→engine port unlocks (`mpi-dnn-train scenario two-jobs`).
+pub fn scenario_two_jobs(
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    world: usize,
+    offset_us: f64,
+) -> Result<Table> {
+    use crate::sim::SimTime;
+    use crate::strategies::scenario::link_share;
+    let title = format!(
+        "Scenario: two {}-GPU Horovod jobs sharing the {} fabric (B offset {})",
+        world,
+        cluster.name,
+        fmt_us(offset_us)
+    );
+    let h = if cluster.fabric.gdr {
+        Horovod::mpi(MpiFlavor::Mvapich2GdrOpt)
+    } else {
+        Horovod::mpi(MpiFlavor::CrayMpich)
+    };
+    let ws = WorldSpec::new(cluster, model, world);
+    let r = link_share(&h, &ws, SimTime::from_us(offset_us))?;
+    let [sa, sb] = r.slowdowns();
+    let mut t = Table::new(&title, &["job", "iter", "slowdown vs solo"]);
+    t.row(["solo".into(), format!("{}", r.solo_iter), "1.00x".into()]);
+    t.row(["A".into(), format!("{}", r.job_iters[0]), format!("{sa:.2}x")]);
+    t.row(["B".into(), format!("{}", r.job_iters[1]), format!("{sb:.2}x")]);
+    t.note(format!(
+        "shared wire: {} ops, {} busy — contention emerges from FIFO queueing, not a formula",
+        r.wire_served, r.wire_busy
+    ));
     Ok(t)
 }
 

@@ -43,12 +43,12 @@ pub fn piz_daint() -> ClusterSpec {
 }
 
 /// Look a preset up by (case-insensitive) name.
-pub fn by_name(name: &str) -> anyhow::Result<ClusterSpec> {
+pub fn by_name(name: &str) -> crate::util::error::Result<ClusterSpec> {
     match name.to_ascii_lowercase().as_str() {
         "ri2" => Ok(ri2()),
         "owens" => Ok(owens()),
         "pizdaint" | "piz_daint" | "piz-daint" => Ok(piz_daint()),
-        other => anyhow::bail!("unknown cluster `{other}` (ri2 | owens | pizdaint)"),
+        other => crate::bail!("unknown cluster `{other}` (ri2 | owens | pizdaint)"),
     }
 }
 

@@ -34,9 +34,9 @@ impl ClusterSpec {
     }
 
     /// Validate a requested world size against the machine.
-    pub fn check_world(&self, world: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(world >= 1, "world size must be ≥ 1");
-        anyhow::ensure!(
+    pub fn check_world(&self, world: usize) -> crate::util::error::Result<()> {
+        crate::ensure!(world >= 1, "world size must be ≥ 1");
+        crate::ensure!(
             world <= self.max_gpus(),
             "{} has only {} GPUs (requested {world})",
             self.name,

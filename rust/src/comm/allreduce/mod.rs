@@ -21,7 +21,7 @@ pub mod tree;
 pub use reduce::{ReducePlace, TransportMode};
 pub use rhd::rhd_allreduce;
 pub use ring::ring_allreduce;
-pub use shadow::shadow_cost;
+pub use shadow::{shadow_cost, shadow_schedule};
 pub use tree::tree_allreduce;
 
 use crate::cluster::{Fabric, GpuModel, Link};

@@ -6,28 +6,80 @@
 //! structure of ring.rs / rhd.rs / tree.rs without touching data.
 //! `tests::shadow_matches_real` pins them to the real implementations
 //! bit-for-bit on the virtual clock, so they cannot drift silently.
+//!
+//! Since the `CommOp` refactor the shadow pass is also the **schedule
+//! generator**: [`shadow_schedule`] emits one decomposed resource-
+//! occupancy step per algorithm step ([`CommSchedule`]), and
+//! [`shadow_cost`] is derived from it — so the schedules the strategies
+//! replay onto the engine are pinned to the real-data implementations by
+//! the same tests.
 
-use super::{Algo, AllreduceCtx, AllreduceReport};
+use super::{Algo, AllreduceCtx, AllreduceReport, ReducePlace};
+use crate::comm::commop::CommSchedule;
+use crate::comm::CostBreakdown;
 use crate::sim::SimTime;
 
 /// Cost of an `Algo` allreduce of `n` f32 elements across `p` ranks.
 pub fn shadow_cost(algo: Algo, p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
-    match algo {
-        Algo::Ring => ring_shadow(p, n, ctx),
-        Algo::Rhd => rhd_shadow(p, n, ctx),
-        Algo::Tree => tree_shadow(p, n, ctx),
-    }
+    shadow_schedule(algo, p, n, ctx).0
+}
+
+/// Cost *and* the per-step `CommOp` schedule of the allreduce.
+pub fn shadow_schedule(
+    algo: Algo,
+    p: usize,
+    n: usize,
+    ctx: &mut AllreduceCtx,
+) -> (AllreduceReport, CommSchedule) {
+    let mut sched = CommSchedule::default();
+    let report = match algo {
+        Algo::Ring => ring_shadow(p, n, ctx, &mut sched),
+        Algo::Rhd => rhd_shadow(p, n, ctx, &mut sched),
+        Algo::Tree => tree_shadow(p, n, ctx, &mut sched),
+    };
+    debug_assert!(
+        (report.cost.total_us() - sched.total_us()).abs() < 1e-6,
+        "schedule/cost divergence: {} vs {}",
+        report.cost.total_us(),
+        sched.total_us()
+    );
+    (report, sched)
+}
+
+fn gpu_reduce(ctx: &AllreduceCtx) -> bool {
+    matches!(ctx.reduce, ReducePlace::Gpu | ReducePlace::GpuPjrt(_))
+}
+
+/// Account one algorithm step: fold it into the aggregate report and
+/// append the decomposed ops to the schedule.
+fn account(
+    report: &mut AllreduceReport,
+    sched: &mut CommSchedule,
+    step: &CostBreakdown,
+    wire_bytes: usize,
+    gpu: bool,
+) {
+    report.cost.add(step);
+    report.steps += 1;
+    report.wire_bytes_per_rank += wire_bytes;
+    sched.push_step(step, gpu);
 }
 
 fn chunk_len(n: usize, p: usize, i: usize) -> usize {
     n / p + usize::from(i < n % p)
 }
 
-fn ring_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+fn ring_shadow(
+    p: usize,
+    n: usize,
+    ctx: &mut AllreduceCtx,
+    sched: &mut CommSchedule,
+) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "ring", ..Default::default() };
     if p == 1 || n == 0 {
         return report;
     }
+    let gpu = gpu_reduce(ctx);
     ctx.register_ranks(p, (n * 4) as u64);
     let max_chunk_bytes = 4 * chunk_len(n, p, 0);
     for s in 0..p - 1 {
@@ -37,26 +89,28 @@ fn ring_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
         let left = p - 2;
         let c = (left + p - s) % p;
         step.add(&ctx.reduce.clone().cost(ctx, 4 * chunk_len(n, p, c)));
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += max_chunk_bytes;
+        account(&mut report, sched, &step, max_chunk_bytes, gpu);
     }
     for _s in 0..p - 1 {
         let mut step = ctx.sendrecv_cost(max_chunk_bytes);
         step.driver_us = ctx.driver_cost_us(0);
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += max_chunk_bytes;
+        account(&mut report, sched, &step, max_chunk_bytes, gpu);
     }
     report.time = SimTime::from_us(report.cost.total_us());
     report
 }
 
-fn rhd_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+fn rhd_shadow(
+    p: usize,
+    n: usize,
+    ctx: &mut AllreduceCtx,
+    sched: &mut CommSchedule,
+) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "rhd", ..Default::default() };
     if p == 1 || n == 0 {
         return report;
     }
+    let gpu = gpu_reduce(ctx);
     ctx.register_ranks(p, (n * 4) as u64);
     let p2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
     let rem = p - p2;
@@ -66,9 +120,7 @@ fn rhd_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
         let mut step = ctx.sendrecv_cost(full_bytes);
         step.driver_us = ctx.driver_cost_us(0);
         step.add(&ctx.reduce.clone().cost(ctx, full_bytes));
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += full_bytes;
+        account(&mut report, sched, &step, full_bytes, gpu);
     }
 
     let mut range = vec![(0usize, n); p2];
@@ -95,9 +147,7 @@ fn rhd_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
             pre[a].push((lo, hi));
             range[a] = if a & mask == 0 { (lo, mid) } else { (mid, hi) };
         }
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += max_half * 4;
+        account(&mut report, sched, &step, max_half * 4, gpu);
         mask >>= 1;
     }
 
@@ -108,27 +158,29 @@ fn rhd_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
         for a in 0..p2 {
             range[a] = pre[a].pop().expect("range history underflow");
         }
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += max_seg * 4;
+        account(&mut report, sched, &step, max_seg * 4, gpu);
     }
 
     if rem > 0 {
         let mut step = ctx.sendrecv_cost(full_bytes);
         step.driver_us = ctx.driver_cost_us(0);
-        report.cost.add(&step);
-        report.steps += 1;
-        report.wire_bytes_per_rank += full_bytes;
+        account(&mut report, sched, &step, full_bytes, gpu);
     }
     report.time = SimTime::from_us(report.cost.total_us());
     report
 }
 
-fn tree_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
+fn tree_shadow(
+    p: usize,
+    n: usize,
+    ctx: &mut AllreduceCtx,
+    sched: &mut CommSchedule,
+) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "tree", ..Default::default() };
     if p == 1 || n == 0 {
         return report;
     }
+    let gpu = gpu_reduce(ctx);
     ctx.register_ranks(p, (n * 4) as u64);
     let bytes = n * 4;
     let mut dist = 1;
@@ -138,9 +190,7 @@ fn tree_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
             let mut step = ctx.sendrecv_cost(bytes);
             step.driver_us = ctx.driver_cost_us(0);
             step.add(&ctx.reduce.clone().cost(ctx, bytes));
-            report.cost.add(&step);
-            report.steps += 1;
-            report.wire_bytes_per_rank += bytes;
+            account(&mut report, sched, &step, bytes, gpu);
         }
         dist *= 2;
     }
@@ -150,9 +200,7 @@ fn tree_shadow(p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
         if any {
             let mut step = ctx.sendrecv_cost(bytes);
             step.driver_us = ctx.driver_cost_us(0);
-            report.cost.add(&step);
-            report.steps += 1;
-            report.wire_bytes_per_rank += bytes;
+            account(&mut report, sched, &step, bytes, gpu);
         }
         dist /= 2;
     }
@@ -232,5 +280,29 @@ mod tests {
         let r = shadow_cost(Algo::Rhd, 128, 64 << 20, &mut ctx);
         assert!(r.time.as_ms() > 1.0);
         assert_eq!(r.steps, 14);
+    }
+
+    /// The schedule is the cost: per-component totals must agree with the
+    /// aggregate breakdown for every algorithm and context.
+    #[test]
+    fn schedule_breakdown_matches_report() {
+        for algo in [Algo::Ring, Algo::Rhd, Algo::Tree] {
+            for (p, n) in [(2usize, 64usize), (5, 1000), (16, 100_000)] {
+                let mut ctx = ctx_gdr();
+                let (report, sched) = shadow_schedule(algo, p, n, &mut ctx);
+                let derived = sched.breakdown();
+                for (a, b) in [
+                    (report.cost.wire_us, derived.wire_us),
+                    (report.cost.staging_us, derived.staging_us),
+                    (report.cost.reduce_us, derived.reduce_us),
+                    (report.cost.driver_us, derived.driver_us),
+                    (report.cost.launch_us, derived.launch_us),
+                    (report.cost.sw_us, derived.sw_us),
+                ] {
+                    assert!((a - b).abs() < 1e-6, "{algo:?} p={p} n={n}: {a} vs {b}");
+                }
+                assert!((sched.total_us() - report.time.as_us()).abs() < 1e-6);
+            }
+        }
     }
 }

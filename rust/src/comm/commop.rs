@@ -1,0 +1,380 @@
+//! The `CommOp` schedule layer: collectives described as ordered
+//! resource-occupancy steps, replayed onto the discrete-event engine.
+//!
+//! Before this layer, a collective call collapsed into one scalar
+//! (`CostBreakdown::total()`), which a strategy could only add to a
+//! hand-maintained float timeline — contention between jobs, stragglers,
+//! and overlap were inexpressible.  Now a collective *emits* its step
+//! structure — inter-node wire occupancy, PCIe staging, the GPU reduce
+//! kernel, driver queries, per-step launches, software overhead — and the
+//! strategy replays those ops onto shared `Engine` resources.  Durations
+//! still come from the validated α–β cost models (pinned to the real-data
+//! allreduce implementations by `shadow::tests`); *queueing* comes from
+//! the engine's FIFO resources, so two schedules sharing a wire contend
+//! the way two jobs on one fabric do.
+//!
+//! `CostBreakdown` is now **derived** from a schedule
+//! ([`CommSchedule::breakdown`]) instead of being the primary artifact.
+
+use std::rc::Rc;
+
+use crate::comm::CostBreakdown;
+use crate::sim::{Engine, ResourceId, SimTime};
+
+/// Which resource class a [`CommOp`] occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResKind {
+    /// Inter-node link (IB EDR / Aries / NCCL's effective ring link).
+    Wire,
+    /// Host↔device staging path (PCIe), shared with the training stream.
+    Pcie,
+    /// GPU reduction kernel occupancy (HBM-bandwidth bound).
+    GpuReduce,
+    /// CPU reduction loop occupancy.
+    CpuReduce,
+    /// CUDA driver pointer-attribute queries (serialized in the driver).
+    Driver,
+    /// Kernel-launch overhead.
+    Launch,
+    /// Software overhead: matching, negotiation, RPC dispatch, protobuf.
+    Sw,
+}
+
+impl ResKind {
+    pub const ALL: [ResKind; 7] = [
+        ResKind::Wire,
+        ResKind::Pcie,
+        ResKind::GpuReduce,
+        ResKind::CpuReduce,
+        ResKind::Driver,
+        ResKind::Launch,
+        ResKind::Sw,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResKind::Wire => "wire",
+            ResKind::Pcie => "pcie",
+            ResKind::GpuReduce => "gpu-reduce",
+            ResKind::CpuReduce => "cpu-reduce",
+            ResKind::Driver => "driver",
+            ResKind::Launch => "launch",
+            ResKind::Sw => "sw",
+        }
+    }
+}
+
+/// One resource-occupancy step of a communication operation.
+///
+/// `us` is the modeled duration (computed by the cost models at schedule
+/// build time).  `on` optionally pins the op to a concrete engine
+/// resource (the PS strategy routes wire ops to a *specific* server's
+/// NIC); otherwise the replay's resource map resolves the kind — and a
+/// kind the map does not back simply elapses as a pure delay (per-rank
+/// private work that contends with nothing).
+#[derive(Debug, Clone, Copy)]
+pub struct CommOp {
+    pub kind: ResKind,
+    pub us: f64,
+    pub on: Option<ResourceId>,
+}
+
+impl CommOp {
+    pub fn fixed(kind: ResKind, us: f64) -> CommOp {
+        CommOp { kind, us, on: None }
+    }
+
+    pub fn pinned(self, r: ResourceId) -> CommOp {
+        CommOp { on: Some(r), ..self }
+    }
+}
+
+/// An ordered list of [`CommOp`]s — the schedule of one collective (or
+/// one PS transfer leg).  Ops execute strictly in order; concurrency
+/// arises from *different* schedules contending on shared resources.
+#[derive(Debug, Clone, Default)]
+pub struct CommSchedule {
+    pub ops: Vec<CommOp>,
+}
+
+impl CommSchedule {
+    /// Append an op, dropping zero-duration ops (they would only bloat
+    /// the event heap).
+    pub fn push(&mut self, op: CommOp) {
+        if op.us > 0.0 {
+            self.ops.push(op);
+        }
+    }
+
+    /// Append one cost-model step, decomposed by component in causal
+    /// order: software overhead → driver queries → D2H staging → wire →
+    /// H2D staging → kernel launch → reduction.
+    pub fn push_step(&mut self, step: &CostBreakdown, gpu_reduce: bool) {
+        self.push(CommOp::fixed(ResKind::Sw, step.sw_us));
+        self.push(CommOp::fixed(ResKind::Driver, step.driver_us));
+        self.push(CommOp::fixed(ResKind::Pcie, step.staging_us / 2.0));
+        self.push(CommOp::fixed(ResKind::Wire, step.wire_us));
+        self.push(CommOp::fixed(ResKind::Pcie, step.staging_us / 2.0));
+        self.push(CommOp::fixed(ResKind::Launch, step.launch_us));
+        let reduce = if gpu_reduce { ResKind::GpuReduce } else { ResKind::CpuReduce };
+        self.push(CommOp::fixed(reduce, step.reduce_us));
+    }
+
+    pub fn extend(&mut self, other: &CommSchedule) {
+        self.ops.extend_from_slice(&other.ops);
+    }
+
+    pub fn total_us(&self) -> f64 {
+        self.ops.iter().map(|o| o.us).sum()
+    }
+
+    /// Scale every op duration by `s` (the Baidu per-tensor pipeline
+    /// amortization uses this to spread fixed costs).
+    pub fn scale(&mut self, s: f64) {
+        for op in &mut self.ops {
+            op.us *= s;
+        }
+    }
+
+    /// Re-derive the paper's §V cost breakdown from the schedule.
+    pub fn breakdown(&self) -> CostBreakdown {
+        let mut c = CostBreakdown::default();
+        for op in &self.ops {
+            match op.kind {
+                ResKind::Wire => c.wire_us += op.us,
+                ResKind::Pcie => c.staging_us += op.us,
+                ResKind::GpuReduce | ResKind::CpuReduce => c.reduce_us += op.us,
+                ResKind::Driver => c.driver_us += op.us,
+                ResKind::Launch => c.launch_us += op.us,
+                ResKind::Sw => c.sw_us += op.us,
+            }
+        }
+        c
+    }
+}
+
+/// Resolves a [`ResKind`] to the engine resource backing it (or `None`
+/// for per-rank work that elapses without contention).
+pub type ResMap = Rc<dyn Fn(ResKind) -> Option<ResourceId>>;
+
+/// The standard per-job resource bundle: one FIFO resource per kind.
+/// Scenario runs share selected members across jobs (two jobs on one
+/// fabric share `wire` but keep private PCIe/GPU/host resources).
+#[derive(Debug, Clone, Copy)]
+pub struct CommResources {
+    pub wire: ResourceId,
+    pub pcie: ResourceId,
+    pub gpu: ResourceId,
+    pub cpu: ResourceId,
+    pub driver: ResourceId,
+    pub launch: ResourceId,
+    pub sw: ResourceId,
+}
+
+impl CommResources {
+    pub fn install(e: &mut Engine) -> CommResources {
+        CommResources {
+            wire: e.unit_resource(),
+            pcie: e.unit_resource(),
+            gpu: e.unit_resource(),
+            cpu: e.unit_resource(),
+            driver: e.unit_resource(),
+            launch: e.unit_resource(),
+            sw: e.unit_resource(),
+        }
+    }
+
+    /// A second job's bundle that contends on an existing wire resource
+    /// but owns every node-local resource.
+    pub fn sharing_wire(e: &mut Engine, wire: ResourceId) -> CommResources {
+        CommResources { wire, ..CommResources::install(e) }
+    }
+
+    pub fn get(&self, k: ResKind) -> ResourceId {
+        match k {
+            ResKind::Wire => self.wire,
+            ResKind::Pcie => self.pcie,
+            ResKind::GpuReduce => self.gpu,
+            ResKind::CpuReduce => self.cpu,
+            ResKind::Driver => self.driver,
+            ResKind::Launch => self.launch,
+            ResKind::Sw => self.sw,
+        }
+    }
+
+    pub fn mapper(self) -> ResMap {
+        Rc::new(move |k| Some(self.get(k)))
+    }
+
+    /// Per-resource (served, busy) snapshot for `IterationReport`.
+    pub fn utilization(&self, e: &Engine) -> Vec<ResourceUse> {
+        ResKind::ALL
+            .iter()
+            .map(|&k| {
+                let (served, busy) = e.resource_stats(self.get(k));
+                ResourceUse { name: k.name().to_string(), served, busy }
+            })
+            .filter(|u| u.served > 0)
+            .collect()
+    }
+}
+
+/// One row of the per-resource utilization report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceUse {
+    pub name: String,
+    pub served: u64,
+    pub busy: SimTime,
+}
+
+/// Replay a schedule onto the engine: op *i+1* starts when op *i*
+/// finishes service; each op queues FIFO on its backing resource.
+/// `done` fires when the last op completes.
+pub fn replay(
+    e: &mut Engine,
+    map: ResMap,
+    ops: Rc<Vec<CommOp>>,
+    done: Box<dyn FnOnce(&mut Engine)>,
+) {
+    replay_from(e, map, ops, 0, done);
+}
+
+fn replay_from(
+    e: &mut Engine,
+    map: ResMap,
+    ops: Rc<Vec<CommOp>>,
+    i: usize,
+    done: Box<dyn FnOnce(&mut Engine)>,
+) {
+    let op = match ops.get(i) {
+        Some(&op) => op,
+        None => {
+            done(e);
+            return;
+        }
+    };
+    let target = op.on.or_else(|| map(op.kind));
+    let next = move |e: &mut Engine| replay_from(e, map, ops, i + 1, done);
+    match target {
+        Some(r) => e.serve_for(r, SimTime::from_us(op.us), next),
+        None => e.after(SimTime::from_us(op.us), next),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+
+    fn sched(ops: &[(ResKind, f64)]) -> Rc<Vec<CommOp>> {
+        Rc::new(ops.iter().map(|&(k, us)| CommOp::fixed(k, us)).collect())
+    }
+
+    #[test]
+    fn push_step_roundtrips_breakdown() {
+        let step = CostBreakdown {
+            wire_us: 10.0,
+            staging_us: 6.0,
+            reduce_us: 3.0,
+            driver_us: 2.0,
+            launch_us: 1.0,
+            sw_us: 0.5,
+        };
+        let mut s = CommSchedule::default();
+        s.push_step(&step, true);
+        assert!((s.total_us() - step.total_us()).abs() < 1e-12);
+        let back = s.breakdown();
+        assert!((back.wire_us - 10.0).abs() < 1e-12);
+        assert!((back.staging_us - 6.0).abs() < 1e-12);
+        assert!((back.reduce_us - 3.0).abs() < 1e-12);
+        // zero components must not create ops
+        let mut s2 = CommSchedule::default();
+        s2.push_step(&CostBreakdown { wire_us: 1.0, ..Default::default() }, false);
+        assert_eq!(s2.ops.len(), 1);
+    }
+
+    #[test]
+    fn replay_uncontended_is_serial_sum() {
+        let mut e = Engine::new();
+        let res = CommResources::install(&mut e);
+        let end = Rc::new(RefCell::new(0.0));
+        let end2 = end.clone();
+        let ops = sched(&[(ResKind::Sw, 1.0), (ResKind::Wire, 10.0), (ResKind::GpuReduce, 2.0)]);
+        replay(&mut e, res.mapper(), ops, Box::new(move |e| *end2.borrow_mut() = e.now().as_us()));
+        e.run();
+        assert!((*end.borrow() - 13.0).abs() < 1e-9);
+        let util = res.utilization(&e);
+        assert_eq!(util.len(), 3);
+        assert!(util.iter().any(|u| u.name == "wire" && u.busy == SimTime::from_us(10.0)));
+    }
+
+    #[test]
+    fn shared_wire_contends_private_resources_overlap() {
+        // Two identical schedules: wire 10us then private gpu 5us.
+        // Shared wire serializes (A: 0–10, B: 10–20); the GPU phases
+        // overlap with the other job's wire time.
+        let mut e = Engine::new();
+        let a = CommResources::install(&mut e);
+        let b = CommResources::sharing_wire(&mut e, a.wire);
+        let ends = Rc::new(RefCell::new(Vec::new()));
+        for res in [a, b] {
+            let ends = ends.clone();
+            let ops = sched(&[(ResKind::Wire, 10.0), (ResKind::GpuReduce, 5.0)]);
+            replay(
+                &mut e,
+                res.mapper(),
+                ops,
+                Box::new(move |e| ends.borrow_mut().push(e.now().as_us())),
+            );
+        }
+        e.run();
+        assert_eq!(*ends.borrow(), vec![15.0, 25.0]);
+        let (_, wire_busy) = e.resource_stats(a.wire);
+        assert_eq!(wire_busy, SimTime::from_us(20.0));
+    }
+
+    #[test]
+    fn unmapped_kinds_elapse_without_contention() {
+        // Map backs nothing: two 10us delays run fully in parallel.
+        let mut e = Engine::new();
+        let map: ResMap = Rc::new(|_| None);
+        let ends = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..2 {
+            let ends = ends.clone();
+            replay(
+                &mut e,
+                map.clone(),
+                sched(&[(ResKind::Sw, 10.0)]),
+                Box::new(move |e| ends.borrow_mut().push(e.now().as_us())),
+            );
+        }
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(10.0));
+        assert_eq!(*ends.borrow(), vec![10.0, 10.0]);
+    }
+
+    #[test]
+    fn pinned_ops_override_the_map() {
+        let mut e = Engine::new();
+        let nic = e.unit_resource();
+        let map: ResMap = Rc::new(|_| None);
+        for _ in 0..2 {
+            let ops = Rc::new(vec![CommOp::fixed(ResKind::Wire, 7.0).pinned(nic)]);
+            replay(&mut e, map.clone(), ops, Box::new(|_| {}));
+        }
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(14.0));
+        let (served, busy) = e.resource_stats(nic);
+        assert_eq!((served, busy), (2, SimTime::from_us(14.0)));
+    }
+
+    #[test]
+    fn scale_preserves_structure() {
+        let mut s = CommSchedule::default();
+        s.push(CommOp::fixed(ResKind::Wire, 8.0));
+        s.push(CommOp::fixed(ResKind::Sw, 2.0));
+        s.scale(0.5);
+        assert!((s.total_us() - 5.0).abs() < 1e-12);
+        assert_eq!(s.ops.len(), 2);
+    }
+}

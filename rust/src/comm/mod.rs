@@ -9,6 +9,7 @@
 
 pub mod allreduce;
 pub mod collectives;
+pub mod commop;
 pub mod fusion;
 pub mod grpc;
 pub mod mpi;
@@ -16,6 +17,7 @@ pub mod nccl;
 pub mod ptrcache;
 pub mod verbs;
 
+pub use commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResMap, ResourceUse};
 pub use mpi::{MpiFlavor, MpiWorld};
 pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
 

@@ -125,10 +125,22 @@ impl MpiWorld {
     /// `shadow::tests`) so 256MB × 128-rank points stay cheap.  Applies
     /// the fabric's at-scale contention factor to the wire.
     pub fn allreduce_latency(&self, p: usize, bytes: usize) -> AllreduceReport {
+        self.allreduce_schedule(p, bytes, 1.0).0
+    }
+
+    /// The allreduce as a replayable `CommOp` schedule (plus its report).
+    /// `wire_derate` further divides the wire bandwidth — scenario knob
+    /// for co-running jobs / degraded fabrics (1.0 = pristine).
+    pub fn allreduce_schedule(
+        &self,
+        p: usize,
+        bytes: usize,
+        wire_derate: f64,
+    ) -> (AllreduceReport, crate::comm::commop::CommSchedule) {
         let n = (bytes / 4).max(1);
         let (algo, mut ctx) = self.plan(bytes);
-        ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p);
-        crate::comm::allreduce::shadow_cost(algo, p, n, &mut ctx)
+        ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p) * wire_derate;
+        crate::comm::allreduce::shadow_schedule(algo, p, n, &mut ctx)
     }
 
     /// CUDA-aware point-to-point send/recv cost (used by the Baidu ring

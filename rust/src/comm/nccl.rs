@@ -22,11 +22,22 @@ pub struct NcclWorld {
     pub cluster: ClusterSpec,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("NCCL2 requires IB verbs for inter-node communication; {cluster} has none (Aries)")]
+#[derive(Debug)]
 pub struct NcclUnsupported {
     pub cluster: &'static str,
 }
+
+impl std::fmt::Display for NcclUnsupported {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "NCCL2 requires IB verbs for inter-node communication; {} has none (Aries)",
+            self.cluster
+        )
+    }
+}
+
+impl std::error::Error for NcclUnsupported {}
 
 impl NcclWorld {
     /// Fails on fabrics without IB verbs — the paper could not run
@@ -66,17 +77,28 @@ impl NcclWorld {
 
     /// Latency microbench primitive (Figures 4 and 6) — shadow cost path.
     pub fn allreduce_latency(&self, p: usize, bytes: usize) -> AllreduceReport {
+        self.allreduce_schedule(p, bytes, 1.0).0
+    }
+
+    /// The NCCL ring as a replayable `CommOp` schedule (plus its report);
+    /// `wire_derate` models scenario-level fabric sharing (1.0 = pristine).
+    pub fn allreduce_schedule(
+        &self,
+        p: usize,
+        bytes: usize,
+        wire_derate: f64,
+    ) -> (AllreduceReport, crate::comm::commop::CommSchedule) {
         let n = (bytes / 4).max(1);
         let mut ctx = self.ctx();
-        ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p);
-        let mut r = crate::comm::allreduce::shadow_cost(
+        ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p) * wire_derate;
+        let (mut r, sched) = crate::comm::allreduce::shadow_schedule(
             crate::comm::allreduce::Algo::Ring,
             p,
             n,
             &mut ctx,
         );
         r.algo = "nccl-ring";
-        r
+        (r, sched)
     }
 }
 

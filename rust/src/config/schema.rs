@@ -3,11 +3,12 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::toml_lite::{parse_toml, TomlDoc};
 use crate::cluster::{presets, ClusterSpec};
 use crate::models::{self, ModelProfile};
+use crate::strategies::Scenario;
 
 /// One experiment: a cluster, a workload, a strategy set and a GPU sweep.
 #[derive(Debug, Clone)]
@@ -20,6 +21,9 @@ pub struct ExperimentConfig {
     pub strategies: Vec<String>,
     /// Horovod fusion threshold override, bytes (0 = default).
     pub fusion_bytes: usize,
+    /// Optional `[scenario]` perturbations (stragglers, hetero mixes,
+    /// jitter, fabric load) applied to every sweep point.
+    pub scenario: Scenario,
     pub json_output: bool,
 }
 
@@ -27,7 +31,7 @@ impl ExperimentConfig {
     pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let doc = parse_toml(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let doc = parse_toml(&text).map_err(|e| crate::anyhow!("{}: {e}", path.display()))?;
         ExperimentConfig::from_doc(&doc)
     }
 
@@ -50,7 +54,7 @@ impl ExperimentConfig {
             .and_then(|v| v.as_array())
             .map(|a| a.iter().filter_map(|x| x.as_int()).map(|i| i as usize).collect())
             .unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
-        anyhow::ensure!(!gpus.is_empty(), "empty gpu sweep");
+        crate::ensure!(!gpus.is_empty(), "empty gpu sweep");
         for &g in &gpus {
             cluster.check_world(g)?;
         }
@@ -75,6 +79,42 @@ impl ExperimentConfig {
             .map(|mb| (mb * 1024.0 * 1024.0) as usize)
             .unwrap_or(0);
 
+        let mut scenario = Scenario::default();
+        if let Some(sc) = doc.get("scenario") {
+            let f = |key: &str, default: f64| {
+                sc.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+            };
+            let n = |key: &str| {
+                sc.get(key).and_then(|v| v.as_int()).map(|i| i as usize).unwrap_or(0)
+            };
+            scenario = Scenario {
+                straggler_ranks: n("straggler_ranks"),
+                straggler_factor: f("straggler_factor", 1.0),
+                hetero_ranks: n("hetero_ranks"),
+                hetero_factor: f("hetero_factor", 1.0),
+                jitter_us: f("jitter_us", 0.0),
+                seed: sc.get("seed").and_then(|v| v.as_int()).unwrap_or(0) as u64,
+                link_load: f("link_load", 0.0),
+            };
+            crate::ensure!(
+                (0.0..=crate::strategies::scenario::MAX_LINK_LOAD)
+                    .contains(&scenario.link_load),
+                "[scenario] link_load must be in [0, {}], got {}",
+                crate::strategies::scenario::MAX_LINK_LOAD,
+                scenario.link_load
+            );
+            // a factor without ranks (or vice versa) is inert — reject it
+            // rather than reporting pristine numbers under a scenario label
+            crate::ensure!(
+                (scenario.straggler_factor == 1.0) == (scenario.straggler_ranks == 0),
+                "[scenario] straggler_factor and straggler_ranks must be set together"
+            );
+            crate::ensure!(
+                (scenario.hetero_factor == 1.0) == (scenario.hetero_ranks == 0),
+                "[scenario] hetero_factor and hetero_ranks must be set together"
+            );
+        }
+
         Ok(ExperimentConfig {
             name,
             cluster,
@@ -83,6 +123,7 @@ impl ExperimentConfig {
             batch_per_gpu,
             strategies,
             fusion_bytes,
+            scenario,
             json_output: root.get("json").and_then(|v| v.as_bool()).unwrap_or(false),
         })
     }
@@ -122,6 +163,32 @@ fusion_mb = 32.0
         assert_eq!(c.strategies.len(), 2);
         assert_eq!(c.fusion_bytes, 32 << 20);
         assert!(c.json_output);
+        assert!(c.scenario.is_neutral());
+    }
+
+    #[test]
+    fn scenario_table_parses() {
+        let c = parse(
+            r#"
+[workload]
+model = "resnet50"
+
+[scenario]
+straggler_ranks = 2
+straggler_factor = 1.8
+jitter_us = 250.0
+link_load = 0.25
+seed = 9
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.scenario.straggler_ranks, 2);
+        assert!((c.scenario.straggler_factor - 1.8).abs() < 1e-12);
+        assert!((c.scenario.jitter_us - 250.0).abs() < 1e-12);
+        assert!((c.scenario.link_load - 0.25).abs() < 1e-12);
+        assert_eq!(c.scenario.seed, 9);
+        assert!(!c.scenario.is_neutral());
+        assert!(parse("[workload]\n[scenario]\nlink_load = 1.5").is_err());
     }
 
     #[test]

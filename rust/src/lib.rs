@@ -21,6 +21,7 @@
 
 pub mod bench;
 pub mod cluster;
+pub mod xla;
 pub mod comm;
 pub mod config;
 pub mod models;

@@ -2,16 +2,18 @@
 //!
 //! ```text
 //! mpi-dnn-train figure 6               # regenerate a paper figure
-//! mpi-dnn-train figure all --json
+//! mpi-dnn-train figure all --json      # all figures, points in parallel
 //! mpi-dnn-train microbench --ranks 16 --max 256MB
 //! mpi-dnn-train train --config small --world 4 --steps 100
 //! mpi-dnn-train experiment cfgs/fig9.toml
 //! mpi-dnn-train ablation --cluster owens --world 64
+//! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5
+//! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet
 //! mpi-dnn-train validate               # artifacts + numerics smoke
 //! mpi-dnn-train list
 //! ```
 
-use anyhow::{Context, Result};
+use mpi_dnn_train::util::error::{Context, Error, Result};
 
 use mpi_dnn_train::bench::{self, Table};
 use mpi_dnn_train::cluster::presets;
@@ -19,10 +21,11 @@ use mpi_dnn_train::comm::nccl::NcclWorld;
 use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
 use mpi_dnn_train::config::ExperimentConfig;
 use mpi_dnn_train::runtime;
-use mpi_dnn_train::strategies::{self, WorldSpec};
+use mpi_dnn_train::strategies::{self, Strategy as _, WorldSpec};
 use mpi_dnn_train::trainer::{TrainConfig, Trainer};
 use mpi_dnn_train::util::bytes::{fmt_bytes, parse_bytes};
 use mpi_dnn_train::util::cli::Args;
+use mpi_dnn_train::util::par::par_map_ordered;
 
 fn main() {
     mpi_dnn_train::util::logger::init_from_env();
@@ -54,12 +57,13 @@ fn run(args: Args) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("ablation") => cmd_ablation(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("validate") => cmd_validate(&args),
         Some("list") => cmd_list(&args),
-        Some(other) => anyhow::bail!("unknown subcommand `{other}` (see README)"),
+        Some(other) => mpi_dnn_train::bail!("unknown subcommand `{other}` (see README)"),
         None => {
             println!(
-                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|validate|list> [flags]"
+                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|validate|list> [flags]"
             );
             Ok(())
         }
@@ -69,7 +73,7 @@ fn run(args: Args) -> Result<()> {
 fn cmd_figure(args: &Args) -> Result<()> {
     let json = args.get_bool("json");
     let which = args.positional.first().map(String::as_str).unwrap_or("all");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
     let mut tables: Vec<Table> = Vec::new();
     match which {
         "2" => tables.push(bench::fig2()),
@@ -84,17 +88,29 @@ fn cmd_figure(args: &Args) -> Result<()> {
             }
         }
         "all" => {
-            tables.push(bench::fig2());
-            tables.push(bench::fig3()?);
-            tables.push(bench::fig4()?);
-            tables.push(bench::fig6()?);
-            tables.push(bench::fig7()?);
-            tables.push(bench::fig8()?);
-            for m in ["nasnet", "resnet50", "mobilenet"] {
-                tables.push(bench::fig9(m)?);
+            // every figure is an independent sweep: generate them in
+            // parallel, join in publication order
+            type Job = Box<dyn FnOnce() -> Result<Vec<Table>> + Send>;
+            let jobs: Vec<Job> = vec![
+                Box::new(|| Ok(vec![bench::fig2()])),
+                Box::new(|| Ok(vec![bench::fig3()?])),
+                Box::new(|| Ok(vec![bench::fig4()?])),
+                Box::new(|| Ok(vec![bench::fig6()?])),
+                Box::new(|| Ok(vec![bench::fig7()?])),
+                Box::new(|| Ok(vec![bench::fig8()?])),
+                Box::new(|| {
+                    let mut v = Vec::new();
+                    for m in ["nasnet", "resnet50", "mobilenet"] {
+                        v.push(bench::fig9(m)?);
+                    }
+                    Ok(v)
+                }),
+            ];
+            for g in par_map_ordered(jobs, |j| j()) {
+                tables.extend(g?);
             }
         }
-        other => anyhow::bail!("unknown figure `{other}` (2|3|4|6|7|8|9|all)"),
+        other => mpi_dnn_train::bail!("unknown figure `{other}` (2|3|4|6|7|8|9|all)"),
     }
     for t in &tables {
         emit(t, json);
@@ -103,11 +119,11 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_microbench(args: &Args) -> Result<()> {
-    let ranks = args.get_usize("ranks", 16).map_err(anyhow::Error::msg)?;
-    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(anyhow::Error::msg)?;
+    let ranks = args.get_usize("ranks", 16).map_err(Error::msg)?;
+    let max = parse_bytes(&args.get_or("max", "256MB")).map_err(Error::msg)?;
     let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
     let json = args.get_bool("json");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let mpi = MpiWorld::new(MpiFlavor::Mvapich2, cluster.clone());
     let opt = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, cluster.clone());
@@ -134,17 +150,17 @@ fn cmd_microbench(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         model_config: args.get_or("config", "small"),
-        world: args.get_usize("world", 4).map_err(anyhow::Error::msg)?,
-        steps: args.get_usize("steps", 100).map_err(anyhow::Error::msg)?,
-        seed: args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64,
+        world: args.get_usize("world", 4).map_err(Error::msg)?,
+        steps: args.get_usize("steps", 100).map_err(Error::msg)?,
+        seed: args.get_usize("seed", 0).map_err(Error::msg)? as u64,
         flavor: parse_flavor(&args.get_or("flavor", "mvapich2-gdr-opt"))?,
         cluster: presets::by_name(&args.get_or("cluster", "ri2"))?,
         pjrt_reduce: args.get_bool("pjrt-reduce"),
-        log_every: args.get_usize("log-every", 10).map_err(anyhow::Error::msg)?,
-        checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
+        log_every: args.get_usize("log-every", 10).map_err(Error::msg)?,
+        checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(Error::msg)?,
         checkpoint_path: args.get("checkpoint").map(std::path::PathBuf::from),
     };
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let client = mpi_dnn_train::runtime::client::shared()?;
     println!(
@@ -170,7 +186,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_experiment(args: &Args) -> Result<()> {
     let path = args.positional.first().context("usage: experiment <config.toml>")?;
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
     let cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
     let mut headers = vec!["gpus".to_string(), "ideal".to_string()];
     headers.extend(cfg.strategies.iter().cloned());
@@ -178,19 +194,32 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         &format!("experiment `{}`: {} on {}", cfg.name, cfg.model.name, cfg.cluster.name),
         &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
     );
-    for &gpus in &cfg.gpus {
+    // resolve once (names were validated at config parse; this keeps any
+    // future lookup failure loud instead of an "n/a" cell), then one
+    // thread per sweep point, rows joined in sweep order
+    let strats = cfg
+        .strategies
+        .iter()
+        .map(|n| strategies::by_name(n))
+        .collect::<Result<Vec<_>>>()?;
+    let rows = par_map_ordered(cfg.gpus.iter().copied(), |gpus| {
         let mut ws = WorldSpec::new(cfg.cluster.clone(), cfg.model.clone(), gpus);
         ws.batch_per_gpu = cfg.batch_per_gpu;
         let ideal = gpus as f64 * ws.throughput_1gpu();
         let mut row = vec![gpus.to_string(), format!("{ideal:.0}")];
-        for name in &cfg.strategies {
-            let s = strategies::by_name(name)?;
-            row.push(match s.iteration(&ws) {
+        for s in &strats {
+            row.push(match s.iteration_in(&ws, &cfg.scenario) {
                 Ok(r) => format!("{:.0}", r.imgs_per_sec),
                 Err(_) => "n/a".into(),
             });
         }
+        row
+    });
+    for row in rows {
         t.row(row);
+    }
+    if !cfg.scenario.is_neutral() {
+        t.note(format!("scenario: {:?}", cfg.scenario));
     }
     emit(&t, cfg.json_output);
     Ok(())
@@ -198,15 +227,103 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_ablation(args: &Args) -> Result<()> {
     let cluster = args.get_or("cluster", "owens");
-    let world = args.get_usize("world", 64).map_err(anyhow::Error::msg)?;
+    let world = args.get_usize("world", 64).map_err(Error::msg)?;
     let json = args.get_bool("json");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
     emit(&bench::ablation_fusion(&cluster, world)?, json);
     Ok(())
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use mpi_dnn_train::strategies::Scenario;
+    let kind = args.positional.first().map(String::as_str).unwrap_or("straggler");
+    let cluster = presets::by_name(&args.get_or("cluster", "owens"))?;
+    let world = args.get_usize("world", 16).map_err(Error::msg)?;
+    let model = mpi_dnn_train::models::by_name(&args.get_or("model", "resnet50"))?;
+    let json = args.get_bool("json");
+    let factor = args.get_f64("factor", 1.5).map_err(Error::msg)?;
+    let ranks = args.get_usize("ranks", 1).map_err(Error::msg)?;
+    let jitter = args.get_f64("jitter-us", 0.0).map_err(Error::msg)?;
+    let load = args.get_f64("load", 0.5).map_err(Error::msg)?;
+    let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
+    let offset = args.get_f64("offset-us", 0.0).map_err(Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
+
+    let table = match kind {
+        "straggler" => {
+            let sc = Scenario { jitter_us: jitter, seed, ..Scenario::straggler(ranks, factor) };
+            bench::scenario_compare(
+                &format!(
+                    "Scenario: {ranks} straggler rank(s) × {factor}x ({}, {}@{world})",
+                    model.name, cluster.name
+                ),
+                cluster,
+                model,
+                world,
+                &sc,
+            )?
+        }
+        "hetero" => {
+            let sc = Scenario { jitter_us: jitter, seed, ..Scenario::hetero(ranks, factor) };
+            bench::scenario_compare(
+                &format!(
+                    "Scenario: {ranks} rank(s) on a {factor}x-slower GPU ({}, {}@{world})",
+                    model.name, cluster.name
+                ),
+                cluster,
+                model,
+                world,
+                &sc,
+            )?
+        }
+        "jitter" => {
+            // --jitter-us is the knob; default to a visible 250us bound
+            let sc = Scenario {
+                jitter_us: if jitter > 0.0 { jitter } else { 250.0 },
+                seed,
+                ..Scenario::default()
+            };
+            bench::scenario_compare(
+                &format!(
+                    "Scenario: per-rank sync jitter ≤ {:.0}us ({}, {}@{world})",
+                    sc.jitter_us, model.name, cluster.name
+                ),
+                cluster,
+                model,
+                world,
+                &sc,
+            )?
+        }
+        "link-load" => {
+            // same validity rule as the `[scenario]` config table
+            use mpi_dnn_train::strategies::scenario::MAX_LINK_LOAD;
+            mpi_dnn_train::ensure!(
+                (0.0..=MAX_LINK_LOAD).contains(&load),
+                "--load must be in [0, {MAX_LINK_LOAD}], got {load}"
+            );
+            let sc = Scenario::link_loaded(load);
+            bench::scenario_compare(
+                &format!(
+                    "Scenario: {:.0}% of the fabric taken by background traffic ({}, {}@{world})",
+                    100.0 * load, model.name, cluster.name
+                ),
+                cluster,
+                model,
+                world,
+                &sc,
+            )?
+        }
+        "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset)?,
+        other => mpi_dnn_train::bail!(
+            "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs)"
+        ),
+    };
+    emit(&table, json);
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
     // 1. artifacts present?
     let dir = runtime::artifacts_dir()?;
     println!("artifacts dir: {}", dir.display());
@@ -231,7 +348,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         w.allreduce(&mut bufs);
         let err = max_abs_err(&bufs, &oracle);
         println!("  allreduce {:<18} max err {err:.2e}", w.flavor.name());
-        anyhow::ensure!(err < 1e-3, "{} numerics off", w.flavor.name());
+        mpi_dnn_train::ensure!(err < 1e-3, "{} numerics off", w.flavor.name());
     }
     // 3. PJRT round trip on the tiny model
     if runtime::config_available(&dir, "tiny") {
@@ -241,7 +358,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let tokens = rng.tokens(step.meta.tokens_len(), step.meta.vocab as u32);
         let (loss, grads) = step.run(&params, &tokens)?;
         println!("  pjrt train_step(tiny): loss {loss:.3}, |g| {} elems", grads.len());
-        anyhow::ensure!(loss.is_finite());
+        mpi_dnn_train::ensure!(loss.is_finite());
     } else {
         println!("  (tiny artifacts missing — PJRT smoke skipped; run `make artifacts`)");
     }
@@ -250,7 +367,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
     println!("clusters:");
     for c in presets::all() {
         println!(
@@ -268,6 +385,7 @@ fn cmd_list(args: &Args) -> Result<()> {
         "strategies: grpc, grpc+mpi, grpc+verbs, baidu, horovod-mpi, horovod-nccl, horovod-mpi-opt, horovod-cray"
     );
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
+    println!("scenarios: straggler, hetero, jitter, link-load, two-jobs (see `scenario --help` flags)");
     Ok(())
 }
 
@@ -277,6 +395,6 @@ fn parse_flavor(s: &str) -> Result<MpiFlavor> {
         "mvapich2-gdr-opt" | "opt" | "mpi-opt" => MpiFlavor::Mvapich2GdrOpt,
         "cray-mpich" | "cray" => MpiFlavor::CrayMpich,
         "mpich" => MpiFlavor::Mpich,
-        other => anyhow::bail!("unknown flavor `{other}`"),
+        other => mpi_dnn_train::bail!("unknown flavor `{other}`"),
     })
 }

@@ -64,12 +64,12 @@ impl ModelProfile {
 }
 
 /// Look up a workload by name.
-pub fn by_name(name: &str) -> anyhow::Result<ModelProfile> {
+pub fn by_name(name: &str) -> crate::util::error::Result<ModelProfile> {
     match name.to_ascii_lowercase().as_str() {
         "resnet50" | "resnet-50" | "resnet" => Ok(resnet::resnet50()),
         "mobilenet" => Ok(mobilenet::mobilenet_v1()),
         "nasnet" | "nasnet-large" => Ok(nasnet::nasnet_large()),
-        other => anyhow::bail!("unknown model `{other}` (resnet50 | mobilenet | nasnet)"),
+        other => crate::bail!("unknown model `{other}` (resnet50 | mobilenet | nasnet)"),
     }
 }
 

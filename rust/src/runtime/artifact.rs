@@ -2,7 +2,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
+use crate::xla;
 
 /// A compiled PJRT executable plus its provenance.
 pub struct Artifact {
@@ -45,7 +46,7 @@ pub fn lit_f32(v: &[f32]) -> xla::Literal {
 
 /// Build a rank-2 i32 literal `[rows, cols]` from row-major data.
 pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(v.len() == rows * cols, "shape mismatch: {} != {rows}x{cols}", v.len());
+    crate::ensure!(v.len() == rows * cols, "shape mismatch: {} != {rows}x{cols}", v.len());
     xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]).map_err(Into::into)
 }
 

@@ -6,7 +6,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
+use crate::xla;
 
 use super::artifact::Artifact;
 

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -67,7 +67,7 @@ impl ModelMeta {
     pub fn load_params(&self, dir: &Path) -> Result<Vec<f32>> {
         let path = dir.join(format!("params_{}.bin", self.config));
         let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(
+        crate::ensure!(
             bytes.len() == self.param_count * 4,
             "param file {} has {} bytes, expected {}",
             path.display(),

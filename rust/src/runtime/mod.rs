@@ -23,10 +23,10 @@ use std::path::{Path, PathBuf};
 
 /// Locate the artifacts directory: `$MPI_DNN_ARTIFACTS`, else `./artifacts`
 /// walking up from cwd (so tests/benches work from any target dir).
-pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
+pub fn artifacts_dir() -> crate::util::error::Result<PathBuf> {
     if let Ok(p) = std::env::var("MPI_DNN_ARTIFACTS") {
         let p = PathBuf::from(p);
-        anyhow::ensure!(p.is_dir(), "MPI_DNN_ARTIFACTS={} is not a directory", p.display());
+        crate::ensure!(p.is_dir(), "MPI_DNN_ARTIFACTS={} is not a directory", p.display());
         return Ok(p);
     }
     let mut dir = std::env::current_dir()?;
@@ -36,7 +36,7 @@ pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
             return Ok(cand);
         }
         if !dir.pop() {
-            anyhow::bail!(
+            crate::bail!(
                 "artifacts/ not found (run `make artifacts` or set MPI_DNN_ARTIFACTS)"
             );
         }

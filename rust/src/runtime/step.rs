@@ -5,7 +5,7 @@
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::artifact::{lit_f32, lit_i32_2d, to_f32, to_scalar_f32, Artifact};
 use super::client::RuntimeClient;
@@ -26,13 +26,13 @@ impl TrainStep {
 
     /// Execute one fwd/bwd step; returns (loss, flat gradient).
     pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
-        anyhow::ensure!(
+        crate::ensure!(
             params.len() == self.meta.param_count,
             "params len {} != {}",
             params.len(),
             self.meta.param_count
         );
-        anyhow::ensure!(
+        crate::ensure!(
             tokens.len() == self.meta.tokens_len(),
             "tokens len {} != {}",
             tokens.len(),
@@ -41,7 +41,7 @@ impl TrainStep {
         let p = lit_f32(params);
         let t = lit_i32_2d(tokens, self.meta.batch, self.meta.seq + 1)?;
         let outs = self.artifact.run(&[p, t])?;
-        anyhow::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
+        crate::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
         let loss = to_scalar_f32(&outs[0]).context("loss output")?;
         let grads = to_f32(&outs[1]).context("grads output")?;
         Ok((loss, grads))
@@ -62,11 +62,11 @@ impl SgdUpdate {
 
     /// In-place momentum update; `scale` is 1/world_size.
     pub fn run(&self, w: &mut Vec<f32>, v: &mut Vec<f32>, g: &[f32], scale: f32) -> Result<()> {
-        anyhow::ensure!(w.len() == self.n && v.len() == self.n && g.len() == self.n);
+        crate::ensure!(w.len() == self.n && v.len() == self.n && g.len() == self.n);
         let outs = self
             .artifact
             .run(&[lit_f32(w), lit_f32(v), lit_f32(g), lit_f32(&[scale])])?;
-        anyhow::ensure!(outs.len() == 2, "sgd returned {} outputs", outs.len());
+        crate::ensure!(outs.len() == 2, "sgd returned {} outputs", outs.len());
         *w = to_f32(&outs[0])?;
         *v = to_f32(&outs[1])?;
         Ok(())
@@ -88,14 +88,14 @@ impl ReduceKernel {
             kernels.push((n, a));
         }
         kernels.sort_by_key(|(n, _)| *n);
-        anyhow::ensure!(!kernels.is_empty(), "no reduce kernels found");
+        crate::ensure!(!kernels.is_empty(), "no reduce kernels found");
         Ok(ReduceKernel { kernels })
     }
 
     /// `acc += x`, chunked over the fixed-size kernels (largest first,
     /// smallest kernel padded for the tail).
     pub fn accumulate(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
-        anyhow::ensure!(acc.len() == x.len(), "length mismatch");
+        crate::ensure!(acc.len() == x.len(), "length mismatch");
         let mut off = 0;
         while off < acc.len() {
             let remaining = acc.len() - off;

@@ -11,7 +11,7 @@
 //! §VI-D) arise in the model.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::time::SimTime;
 
@@ -61,6 +61,26 @@ struct ResourceState {
     busy_time: SimTime,
 }
 
+/// Handle to a FIFO gate (see [`Engine::gate`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GateId(usize);
+
+/// A gate is a FIFO mutex with a virtual-clock ledger: `acquire` runs the
+/// action once the gate is free (waiters queue in arrival order), and the
+/// holder must `release` explicitly.  Unlike `Resource`, the hold time is
+/// *open-ended* — it spans whatever chain of events the holder schedules
+/// before releasing.  This models Horovod's background communication
+/// thread: the thread is occupied for the full coordination + Allreduce
+/// of one fusion buffer, however long the buffer's schedule takes on the
+/// contended links.
+struct GateState {
+    busy: bool,
+    waiters: VecDeque<Action>,
+    acquired_at: SimTime,
+    grants: u64,
+    busy_time: SimTime,
+}
+
 /// Discrete-event engine with a virtual clock.
 #[derive(Default)]
 pub struct Engine {
@@ -68,6 +88,7 @@ pub struct Engine {
     seq: u64,
     heap: BinaryHeap<Reverse<Event>>,
     resources: Vec<ResourceState>,
+    gates: Vec<GateState>,
     executed: u64,
 }
 
@@ -134,6 +155,89 @@ impl Engine {
         state.served += 1;
         state.busy_time += service;
         self.at(end, done);
+    }
+
+    /// A serialized resource with no rate semantics: requests occupy it
+    /// for an explicit duration (see [`Engine::serve_for`]).  The `CommOp`
+    /// replay layer uses these — durations come from the validated cost
+    /// models, queueing/contention from the FIFO here.
+    pub fn unit_resource(&mut self) -> ResourceId {
+        self.resource(1.0, SimTime::ZERO)
+    }
+
+    /// Enqueue a request occupying resource `r` for exactly `dur` (plus
+    /// the resource's fixed overhead); `done` fires at completion.  FIFO
+    /// with respect to `serve` requests on the same resource.
+    pub fn serve_for(&mut self, r: ResourceId, dur: SimTime, done: impl FnOnce(&mut Engine) + 'static) {
+        let state = &mut self.resources[r.0];
+        let start = state.busy_until.max(self.now);
+        let service = dur + state.overhead;
+        let end = start + service;
+        state.busy_until = end;
+        state.served += 1;
+        state.busy_time += service;
+        self.at(end, done);
+    }
+
+    /// Create a FIFO gate (open, no waiters).
+    pub fn gate(&mut self) -> GateId {
+        self.gates.push(GateState {
+            busy: false,
+            waiters: VecDeque::new(),
+            acquired_at: SimTime::ZERO,
+            grants: 0,
+            busy_time: SimTime::ZERO,
+        });
+        GateId(self.gates.len() - 1)
+    }
+
+    /// Run `action` once gate `g` is free, holding it until `release`.
+    /// Waiters are granted in arrival order; a grant fires through the
+    /// event heap so ties stay deterministic.
+    pub fn acquire(&mut self, g: GateId, action: impl FnOnce(&mut Engine) + 'static) {
+        if self.gates[g.0].busy {
+            self.gates[g.0].waiters.push_back(Box::new(action));
+            return;
+        }
+        let now = self.now;
+        {
+            let st = &mut self.gates[g.0];
+            st.busy = true;
+            st.acquired_at = now;
+            st.grants += 1;
+        }
+        self.at(now, action);
+    }
+
+    /// Release gate `g`, granting the next waiter (if any) at the current
+    /// virtual time.
+    pub fn release(&mut self, g: GateId) {
+        let now = self.now;
+        let next = {
+            let st = &mut self.gates[g.0];
+            debug_assert!(st.busy, "release of a free gate");
+            st.busy_time += now.saturating_sub(st.acquired_at);
+            match st.waiters.pop_front() {
+                Some(next) => {
+                    st.acquired_at = now;
+                    st.grants += 1;
+                    Some(next)
+                }
+                None => {
+                    st.busy = false;
+                    None
+                }
+            }
+        };
+        if let Some(next) = next {
+            self.at(now, next);
+        }
+    }
+
+    /// (grants so far, cumulative held time) — gate utilization.
+    pub fn gate_stats(&self, g: GateId) -> (u64, SimTime) {
+        let st = &self.gates[g.0];
+        (st.grants, st.busy_time)
     }
 
     /// When would a `bytes` request complete if enqueued now (without
@@ -249,6 +353,59 @@ mod tests {
         let t2 = e.peek_completion(r, 100.0);
         assert_eq!(t1, t2);
         assert_eq!(t1, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn serve_for_occupies_exact_duration() {
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for dur in [4.0, 6.0] {
+            let done = done.clone();
+            e.serve_for(r, SimTime::from_us(dur), move |e| {
+                done.borrow_mut().push(e.now().as_us());
+            });
+        }
+        e.run();
+        assert_eq!(*done.borrow(), vec![4.0, 10.0]);
+        let (served, busy) = e.resource_stats(r);
+        assert_eq!(served, 2);
+        assert_eq!(busy, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn gate_serializes_fifo_and_tracks_busy() {
+        // Three holders, each keeping the gate for 10us of chained events:
+        // grants at 0/10/20, releases at 10/20/30.
+        let mut e = Engine::new();
+        let g = e.gate();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for tag in ["a", "b", "c"] {
+            let log = log.clone();
+            e.acquire(g, move |e| {
+                log.borrow_mut().push((tag, e.now().as_us()));
+                e.after(SimTime::from_us(10.0), move |e| e.release(g));
+            });
+        }
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(30.0));
+        assert_eq!(*log.borrow(), vec![("a", 0.0), ("b", 10.0), ("c", 20.0)]);
+        let (grants, busy) = e.gate_stats(g);
+        assert_eq!(grants, 3);
+        assert_eq!(busy, SimTime::from_us(30.0));
+    }
+
+    #[test]
+    fn gate_idle_time_not_counted() {
+        let mut e = Engine::new();
+        let g = e.gate();
+        e.acquire(g, move |e| e.after(SimTime::from_us(5.0), move |e| e.release(g)));
+        e.at(SimTime::from_us(100.0), move |e| {
+            e.acquire(g, move |e| e.after(SimTime::from_us(5.0), move |e| e.release(g)));
+        });
+        e.run();
+        let (_, busy) = e.gate_stats(g);
+        assert_eq!(busy, SimTime::from_us(10.0));
     }
 
     #[test]

@@ -3,12 +3,21 @@
 //! Two handicaps vs Horovod that Figure 3 shows: no tensor fusion (every
 //! tensor pays the full 2(p−1)-step ring latency) and p2p-level MPI usage
 //! (driver queries + per-message software overhead on every hop).
+//!
+//! Each per-tensor ring is a `CommOp` schedule replayed onto the engine;
+//! the graph-rewrite comm thread is a FIFO gate serializing tensors the
+//! way Horovod's fusion buffers serialize.
 
-use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
 
-use super::{IterationReport, Strategy, WorldSpec};
+use crate::util::error::Result;
+
+use super::scenario::Scenario;
+use super::{IterationReport, JobTrace, Strategy, WorldSpec};
+use crate::comm::commop::{replay, CommResources, CommSchedule, ResourceUse};
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::SimTime;
+use crate::sim::{Engine, SimTime};
 
 #[derive(Debug, Clone)]
 pub struct Baidu {
@@ -29,9 +38,9 @@ impl Baidu {
         Baidu { flavor, ..Baidu::new() }
     }
 
-    /// Ring allreduce latency on the flavor's transport (Baidu always
-    /// rings, regardless of size — no algorithm selection).  Returns
-    /// (total µs, host-staging µs); shadow cost path.
+    /// Ring allreduce of one tensor as a `CommOp` schedule (Baidu always
+    /// rings, regardless of size — no algorithm selection), plus the
+    /// critical host-staging share (see horovod.rs).
     ///
     /// Successive per-tensor rings pipeline: while one tensor's ring step
     /// waits on the wire, the next tensor's sends are already posted
@@ -39,13 +48,15 @@ impl Baidu {
     /// (α, sw, launch, driver) amortize by `RING_PIPELINE` across the
     /// tensor stream — without this, a 1000-tensor model at p=128 would
     /// pay 2(p−1)·α serially per tensor, which the paper's "Baidu ≈
-    /// Horovod" Figure 9 result rules out.
-    fn ring_us(&self, ws: &WorldSpec, bytes: usize) -> (f64, f64) {
+    /// Horovod" Figure 9 result rules out.  The amortization scales the
+    /// schedule uniformly so the replayed total equals the pipelined cost.
+    fn ring_schedule(&self, ws: &WorldSpec, sc: &Scenario, bytes: usize) -> (CommSchedule, f64) {
         let w = MpiWorld::new(self.flavor, ws.cluster.clone());
         let (_, mut ctx) = w.plan(bytes.max(SMALL_OVERRIDE)); // transport from flavor
-        ctx.wire.beta_gbs /= ws.cluster.fabric.contention_factor(ws.world);
+        ctx.wire.beta_gbs /=
+            ws.cluster.fabric.contention_factor(ws.world) * sc.wire_derate();
         let n = (bytes / 4).max(1);
-        let full = crate::comm::allreduce::shadow_cost(
+        let (full, mut sched) = crate::comm::allreduce::shadow_schedule(
             crate::comm::allreduce::Algo::Ring,
             ws.world,
             n,
@@ -60,11 +71,15 @@ impl Baidu {
         )
         .time
         .as_us();
-        let total = (full.time.as_us() - fixed).max(0.0) + fixed / RING_PIPELINE;
+        let full_us = full.time.as_us();
+        let total = (full_us - fixed).max(0.0) + fixed / RING_PIPELINE;
+        if full_us > 0.0 {
+            sched.scale(total / full_us);
+        }
         // bandwidth share of staging only (see horovod.rs)
         let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
         let staging_crit = (4.0 * bytes as f64 / pcie).min(full.cost.staging_us);
-        (total, staging_crit)
+        (sched, staging_crit)
     }
 }
 
@@ -86,26 +101,59 @@ impl Strategy for Baidu {
         "Baidu-MPI".into()
     }
 
-    fn iteration(&self, ws: &WorldSpec) -> Result<IterationReport> {
+    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
         if ws.world == 1 {
-            return Ok(IterationReport::from_times(self.name(), ws, ws.compute_time()));
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        // serialize per-tensor allreduces on the comm thread
-        let mut thread_free = 0.0f64;
-        let mut staging_total = 0.0f64;
+        // per-tensor rings serialize on the comm thread (a FIFO gate);
+        // each ring replays its CommOp schedule on the job's resources
+        let stretch = sc.compute_stretch();
+        let mut e = Engine::new();
+        let res = CommResources::install(&mut e);
+        let thread = e.gate();
+        let map = res.mapper();
+        let trace = Rc::new(RefCell::new(JobTrace::default()));
         for (i, ready) in ws.tensor_readiness() {
+            let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[i].bytes();
-            let start = thread_free.max(ready.as_us());
-            let (total, staging) = self.ring_us(ws, bytes);
-            thread_free = start + total;
-            staging_total += staging;
+            let (sched, staging) = self.ring_schedule(ws, sc, bytes);
+            trace.borrow_mut().staging_us += staging;
+            let ops = Rc::new(sched.ops);
+            let map = map.clone();
+            let trace = trace.clone();
+            e.at(ready, move |e| {
+                e.acquire(thread, move |e| {
+                    replay(
+                        e,
+                        map,
+                        ops,
+                        Box::new(move |e| {
+                            trace.borrow_mut().comm_end = e.now();
+                            e.release(thread);
+                        }),
+                    );
+                });
+            });
         }
-        let dilated = ws.compute_time().as_us()
-            * (1.0 + self.runtime_tax * (1.0 - 1.0 / ws.world as f64));
-        let skew = self.skew_us_per_rank * ws.world as f64;
-        // staged copies contend with the training stream (see horovod.rs)
-        let iter = SimTime::from_us(thread_free.max(dilated + staging_total) + skew);
-        Ok(IterationReport::from_times(self.name(), ws, iter))
+        e.run();
+        let iter = super::close_iteration(
+            ws,
+            sc,
+            &trace.borrow(),
+            SimTime::ZERO,
+            self.runtime_tax,
+            self.skew_us_per_rank,
+        );
+        let mut report = IterationReport::from_times(self.name(), ws, iter);
+        report.resource_util = res.utilization(&e);
+        let (grants, busy) = e.gate_stats(thread);
+        report.resource_util.push(ResourceUse {
+            name: "comm-thread".to_string(),
+            served: grants,
+            busy,
+        });
+        Ok(report)
     }
 }
 
@@ -141,5 +189,14 @@ mod tests {
         assert!(r16.imgs_per_sec > 4.0 * r2.imgs_per_sec / 2.0 * 0.9);
         assert!(r16.scaling_efficiency < 1.0);
         assert!(r16.scaling_efficiency > 0.3);
+    }
+
+    #[test]
+    fn per_tensor_rings_fill_the_ledger() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        let r = Baidu::new().iteration(&ws).unwrap();
+        let thread = r.resource_util.iter().find(|u| u.name == "comm-thread").unwrap();
+        // one gate grant per tensor (no fusion)
+        assert_eq!(thread.served as usize, ws.model.tensors.len());
     }
 }

@@ -5,20 +5,28 @@
 //! pass; ready tensors are greedily packed into fusion buffers (threshold
 //! = `fusion_bytes`); each buffer costs one coordination round (the
 //! rank-0 negotiation of §III-C2) plus one Allreduce on the configured
-//! backend.  The background thread serializes buffers, so buffer *i*
-//! starts at max(ready_i, end_{i−1}).  Iteration ends when both compute
-//! and the last Allreduce finish — whatever communication didn't fit under
-//! the backward pass is the "exposed" time that erodes scaling efficiency
-//! (the Figure 9 story: MobileNet exposes almost everything, NASNet almost
-//! nothing).
+//! backend.  The Allreduce is a `CommOp` schedule (wire, staging, reduce
+//! kernel, driver, launch steps) replayed onto the discrete-event engine;
+//! the background thread is a FIFO *gate*, so buffer *i* starts at
+//! max(ready_i, release_{i−1}) and — when another job shares the fabric —
+//! every wire step queues behind the co-tenant's traffic.  Iteration ends
+//! when both compute and the last Allreduce finish — whatever
+//! communication didn't fit under the backward pass is the "exposed" time
+//! that erodes scaling efficiency (the Figure 9 story: MobileNet exposes
+//! almost everything, NASNet almost nothing).
 
-use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
 
-use super::{IterationReport, Strategy, WorldSpec};
+use crate::util::error::Result;
+
+use super::scenario::Scenario;
+use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
+use crate::comm::commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResourceUse};
 use crate::comm::nccl::NcclWorld;
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::SimTime;
+use crate::sim::{Engine, GateId, SimTime};
 
 /// Which collective library backs the Allreduce.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,30 +90,35 @@ impl Horovod {
         }
     }
 
-    /// Allreduce latency of one fused buffer on the backend:
-    /// (total µs, host-staging µs).  The staging share rides the same
-    /// PCIe links the training stream needs, so it cannot hide behind
-    /// compute — the strategy adds it to the critical path.
-    fn allreduce_us(&self, ws: &WorldSpec, bytes: usize) -> Result<(f64, f64)> {
-        let r = match self.backend {
+    /// The Allreduce of one fused buffer as a replayable schedule, plus
+    /// the share of its host staging that contends with the training
+    /// stream on PCIe (only the bandwidth term — the per-copy DMA-setup
+    /// α's pipeline away) and therefore rides the compute-side critical
+    /// path even when the wire time hides under the backward pass.
+    fn buffer_schedule(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        bytes: usize,
+    ) -> Result<(CommSchedule, f64)> {
+        let derate = sc.wire_derate();
+        let (report, sched) = match self.backend {
             HorovodBackend::Mpi(flavor) => {
                 let w = MpiWorld::new(flavor, ws.cluster.clone());
-                w.allreduce_latency(ws.world, bytes)
+                w.allreduce_schedule(ws.world, bytes, derate)
             }
             HorovodBackend::Nccl => {
                 let w = NcclWorld::new(ws.cluster.clone())?;
-                w.allreduce_latency(ws.world, bytes)
+                w.allreduce_schedule(ws.world, bytes, derate)
             }
         };
-        // only the bandwidth share of staging contends with compute; the
-        // per-copy DMA-setup α's pipeline away
         let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
-        let staging_crit = (4.0 * bytes as f64 / pcie).min(r.cost.staging_us);
-        Ok((r.time.as_us(), staging_crit))
+        let staging_crit = (4.0 * bytes as f64 / pcie).min(report.cost.staging_us);
+        Ok((sched, staging_crit))
     }
 
     /// Coordination cost per fusion cycle at world size `p`.
-    fn coord_us(&self, ws: &WorldSpec) -> f64 {
+    pub fn coord_us(&self, ws: &WorldSpec) -> f64 {
         let p = ws.world as f64;
         let hops = (ws.world.max(2) as f64).log2().ceil();
         self.coord_alpha_hops * hops * ws.cluster.fabric.inter.alpha_us
@@ -116,29 +129,99 @@ impl Horovod {
     /// A buffer closes when it would exceed the threshold OR when the
     /// next tensor lands in a later fusion cycle.
     pub fn fusion_schedule(&self, ws: &WorldSpec) -> Vec<(SimTime, usize)> {
+        self.fusion_schedule_in(ws, 1.0)
+    }
+
+    /// Fusion schedule with the slowest rank's compute stretched by
+    /// `stretch` (scenario stragglers / heterogeneous nodes): a collective
+    /// cannot start before its slowest producer.
+    pub fn fusion_schedule_in(&self, ws: &WorldSpec, stretch: f64) -> Vec<(SimTime, usize)> {
         let cycle_of = |t: SimTime| (t.as_us() / self.cycle_us).floor() as i64;
+        let compute = SimTime::from_us(ws.compute_time().as_us() * stretch);
+        let launch_of = |ready: SimTime| {
+            // the buffer launches at its cycle boundary (never past the
+            // end of the backward pass)
+            let boundary = SimTime::from_us((cycle_of(ready) + 1) as f64 * self.cycle_us);
+            ready.max(boundary.min(compute))
+        };
         let mut buffers = Vec::new();
         let mut cur_bytes = 0usize;
         let mut cur_ready = SimTime::ZERO;
         for (i, ready) in ws.tensor_readiness() {
+            let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[i].bytes();
             let splits = cur_bytes > 0
                 && (cur_bytes + bytes > self.fusion_bytes || cycle_of(ready) != cycle_of(cur_ready));
             if splits {
-                // the buffer launches at its cycle boundary
-                let launch = SimTime::from_us(
-                    (cycle_of(cur_ready) + 1) as f64 * self.cycle_us,
-                );
-                buffers.push((cur_ready.max(launch.min(ws.compute_time())), cur_bytes));
+                buffers.push((launch_of(cur_ready), cur_bytes));
                 cur_bytes = 0;
             }
             cur_bytes += bytes;
             cur_ready = ready; // buffer is ready when its LAST tensor is
         }
         if cur_bytes > 0 {
-            buffers.push((cur_ready, cur_bytes));
+            // same cycle-boundary launch rule as every other buffer (the
+            // final buffer used to skip it; for a full backward pass
+            // cur_ready == compute end, so the value is unchanged — this
+            // closes the inconsistency, not the number)
+            buffers.push((launch_of(cur_ready), cur_bytes));
         }
         buffers
+    }
+
+    /// Schedule one training job's communication onto an engine: per
+    /// fusion buffer, an event at its ready time acquires the background
+    /// comm-thread gate, replays [coordination + Allreduce schedule] on
+    /// the job's resources, and releases.  Returns the live trace the
+    /// caller reads after `e.run()`.
+    pub(crate) fn schedule_job(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        e: &mut Engine,
+        res: CommResources,
+        thread: GateId,
+        offset: SimTime,
+    ) -> Result<Rc<RefCell<JobTrace>>> {
+        let coord = self.coord_us(ws);
+        let map = res.mapper();
+        let trace = Rc::new(RefCell::new(JobTrace::default()));
+        for (ready, bytes) in self.fusion_schedule_in(ws, sc.compute_stretch()) {
+            let (sched, staging) = self.buffer_schedule(ws, sc, bytes)?;
+            trace.borrow_mut().staging_us += staging;
+            let mut ops = Vec::with_capacity(sched.ops.len() + 1);
+            ops.push(CommOp::fixed(ResKind::Sw, coord));
+            ops.extend(sched.ops);
+            let ops = Rc::new(ops);
+            let map = map.clone();
+            let trace = trace.clone();
+            e.at(offset + ready, move |e| {
+                e.acquire(thread, move |e| {
+                    replay(
+                        e,
+                        map,
+                        ops,
+                        Box::new(move |e| {
+                            trace.borrow_mut().comm_end = e.now();
+                            e.release(thread);
+                        }),
+                    );
+                });
+            });
+        }
+        Ok(trace)
+    }
+
+    /// Fold a finished job trace into an iteration time (see
+    /// `strategies::close_iteration`).
+    pub(crate) fn close_job(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        trace: &JobTrace,
+        offset: SimTime,
+    ) -> SimTime {
+        super::close_iteration(ws, sc, trace, offset, self.runtime_tax, self.skew_us_per_rank)
     }
 }
 
@@ -154,33 +237,32 @@ impl Strategy for Horovod {
         }
     }
 
-    fn iteration(&self, ws: &WorldSpec) -> Result<IterationReport> {
-        anyhow::ensure!(
+    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        crate::ensure!(
             self.available(&ws.cluster),
             "{} unavailable on {}",
             self.name(),
             ws.cluster.name
         );
         if ws.world == 1 {
-            return Ok(IterationReport::from_times(self.name(), ws, ws.compute_time()));
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        let coord = self.coord_us(ws);
-        let mut thread_free = 0.0f64; // background comm thread timeline, µs
-        let mut staging_total = 0.0f64;
-        for (ready, bytes) in self.fusion_schedule(ws) {
-            let start = thread_free.max(ready.as_us());
-            let (total, staging) = self.allreduce_us(ws, bytes)?;
-            thread_free = start + coord + total;
-            staging_total += staging;
-        }
-        let dilated = ws.compute_time().as_us()
-            * (1.0 + self.runtime_tax * (1.0 - 1.0 / ws.world as f64));
-        let skew = self.skew_us_per_rank * ws.world as f64;
-        // host-staged copies contend with the training stream on PCIe:
-        // they extend the compute-side critical path even when the wire
-        // time hides under the backward pass.
-        let iter = SimTime::from_us(thread_free.max(dilated + staging_total) + skew);
-        Ok(IterationReport::from_times(self.name(), ws, iter))
+        let mut e = Engine::new();
+        let res = CommResources::install(&mut e);
+        let thread = e.gate();
+        let trace = self.schedule_job(ws, sc, &mut e, res, thread, SimTime::ZERO)?;
+        e.run();
+        let iter = self.close_job(ws, sc, &trace.borrow(), SimTime::ZERO);
+        let mut report = IterationReport::from_times(self.name(), ws, iter);
+        report.resource_util = res.utilization(&e);
+        let (grants, busy) = e.gate_stats(thread);
+        report.resource_util.push(ResourceUse {
+            name: "comm-thread".to_string(),
+            served: grants,
+            busy,
+        });
+        Ok(report)
     }
 }
 
@@ -275,5 +357,33 @@ mod tests {
         let h = Horovod::mpi(MpiFlavor::Mvapich2);
         let total: usize = h.fusion_schedule(&ws).iter().map(|&(_, b)| b).sum();
         assert_eq!(total, ws.model.grad_bytes());
+    }
+
+    #[test]
+    fn final_buffer_obeys_cycle_launch_rule() {
+        // The last buffer's launch time must never precede its readiness
+        // and never exceed the (stretched) compute end — same rule as
+        // every other buffer, bytes conserved under stretch too.
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        let h = Horovod::mpi(MpiFlavor::Mvapich2);
+        for stretch in [1.0, 1.7] {
+            let buffers = h.fusion_schedule_in(&ws, stretch);
+            let compute = SimTime::from_us(ws.compute_time().as_us() * stretch);
+            let last = buffers.last().unwrap();
+            assert!(last.0 <= compute, "last buffer {} past compute {compute}", last.0);
+            let total: usize = buffers.iter().map(|&(_, b)| b).sum();
+            assert_eq!(total, ws.model.grad_bytes(), "bytes conserved under stretch");
+        }
+    }
+
+    #[test]
+    fn utilization_ledger_has_wire_traffic() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let r = h.iteration(&ws).unwrap();
+        let wire = r.resource_util.iter().find(|u| u.name == "wire").expect("wire row");
+        assert!(wire.busy > SimTime::ZERO && wire.served > 0);
+        let thread = r.resource_util.iter().find(|u| u.name == "comm-thread").unwrap();
+        assert_eq!(thread.served as usize, h.fusion_schedule(&ws).len());
     }
 }

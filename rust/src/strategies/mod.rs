@@ -11,22 +11,31 @@
 //!
 //! A strategy maps a `WorldSpec` (cluster × model × world size × batch) to
 //! an `IterationReport` (iteration time, exposed communication, scaling
-//! efficiency) by scheduling one training step's compute + communication
-//! on the cost models — PS variants on the discrete-event engine (fan-in
-//! contention is a queueing effect), allreduce variants on a pipelined
-//! timeline (Horovod's background-thread serialization).
+//! efficiency, per-resource utilization) by scheduling one training step's
+//! compute + communication on the discrete-event engine.  **Every**
+//! strategy runs through the shared `CommOp` → `Engine` path: collectives
+//! emit resource-occupancy schedules (comm/commop.rs) that are replayed
+//! onto FIFO engine resources — PS fan-in congestion, Horovod's background
+//! comm-thread serialization (a FIFO gate), and the gRPC+MPI
+//! single-service-thread bottleneck are all queueing effects of the same
+//! substrate.  [`Scenario`] injects stragglers, heterogeneous node mixes,
+//! sync jitter and fabric sharing on top of any strategy.
 
 pub mod baidu;
 pub mod horovod;
 pub mod ps;
+pub mod scenario;
 
 pub use baidu::Baidu;
 pub use horovod::{Horovod, HorovodBackend};
-pub use ps::{PsTransport, PsStrategy};
+pub use ps::{PsStrategy, PsTransport};
+pub use scenario::Scenario;
 
 use crate::cluster::ClusterSpec;
+use crate::comm::ResourceUse;
 use crate::models::ModelProfile;
 use crate::sim::SimTime;
+use crate::util::error::Result;
 
 /// One experiment point.
 #[derive(Debug, Clone)]
@@ -86,6 +95,9 @@ pub struct IterationReport {
     pub imgs_per_sec: f64,
     /// imgs_per_sec / (world × single-GPU imgs_per_sec).
     pub scaling_efficiency: f64,
+    /// Per-resource (served, busy) ledger of the engine run that produced
+    /// `iter` — derived from `Engine::resource_stats`, not hand-kept.
+    pub resource_util: Vec<ResourceUse>,
 }
 
 impl IterationReport {
@@ -100,19 +112,59 @@ impl IterationReport {
             iter,
             imgs_per_sec: imgs,
             scaling_efficiency: imgs / ideal,
+            resource_util: Vec::new(),
         }
     }
 }
 
+/// What one job's engine run leaves behind: when its last collective
+/// finished on the virtual clock, and how much host-staging time rode the
+/// PCIe links the training stream needs (the share that cannot hide
+/// behind compute).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobTrace {
+    pub comm_end: SimTime,
+    pub staging_us: f64,
+}
+
+/// Shared closing formula of the allreduce-family strategies: the
+/// iteration ends when both the (runtime-dilated, scenario-stretched)
+/// compute + critical staging and the communication pipeline are done,
+/// plus the synchronization skew of `p` ranks.
+pub(crate) fn close_iteration(
+    ws: &WorldSpec,
+    sc: &Scenario,
+    trace: &JobTrace,
+    offset: SimTime,
+    runtime_tax: f64,
+    skew_us_per_rank: f64,
+) -> SimTime {
+    let p = ws.world as f64;
+    let dilated = ws.compute_time().as_us()
+        * sc.compute_stretch()
+        * (1.0 + runtime_tax * (1.0 - 1.0 / p));
+    let skew = skew_us_per_rank * p + sc.sync_jitter_us(ws.world);
+    let comm = trace.comm_end.saturating_sub(offset).as_us();
+    SimTime::from_us(comm.max(dilated + trace.staging_us) + skew)
+}
+
 /// Object-safe strategy interface — what the bench harness iterates over.
-pub trait Strategy {
+/// `Send + Sync` so the sweep drivers can fan points out across threads
+/// (each `iteration` call owns its private engine).
+pub trait Strategy: Send + Sync {
     fn name(&self) -> String;
     /// Some designs are hardware-gated (NCCL2 needs IB verbs — §VI-D).
     fn available(&self, cluster: &ClusterSpec) -> bool {
         let _ = cluster;
         true
     }
-    fn iteration(&self, ws: &WorldSpec) -> anyhow::Result<IterationReport>;
+    /// One steady-state iteration under pristine conditions.
+    fn iteration(&self, ws: &WorldSpec) -> Result<IterationReport> {
+        self.iteration_in(ws, &Scenario::default())
+    }
+    /// One steady-state iteration under a [`Scenario`] (stragglers,
+    /// heterogeneous nodes, jitter, shared fabric).
+    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport>;
 }
 
 /// All approaches the paper compares, in Figure-3 order.
@@ -129,7 +181,7 @@ pub fn all_strategies() -> Vec<Box<dyn Strategy>> {
 }
 
 /// Strategy lookup for the CLI (`--strategy horovod-mpi-opt` etc.).
-pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Strategy>> {
+pub fn by_name(name: &str) -> Result<Box<dyn Strategy>> {
     Ok(match name.to_ascii_lowercase().as_str() {
         "grpc" => Box::new(PsStrategy::grpc()),
         "grpc+mpi" | "grpc-mpi" => Box::new(PsStrategy::grpc_mpi()),
@@ -139,7 +191,7 @@ pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Strategy>> {
         "horovod-nccl" => Box::new(Horovod::nccl()),
         "horovod-mpi-opt" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2GdrOpt)),
         "horovod-cray" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::CrayMpich)),
-        other => anyhow::bail!(
+        other => crate::bail!(
             "unknown strategy `{other}` (grpc | grpc+mpi | grpc+verbs | baidu | \
              horovod-mpi | horovod-nccl | horovod-mpi-opt | horovod-cray)"
         ),
@@ -180,5 +232,26 @@ mod tests {
         assert_eq!(all_strategies().len(), 7);
         assert!(by_name("horovod-mpi-opt").is_ok());
         assert!(by_name("gloo").is_err());
+    }
+
+    #[test]
+    fn every_strategy_reports_utilization() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        for s in all_strategies() {
+            if !s.available(&ws.cluster) {
+                continue;
+            }
+            let r = s.iteration(&ws).unwrap();
+            assert!(
+                !r.resource_util.is_empty(),
+                "{} reports no resource utilization",
+                s.name()
+            );
+            assert!(
+                r.resource_util.iter().any(|u| u.busy > SimTime::ZERO),
+                "{} utilization all-zero",
+                s.name()
+            );
+        }
     }
 }

@@ -9,6 +9,12 @@
 //! thread per process (§III-B1, "single thread for all MPI related
 //! operations" — the Figure 9 worst case).
 //!
+//! Transfers run through the shared `CommOp` replay path: a push is
+//! [worker-thread op?, per-RPC fixed overhead, wire op pinned to the PS
+//! ingress NIC]; a pull is the mirror image on the egress NIC.  The NIC
+//! FIFO resources produce the fan-in congestion; the op durations come
+//! from the gRPC/Verbs/MPI transport cost models.
+//!
 //! PS placement follows the paper's tf_cnn_benchmarks setup: one PS task
 //! colocated per worker node (`ps_count == world`), parameters sharded
 //! round-robin across them.
@@ -16,10 +22,12 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
-use super::{IterationReport, Strategy, WorldSpec};
+use super::scenario::Scenario;
+use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
+use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse};
 use crate::comm::grpc::GrpcTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
@@ -123,13 +131,14 @@ impl Strategy for PsStrategy {
         }
     }
 
-    fn iteration(&self, ws: &WorldSpec) -> Result<IterationReport> {
+    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
         if ws.world == 1 {
-            return Ok(IterationReport::from_times(self.name(), ws, ws.compute_time()));
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
         let w_count = ws.world;
         let ps_count = ws.world; // one PS task per worker node (see module doc)
-        let beta = |gbs: f64| gbs * 1e3; // GB/s → bytes/µs
+        let stretch = sc.compute_stretch();
 
         let readiness = ws.tensor_readiness();
         // Shard the variables across PS tasks the way TF's greedy
@@ -140,8 +149,9 @@ impl Strategy for PsStrategy {
         // which is the fan-in hot-spot that throttles gRPC for the
         // small-compute models (H4's 3.2× MobileNet gap).
         const MIN_SLICE: usize = 4 << 20;
-        let mut shards: Vec<(usize, crate::sim::SimTime)> = Vec::new(); // (bytes, ready)
+        let mut shards: Vec<(usize, SimTime)> = Vec::new(); // (bytes, ready)
         for &(t, ready) in &readiness {
+            let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[t].bytes();
             let pieces = bytes.div_ceil(MIN_SLICE).max(1);
             let piece = bytes / pieces;
@@ -161,7 +171,7 @@ impl Strategy for PsStrategy {
             load[ps] += shards[i].0;
             assigned[i] = ps;
         }
-        let per_shard: Vec<(usize, f64, f64, usize, crate::sim::SimTime)> = shards
+        let per_shard: Vec<(usize, f64, f64, usize, SimTime)> = shards
             .iter()
             .enumerate()
             .map(|(i, &(bytes, ready))| {
@@ -173,18 +183,23 @@ impl Strategy for PsStrategy {
         let t_count = per_shard.len(); // shards are the unit of transfer
 
         let mut engine = Engine::new();
-        // per-PS NIC queues (ingress for pushes, egress for pull payloads)
+        // payload link rate, bytes/µs (scenario load eats into it)
         let link_gbs = self.transfer_params(&ws.cluster, 1 << 20, false).1;
+        let rate = link_gbs * 1e3 / sc.wire_derate();
+        let wire_us = move |bytes: usize| bytes as f64 / rate;
+        // per-PS NIC queues (ingress for pushes, egress for pull payloads)
         let ingress: Vec<ResourceId> =
-            (0..ps_count).map(|_| engine.resource(beta(link_gbs), SimTime::ZERO)).collect();
+            (0..ps_count).map(|_| engine.unit_resource()).collect();
         let egress: Vec<ResourceId> =
-            (0..ps_count).map(|_| engine.resource(beta(link_gbs), SimTime::ZERO)).collect();
+            (0..ps_count).map(|_| engine.unit_resource()).collect();
         // per-worker MPI service thread (gRPC+MPI only): serialized AND
         // paying a fixed dispatch cost per message
-        let dispatch = SimTime::from_us(self.thread_dispatch_us);
-        let worker_tx: Option<Vec<ResourceId>> = self.single_thread_worker.then(|| {
-            (0..w_count).map(|_| engine.resource(beta(link_gbs), dispatch)).collect()
+        let dispatch_us = self.thread_dispatch_us;
+        let worker_tx: Option<Rc<Vec<ResourceId>>> = self.single_thread_worker.then(|| {
+            Rc::new((0..w_count).map(|_| engine.unit_resource()).collect::<Vec<_>>())
         });
+        // everything not pinned to a NIC/thread is per-rank private work
+        let unmapped: ResMap = Rc::new(|_| None);
 
         let state = Rc::new(RefCell::new(PsState {
             pending_pushes: vec![w_count; t_count],
@@ -199,76 +214,100 @@ impl Strategy for PsStrategy {
 
         for w in 0..w_count {
             for (t, &(bytes, push_fixed, pull_fixed, ps, ready)) in per_shard.iter().enumerate() {
-                let ingress_r = ingress[ps];
+                // push: ready → (worker thread) → fixed overhead → PS NIC
+                let mut push_ops = Vec::new();
+                if let Some(tx) = &worker_tx {
+                    push_ops.push(
+                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us).pinned(tx[w]),
+                    );
+                }
+                push_ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
+                push_ops.push(CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(ingress[ps]));
+                let push_ops = Rc::new(push_ops);
+
                 let egress_r = egress[ps];
                 let state = state.clone();
                 let worker_tx = worker_tx.clone();
-                // push: ready → (worker thread) → fixed overhead → PS NIC
+                let unmapped = unmapped.clone();
                 engine.at(ready, move |e| {
-                    let worker_tx_inner = worker_tx.clone();
-                    let after_tx = move |e: &mut Engine| {
-                        let worker_tx = worker_tx_inner.clone();
-                        let state = state.clone();
-                        let worker_tx = worker_tx.clone();
-                        e.after(SimTime::from_us(push_fixed), move |e| {
-                            e.serve(ingress_r, bytes as f64, move |e| {
-                                let mut st = state.borrow_mut();
-                                st.pending_pushes[t] -= 1;
-                                if st.pending_pushes[t] == 0 {
-                                    drop(st);
-                                    // parameters updated; answer every
-                                    // worker's (pipelined) pull
-                                    let state2 = state.clone();
-                                    let worker_tx2 = worker_tx.clone();
-                                    e.after(SimTime::from_us(update_us(bytes)), move |e| {
-                                        for w2 in 0..w_count {
-                                            let state3 = state2.clone();
-                                            let wtx = worker_tx2.clone();
-                                            e.serve(egress_r, bytes as f64, move |e| {
-                                                let finish = move |e: &mut Engine| {
-                                                    let mut st = state3.borrow_mut();
-                                                    st.received[w2] += 1;
-                                                    if st.received[w2] == t_count {
-                                                        st.done_at[w2] = e.now();
-                                                    }
-                                                };
-                                                let delay = SimTime::from_us(pull_fixed);
-                                                match &wtx {
-                                                    Some(tx) => {
-                                                        let tx = tx[w2];
-                                                        e.after(delay, move |e| {
-                                                            e.serve(tx, bytes as f64, finish)
-                                                        });
-                                                    }
-                                                    None => e.after(delay, finish),
-                                                }
-                                            });
-                                        }
-                                    });
+                    let map = unmapped.clone();
+                    let done = Box::new(move |e: &mut Engine| {
+                        let mut st = state.borrow_mut();
+                        st.pending_pushes[t] -= 1;
+                        if st.pending_pushes[t] != 0 {
+                            return;
+                        }
+                        drop(st);
+                        // parameters updated; answer every worker's
+                        // (pipelined) pull
+                        let state2 = state.clone();
+                        let worker_tx2 = worker_tx.clone();
+                        let unmapped2 = unmapped.clone();
+                        e.after(SimTime::from_us(update_us(bytes)), move |e| {
+                            for w2 in 0..w_count {
+                                let mut pull_ops = vec![
+                                    CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(egress_r),
+                                    CommOp::fixed(ResKind::Sw, pull_fixed),
+                                ];
+                                if let Some(tx) = &worker_tx2 {
+                                    pull_ops.push(
+                                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
+                                            .pinned(tx[w2]),
+                                    );
                                 }
-                            });
+                                let state3 = state2.clone();
+                                replay(
+                                    e,
+                                    unmapped2.clone(),
+                                    Rc::new(pull_ops),
+                                    Box::new(move |e| {
+                                        let mut st = state3.borrow_mut();
+                                        st.received[w2] += 1;
+                                        if st.received[w2] == t_count {
+                                            st.done_at[w2] = e.now();
+                                        }
+                                    }),
+                                );
+                            }
                         });
-                    };
-                    match &worker_tx {
-                        Some(tx) => e.serve(tx[w], bytes as f64, after_tx),
-                        None => after_tx(e),
-                    }
+                    });
+                    replay(e, map, push_ops, done);
                 });
             }
         }
         engine.run();
         let st = state.borrow();
-        anyhow::ensure!(
+        crate::ensure!(
             st.received.iter().all(|&r| r == t_count),
             "PS simulation did not converge: {:?} of {t_count}",
             st.received
         );
         let comm_end = st.done_at.iter().copied().max().unwrap();
-        let dilated = ws.compute_time().as_us()
-            * (1.0 + self.runtime_tax * (1.0 - 1.0 / ws.world as f64));
-        let skew = self.skew_us_per_rank * ws.world as f64;
-        let iter = SimTime::from_us(comm_end.as_us().max(dilated) + skew);
-        Ok(IterationReport::from_times(self.name(), ws, iter))
+        let trace = JobTrace { comm_end, staging_us: 0.0 };
+        let iter = super::close_iteration(
+            ws,
+            sc,
+            &trace,
+            SimTime::ZERO,
+            self.runtime_tax,
+            self.skew_us_per_rank,
+        );
+        let mut report = IterationReport::from_times(self.name(), ws, iter);
+        let agg = |e: &Engine, ids: &[ResourceId], name: &str| {
+            let (mut served, mut busy) = (0u64, SimTime::ZERO);
+            for &r in ids {
+                let (s, b) = e.resource_stats(r);
+                served += s;
+                busy += b;
+            }
+            ResourceUse { name: name.to_string(), served, busy }
+        };
+        report.resource_util.push(agg(&engine, &ingress, "ps-nic-in"));
+        report.resource_util.push(agg(&engine, &egress, "ps-nic-out"));
+        if let Some(tx) = &worker_tx {
+            report.resource_util.push(agg(&engine, tx, "worker-mpi-thread"));
+        }
+        Ok(report)
     }
 }
 
@@ -348,5 +387,20 @@ mod tests {
             "MobileNet ratio {r_mob:.2} should exceed ResNet ratio {r_res:.2}"
         );
         assert!(r_res > 1.2, "Horovod should clearly beat gRPC, got {r_res:.2}");
+    }
+
+    #[test]
+    fn nic_fan_in_shows_up_in_the_ledger() {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        let r = PsStrategy::grpc().iteration(&ws).unwrap();
+        let nic_in = r.resource_util.iter().find(|u| u.name == "ps-nic-in").unwrap();
+        let nic_out = r.resource_util.iter().find(|u| u.name == "ps-nic-out").unwrap();
+        // every shard is pushed by W workers and pulled back W times
+        assert_eq!(nic_in.served, nic_out.served);
+        assert!(nic_in.busy > SimTime::ZERO);
+        // gRPC has no single worker thread
+        assert!(r.resource_util.iter().all(|u| u.name != "worker-mpi-thread"));
+        let m = PsStrategy::grpc_mpi().iteration(&ws).unwrap();
+        assert!(m.resource_util.iter().any(|u| u.name == "worker-mpi-thread"));
     }
 }

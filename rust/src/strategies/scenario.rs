@@ -1,0 +1,251 @@
+//! Scenario knobs: perturbations layered over any strategy, plus the
+//! two-job link-sharing run the `CommOp`→`Engine` refactor unlocks.
+//!
+//! The paper measures pristine, dedicated clusters; production clusters
+//! are not.  A [`Scenario`] injects the deviations operators actually
+//! see — stragglers (one slow rank paces every synchronous collective),
+//! heterogeneous node mixes (part of the allocation on an older GPU),
+//! per-step OS/sync jitter, and a fabric shared with other traffic —
+//! without touching the calibrated cost models.  Since every strategy now
+//! schedules `CommOp`s onto engine resources, two *whole jobs* can also
+//! share one wire resource and contend step-by-step ([`link_share`]).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::horovod::Horovod;
+use super::{JobTrace, Strategy, WorldSpec};
+use crate::comm::commop::CommResources;
+use crate::sim::{Engine, SimTime};
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// Highest background-traffic fraction the link-load knob accepts; the
+/// CLI and `[scenario]` config validate against this, and
+/// [`Scenario::wire_derate`] clamps to it (a 20× derate ceiling).
+pub const MAX_LINK_LOAD: f64 = 0.95;
+
+/// A perturbation of the pristine-cluster assumptions.  `Default` is
+/// neutral: every strategy produces identical results under it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Ranks whose compute runs `straggler_factor` × slower (thermal
+    /// throttling, a busy co-tenant, a failing DIMM).
+    pub straggler_ranks: usize,
+    pub straggler_factor: f64,
+    /// Ranks placed on a slower GPU generation; their compute is scaled
+    /// by `hetero_factor` (e.g. K80-vs-P100 ≈ 2.5×).
+    pub hetero_ranks: usize,
+    pub hetero_factor: f64,
+    /// Per-rank, per-step synchronization jitter bound, µs.  The slowest
+    /// of `p` deterministic draws is added to the step's barrier skew.
+    pub jitter_us: f64,
+    /// Seed for the jitter draws (bit-reproducible scenarios).
+    pub seed: u64,
+    /// Fraction of inter-node wire bandwidth consumed by unrelated
+    /// traffic (0.0 = dedicated fabric, 0.5 = half the wire is gone).
+    pub link_load: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Scenario {
+        Scenario {
+            straggler_ranks: 0,
+            straggler_factor: 1.0,
+            hetero_ranks: 0,
+            hetero_factor: 1.0,
+            jitter_us: 0.0,
+            seed: 0,
+            link_load: 0.0,
+        }
+    }
+}
+
+impl Scenario {
+    pub fn straggler(ranks: usize, factor: f64) -> Scenario {
+        Scenario { straggler_ranks: ranks, straggler_factor: factor, ..Scenario::default() }
+    }
+
+    pub fn hetero(ranks: usize, factor: f64) -> Scenario {
+        Scenario { hetero_ranks: ranks, hetero_factor: factor, ..Scenario::default() }
+    }
+
+    pub fn link_loaded(load: f64) -> Scenario {
+        Scenario { link_load: load, ..Scenario::default() }
+    }
+
+    pub fn is_neutral(&self) -> bool {
+        self == &Scenario::default()
+    }
+
+    /// Slowest-rank compute multiplier.  Synchronous data parallelism is
+    /// paced by the slowest rank: tensor readiness and the compute-side
+    /// critical path both stretch by this.  Factors below 1.0 cannot
+    /// *speed up* the collective (the unperturbed ranks still exist).
+    pub fn compute_stretch(&self) -> f64 {
+        let mut stretch = 1.0f64;
+        if self.straggler_ranks > 0 {
+            stretch = stretch.max(self.straggler_factor);
+        }
+        if self.hetero_ranks > 0 {
+            stretch = stretch.max(self.hetero_factor);
+        }
+        stretch
+    }
+
+    /// Wire-bandwidth divisor from background fabric load.  Clamped to
+    /// [`MAX_LINK_LOAD`] — the same bound the CLI/config validation
+    /// enforces, so the effective knob always equals the requested one.
+    pub fn wire_derate(&self) -> f64 {
+        let load = self.link_load.clamp(0.0, MAX_LINK_LOAD);
+        1.0 / (1.0 - load)
+    }
+
+    /// Max-of-`world` deterministic jitter draws, µs — the barrier waits
+    /// for the unluckiest rank.
+    pub fn sync_jitter_us(&self, world: usize) -> f64 {
+        if self.jitter_us <= 0.0 || world == 0 {
+            return 0.0;
+        }
+        let mut rng = Rng::new(self.seed ^ 0x5CEA_A210);
+        (0..world)
+            .map(|_| rng.next_below(1 << 20) as f64 / (1u64 << 20) as f64 * self.jitter_us)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Outcome of two identical Horovod jobs contending on one fabric.
+#[derive(Debug, Clone)]
+pub struct LinkShareReport {
+    /// Iteration time of the job alone on the fabric.
+    pub solo_iter: SimTime,
+    /// Iteration times of job A (starts at 0) and job B (starts at
+    /// `offset`), each measured from its own start.
+    pub job_iters: [SimTime; 2],
+    /// Total wire occupancy across both jobs.
+    pub wire_busy: SimTime,
+    pub wire_served: u64,
+}
+
+impl LinkShareReport {
+    /// Per-job slowdown vs the solo run.
+    pub fn slowdowns(&self) -> [f64; 2] {
+        let solo = self.solo_iter.as_us();
+        [self.job_iters[0].as_us() / solo, self.job_iters[1].as_us() / solo]
+    }
+}
+
+/// Run two identical Horovod jobs on one engine, sharing the inter-node
+/// wire resource (private PCIe/GPU/host resources — different nodes).
+/// Job B's schedule starts `offset` after job A's.
+pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
+    let sc = Scenario::default();
+    let solo = h.iteration(ws)?;
+
+    let mut e = Engine::new();
+    let res_a = CommResources::install(&mut e);
+    let res_b = CommResources::sharing_wire(&mut e, res_a.wire);
+    let gate_a = e.gate();
+    let gate_b = e.gate();
+    let trace_a: Rc<RefCell<JobTrace>> =
+        h.schedule_job(ws, &sc, &mut e, res_a, gate_a, SimTime::ZERO)?;
+    let trace_b: Rc<RefCell<JobTrace>> = h.schedule_job(ws, &sc, &mut e, res_b, gate_b, offset)?;
+    e.run();
+
+    let iter_a = h.close_job(ws, &sc, &trace_a.borrow(), SimTime::ZERO);
+    let iter_b = h.close_job(ws, &sc, &trace_b.borrow(), offset);
+    let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
+    Ok(LinkShareReport {
+        solo_iter: solo.iter,
+        job_iters: [iter_a, iter_b],
+        wire_busy,
+        wire_served,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::comm::MpiFlavor;
+    use crate::models::resnet;
+    use crate::strategies::Strategy;
+
+    fn ws16() -> WorldSpec {
+        WorldSpec::new(presets::ri2(), resnet::resnet50(), 16)
+    }
+
+    #[test]
+    fn neutral_scenario_matches_baseline() {
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let ws = ws16();
+        let base = h.iteration(&ws).unwrap();
+        let neutral = h.iteration_in(&ws, &Scenario::default()).unwrap();
+        assert_eq!(base.iter, neutral.iter);
+    }
+
+    #[test]
+    fn straggler_slows_iteration_monotonically() {
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let ws = ws16();
+        let base = h.iteration(&ws).unwrap().iter;
+        let mild = h.iteration_in(&ws, &Scenario::straggler(1, 1.3)).unwrap().iter;
+        let bad = h.iteration_in(&ws, &Scenario::straggler(1, 2.0)).unwrap().iter;
+        assert!(mild > base, "1.3x straggler must slow the step: {mild} vs {base}");
+        assert!(bad > mild, "2.0x straggler must be worse: {bad} vs {mild}");
+        // a sub-1.0 "straggler" cannot speed the job up
+        let fast = h.iteration_in(&ws, &Scenario::straggler(1, 0.5)).unwrap().iter;
+        assert_eq!(fast, base);
+    }
+
+    #[test]
+    fn link_load_slows_comm_bound_models() {
+        use crate::models::mobilenet;
+        let h = Horovod::mpi(MpiFlavor::CrayMpich);
+        let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 64);
+        let base = h.iteration(&ws).unwrap().iter;
+        let loaded = h.iteration_in(&ws, &Scenario::link_loaded(0.5)).unwrap().iter;
+        assert!(loaded > base, "half the wire must hurt MobileNet: {loaded} vs {base}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let sc = Scenario { jitter_us: 100.0, seed: 7, ..Scenario::default() };
+        let a = sc.sync_jitter_us(64);
+        let b = sc.sync_jitter_us(64);
+        assert_eq!(a, b);
+        assert!(a > 0.0 && a < 100.0);
+        // more ranks ⇒ the max draw can only grow
+        assert!(sc.sync_jitter_us(64) >= sc.sync_jitter_us(4));
+        assert_eq!(Scenario::default().sync_jitter_us(64), 0.0);
+    }
+
+    #[test]
+    fn shared_link_slows_both_jobs() {
+        // Comm-bound point (Fig 9's worst case) so wire contention cannot
+        // hide behind compute.
+        use crate::models::mobilenet;
+        let h = Horovod::mpi(MpiFlavor::CrayMpich);
+        let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 64);
+        let r = link_share(&h, &ws, SimTime::ZERO).unwrap();
+        let [a, b] = r.slowdowns();
+        assert!(a >= 1.0 && b >= 1.0, "sharing cannot speed anyone up: {a} {b}");
+        assert!(
+            a > 1.0 || b > 1.0,
+            "two jobs on one wire must contend somewhere: {a} {b}"
+        );
+        assert!(r.wire_busy > SimTime::ZERO);
+    }
+
+    #[test]
+    fn hetero_mix_degrades_efficiency() {
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let ws = ws16();
+        let base = h.iteration(&ws).unwrap().scaling_efficiency;
+        let mixed = h
+            .iteration_in(&ws, &Scenario::hetero(4, 2.5))
+            .unwrap()
+            .scaling_efficiency;
+        assert!(mixed < base, "hetero mix must cost efficiency: {mixed} vs {base}");
+    }
+}

@@ -8,7 +8,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"MPIDNNv1";
 
@@ -22,7 +22,7 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
-        anyhow::ensure!(
+        crate::ensure!(
             self.params.len() == self.velocity.len(),
             "params/velocity length mismatch"
         );
@@ -51,13 +51,13 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not a checkpoint file: bad magic");
+        crate::ensure!(&magic == MAGIC, "not a checkpoint file: bad magic");
         let mut u64buf = [0u8; 8];
         f.read_exact(&mut u64buf)?;
         let step = u64::from_le_bytes(u64buf);
         f.read_exact(&mut u64buf)?;
         let n = u64::from_le_bytes(u64buf) as usize;
-        anyhow::ensure!(n < (1 << 31), "implausible param count {n}");
+        crate::ensure!(n < (1 << 31), "implausible param count {n}");
         let mut read_vec = |len: usize| -> Result<Vec<f32>> {
             let mut bytes = vec![0u8; len * 4];
             f.read_exact(&mut bytes).context("truncated checkpoint")?;

@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::data::ShardedTokens;
 use crate::cluster::ClusterSpec;
@@ -102,7 +102,7 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(client: &RuntimeClient, cfg: TrainConfig) -> Result<Trainer> {
         let artifacts = runtime::artifacts_dir()?;
-        anyhow::ensure!(
+        crate::ensure!(
             runtime::config_available(&artifacts, &cfg.model_config),
             "artifacts for `{}` not built (run `make artifacts`)",
             cfg.model_config
@@ -134,7 +134,7 @@ impl Trainer {
         if let Some(path) = &self.cfg.checkpoint_path {
             if path.is_file() {
                 let ck = super::checkpoint::Checkpoint::load(path)?;
-                anyhow::ensure!(
+                crate::ensure!(
                     ck.params.len() == meta.param_count,
                     "checkpoint is for a different model ({} vs {} params)",
                     ck.params.len(),

@@ -17,12 +17,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, ParseError> {
@@ -69,16 +76,16 @@ impl Json {
     }
 
     /// Convenience: required numeric field or descriptive error.
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> crate::util::error::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid numeric field `{key}`"))
+            .ok_or_else(|| crate::anyhow!("missing/invalid numeric field `{key}`"))
     }
 
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> crate::util::error::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid numeric field `{key}`"))
+            .ok_or_else(|| crate::anyhow!("missing/invalid numeric field `{key}`"))
     }
 }
 

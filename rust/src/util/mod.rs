@@ -9,7 +9,9 @@
 pub mod bench;
 pub mod bytes;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logger;
+pub mod par;
 pub mod prng;
 pub mod stats;
