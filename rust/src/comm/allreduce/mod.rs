@@ -21,7 +21,7 @@ pub mod tree;
 pub use reduce::{ReducePlace, TransportMode};
 pub use rhd::rhd_allreduce;
 pub use ring::ring_allreduce;
-pub use shadow::{shadow_cost, shadow_schedule};
+pub use shadow::{shadow_cost, shadow_schedule, shadow_steps};
 pub use tree::tree_allreduce;
 
 use crate::cluster::{Fabric, GpuModel, Link};
@@ -133,6 +133,14 @@ pub struct AllreduceReport {
     pub steps: usize,
     /// Bytes each rank put on the wire (for BW-optimality checks).
     pub wire_bytes_per_rank: usize,
+}
+
+/// Nearest power of two ≤ `p` — the RHD "power-of-two core" (extra ranks
+/// fold into it pre-collective and unfold post).  The real implementation
+/// (rhd.rs), the shadow accounting (shadow.rs) and the graph builder
+/// (comm/graph.rs) must all agree on this, so it lives in one place.
+pub fn flp2(p: usize) -> usize {
+    p.next_power_of_two() >> usize::from(!p.is_power_of_two())
 }
 
 /// Ground truth: elementwise sum across ranks.

@@ -28,7 +28,7 @@ pub fn rhd_allreduce(bufs: &mut [Vec<f32>], ctx: &mut AllreduceCtx) -> Allreduce
     }
     ctx.register_ranks(p, (n * 4) as u64);
 
-    let p2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+    let p2 = super::flp2(p);
     let rem = p - p2;
     let full_bytes = n * 4;
 

@@ -8,20 +8,39 @@
 //! bit-for-bit on the virtual clock, so they cannot drift silently.
 //!
 //! Since the `CommOp` refactor the shadow pass is also the **schedule
-//! generator**: [`shadow_schedule`] emits one decomposed resource-
-//! occupancy step per algorithm step ([`CommSchedule`]), and
-//! [`shadow_cost`] is derived from it — so the schedules the strategies
-//! replay onto the engine are pinned to the real-data implementations by
-//! the same tests.
+//! generator**: [`shadow_steps`] emits one [`StepCost`] per algorithm
+//! step, from which both the serialized [`CommSchedule`]
+//! ([`shadow_schedule`]) and the per-rank dependency graphs
+//! (`comm::graph::allreduce_graph`) are derived, and [`shadow_cost`] is
+//! the aggregate — so everything the strategies replay onto the engine is
+//! pinned to the real-data implementations by the same tests.
 
 use super::{Algo, AllreduceCtx, AllreduceReport, ReducePlace};
-use crate::comm::commop::CommSchedule;
+use crate::comm::commop::{CommSchedule, StepCost};
 use crate::comm::CostBreakdown;
 use crate::sim::SimTime;
 
 /// Cost of an `Algo` allreduce of `n` f32 elements across `p` ranks.
 pub fn shadow_cost(algo: Algo, p: usize, n: usize, ctx: &mut AllreduceCtx) -> AllreduceReport {
-    shadow_schedule(algo, p, n, ctx).0
+    shadow_steps(algo, p, n, ctx).0
+}
+
+/// Cost *and* the per-algorithm-step cost sequence of the allreduce — the
+/// single source both the serialized `CommSchedule` and the per-rank
+/// `CommGraph` builders consume.
+pub fn shadow_steps(
+    algo: Algo,
+    p: usize,
+    n: usize,
+    ctx: &mut AllreduceCtx,
+) -> (AllreduceReport, Vec<StepCost>) {
+    let mut steps = Vec::new();
+    let report = match algo {
+        Algo::Ring => ring_shadow(p, n, ctx, &mut steps),
+        Algo::Rhd => rhd_shadow(p, n, ctx, &mut steps),
+        Algo::Tree => tree_shadow(p, n, ctx, &mut steps),
+    };
+    (report, steps)
 }
 
 /// Cost *and* the per-step `CommOp` schedule of the allreduce.
@@ -31,12 +50,8 @@ pub fn shadow_schedule(
     n: usize,
     ctx: &mut AllreduceCtx,
 ) -> (AllreduceReport, CommSchedule) {
-    let mut sched = CommSchedule::default();
-    let report = match algo {
-        Algo::Ring => ring_shadow(p, n, ctx, &mut sched),
-        Algo::Rhd => rhd_shadow(p, n, ctx, &mut sched),
-        Algo::Tree => tree_shadow(p, n, ctx, &mut sched),
-    };
+    let (report, steps) = shadow_steps(algo, p, n, ctx);
+    let sched = CommSchedule::from_steps(&steps);
     debug_assert!(
         (report.cost.total_us() - sched.total_us()).abs() < 1e-6,
         "schedule/cost divergence: {} vs {}",
@@ -51,10 +66,10 @@ fn gpu_reduce(ctx: &AllreduceCtx) -> bool {
 }
 
 /// Account one algorithm step: fold it into the aggregate report and
-/// append the decomposed ops to the schedule.
+/// append it to the step sequence.
 fn account(
     report: &mut AllreduceReport,
-    sched: &mut CommSchedule,
+    steps: &mut Vec<StepCost>,
     step: &CostBreakdown,
     wire_bytes: usize,
     gpu: bool,
@@ -62,7 +77,7 @@ fn account(
     report.cost.add(step);
     report.steps += 1;
     report.wire_bytes_per_rank += wire_bytes;
-    sched.push_step(step, gpu);
+    steps.push(StepCost { cost: *step, gpu_reduce: gpu });
 }
 
 fn chunk_len(n: usize, p: usize, i: usize) -> usize {
@@ -73,7 +88,7 @@ fn ring_shadow(
     p: usize,
     n: usize,
     ctx: &mut AllreduceCtx,
-    sched: &mut CommSchedule,
+    steps: &mut Vec<StepCost>,
 ) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "ring", ..Default::default() };
     if p == 1 || n == 0 {
@@ -89,12 +104,12 @@ fn ring_shadow(
         let left = p - 2;
         let c = (left + p - s) % p;
         step.add(&ctx.reduce.clone().cost(ctx, 4 * chunk_len(n, p, c)));
-        account(&mut report, sched, &step, max_chunk_bytes, gpu);
+        account(&mut report, steps, &step, max_chunk_bytes, gpu);
     }
     for _s in 0..p - 1 {
         let mut step = ctx.sendrecv_cost(max_chunk_bytes);
         step.driver_us = ctx.driver_cost_us(0);
-        account(&mut report, sched, &step, max_chunk_bytes, gpu);
+        account(&mut report, steps, &step, max_chunk_bytes, gpu);
     }
     report.time = SimTime::from_us(report.cost.total_us());
     report
@@ -104,7 +119,7 @@ fn rhd_shadow(
     p: usize,
     n: usize,
     ctx: &mut AllreduceCtx,
-    sched: &mut CommSchedule,
+    steps: &mut Vec<StepCost>,
 ) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "rhd", ..Default::default() };
     if p == 1 || n == 0 {
@@ -112,7 +127,7 @@ fn rhd_shadow(
     }
     let gpu = gpu_reduce(ctx);
     ctx.register_ranks(p, (n * 4) as u64);
-    let p2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+    let p2 = super::flp2(p);
     let rem = p - p2;
     let full_bytes = n * 4;
 
@@ -120,7 +135,7 @@ fn rhd_shadow(
         let mut step = ctx.sendrecv_cost(full_bytes);
         step.driver_us = ctx.driver_cost_us(0);
         step.add(&ctx.reduce.clone().cost(ctx, full_bytes));
-        account(&mut report, sched, &step, full_bytes, gpu);
+        account(&mut report, steps, &step, full_bytes, gpu);
     }
 
     let mut range = vec![(0usize, n); p2];
@@ -147,7 +162,7 @@ fn rhd_shadow(
             pre[a].push((lo, hi));
             range[a] = if a & mask == 0 { (lo, mid) } else { (mid, hi) };
         }
-        account(&mut report, sched, &step, max_half * 4, gpu);
+        account(&mut report, steps, &step, max_half * 4, gpu);
         mask >>= 1;
     }
 
@@ -158,13 +173,13 @@ fn rhd_shadow(
         for a in 0..p2 {
             range[a] = pre[a].pop().expect("range history underflow");
         }
-        account(&mut report, sched, &step, max_seg * 4, gpu);
+        account(&mut report, steps, &step, max_seg * 4, gpu);
     }
 
     if rem > 0 {
         let mut step = ctx.sendrecv_cost(full_bytes);
         step.driver_us = ctx.driver_cost_us(0);
-        account(&mut report, sched, &step, full_bytes, gpu);
+        account(&mut report, steps, &step, full_bytes, gpu);
     }
     report.time = SimTime::from_us(report.cost.total_us());
     report
@@ -174,7 +189,7 @@ fn tree_shadow(
     p: usize,
     n: usize,
     ctx: &mut AllreduceCtx,
-    sched: &mut CommSchedule,
+    steps: &mut Vec<StepCost>,
 ) -> AllreduceReport {
     let mut report = AllreduceReport { algo: "tree", ..Default::default() };
     if p == 1 || n == 0 {
@@ -190,7 +205,7 @@ fn tree_shadow(
             let mut step = ctx.sendrecv_cost(bytes);
             step.driver_us = ctx.driver_cost_us(0);
             step.add(&ctx.reduce.clone().cost(ctx, bytes));
-            account(&mut report, sched, &step, bytes, gpu);
+            account(&mut report, steps, &step, bytes, gpu);
         }
         dist *= 2;
     }
@@ -200,7 +215,7 @@ fn tree_shadow(
         if any {
             let mut step = ctx.sendrecv_cost(bytes);
             step.driver_us = ctx.driver_cost_us(0);
-            account(&mut report, sched, &step, bytes, gpu);
+            account(&mut report, steps, &step, bytes, gpu);
         }
         dist /= 2;
     }

@@ -89,6 +89,27 @@ impl CommOp {
     }
 }
 
+/// One algorithm step of a collective, still in cost-model form: the §V
+/// component breakdown plus where its reduction runs.  This is the common
+/// currency of the serialized [`CommSchedule`] (steps concatenated) and
+/// the per-rank [`CommGraph`](crate::comm::graph::CommGraph) (one node per
+/// rank per step) — both decompose a step into ops via
+/// [`CommSchedule::push_step`], so they cannot drift from each other.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCost {
+    pub cost: CostBreakdown,
+    pub gpu_reduce: bool,
+}
+
+impl StepCost {
+    /// The step decomposed into causal-order ops (zero components drop).
+    pub fn ops(&self) -> Vec<CommOp> {
+        let mut s = CommSchedule::default();
+        s.push_step(&self.cost, self.gpu_reduce);
+        s.ops
+    }
+}
+
 /// An ordered list of [`CommOp`]s — the schedule of one collective (or
 /// one PS transfer leg).  Ops execute strictly in order; concurrency
 /// arises from *different* schedules contending on shared resources.
@@ -98,6 +119,15 @@ pub struct CommSchedule {
 }
 
 impl CommSchedule {
+    /// The serialized (critical-path) schedule of a step sequence.
+    pub fn from_steps(steps: &[StepCost]) -> CommSchedule {
+        let mut s = CommSchedule::default();
+        for st in steps {
+            s.push_step(&st.cost, st.gpu_reduce);
+        }
+        s
+    }
+
     /// Append an op, dropping zero-duration ops (they would only bloat
     /// the event heap).
     pub fn push(&mut self, op: CommOp) {
@@ -225,6 +255,23 @@ pub struct ResourceUse {
     pub name: String,
     pub served: u64,
     pub busy: SimTime,
+}
+
+impl ResourceUse {
+    /// Aggregate (served, busy) of a set of engine resources under one
+    /// row name — NIC groups, per-rank bundles.
+    pub fn aggregate<I>(e: &Engine, name: &str, ids: I) -> ResourceUse
+    where
+        I: IntoIterator<Item = ResourceId>,
+    {
+        let (mut served, mut busy) = (0u64, SimTime::ZERO);
+        for r in ids {
+            let (s, b) = e.resource_stats(r);
+            served += s;
+            busy += b;
+        }
+        ResourceUse { name: name.to_string(), served, busy }
+    }
 }
 
 /// Replay a schedule onto the engine: op *i+1* starts when op *i*

@@ -1,0 +1,762 @@
+//! The `CommGraph` layer: a collective as a DAG of **per-rank** `CommOp`
+//! nodes with explicit cross-rank dependencies, executed dependency-aware
+//! on the discrete-event engine.
+//!
+//! A serialized [`CommSchedule`](crate::comm::commop::CommSchedule) models
+//! the critical-path rank: one op chain, so a straggler can only shift the
+//! *whole* collective.  On real fabrics skew propagates *through* the
+//! algorithm: ring step *s* on rank *r* cannot start before step *s−1* of
+//! rank *r* **and** the matching send of rank *r−1* — one slow rank delays
+//! its downstream neighbours one step later, the next neighbour two steps
+//! later, a cone that widens by one rank per step.  That propagation (the
+//! structure the paper's Allreduce characterization rides on) is exactly
+//! what this graph expresses and the serialized form cannot.
+//!
+//! Contract:
+//!  * **Nodes** — one per (rank, algorithm step): an ordered `CommOp` list
+//!    (the same [`StepCost::ops`] decomposition the serialized schedule
+//!    uses, so durations stay pinned to the validated α–β cost models).
+//!  * **Edges** — `deps`: a node becomes *eligible* only when every
+//!    predecessor has finished.  Builders wire ring / halving-doubling /
+//!    tree / PS fan-in topologies.
+//!  * **Eligibility vs queueing** — eligibility is an engine *join*
+//!    ([`Engine::join`]); once eligible, a node's ops queue FIFO on its
+//!    rank's **node-local** resources ([`GraphResources`]: per-rank NIC,
+//!    PCIe link, GPU, …) instead of the one shared per-job proxy.
+//!
+//! With uniform per-step durations (no scenario perturbation) the graph's
+//! completion time provably equals the serialized schedule's total: every
+//! rank's chain is the same op sequence, and cross-rank edges between
+//! equal-length chains never extend the path.  `tests` and
+//! `tests/des_regression.rs` pin this zero-skew equivalence, which is what
+//! lets the strategies keep the fast serialized replay when nothing skews
+//! ranks apart.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::comm::allreduce::Algo;
+use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse, StepCost};
+use crate::sim::{Engine, ResourceId, SimTime};
+
+/// Handle to a node inside one [`CommGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// One unit of per-rank work: an ordered op list plus the nodes that must
+/// finish before it may start.
+#[derive(Debug, Clone)]
+pub struct GraphNode {
+    pub rank: usize,
+    /// Builder step index (timeline display, deterministic jitter keys).
+    pub step: u32,
+    pub ops: Vec<CommOp>,
+    pub deps: Vec<NodeId>,
+}
+
+impl GraphNode {
+    pub fn dur_us(&self) -> f64 {
+        self.ops.iter().map(|o| o.us).sum()
+    }
+}
+
+/// A DAG of per-rank [`GraphNode`]s.  Nodes are created in topological
+/// order (dependencies always point backwards), which keeps execution and
+/// critical-path evaluation single-pass.
+#[derive(Debug, Clone, Default)]
+pub struct CommGraph {
+    pub nodes: Vec<GraphNode>,
+}
+
+impl CommGraph {
+    pub fn push_node(
+        &mut self,
+        rank: usize,
+        step: u32,
+        ops: Vec<CommOp>,
+        deps: Vec<NodeId>,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        debug_assert!(deps.iter().all(|d| d.0 < id), "deps must precede the node");
+        self.nodes.push(GraphNode { rank, step, ops, deps });
+        NodeId(id)
+    }
+
+    /// The trivial adapter for linear schedules (gRPC-family transfers):
+    /// one node carrying the whole op chain on one rank.
+    pub fn chain(rank: usize, ops: Vec<CommOp>) -> CommGraph {
+        let mut g = CommGraph::default();
+        g.push_node(rank, 0, ops, Vec::new());
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Sum of every node's work — the per-rank ledger, *not* wall time
+    /// (p ranks working in parallel each contribute their own ops).
+    pub fn total_us(&self) -> f64 {
+        self.nodes.iter().map(|n| n.dur_us()).sum()
+    }
+
+    /// Longest dependency path, assuming no resource queueing — the
+    /// zero-contention wall time of the graph.
+    pub fn critical_path_us(&self) -> f64 {
+        let mut cp = vec![0.0f64; self.nodes.len()];
+        let mut best = 0.0f64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let start = node.deps.iter().map(|d| cp[d.0]).fold(0.0, f64::max);
+            cp[i] = start + node.dur_us();
+            best = best.max(cp[i]);
+        }
+        best
+    }
+
+    /// Scale every op duration (Baidu's ring-pipeline amortization).
+    pub fn scale(&mut self, s: f64) {
+        for n in &mut self.nodes {
+            for op in &mut n.ops {
+                op.us *= s;
+            }
+        }
+    }
+
+    /// Scale every op of one rank's nodes — a straggler whose progress
+    /// engine, host and links all run slow.
+    pub fn scale_rank(&mut self, rank: usize, f: f64) {
+        for n in &mut self.nodes {
+            if n.rank == rank {
+                for op in &mut n.ops {
+                    op.us *= f;
+                }
+            }
+        }
+    }
+
+    /// Scale only the GPU-side ops (reduce kernel, launch, PCIe staging)
+    /// of one rank — a rank placed on an older GPU generation.
+    pub fn scale_rank_gpu(&mut self, rank: usize, f: f64) {
+        for n in &mut self.nodes {
+            if n.rank == rank {
+                for op in &mut n.ops {
+                    if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
+                        op.us *= f;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Add per-node extra delay from a deterministic draw of
+    /// `(rank, step)` — OS/sync jitter at step granularity.  The delay is
+    /// prepended as an *unpinned* `Sw` op (per-rank pre-start stall), so
+    /// it never inflates the occupancy of a shared pinned resource — a
+    /// jittery worker delays itself, not the NIC queue behind it.
+    pub fn jitter_nodes(&mut self, draw: impl Fn(usize, u32) -> f64) {
+        for n in &mut self.nodes {
+            let j = draw(n.rank, n.step);
+            if j > 0.0 {
+                n.ops.insert(0, CommOp::fixed(ResKind::Sw, j));
+            }
+        }
+    }
+
+    /// Prepend a root node every current source depends on — Horovod's
+    /// rank-0 coordination round before the buffer's Allreduce.  Existing
+    /// step indices shift by one.
+    pub fn prefix_root(&mut self, rank: usize, ops: Vec<CommOp>) {
+        let mut nodes = Vec::with_capacity(self.nodes.len() + 1);
+        nodes.push(GraphNode { rank, step: 0, ops, deps: Vec::new() });
+        for n in self.nodes.drain(..) {
+            let deps = if n.deps.is_empty() {
+                vec![NodeId(0)]
+            } else {
+                n.deps.iter().map(|d| NodeId(d.0 + 1)).collect()
+            };
+            nodes.push(GraphNode { step: n.step + 1, deps, ..n });
+        }
+        self.nodes = nodes;
+    }
+}
+
+fn dep2(a: Option<NodeId>, b: Option<NodeId>) -> Vec<NodeId> {
+    let mut v = Vec::new();
+    if let Some(x) = a {
+        v.push(x);
+    }
+    if let Some(y) = b {
+        if a != Some(y) {
+            v.push(y);
+        }
+    }
+    v
+}
+
+/// Build the dependency graph of an allreduce from its validated per-step
+/// costs (the same [`StepCost`] sequence the serialized schedule uses).
+pub fn allreduce_graph(algo: Algo, p: usize, steps: &[StepCost]) -> CommGraph {
+    match algo {
+        Algo::Ring => ring_graph(p, steps),
+        Algo::Rhd => rhd_graph(p, steps),
+        Algo::Tree => tree_graph(p, steps),
+    }
+}
+
+/// Ring: step *s* on rank *r* waits on its own step *s−1* and on the
+/// matching send of rank *r−1* (the data it receives this step).
+pub fn ring_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    let mut g = CommGraph::default();
+    if p < 2 {
+        return g;
+    }
+    let mut last: Vec<Option<NodeId>> = vec![None; p];
+    for (s, st) in steps.iter().enumerate() {
+        let ops = st.ops();
+        let prev = last.clone();
+        for (r, slot) in last.iter_mut().enumerate() {
+            let from = (r + p - 1) % p;
+            *slot = Some(g.push_node(r, s as u32, ops.clone(), dep2(prev[r], prev[from])));
+        }
+    }
+    g
+}
+
+/// Recursive halving-doubling: mask step exchanges pair rank *r* with
+/// *r ^ mask*; a non-power-of-two world folds the extra ranks into their
+/// base partner first (pre) and unfolds them last (post) — the same phase
+/// sequence `shadow::rhd_shadow` charges.
+pub fn rhd_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    let mut g = CommGraph::default();
+    if p < 2 {
+        return g;
+    }
+    let p2 = crate::comm::allreduce::flp2(p);
+    let rem = p - p2;
+    let mut last: Vec<Option<NodeId>> = vec![None; p];
+    let mut si = 0usize;
+
+    let mut fold_step = |g: &mut CommGraph, last: &mut Vec<Option<NodeId>>, si: &mut usize| {
+        let ops = steps[*si].ops();
+        let stepi = *si as u32;
+        *si += 1;
+        let prev = last.clone();
+        for r in p2..p {
+            let base = r - p2;
+            last[r] = Some(g.push_node(r, stepi, ops.clone(), dep2(prev[r], prev[base])));
+            last[base] = Some(g.push_node(base, stepi, ops.clone(), dep2(prev[base], prev[r])));
+        }
+    };
+
+    if rem > 0 {
+        fold_step(&mut g, &mut last, &mut si);
+    }
+    let masks: Vec<usize> = {
+        let mut v = Vec::new();
+        let mut m = p2 >> 1;
+        while m > 0 {
+            v.push(m);
+            m >>= 1;
+        }
+        v
+    };
+    for &mask in masks.iter().chain(masks.iter().rev()) {
+        let ops = steps[si].ops();
+        let stepi = si as u32;
+        si += 1;
+        let prev = last.clone();
+        for (r, slot) in last.iter_mut().enumerate().take(p2) {
+            let q = r ^ mask;
+            *slot = Some(g.push_node(r, stepi, ops.clone(), dep2(prev[r], prev[q])));
+        }
+    }
+    if rem > 0 {
+        fold_step(&mut g, &mut last, &mut si);
+    }
+    debug_assert_eq!(si, steps.len(), "rhd builder / shadow step count mismatch");
+    g
+}
+
+/// Binomial tree: reduce up (receivers reduce), broadcast down.  Each
+/// pair's work lives on the receiving rank; the node also becomes the
+/// sender's latest node, which serializes a rank's consecutive sends
+/// (rank 0 broadcasts one level at a time).
+pub fn tree_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    let mut g = CommGraph::default();
+    if p < 2 {
+        return g;
+    }
+    let mut last: Vec<Option<NodeId>> = vec![None; p];
+    let mut si = 0usize;
+
+    let mut level = |g: &mut CommGraph,
+                     last: &mut Vec<Option<NodeId>>,
+                     si: &mut usize,
+                     pairs: &[(usize, usize)]| {
+        let ops = steps[*si].ops();
+        let stepi = *si as u32;
+        *si += 1;
+        let prev = last.clone();
+        for &(src, dst) in pairs {
+            let id = g.push_node(dst, stepi, ops.clone(), dep2(prev[dst], prev[src]));
+            last[dst] = Some(id);
+            last[src] = Some(id);
+        }
+    };
+
+    let mut dist = 1;
+    while dist < p {
+        let pairs: Vec<(usize, usize)> = (0..p)
+            .filter(|r| r % (2 * dist) == dist)
+            .map(|src| (src, src - dist))
+            .collect();
+        if !pairs.is_empty() {
+            level(&mut g, &mut last, &mut si, &pairs);
+        }
+        dist *= 2;
+    }
+    let mut dist = p.next_power_of_two() / 2;
+    while dist >= 1 {
+        let pairs: Vec<(usize, usize)> = (0..p)
+            .step_by(2 * dist)
+            .filter(|&src| src + dist < p)
+            .map(|src| (src, src + dist))
+            .collect();
+        if !pairs.is_empty() {
+            level(&mut g, &mut last, &mut si, &pairs);
+        }
+        dist /= 2;
+    }
+    debug_assert_eq!(si, steps.len(), "tree builder / shadow step count mismatch");
+    g
+}
+
+/// The PS fan-in/fan-out DAG of ONE parameter shard: `workers` push
+/// chains converge on the server's update node (the fan-in the PS NIC
+/// queues feed), which fans back out into `workers` pull chains.  Returns
+/// the graph and each worker's pull sink, whose finish time is that
+/// worker's completion for the shard.
+pub fn ps_fanin_graph(
+    workers: usize,
+    server_rank: usize,
+    push_ops: impl Fn(usize) -> Vec<CommOp>,
+    update_ops: Vec<CommOp>,
+    pull_ops: impl Fn(usize) -> Vec<CommOp>,
+) -> (CommGraph, Vec<NodeId>) {
+    let mut g = CommGraph::default();
+    let pushes: Vec<NodeId> =
+        (0..workers).map(|w| g.push_node(w, 0, push_ops(w), Vec::new())).collect();
+    let update = g.push_node(server_rank, 1, update_ops, pushes);
+    let pulls: Vec<NodeId> =
+        (0..workers).map(|w| g.push_node(w, 2, pull_ops(w), vec![update])).collect();
+    (g, pulls)
+}
+
+/// Resolves `(rank, kind)` to the engine resource backing that rank's op
+/// (or `None` for uncontended per-rank work).
+pub type GraphResMap = Rc<dyn Fn(usize, ResKind) -> Option<ResourceId>>;
+
+/// A map backing nothing: every op elapses as a pure per-rank delay
+/// (pinned ops still hit their resources).
+pub fn unmapped() -> GraphResMap {
+    Rc::new(|_, _| None)
+}
+
+/// Node-local resources, one full bundle per rank: the wire NIC and PCIe
+/// link stop being one shared per-job proxy and become the rank's own
+/// (every paper cluster places one GPU per node, so rank ≡ node here).
+/// Cross-rank contention inside one collective disappears — replaced by
+/// the dependency edges — while co-tenant jobs sharing the fabric contend
+/// per NIC via [`GraphResources::sharing_wire`].
+#[derive(Clone)]
+pub struct GraphResources {
+    pub wire: Vec<ResourceId>,
+    pub pcie: Vec<ResourceId>,
+    pub gpu: Vec<ResourceId>,
+    pub cpu: Vec<ResourceId>,
+    pub driver: Vec<ResourceId>,
+    pub launch: Vec<ResourceId>,
+    pub sw: Vec<ResourceId>,
+}
+
+impl GraphResources {
+    pub fn install(e: &mut Engine, ranks: usize) -> GraphResources {
+        let mk = |e: &mut Engine| -> Vec<ResourceId> {
+            (0..ranks).map(|_| e.unit_resource()).collect()
+        };
+        GraphResources {
+            wire: mk(e),
+            pcie: mk(e),
+            gpu: mk(e),
+            cpu: mk(e),
+            driver: mk(e),
+            launch: mk(e),
+            sw: mk(e),
+        }
+    }
+
+    /// A co-tenant job's bundle sharing another job's per-node NICs
+    /// (both jobs' wire steps queue FIFO on the same physical ports) but
+    /// owning every other node-local resource.
+    pub fn sharing_wire(e: &mut Engine, other: &GraphResources) -> GraphResources {
+        let mut mine = GraphResources::install(e, other.wire.len());
+        mine.wire = other.wire.clone();
+        mine
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.wire.len()
+    }
+
+    pub fn get(&self, rank: usize, k: ResKind) -> ResourceId {
+        let v = match k {
+            ResKind::Wire => &self.wire,
+            ResKind::Pcie => &self.pcie,
+            ResKind::GpuReduce => &self.gpu,
+            ResKind::CpuReduce => &self.cpu,
+            ResKind::Driver => &self.driver,
+            ResKind::Launch => &self.launch,
+            ResKind::Sw => &self.sw,
+        };
+        v[rank % v.len()]
+    }
+
+    pub fn mapper(&self) -> GraphResMap {
+        let me = self.clone();
+        Rc::new(move |rank, k| Some(me.get(rank, k)))
+    }
+
+    /// Per-kind (served, busy) rows aggregated across ranks — same row
+    /// names as the serialized path's `CommResources::utilization`.
+    pub fn utilization(&self, e: &Engine) -> Vec<ResourceUse> {
+        ResKind::ALL
+            .iter()
+            .map(|&k| {
+                ResourceUse::aggregate(e, k.name(), (0..self.ranks()).map(|r| self.get(r, k)))
+            })
+            .filter(|u| u.served > 0)
+            .collect()
+    }
+}
+
+/// Per-node start/finish times of one executed graph.
+#[derive(Debug, Clone)]
+pub struct GraphRun {
+    pub start: Vec<SimTime>,
+    pub finish: Vec<SimTime>,
+}
+
+impl GraphRun {
+    pub fn finish_of(&self, id: NodeId) -> SimTime {
+        self.finish[id.0]
+    }
+}
+
+/// Execute a graph on the engine: each node becomes *eligible* when all
+/// its predecessors complete (an [`Engine::join`]), then its ops queue
+/// FIFO on the resources `map` resolves for its rank.  `done` fires when
+/// every node has finished.  Source nodes release at the current virtual
+/// time, in node order (deterministic FIFO ties).
+pub fn execute(
+    e: &mut Engine,
+    g: &CommGraph,
+    map: GraphResMap,
+    done: Box<dyn FnOnce(&mut Engine)>,
+) -> Rc<RefCell<GraphRun>> {
+    let now = e.now();
+    execute_at(e, g, map, now, done)
+}
+
+/// [`execute`] with the source release deferred to virtual time `at`
+/// (>= now) — lets a caller wire up many graphs at setup time, each
+/// releasing when its data is ready (the PS strategy schedules one
+/// fan-in graph per parameter shard this way).
+pub fn execute_at(
+    e: &mut Engine,
+    g: &CommGraph,
+    map: GraphResMap,
+    at: SimTime,
+    done: Box<dyn FnOnce(&mut Engine)>,
+) -> Rc<RefCell<GraphRun>> {
+    let n = g.nodes.len();
+    let run = Rc::new(RefCell::new(GraphRun {
+        start: vec![SimTime::ZERO; n],
+        finish: vec![SimTime::ZERO; n],
+    }));
+    if n == 0 {
+        e.at(at, done);
+        return run;
+    }
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut indeg: Vec<usize> = vec![0; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        for d in &node.deps {
+            succ[d.0].push(i);
+            indeg[i] += 1;
+        }
+    }
+    let sink_count = succ.iter().filter(|s| s.is_empty()).count();
+    let terminal = e.join(sink_count, done);
+
+    // Joins must exist before the node actions that arrive at them are
+    // built; nodes are created in topological order, so walking in
+    // reverse guarantees every successor's join is already allocated.
+    let mut joins = vec![None; n];
+    let mut sources: Vec<(usize, Box<dyn FnOnce(&mut Engine)>)> = Vec::new();
+    for i in (0..n).rev() {
+        let node = &g.nodes[i];
+        let rank = node.rank;
+        let ops = Rc::new(node.ops.clone());
+        let succ_joins: Vec<_> =
+            succ[i].iter().map(|&j| joins[j].expect("topological order")).collect();
+        let map_i = map.clone();
+        let run_i = run.clone();
+        let action = move |e: &mut Engine| {
+            run_i.borrow_mut().start[i] = e.now();
+            let rank_map: ResMap = Rc::new(move |k| map_i(rank, k));
+            let run_done = run_i.clone();
+            replay(
+                e,
+                rank_map,
+                ops,
+                Box::new(move |e| {
+                    run_done.borrow_mut().finish[i] = e.now();
+                    if succ_joins.is_empty() {
+                        e.arrive(terminal);
+                    }
+                    for j in succ_joins {
+                        e.arrive(j);
+                    }
+                }),
+            );
+        };
+        if indeg[i] == 0 {
+            sources.push((i, Box::new(action)));
+        } else {
+            joins[i] = Some(e.join(indeg[i], action));
+        }
+    }
+    sources.sort_by_key(|&(i, _)| i);
+    for (_, a) in sources {
+        e.at(at, a);
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::commop::CommSchedule;
+    use crate::comm::CostBreakdown;
+
+    fn wire_steps(count: usize, us: f64) -> Vec<StepCost> {
+        vec![
+            StepCost {
+                cost: CostBreakdown { wire_us: us, ..Default::default() },
+                gpu_reduce: false,
+            };
+            count
+        ]
+    }
+
+    fn run_graph(g: &CommGraph, ranks: usize) -> (SimTime, GraphRun) {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ranks);
+        let run = execute(&mut e, g, res.mapper(), Box::new(|_| {}));
+        let end = e.run();
+        let out = run.borrow().clone();
+        (end, out)
+    }
+
+    #[test]
+    fn zero_skew_ring_matches_serialized_total() {
+        for p in [2usize, 3, 4, 8] {
+            let steps = wire_steps(2 * (p - 1), 10.0);
+            let g = ring_graph(p, &steps);
+            assert_eq!(g.len(), p * steps.len());
+            let serial = CommSchedule::from_steps(&steps).total_us();
+            let (end, _) = run_graph(&g, p);
+            assert!(
+                (end.as_us() - serial).abs() < 1e-9,
+                "ring p={p}: graph {} vs serial {serial}",
+                end.as_us()
+            );
+            assert!((g.critical_path_us() - serial).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_skew_rhd_and_tree_match_serialized_total() {
+        for p in [2usize, 3, 5, 8, 13, 16] {
+            let p2 = crate::comm::allreduce::flp2(p);
+            let rem_steps = if p > p2 { 2 } else { 0 };
+            let rhd_steps = wire_steps(rem_steps + 2 * p2.trailing_zeros() as usize, 7.0);
+            let g = rhd_graph(p, &rhd_steps);
+            let serial = CommSchedule::from_steps(&rhd_steps).total_us();
+            let (end, _) = run_graph(&g, p);
+            assert!(
+                (end.as_us() - serial).abs() < 1e-9,
+                "rhd p={p}: graph {} vs serial {serial}",
+                end.as_us()
+            );
+
+            // tree level count: log2 up + log2 down (shadow skips no level
+            // for p >= 2)
+            let levels = {
+                let mut c = 0;
+                let mut dist = 1;
+                while dist < p {
+                    c += 1;
+                    dist *= 2;
+                }
+                let mut dist = p.next_power_of_two() / 2;
+                while dist >= 1 {
+                    if (0..p).step_by(2 * dist).any(|s| s + dist < p) {
+                        c += 1;
+                    }
+                    dist /= 2;
+                }
+                c
+            };
+            let tree_steps = wire_steps(levels, 5.0);
+            let g = tree_graph(p, &tree_steps);
+            let serial = CommSchedule::from_steps(&tree_steps).total_us();
+            let (end, _) = run_graph(&g, p);
+            assert!(
+                (end.as_us() - serial).abs() < 1e-9,
+                "tree p={p}: graph {} vs serial {serial}",
+                end.as_us()
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_skew_propagates_one_rank_per_step() {
+        // Ring p=4, 6 uniform 10us steps; rank 1 runs 2x slow.  The skew
+        // cone: a node (r, s) is delayed iff s >= ring-distance(1 -> r);
+        // outside the cone finish times match the pristine run exactly.
+        let p = 4;
+        let steps = wire_steps(2 * (p - 1), 10.0);
+        let g0 = ring_graph(p, &steps);
+        let (_, base) = run_graph(&g0, p);
+        let mut g = g0.clone();
+        g.scale_rank(1, 2.0);
+        let (end, run) = run_graph(&g, p);
+
+        let at = |r: usize, s: usize| NodeId(s * p + r); // ring builder layout
+        // unaffected: early steps of downstream ranks
+        assert_eq!(run.finish_of(at(2, 0)), base.finish_of(at(2, 0)));
+        assert_eq!(run.finish_of(at(3, 1)), base.finish_of(at(3, 1)));
+        assert_eq!(run.finish_of(at(0, 2)), base.finish_of(at(0, 2)));
+        // delayed: the dependent steps one hop later
+        assert!(run.finish_of(at(2, 1)) > base.finish_of(at(2, 1)));
+        assert!(run.finish_of(at(3, 2)) > base.finish_of(at(3, 2)));
+        assert!(run.finish_of(at(0, 3)) > base.finish_of(at(0, 3)));
+        // the straggler's own chain dominates completion: 6 steps × 20us
+        assert_eq!(end, SimTime::from_us(120.0));
+    }
+
+    #[test]
+    fn ps_fanin_updates_after_last_push_and_pulls_fifo() {
+        let mut e = Engine::new();
+        let nic_in = e.unit_resource();
+        let nic_out = e.unit_resource();
+        let (g, pulls) = ps_fanin_graph(
+            3,
+            0,
+            |_| vec![CommOp::fixed(ResKind::Wire, 10.0).pinned(nic_in)],
+            vec![CommOp::fixed(ResKind::CpuReduce, 5.0)],
+            |_| vec![CommOp::fixed(ResKind::Wire, 10.0).pinned(nic_out)],
+        );
+        let done = Rc::new(RefCell::new(0.0));
+        let d2 = done.clone();
+        let run = execute(
+            &mut e,
+            &g,
+            unmapped(),
+            Box::new(move |e| *d2.borrow_mut() = e.now().as_us()),
+        );
+        e.run();
+        // pushes serialize on the ingress NIC (10/20/30), update at 35,
+        // pulls serialize on the egress NIC in worker order (45/55/65)
+        let r = run.borrow();
+        assert_eq!(
+            pulls.iter().map(|&id| r.finish_of(id).as_us()).collect::<Vec<_>>(),
+            vec![45.0, 55.0, 65.0]
+        );
+        assert_eq!(*done.borrow(), 65.0);
+    }
+
+    #[test]
+    fn prefix_root_gates_every_source() {
+        let p = 3;
+        let steps = wire_steps(2 * (p - 1), 10.0);
+        let mut g = ring_graph(p, &steps);
+        g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, 4.0)]);
+        assert_eq!(g.nodes[0].deps.len(), 0);
+        assert!(g.nodes[1..].iter().all(|n| !n.deps.is_empty()));
+        let (end, _) = run_graph(&g, p);
+        assert!((end.as_us() - (4.0 + 40.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_is_additive_and_keyed_by_rank_step() {
+        let steps = wire_steps(2, 10.0);
+        let mut g = ring_graph(2, &steps);
+        g.jitter_nodes(|rank, step| if rank == 0 && step == 0 { 3.0 } else { 0.0 });
+        let (end, run) = run_graph(&g, 2);
+        assert_eq!(run.finish_of(NodeId(0)), SimTime::from_us(13.0));
+        // rank 1 step 1 depends on rank 0 step 0: jitter propagates
+        assert_eq!(end, SimTime::from_us(23.0));
+    }
+
+    #[test]
+    fn empty_graph_completes_immediately() {
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(false));
+        let f = fired.clone();
+        execute(
+            &mut e,
+            &CommGraph::default(),
+            unmapped(),
+            Box::new(move |_| *f.borrow_mut() = true),
+        );
+        let end = e.run();
+        assert!(*fired.borrow());
+        assert_eq!(end, SimTime::ZERO);
+    }
+
+    #[test]
+    fn shared_wire_contends_across_jobs_private_rest_overlaps() {
+        // Two single-node chains on the same rank-0 NIC: wire serializes,
+        // the private gpu phases overlap — the two-job model at rank level.
+        let mut e = Engine::new();
+        let a = GraphResources::install(&mut e, 2);
+        let b = GraphResources::sharing_wire(&mut e, &a);
+        let mut ends = Vec::new();
+        for res in [&a, &b] {
+            let g = CommGraph::chain(
+                0,
+                vec![CommOp::fixed(ResKind::Wire, 10.0), CommOp::fixed(ResKind::GpuReduce, 5.0)],
+            );
+            let done = Rc::new(RefCell::new(0.0));
+            let d2 = done.clone();
+            execute(
+                &mut e,
+                &g,
+                res.mapper(),
+                Box::new(move |e| *d2.borrow_mut() = e.now().as_us()),
+            );
+            ends.push(done);
+        }
+        e.run();
+        assert_eq!(*ends[0].borrow(), 15.0);
+        assert_eq!(*ends[1].borrow(), 25.0);
+        let (_, busy) = e.resource_stats(a.wire[0]);
+        assert_eq!(busy, SimTime::from_us(20.0));
+    }
+}

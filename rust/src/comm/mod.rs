@@ -11,13 +11,15 @@ pub mod allreduce;
 pub mod collectives;
 pub mod commop;
 pub mod fusion;
+pub mod graph;
 pub mod grpc;
 pub mod mpi;
 pub mod nccl;
 pub mod ptrcache;
 pub mod verbs;
 
-pub use commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResMap, ResourceUse};
+pub use commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResMap, ResourceUse, StepCost};
+pub use graph::{allreduce_graph, ps_fanin_graph, CommGraph, GraphResources, NodeId};
 pub use mpi::{MpiFlavor, MpiWorld};
 pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
 

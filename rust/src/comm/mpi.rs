@@ -137,10 +137,24 @@ impl MpiWorld {
         bytes: usize,
         wire_derate: f64,
     ) -> (AllreduceReport, crate::comm::commop::CommSchedule) {
+        let (_, report, steps) = self.allreduce_steps(p, bytes, wire_derate);
+        (report, crate::comm::commop::CommSchedule::from_steps(&steps))
+    }
+
+    /// The allreduce's per-step cost sequence plus the algorithm selected
+    /// for this size — what the `CommGraph` builders consume (the
+    /// serialized schedule above is the same steps concatenated).
+    pub fn allreduce_steps(
+        &self,
+        p: usize,
+        bytes: usize,
+        wire_derate: f64,
+    ) -> (Algo, AllreduceReport, Vec<crate::comm::commop::StepCost>) {
         let n = (bytes / 4).max(1);
         let (algo, mut ctx) = self.plan(bytes);
         ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p) * wire_derate;
-        crate::comm::allreduce::shadow_schedule(algo, p, n, &mut ctx)
+        let (report, steps) = crate::comm::allreduce::shadow_steps(algo, p, n, &mut ctx);
+        (algo, report, steps)
     }
 
     /// CUDA-aware point-to-point send/recv cost (used by the Baidu ring

@@ -88,17 +88,33 @@ impl NcclWorld {
         bytes: usize,
         wire_derate: f64,
     ) -> (AllreduceReport, crate::comm::commop::CommSchedule) {
+        let (_, report, steps) = self.allreduce_steps(p, bytes, wire_derate);
+        (report, crate::comm::commop::CommSchedule::from_steps(&steps))
+    }
+
+    /// Per-step cost sequence of the NCCL ring (always `Algo::Ring`) —
+    /// the `CommGraph` builders' input.
+    pub fn allreduce_steps(
+        &self,
+        p: usize,
+        bytes: usize,
+        wire_derate: f64,
+    ) -> (
+        crate::comm::allreduce::Algo,
+        AllreduceReport,
+        Vec<crate::comm::commop::StepCost>,
+    ) {
         let n = (bytes / 4).max(1);
         let mut ctx = self.ctx();
         ctx.wire.beta_gbs /= self.cluster.fabric.contention_factor(p) * wire_derate;
-        let (mut r, sched) = crate::comm::allreduce::shadow_schedule(
+        let (mut r, steps) = crate::comm::allreduce::shadow_steps(
             crate::comm::allreduce::Algo::Ring,
             p,
             n,
             &mut ctx,
         );
         r.algo = "nccl-ring";
-        (r, sched)
+        (crate::comm::allreduce::Algo::Ring, r, steps)
     }
 }
 

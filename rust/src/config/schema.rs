@@ -95,6 +95,8 @@ impl ExperimentConfig {
                 jitter_us: f("jitter_us", 0.0),
                 seed: sc.get("seed").and_then(|v| v.as_int()).unwrap_or(0) as u64,
                 link_load: f("link_load", 0.0),
+                second_job: sc.get("second_job").and_then(|v| v.as_bool()).unwrap_or(false),
+                second_job_offset_us: f("second_job_offset_us", 0.0),
             };
             crate::ensure!(
                 (0.0..=crate::strategies::scenario::MAX_LINK_LOAD)
@@ -103,15 +105,34 @@ impl ExperimentConfig {
                 crate::strategies::scenario::MAX_LINK_LOAD,
                 scenario.link_load
             );
-            // a factor without ranks (or vice versa) is inert — reject it
-            // rather than reporting pristine numbers under a scenario label
+            // an inert knob combination is a config mistake — reject it
+            // rather than reporting pristine numbers under a scenario
+            // label: factors need ranks, ranks need a factor that
+            // actually slows something (> 1.0; sub-1.0 "stragglers"
+            // cannot speed a synchronous job up and would silently no-op)
+            for (what, ranks, factor) in [
+                ("straggler", scenario.straggler_ranks, scenario.straggler_factor),
+                ("hetero", scenario.hetero_ranks, scenario.hetero_factor),
+            ] {
+                if ranks > 0 {
+                    crate::ensure!(
+                        factor.is_finite() && factor > 1.0,
+                        "[scenario] {what}_factor must be > 1.0 when {what}_ranks is set, got {factor}"
+                    );
+                } else {
+                    crate::ensure!(
+                        factor == 1.0,
+                        "[scenario] {what}_factor requires {what}_ranks"
+                    );
+                }
+            }
             crate::ensure!(
-                (scenario.straggler_factor == 1.0) == (scenario.straggler_ranks == 0),
-                "[scenario] straggler_factor and straggler_ranks must be set together"
+                scenario.second_job || scenario.second_job_offset_us == 0.0,
+                "[scenario] second_job_offset_us requires second_job = true"
             );
             crate::ensure!(
-                (scenario.hetero_factor == 1.0) == (scenario.hetero_ranks == 0),
-                "[scenario] hetero_factor and hetero_ranks must be set together"
+                scenario.second_job_offset_us >= 0.0,
+                "[scenario] second_job_offset_us must be >= 0"
             );
         }
 
@@ -189,6 +210,37 @@ seed = 9
         assert_eq!(c.scenario.seed, 9);
         assert!(!c.scenario.is_neutral());
         assert!(parse("[workload]\n[scenario]\nlink_load = 1.5").is_err());
+    }
+
+    #[test]
+    fn scenario_second_job_parses_and_validates() {
+        let c = parse(
+            r#"
+[workload]
+model = "resnet50"
+
+[scenario]
+second_job = true
+second_job_offset_us = 500.0
+"#,
+        )
+        .unwrap();
+        assert!(c.scenario.second_job);
+        assert!((c.scenario.second_job_offset_us - 500.0).abs() < 1e-12);
+        assert!(!c.scenario.is_neutral());
+        // an offset without the job is a config mistake, not a no-op
+        assert!(parse("[workload]\n[scenario]\nsecond_job_offset_us = 10.0").is_err());
+    }
+
+    #[test]
+    fn scenario_rejects_inert_factors() {
+        // a sub-1.0 straggler would silently report pristine numbers
+        // under a scenario label
+        assert!(
+            parse("[workload]\n[scenario]\nstraggler_ranks = 2\nstraggler_factor = 0.5").is_err()
+        );
+        assert!(parse("[workload]\n[scenario]\nhetero_ranks = 1\nhetero_factor = 1.0").is_err());
+        assert!(parse("[workload]\n[scenario]\nstraggler_factor = 1.5").is_err());
     }
 
     #[test]

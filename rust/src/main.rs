@@ -6,9 +6,10 @@
 //! mpi-dnn-train microbench --ranks 16 --max 256MB
 //! mpi-dnn-train train --config small --world 4 --steps 100
 //! mpi-dnn-train experiment cfgs/fig9.toml
-//! mpi-dnn-train ablation --cluster owens --world 64
+//! mpi-dnn-train ablation --cluster owens --world 64 [--sweep fusion|cycle-grid]
 //! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5
-//! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet
+//! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet --family ps
+//! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train validate               # artifacts + numerics smoke
 //! mpi-dnn-train list
 //! ```
@@ -58,12 +59,13 @@ fn run(args: Args) -> Result<()> {
         Some("experiment") => cmd_experiment(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("graph") => cmd_graph(&args),
         Some("validate") => cmd_validate(&args),
         Some("list") => cmd_list(&args),
         Some(other) => mpi_dnn_train::bail!("unknown subcommand `{other}` (see README)"),
         None => {
             println!(
-                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|validate|list> [flags]"
+                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|graph|validate|list> [flags]"
             );
             Ok(())
         }
@@ -222,15 +224,47 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         t.note(format!("scenario: {:?}", cfg.scenario));
     }
     emit(&t, cfg.json_output);
+    // `[scenario] second_job = true`: run the link-sharing co-tenant
+    // tables on the sweep's largest point, one per configured strategy
+    // that has a runner (Horovod variants share the wire, PS transports
+    // the per-server NICs; Baidu has no runner yet and is skipped).
+    if cfg.scenario.second_job {
+        let world = *cfg.gpus.iter().max().unwrap();
+        let offset = cfg.scenario.second_job_offset_us;
+        for name in &cfg.strategies {
+            let lower = name.to_ascii_lowercase();
+            if !(lower.starts_with("horovod") || lower.starts_with("grpc")) {
+                println!("(two-jobs: no link-share runner for `{name}`, skipped)");
+                continue;
+            }
+            match bench::scenario_two_jobs(
+                cfg.cluster.clone(),
+                cfg.model.clone(),
+                world,
+                offset,
+                &lower,
+            ) {
+                Ok(t) => emit(&t, cfg.json_output),
+                // e.g. horovod-nccl on a verbs-less fabric: keep the rest
+                Err(e) => println!("(two-jobs `{name}` unavailable: {e})"),
+            }
+        }
+    }
     Ok(())
 }
 
 fn cmd_ablation(args: &Args) -> Result<()> {
     let cluster = args.get_or("cluster", "owens");
     let world = args.get_usize("world", 64).map_err(Error::msg)?;
+    let sweep = args.get_or("sweep", "fusion");
     let json = args.get_bool("json");
     args.reject_unknown().map_err(Error::msg)?;
-    emit(&bench::ablation_fusion(&cluster, world)?, json);
+    let table = match sweep.as_str() {
+        "fusion" => bench::ablation_fusion(&cluster, world)?,
+        "cycle-grid" | "cycle-scenario" => bench::ablation_cycle_grid(&cluster, world)?,
+        other => mpi_dnn_train::bail!("--sweep must be fusion|cycle-grid, got `{other}`"),
+    };
+    emit(&table, json);
     Ok(())
 }
 
@@ -247,8 +281,17 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     let load = args.get_f64("load", 0.5).map_err(Error::msg)?;
     let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
     let offset = args.get_f64("offset-us", 0.0).map_err(Error::msg)?;
+    let family = args.get_or("family", "horovod");
     args.reject_unknown().map_err(Error::msg)?;
 
+    if matches!(kind, "straggler" | "hetero") {
+        // a sub-1.0 factor is inert (the unperturbed ranks still pace the
+        // job) — reject it rather than printing 1.00x "slowdowns"
+        mpi_dnn_train::ensure!(
+            factor.is_finite() && factor > 1.0,
+            "--factor must be > 1.0 for a {kind} scenario, got {factor}"
+        );
+    }
     let table = match kind {
         "straggler" => {
             let sc = Scenario { jitter_us: jitter, seed, ..Scenario::straggler(ranks, factor) };
@@ -313,11 +356,131 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 &sc,
             )?
         }
-        "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset)?,
+        "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset, &family)?,
         other => mpi_dnn_train::bail!(
             "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs)"
         ),
     };
+    emit(&table, json);
+    Ok(())
+}
+
+/// Dump the per-rank execution timeline of one collective's `CommGraph`:
+/// which algorithm step finished when on every rank, with optional
+/// straggler/jitter perturbation to watch the skew cone propagate.
+fn cmd_graph(args: &Args) -> Result<()> {
+    use mpi_dnn_train::comm::allreduce::{shadow_steps, Algo};
+    use mpi_dnn_train::comm::graph::{allreduce_graph, execute, GraphResources};
+    use mpi_dnn_train::comm::CommSchedule;
+    use mpi_dnn_train::sim::Engine;
+    use mpi_dnn_train::strategies::Scenario;
+
+    let ranks = args.get_usize("ranks", 8).map_err(Error::msg)?;
+    let bytes = parse_bytes(&args.get_or("size", "4MB")).map_err(Error::msg)?;
+    let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
+    let flavor = parse_flavor(&args.get_or("flavor", "mvapich2"))?;
+    let algo_flag = args.get_or("algo", "auto");
+    let straggler = args.get_usize("straggler", 0).map_err(Error::msg)?;
+    let factor = args.get_f64("factor", 1.5).map_err(Error::msg)?;
+    let jitter = args.get_f64("jitter-us", 0.0).map_err(Error::msg)?;
+    let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
+    let json = args.get_bool("json");
+    args.reject_unknown().map_err(Error::msg)?;
+    mpi_dnn_train::ensure!(ranks >= 2, "--ranks must be at least 2");
+    mpi_dnn_train::ensure!(
+        straggler == 0 || (factor.is_finite() && factor > 1.0),
+        "--factor must be > 1.0 when --straggler is set, got {factor}"
+    );
+
+    let w = MpiWorld::new(flavor, cluster.clone());
+    let (planned, mut ctx) = w.plan(bytes);
+    let algo = match algo_flag.as_str() {
+        "auto" => planned,
+        "ring" => Algo::Ring,
+        "rhd" => Algo::Rhd,
+        "tree" => Algo::Tree,
+        other => mpi_dnn_train::bail!("--algo must be auto|ring|rhd|tree, got `{other}`"),
+    };
+    ctx.wire.beta_gbs /= cluster.fabric.contention_factor(ranks);
+    let (report, steps) = shadow_steps(algo, ranks, (bytes / 4).max(1), &mut ctx);
+    let serial_us = CommSchedule::from_steps(&steps).total_us();
+
+    let mut g = allreduce_graph(algo, ranks, &steps);
+    let sc = Scenario {
+        straggler_ranks: straggler,
+        straggler_factor: factor,
+        jitter_us: jitter,
+        seed,
+        ..Scenario::default()
+    };
+    sc.perturb_graph(&mut g, ranks, 0);
+
+    let mut e = Engine::new();
+    let res = GraphResources::install(&mut e, ranks);
+    let run = execute(&mut e, &g, res.mapper(), Box::new(|_| {}));
+    let end = e.run();
+    let run = run.borrow();
+
+    let title = format!(
+        "CommGraph timeline: {:?} allreduce of {} across {ranks} ranks ({}, {})",
+        algo,
+        fmt_bytes(bytes),
+        cluster.name,
+        flavor.name()
+    );
+    let mut table = if ranks <= 16 {
+        // per-step × per-rank finish times (µs); "-" where a rank has no
+        // node at that step (tree phases, RHD pre/post)
+        let max_step = g.nodes.iter().map(|n| n.step).max().unwrap_or(0);
+        let mut cells = vec![vec![None; ranks]; max_step as usize + 1];
+        for (i, node) in g.nodes.iter().enumerate() {
+            cells[node.step as usize][node.rank] = Some(run.finish[i]);
+        }
+        let mut headers = vec!["step".to_string()];
+        headers.extend((0..ranks).map(|r| format!("r{r}")));
+        let mut t =
+            Table::new(&title, &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>());
+        for (s, row) in cells.iter().enumerate() {
+            let mut out = vec![s.to_string()];
+            for c in row {
+                out.push(match c {
+                    Some(ts) => format!("{:.1}", ts.as_us()),
+                    None => "-".into(),
+                });
+            }
+            t.row(out);
+        }
+        t
+    } else {
+        // wide worlds: per-rank summary
+        let mut t = Table::new(&title, &["rank", "nodes", "first start", "last finish"]);
+        for r in 0..ranks {
+            let ids: Vec<usize> = (0..g.nodes.len()).filter(|&i| g.nodes[i].rank == r).collect();
+            let first = ids.iter().map(|&i| run.start[i]).min().unwrap_or_default();
+            let last = ids.iter().map(|&i| run.finish[i]).max().unwrap_or_default();
+            t.row([
+                r.to_string(),
+                ids.len().to_string(),
+                format!("{:.1}", first.as_us()),
+                format!("{:.1}", last.as_us()),
+            ]);
+        }
+        t
+    };
+    table.note(format!(
+        "{} nodes, {} algorithm steps; completion {:.1}us vs serialized critical-path {serial_us:.1}us \
+         (equal when unperturbed); cost-model total {:.1}us",
+        g.len(),
+        report.steps,
+        end.as_us(),
+        report.time.as_us()
+    ));
+    if sc.per_rank_skew() {
+        table.note(format!(
+            "perturbed: {straggler} straggler rank(s) ×{factor}, jitter ≤{jitter}us (seed {seed}) — \
+             deterministic, same seed ⇒ same timeline"
+        ));
+    }
     emit(&table, json);
     Ok(())
 }
@@ -385,7 +548,11 @@ fn cmd_list(args: &Args) -> Result<()> {
         "strategies: grpc, grpc+mpi, grpc+verbs, baidu, horovod-mpi, horovod-nccl, horovod-mpi-opt, horovod-cray"
     );
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
-    println!("scenarios: straggler, hetero, jitter, link-load, two-jobs (see `scenario --help` flags)");
+    println!(
+        "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|ps] \
+         (see `scenario --help` flags)"
+    );
+    println!("graph: per-rank CommGraph timelines (--algo auto|ring|rhd|tree, --straggler, --jitter-us)");
     Ok(())
 }
 

@@ -65,6 +65,20 @@ struct ResourceState {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GateId(usize);
 
+/// Handle to a dependency join (see [`Engine::join`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JoinId(usize);
+
+/// A join is the *eligibility* primitive of dependency-graph scheduling:
+/// its action fires once all `count` predecessors have called `arrive`.
+/// Unlike resources/gates it carries no occupancy — eligibility and FIFO
+/// queueing are deliberately separate (a `CommGraph` node first becomes
+/// eligible here, then its ops queue on per-rank resources).
+struct JoinState {
+    remaining: usize,
+    action: Option<Action>,
+}
+
 /// A gate is a FIFO mutex with a virtual-clock ledger: `acquire` runs the
 /// action once the gate is free (waiters queue in arrival order), and the
 /// holder must `release` explicitly.  Unlike `Resource`, the hold time is
@@ -89,6 +103,7 @@ pub struct Engine {
     heap: BinaryHeap<Reverse<Event>>,
     resources: Vec<ResourceState>,
     gates: Vec<GateState>,
+    joins: Vec<JoinState>,
     executed: u64,
 }
 
@@ -238,6 +253,28 @@ impl Engine {
     pub fn gate_stats(&self, g: GateId) -> (u64, SimTime) {
         let st = &self.gates[g.0];
         (st.grants, st.busy_time)
+    }
+
+    /// Create a dependency join: `action` becomes eligible — scheduled at
+    /// the virtual time of the final arrival — once [`Engine::arrive`] has
+    /// been called `count` times.  The firing goes through the event heap,
+    /// so simultaneous joins resolve in arrival order (deterministic).
+    pub fn join(&mut self, count: usize, action: impl FnOnce(&mut Engine) + 'static) -> JoinId {
+        assert!(count > 0, "a join needs at least one dependency");
+        self.joins.push(JoinState { remaining: count, action: Some(Box::new(action)) });
+        JoinId(self.joins.len() - 1)
+    }
+
+    /// Record one predecessor completion on join `j`.
+    pub fn arrive(&mut self, j: JoinId) {
+        let st = &mut self.joins[j.0];
+        debug_assert!(st.remaining > 0, "arrive on an already-fired join");
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            let action = st.action.take().expect("join fired twice");
+            let now = self.now;
+            self.at(now, action);
+        }
     }
 
     /// When would a `bytes` request complete if enqueued now (without
@@ -406,6 +443,57 @@ mod tests {
         e.run();
         let (_, busy) = e.gate_stats(g);
         assert_eq!(busy, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn join_fires_at_last_arrival() {
+        // Two predecessors completing at 5us and 12us: the join's action
+        // must fire exactly once, at 12us.
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(Vec::new()));
+        let f2 = fired.clone();
+        let j = e.join(2, move |e| f2.borrow_mut().push(e.now().as_us()));
+        e.after(SimTime::from_us(5.0), move |e| e.arrive(j));
+        e.after(SimTime::from_us(12.0), move |e| e.arrive(j));
+        e.run();
+        assert_eq!(*fired.borrow(), vec![12.0]);
+    }
+
+    #[test]
+    fn join_chains_into_resources() {
+        // Diamond: two 10us serve_for legs arrive at a join whose action
+        // occupies the resource again — classic eligibility-then-FIFO.
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        let end = Rc::new(RefCell::new(0.0));
+        let e2 = end.clone();
+        let j = e.join(2, move |e| {
+            e.serve_for(r, SimTime::from_us(3.0), move |e| {
+                *e2.borrow_mut() = e.now().as_us();
+            });
+        });
+        for _ in 0..2 {
+            // both legs queue FIFO on the same resource: done at 10, 20
+            e.serve_for(r, SimTime::from_us(10.0), move |e| e.arrive(j));
+        }
+        e.run();
+        assert!((*end.borrow() - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simultaneous_join_firings_resolve_in_arrival_order() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let (l1, l2) = (log.clone(), log.clone());
+        let a = e.join(1, move |_| l1.borrow_mut().push("a"));
+        let b = e.join(1, move |_| l2.borrow_mut().push("b"));
+        e.after(SimTime::from_us(1.0), move |e| {
+            // arrive b first: it must also fire first
+            e.arrive(b);
+            e.arrive(a);
+        });
+        e.run();
+        assert_eq!(*log.borrow(), vec!["b", "a"]);
     }
 
     #[test]

@@ -12,5 +12,5 @@
 pub mod engine;
 pub mod time;
 
-pub use engine::{Engine, GateId, ResourceId};
+pub use engine::{Engine, GateId, JoinId, ResourceId};
 pub use time::SimTime;

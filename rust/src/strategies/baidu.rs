@@ -4,9 +4,11 @@
 //! tensor pays the full 2(p−1)-step ring latency) and p2p-level MPI usage
 //! (driver queries + per-message software overhead on every hop).
 //!
-//! Each per-tensor ring is a `CommOp` schedule replayed onto the engine;
-//! the graph-rewrite comm thread is a FIFO gate serializing tensors the
-//! way Horovod's fusion buffers serialize.
+//! Each per-tensor ring is a `CommOp` schedule replayed onto the engine
+//! (or, when the scenario skews individual ranks, a per-rank ring
+//! `CommGraph` whose dependency edges propagate the skew); the
+//! graph-rewrite comm thread is a FIFO gate serializing tensors the way
+//! Horovod's fusion buffers serialize.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -15,7 +17,9 @@ use crate::util::error::Result;
 
 use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
-use crate::comm::commop::{replay, CommResources, CommSchedule, ResourceUse};
+use crate::comm::allreduce::Algo;
+use crate::comm::commop::{replay, CommResources, CommSchedule, StepCost};
+use crate::comm::graph::{ring_graph, GraphResources};
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::sim::{Engine, SimTime};
 
@@ -51,35 +55,79 @@ impl Baidu {
     /// Horovod" Figure 9 result rules out.  The amortization scales the
     /// schedule uniformly so the replayed total equals the pipelined cost.
     fn ring_schedule(&self, ws: &WorldSpec, sc: &Scenario, bytes: usize) -> (CommSchedule, f64) {
+        let (steps, scale, staging_crit) = self.ring_steps(ws, sc, bytes);
+        let mut sched = CommSchedule::from_steps(&steps);
+        sched.scale(scale);
+        (sched, staging_crit)
+    }
+
+    /// The ring's per-step cost sequence, the pipeline-amortization scale
+    /// factor, and the critical host-staging share — the common input of
+    /// the serialized schedule above and the per-rank ring graph.
+    fn ring_steps(&self, ws: &WorldSpec, sc: &Scenario, bytes: usize) -> (Vec<StepCost>, f64, f64) {
         let w = MpiWorld::new(self.flavor, ws.cluster.clone());
         let (_, mut ctx) = w.plan(bytes.max(SMALL_OVERRIDE)); // transport from flavor
         ctx.wire.beta_gbs /=
             ws.cluster.fabric.contention_factor(ws.world) * sc.wire_derate();
         let n = (bytes / 4).max(1);
-        let (full, mut sched) = crate::comm::allreduce::shadow_schedule(
-            crate::comm::allreduce::Algo::Ring,
-            ws.world,
-            n,
-            &mut ctx,
-        );
+        let (full, steps) =
+            crate::comm::allreduce::shadow_steps(Algo::Ring, ws.world, n, &mut ctx);
         // fixed (size-independent) share ≈ the cost of a 1-element ring
-        let fixed = crate::comm::allreduce::shadow_cost(
-            crate::comm::allreduce::Algo::Ring,
-            ws.world,
-            1,
-            &mut ctx,
-        )
-        .time
-        .as_us();
+        let fixed = crate::comm::allreduce::shadow_cost(Algo::Ring, ws.world, 1, &mut ctx)
+            .time
+            .as_us();
         let full_us = full.time.as_us();
         let total = (full_us - fixed).max(0.0) + fixed / RING_PIPELINE;
-        if full_us > 0.0 {
-            sched.scale(total / full_us);
-        }
+        let scale = if full_us > 0.0 { total / full_us } else { 1.0 };
         // bandwidth share of staging only (see horovod.rs)
         let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
         let staging_crit = (4.0 * bytes as f64 / pcie).min(full.cost.staging_us);
-        (sched, staging_crit)
+        (steps, scale, staging_crit)
+    }
+
+    /// One iteration with every per-tensor ring executed as a per-rank
+    /// dependency graph (see `Horovod::iteration_graph`); `iteration_in`
+    /// routes here when the scenario skews individual ranks, and the
+    /// neutral-scenario equivalence with the serialized replay is pinned
+    /// by `tests/des_regression.rs`.
+    pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if ws.world == 1 {
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        let stretch = sc.compute_stretch();
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ws.world);
+        let thread = e.gate();
+        let readiness = ws.tensor_readiness();
+        let mut items = Vec::with_capacity(readiness.len());
+        for (i, ready) in readiness {
+            let ready = SimTime::from_us(ready.as_us() * stretch);
+            let bytes = ws.model.tensors[i].bytes();
+            let (steps, scale, staging) = self.ring_steps(ws, sc, bytes);
+            let mut g = ring_graph(ws.world, &steps);
+            g.scale(scale);
+            sc.perturb_graph(&mut g, ws.world, i as u64);
+            items.push((ready, g, staging));
+        }
+        let job = super::GraphJob::schedule(&mut e, &res, thread, items);
+        e.run();
+        let iter = super::close_iteration(
+            ws,
+            sc,
+            &job.trace()?,
+            SimTime::ZERO,
+            self.runtime_tax,
+            self.skew_us_per_rank,
+        );
+        Ok(super::report_with_comm_thread(
+            self.name(),
+            ws,
+            iter,
+            res.utilization(&e),
+            &e,
+            thread,
+        ))
     }
 }
 
@@ -105,6 +153,9 @@ impl Strategy for Baidu {
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        if sc.per_rank_skew() {
+            return self.iteration_graph(ws, sc);
         }
         // per-tensor rings serialize on the comm thread (a FIFO gate);
         // each ring replays its CommOp schedule on the job's resources
@@ -145,15 +196,14 @@ impl Strategy for Baidu {
             self.runtime_tax,
             self.skew_us_per_rank,
         );
-        let mut report = IterationReport::from_times(self.name(), ws, iter);
-        report.resource_util = res.utilization(&e);
-        let (grants, busy) = e.gate_stats(thread);
-        report.resource_util.push(ResourceUse {
-            name: "comm-thread".to_string(),
-            served: grants,
-            busy,
-        });
-        Ok(report)
+        Ok(super::report_with_comm_thread(
+            self.name(),
+            ws,
+            iter,
+            res.utilization(&e),
+            &e,
+            thread,
+        ))
     }
 }
 

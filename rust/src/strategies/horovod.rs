@@ -9,7 +9,12 @@
 //! kernel, driver, launch steps) replayed onto the discrete-event engine;
 //! the background thread is a FIFO *gate*, so buffer *i* starts at
 //! max(ready_i, release_{i−1}) and — when another job shares the fabric —
-//! every wire step queues behind the co-tenant's traffic.  Iteration ends
+//! every wire step queues behind the co-tenant's traffic.  When the
+//! scenario skews individual ranks (stragglers, hetero mixes, per-step
+//! jitter) the Allreduce instead executes as a per-rank `CommGraph`
+//! ([`Horovod::iteration_graph`]) so the skew propagates along ring/RHD
+//! dependency edges rather than shifting the whole schedule.  Iteration
+//! ends
 //! when both compute and the last Allreduce finish — whatever
 //! communication didn't fit under the backward pass is the "exposed" time
 //! that erodes scaling efficiency (the Figure 9 story: MobileNet exposes
@@ -23,7 +28,9 @@ use crate::util::error::Result;
 use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
-use crate::comm::commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResourceUse};
+use crate::comm::allreduce::Algo;
+use crate::comm::commop::{replay, CommOp, CommResources, CommSchedule, ResKind, StepCost};
+use crate::comm::graph::{allreduce_graph, GraphResources};
 use crate::comm::nccl::NcclWorld;
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::sim::{Engine, GateId, SimTime};
@@ -90,31 +97,44 @@ impl Horovod {
         }
     }
 
-    /// The Allreduce of one fused buffer as a replayable schedule, plus
-    /// the share of its host staging that contends with the training
-    /// stream on PCIe (only the bandwidth term — the per-copy DMA-setup
-    /// α's pipeline away) and therefore rides the compute-side critical
-    /// path even when the wire time hides under the backward pass.
+    /// The Allreduce of one fused buffer as its per-step cost sequence
+    /// (plus the selected algorithm), and the share of its host staging
+    /// that contends with the training stream on PCIe (only the bandwidth
+    /// term — the per-copy DMA-setup α's pipeline away) and therefore
+    /// rides the compute-side critical path even when the wire time hides
+    /// under the backward pass.
+    fn buffer_steps(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        bytes: usize,
+    ) -> Result<(Algo, Vec<StepCost>, f64)> {
+        let derate = sc.wire_derate();
+        let (algo, report, steps) = match self.backend {
+            HorovodBackend::Mpi(flavor) => {
+                let w = MpiWorld::new(flavor, ws.cluster.clone());
+                w.allreduce_steps(ws.world, bytes, derate)
+            }
+            HorovodBackend::Nccl => {
+                let w = NcclWorld::new(ws.cluster.clone())?;
+                w.allreduce_steps(ws.world, bytes, derate)
+            }
+        };
+        let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
+        let staging_crit = (4.0 * bytes as f64 / pcie).min(report.cost.staging_us);
+        Ok((algo, steps, staging_crit))
+    }
+
+    /// The buffer's serialized (critical-path) schedule — the fast replay
+    /// the strategy uses whenever no scenario knob skews ranks apart.
     fn buffer_schedule(
         &self,
         ws: &WorldSpec,
         sc: &Scenario,
         bytes: usize,
     ) -> Result<(CommSchedule, f64)> {
-        let derate = sc.wire_derate();
-        let (report, sched) = match self.backend {
-            HorovodBackend::Mpi(flavor) => {
-                let w = MpiWorld::new(flavor, ws.cluster.clone());
-                w.allreduce_schedule(ws.world, bytes, derate)
-            }
-            HorovodBackend::Nccl => {
-                let w = NcclWorld::new(ws.cluster.clone())?;
-                w.allreduce_schedule(ws.world, bytes, derate)
-            }
-        };
-        let pcie = ws.cluster.fabric.pcie.beta_gbs * 1e3;
-        let staging_crit = (4.0 * bytes as f64 / pcie).min(report.cost.staging_us);
-        Ok((sched, staging_crit))
+        let (_, steps, staging_crit) = self.buffer_steps(ws, sc, bytes)?;
+        Ok((CommSchedule::from_steps(&steps), staging_crit))
     }
 
     /// Coordination cost per fusion cycle at world size `p`.
@@ -223,6 +243,53 @@ impl Horovod {
     ) -> SimTime {
         super::close_iteration(ws, sc, trace, offset, self.runtime_tax, self.skew_us_per_rank)
     }
+
+    /// One iteration with every fused buffer executed as a **per-rank
+    /// dependency graph** on node-local resources: ring/RHD/tree step *s*
+    /// of rank *r* becomes eligible when its predecessors (own step *s−1*
+    /// and the partner's matching send) finish, so a perturbed rank's
+    /// delay propagates step-by-step instead of shifting the whole
+    /// collective.  `iteration_in` routes here whenever the scenario
+    /// skews individual ranks; with a neutral scenario this path is
+    /// provably equivalent to the serialized replay (pinned by
+    /// `tests/des_regression.rs`), just ~`world`× more engine events.
+    pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        crate::ensure!(
+            self.available(&ws.cluster),
+            "{} unavailable on {}",
+            self.name(),
+            ws.cluster.name
+        );
+        if ws.world == 1 {
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ws.world);
+        let thread = e.gate();
+        let coord = self.coord_us(ws);
+        let buffers = self.fusion_schedule_in(ws, sc.compute_stretch());
+        let mut items = Vec::with_capacity(buffers.len());
+        for (bi, (ready, bytes)) in buffers.into_iter().enumerate() {
+            let (algo, steps, staging) = self.buffer_steps(ws, sc, bytes)?;
+            let mut g = allreduce_graph(algo, ws.world, &steps);
+            // the rank-0 negotiation round gates every rank's first step
+            g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, coord)]);
+            sc.perturb_graph(&mut g, ws.world, bi as u64);
+            items.push((ready, g, staging));
+        }
+        let job = super::GraphJob::schedule(&mut e, &res, thread, items);
+        e.run();
+        let iter = self.close_job(ws, sc, &job.trace()?, SimTime::ZERO);
+        Ok(super::report_with_comm_thread(
+            self.name(),
+            ws,
+            iter,
+            res.utilization(&e),
+            &e,
+            thread,
+        ))
+    }
 }
 
 impl Strategy for Horovod {
@@ -248,21 +315,26 @@ impl Strategy for Horovod {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
+        if sc.per_rank_skew() {
+            // per-rank skew needs per-rank schedules: execute the
+            // dependency graphs (equivalent to the replay below when the
+            // scenario is neutral — des_regression pins it)
+            return self.iteration_graph(ws, sc);
+        }
         let mut e = Engine::new();
         let res = CommResources::install(&mut e);
         let thread = e.gate();
         let trace = self.schedule_job(ws, sc, &mut e, res, thread, SimTime::ZERO)?;
         e.run();
         let iter = self.close_job(ws, sc, &trace.borrow(), SimTime::ZERO);
-        let mut report = IterationReport::from_times(self.name(), ws, iter);
-        report.resource_util = res.utilization(&e);
-        let (grants, busy) = e.gate_stats(thread);
-        report.resource_util.push(ResourceUse {
-            name: "comm-thread".to_string(),
-            served: grants,
-            busy,
-        });
-        Ok(report)
+        Ok(super::report_with_comm_thread(
+            self.name(),
+            ws,
+            iter,
+            res.utilization(&e),
+            &e,
+            thread,
+        ))
     }
 }
 
@@ -373,6 +445,20 @@ mod tests {
             assert!(last.0 <= compute, "last buffer {} past compute {compute}", last.0);
             let total: usize = buffers.iter().map(|&(_, b)| b).sum();
             assert_eq!(total, ws.model.grad_bytes(), "bytes conserved under stretch");
+        }
+    }
+
+    #[test]
+    fn graph_and_serialized_paths_agree_when_neutral() {
+        // the zero-skew equivalence at strategy level: forcing the
+        // per-rank graph executor under a neutral scenario reproduces the
+        // serialized critical-path iteration within per-op ns rounding
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        for h in [Horovod::mpi(MpiFlavor::Mvapich2GdrOpt), Horovod::nccl()] {
+            let serial = h.iteration(&ws).unwrap().iter;
+            let graph = h.iteration_graph(&ws, &Scenario::default()).unwrap().iter;
+            let rel = (graph.as_us() - serial.as_us()).abs() / serial.as_us();
+            assert!(rel < 2e-3, "{}: graph {graph} vs serialized {serial}", h.name());
         }
     }
 

@@ -31,10 +31,14 @@ pub use horovod::{Horovod, HorovodBackend};
 pub use ps::{PsStrategy, PsTransport};
 pub use scenario::Scenario;
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::cluster::ClusterSpec;
+use crate::comm::graph::{execute, CommGraph, GraphResources};
 use crate::comm::ResourceUse;
 use crate::models::ModelProfile;
-use crate::sim::SimTime;
+use crate::sim::{Engine, GateId, SimTime};
 use crate::util::error::Result;
 
 /// One experiment point.
@@ -125,6 +129,90 @@ impl IterationReport {
 pub struct JobTrace {
     pub comm_end: SimTime,
     pub staging_us: f64,
+}
+
+/// One allreduce-family job's per-collective dependency graphs scheduled
+/// onto an engine: each graph releases at its ready time and runs under
+/// the strategy's background comm-thread gate (FIFO, one collective at a
+/// time — the same serialization the serialized-replay path uses), on the
+/// job's per-rank [`GraphResources`].  Shared by `Horovod` and `Baidu`'s
+/// `iteration_graph`.
+pub(crate) struct GraphJob {
+    trace: Rc<RefCell<JobTrace>>,
+    completed: Rc<RefCell<usize>>,
+    scheduled: usize,
+}
+
+impl GraphJob {
+    /// Schedule `(ready, graph, critical_staging_us)` collectives; read
+    /// the result back with [`GraphJob::trace`] after `Engine::run`.
+    pub(crate) fn schedule(
+        e: &mut Engine,
+        res: &GraphResources,
+        thread: GateId,
+        items: Vec<(SimTime, CommGraph, f64)>,
+    ) -> GraphJob {
+        let trace = Rc::new(RefCell::new(JobTrace::default()));
+        let completed = Rc::new(RefCell::new(0usize));
+        let scheduled = items.len();
+        let map = res.mapper();
+        for (ready, g, staging) in items {
+            trace.borrow_mut().staging_us += staging;
+            let map = map.clone();
+            let trace = trace.clone();
+            let completed = completed.clone();
+            e.at(ready, move |e| {
+                e.acquire(thread, move |e| {
+                    execute(
+                        e,
+                        &g,
+                        map,
+                        Box::new(move |e| {
+                            trace.borrow_mut().comm_end = e.now();
+                            *completed.borrow_mut() += 1;
+                            e.release(thread);
+                        }),
+                    );
+                });
+            });
+        }
+        GraphJob { trace, completed, scheduled }
+    }
+
+    /// The finished job trace — errors if any collective's graph never
+    /// completed (a wiring bug would otherwise silently report a too-fast
+    /// iteration; the PS path has the same guard in `PsJob::comm_end`).
+    pub(crate) fn trace(&self) -> Result<JobTrace> {
+        crate::ensure!(
+            *self.completed.borrow() == self.scheduled,
+            "graph job did not converge: {} of {} collectives completed",
+            *self.completed.borrow(),
+            self.scheduled
+        );
+        Ok(*self.trace.borrow())
+    }
+}
+
+/// Fold an engine run into the allreduce-family iteration report: the
+/// per-resource utilization rows plus the background comm-thread gate row
+/// (shared by the serialized and graph paths of Horovod and Baidu).
+pub(crate) fn report_with_comm_thread(
+    name: String,
+    ws: &WorldSpec,
+    iter: SimTime,
+    util: Vec<ResourceUse>,
+    e: &Engine,
+    thread: GateId,
+) -> IterationReport {
+    let mut report = IterationReport::from_times(name, ws, iter);
+    report.resource_util = util;
+    let (grants, busy) = e.gate_stats(thread);
+    report.resource_util.push(ResourceUse {
+        name: "comm-thread".to_string(),
+        served: grants,
+        busy,
+    });
+    report
 }
 
 /// Shared closing formula of the allreduce-family strategies: the

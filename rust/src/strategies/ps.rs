@@ -9,11 +9,15 @@
 //! thread per process (§III-B1, "single thread for all MPI related
 //! operations" — the Figure 9 worst case).
 //!
-//! Transfers run through the shared `CommOp` replay path: a push is
-//! [worker-thread op?, per-RPC fixed overhead, wire op pinned to the PS
-//! ingress NIC]; a pull is the mirror image on the egress NIC.  The NIC
-//! FIFO resources produce the fan-in congestion; the op durations come
-//! from the gRPC/Verbs/MPI transport cost models.
+//! Since the `CommGraph` port, each parameter shard is one explicit
+//! **fan-in/fan-out DAG** (`comm::graph::ps_fanin_graph`): W push chains
+//! → the owning server's update node → W pull chains.  The fan-in barrier
+//! that used to be a hand-rolled countdown is now a dependency join; the
+//! NIC FIFO resources still produce the congestion, the op durations
+//! still come from the gRPC/Verbs/MPI transport cost models, and scenario
+//! knobs perturb individual workers' nodes.  `iteration_reference` keeps
+//! the pre-graph serialized-replay implementation as the regression
+//! oracle (`tests/des_regression.rs` pins the two within tolerance).
 //!
 //! PS placement follows the paper's tf_cnn_benchmarks setup: one PS task
 //! colocated per worker node (`ps_count == world`), parameters sharded
@@ -28,6 +32,7 @@ use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse};
+use crate::comm::graph::{execute_at, ps_fanin_graph, unmapped, GraphRun, NodeId};
 use crate::comm::grpc::GrpcTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
@@ -110,47 +115,23 @@ impl PsStrategy {
             }
         }
     }
-}
 
-/// Shared mutable simulation state.
-struct PsState {
-    /// pushes still missing per tensor (counts down from W).
-    pending_pushes: Vec<usize>,
-    /// tensors received back per worker.
-    received: Vec<usize>,
-    /// last event time per worker.
-    done_at: Vec<SimTime>,
-}
-
-impl Strategy for PsStrategy {
-    fn name(&self) -> String {
-        match self.transport {
-            PsTransport::Grpc => "gRPC".into(),
-            PsTransport::Mpi => "gRPC+MPI".into(),
-            PsTransport::Verbs => "gRPC+Verbs".into(),
-        }
-    }
-
-    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
-        if ws.world == 1 {
-            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
-            return Ok(IterationReport::from_times(self.name(), ws, iter));
-        }
-        let w_count = ws.world;
-        let ps_count = ws.world; // one PS task per worker node (see module doc)
+    /// Shard the variables across PS tasks the way TF's greedy
+    /// load-balancing placer does, with readiness stretched by the
+    /// scenario's slowest rank.  Returns per-shard
+    /// `(bytes, push_fixed_us, pull_fixed_us, server, ready)`.
+    fn shard_plan(&self, ws: &WorldSpec, sc: &Scenario) -> Vec<(usize, f64, f64, usize, SimTime)> {
+        let ps_count = ws.world;
         let stretch = sc.compute_stretch();
-
-        let readiness = ws.tensor_readiness();
-        // Shard the variables across PS tasks the way TF's greedy
-        // load-balancing placer does.  Variables above min_slice_size
-        // (TF's partitioner default, ~4MB) split into PartitionedVariable
-        // pieces; everything else stays whole — so the PS holding a
-        // popular mid-size variable still serves W pulls of it per step,
-        // which is the fan-in hot-spot that throttles gRPC for the
-        // small-compute models (H4's 3.2× MobileNet gap).
+        // Variables above min_slice_size (TF's partitioner default, ~4MB)
+        // split into PartitionedVariable pieces; everything else stays
+        // whole — so the PS holding a popular mid-size variable still
+        // serves W pulls of it per step, which is the fan-in hot-spot
+        // that throttles gRPC for the small-compute models (H4's 3.2×
+        // MobileNet gap).
         const MIN_SLICE: usize = 4 << 20;
         let mut shards: Vec<(usize, SimTime)> = Vec::new(); // (bytes, ready)
-        for &(t, ready) in &readiness {
+        for &(t, ready) in &ws.tensor_readiness() {
             let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[t].bytes();
             let pieces = bytes.div_ceil(MIN_SLICE).max(1);
@@ -171,7 +152,7 @@ impl Strategy for PsStrategy {
             load[ps] += shards[i].0;
             assigned[i] = ps;
         }
-        let per_shard: Vec<(usize, f64, f64, usize, SimTime)> = shards
+        shards
             .iter()
             .enumerate()
             .map(|(i, &(bytes, ready))| {
@@ -179,27 +160,223 @@ impl Strategy for PsStrategy {
                 let (pull_fixed, _) = self.transfer_params(&ws.cluster, bytes, true);
                 (bytes, push_fixed, pull_fixed, assigned[i], ready)
             })
-            .collect();
-        let t_count = per_shard.len(); // shards are the unit of transfer
+            .collect()
+    }
 
-        let mut engine = Engine::new();
+    /// Schedule one PS job onto the engine: per parameter shard, one
+    /// [`ps_fanin_graph`] — W push chains converging on the owning
+    /// server's update node, fanning back out into W pull chains —
+    /// released at the shard's readiness plus `offset`.  Wire ops pin to
+    /// the (shareable) fabric's NIC queues; the gRPC+MPI single service
+    /// thread is a per-worker pinned resource private to this job.
+    pub(crate) fn schedule_job(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        e: &mut Engine,
+        fabric: &PsFabric,
+        offset: SimTime,
+    ) -> Result<PsJob> {
+        let w_count = ws.world;
+        crate::ensure!(
+            fabric.ingress.len() == w_count,
+            "PS fabric sized for {} servers, world is {w_count}",
+            fabric.ingress.len()
+        );
+        let per_shard = self.shard_plan(ws, sc);
         // payload link rate, bytes/µs (scenario load eats into it)
         let link_gbs = self.transfer_params(&ws.cluster, 1 << 20, false).1;
         let rate = link_gbs * 1e3 / sc.wire_derate();
         let wire_us = move |bytes: usize| bytes as f64 / rate;
-        // per-PS NIC queues (ingress for pushes, egress for pull payloads)
+        // per-worker MPI service thread (gRPC+MPI only): serialized AND
+        // paying a fixed dispatch cost per message
+        let dispatch_us = self.thread_dispatch_us;
+        let worker_tx: Option<Vec<ResourceId>> = self
+            .single_thread_worker
+            .then(|| (0..w_count).map(|_| e.unit_resource()).collect());
+        // µs it takes a PS CPU to aggregate W gradients and apply the
+        // update (TF variable ops run single-threaded per variable, but
+        // vectorized — ~8 GB/s of aggregated gradient data).
+        let update_us = move |bytes: usize| 2.0 + w_count as f64 * bytes as f64 / 8e3;
+
+        let done = Rc::new(RefCell::new(0usize));
+        let mut runs = Vec::with_capacity(per_shard.len());
+        for (si, &(bytes, push_fixed, pull_fixed, ps, ready)) in per_shard.iter().enumerate() {
+            let push_ops = |w: usize| {
+                let mut ops = Vec::new();
+                if let Some(tx) = &worker_tx {
+                    ops.push(
+                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us).pinned(tx[w]),
+                    );
+                }
+                ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
+                ops.push(CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.ingress[ps]));
+                ops
+            };
+            let update = vec![CommOp::fixed(ResKind::CpuReduce, update_us(bytes))];
+            let pull_ops = |w: usize| {
+                let mut ops = vec![
+                    CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps]),
+                    CommOp::fixed(ResKind::Sw, pull_fixed),
+                ];
+                if let Some(tx) = &worker_tx {
+                    ops.push(
+                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us).pinned(tx[w]),
+                    );
+                }
+                ops
+            };
+            let (mut g, pulls) = ps_fanin_graph(w_count, ps, push_ops, update, pull_ops);
+            sc.perturb_graph(&mut g, w_count, si as u64);
+            let shard_done = done.clone();
+            let run = execute_at(
+                e,
+                &g,
+                unmapped(),
+                offset + ready,
+                Box::new(move |_| *shard_done.borrow_mut() += 1),
+            );
+            runs.push((run, pulls));
+        }
+        Ok(PsJob { runs, done, worker_tx })
+    }
+}
+
+/// Per-PS NIC resources of one fabric: ingress queues serialize gradient
+/// pushes, egress queues serialize pull payloads.  Link-share runs hand
+/// the *same* fabric to two jobs (the co-tenant's PS tasks land on the
+/// same hosts), so both jobs' transfers queue FIFO on shared ports.
+pub struct PsFabric {
+    pub ingress: Vec<ResourceId>,
+    pub egress: Vec<ResourceId>,
+}
+
+impl PsFabric {
+    pub fn install(e: &mut Engine, ps_count: usize) -> PsFabric {
+        PsFabric {
+            ingress: (0..ps_count).map(|_| e.unit_resource()).collect(),
+            egress: (0..ps_count).map(|_| e.unit_resource()).collect(),
+        }
+    }
+
+    /// Aggregate (served, busy) over every NIC queue — the fabric-level
+    /// wire ledger the link-share report exposes.
+    pub fn wire_stats(&self, e: &Engine) -> (u64, SimTime) {
+        let u =
+            ResourceUse::aggregate(e, "wire", self.ingress.iter().chain(&self.egress).copied());
+        (u.served, u.busy)
+    }
+}
+
+/// One scheduled PS job: the per-shard fan-in graphs and their pull
+/// sinks, read back after the engine run.
+pub struct PsJob {
+    runs: Vec<(Rc<RefCell<GraphRun>>, Vec<NodeId>)>,
+    done: Rc<RefCell<usize>>,
+    worker_tx: Option<Vec<ResourceId>>,
+}
+
+impl PsJob {
+    /// When the job's last worker received its last shard.
+    pub(crate) fn comm_end(&self) -> Result<SimTime> {
+        crate::ensure!(
+            *self.done.borrow() == self.runs.len(),
+            "PS simulation did not converge: {} of {} shards",
+            *self.done.borrow(),
+            self.runs.len()
+        );
+        let mut end = SimTime::ZERO;
+        for (run, pulls) in &self.runs {
+            let r = run.borrow();
+            for &id in pulls {
+                end = end.max(r.finish_of(id));
+            }
+        }
+        Ok(end)
+    }
+}
+
+impl Strategy for PsStrategy {
+    fn name(&self) -> String {
+        match self.transport {
+            PsTransport::Grpc => "gRPC".into(),
+            PsTransport::Mpi => "gRPC+MPI".into(),
+            PsTransport::Verbs => "gRPC+Verbs".into(),
+        }
+    }
+
+    fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if ws.world == 1 {
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        let mut engine = Engine::new();
+        let fabric = PsFabric::install(&mut engine, ws.world); // one PS per worker node
+        let job = self.schedule_job(ws, sc, &mut engine, &fabric, SimTime::ZERO)?;
+        engine.run();
+        let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+        let iter = super::close_iteration(
+            ws,
+            sc,
+            &trace,
+            SimTime::ZERO,
+            self.runtime_tax,
+            self.skew_us_per_rank,
+        );
+        let mut report = IterationReport::from_times(self.name(), ws, iter);
+        report.resource_util.push(agg_util(&engine, &fabric.ingress, "ps-nic-in"));
+        report.resource_util.push(agg_util(&engine, &fabric.egress, "ps-nic-out"));
+        if let Some(tx) = &job.worker_tx {
+            report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
+        }
+        Ok(report)
+    }
+}
+
+fn agg_util(e: &Engine, ids: &[ResourceId], name: &str) -> ResourceUse {
+    ResourceUse::aggregate(e, name, ids.iter().copied())
+}
+
+/// Shared mutable state of the reference implementation.
+struct PsState {
+    /// pushes still missing per tensor (counts down from W).
+    pending_pushes: Vec<usize>,
+    /// tensors received back per worker.
+    received: Vec<usize>,
+    /// last event time per worker.
+    done_at: Vec<SimTime>,
+}
+
+impl PsStrategy {
+    /// The pre-`CommGraph` implementation (PR 1): hand-rolled push
+    /// countdowns and serialized pull replays on the same NIC resources.
+    /// Kept verbatim as the regression oracle — `tests/des_regression.rs`
+    /// pins the graph-scheduled `iteration_in` to this within tolerance,
+    /// which is what "the port preserved the timings" means.
+    pub fn iteration_reference(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if ws.world == 1 {
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        let w_count = ws.world;
+        let ps_count = ws.world;
+        let per_shard = self.shard_plan(ws, sc);
+        let t_count = per_shard.len(); // shards are the unit of transfer
+
+        let mut engine = Engine::new();
+        let link_gbs = self.transfer_params(&ws.cluster, 1 << 20, false).1;
+        let rate = link_gbs * 1e3 / sc.wire_derate();
+        let wire_us = move |bytes: usize| bytes as f64 / rate;
         let ingress: Vec<ResourceId> =
             (0..ps_count).map(|_| engine.unit_resource()).collect();
         let egress: Vec<ResourceId> =
             (0..ps_count).map(|_| engine.unit_resource()).collect();
-        // per-worker MPI service thread (gRPC+MPI only): serialized AND
-        // paying a fixed dispatch cost per message
         let dispatch_us = self.thread_dispatch_us;
         let worker_tx: Option<Rc<Vec<ResourceId>>> = self.single_thread_worker.then(|| {
             Rc::new((0..w_count).map(|_| engine.unit_resource()).collect::<Vec<_>>())
         });
         // everything not pinned to a NIC/thread is per-rank private work
-        let unmapped: ResMap = Rc::new(|_| None);
+        let unmapped_ref: ResMap = Rc::new(|_| None);
 
         let state = Rc::new(RefCell::new(PsState {
             pending_pushes: vec![w_count; t_count],
@@ -207,9 +384,6 @@ impl Strategy for PsStrategy {
             done_at: vec![SimTime::ZERO; w_count],
         }));
 
-        // µs it takes a PS CPU to aggregate W gradients and apply the
-        // update (TF variable ops run single-threaded per variable, but
-        // vectorized — ~8 GB/s of aggregated gradient data).
         let update_us = move |bytes: usize| 2.0 + w_count as f64 * bytes as f64 / 8e3;
 
         for w in 0..w_count {
@@ -228,9 +402,9 @@ impl Strategy for PsStrategy {
                 let egress_r = egress[ps];
                 let state = state.clone();
                 let worker_tx = worker_tx.clone();
-                let unmapped = unmapped.clone();
+                let unmapped_ref = unmapped_ref.clone();
                 engine.at(ready, move |e| {
-                    let map = unmapped.clone();
+                    let map = unmapped_ref.clone();
                     let done = Box::new(move |e: &mut Engine| {
                         let mut st = state.borrow_mut();
                         st.pending_pushes[t] -= 1;
@@ -242,7 +416,7 @@ impl Strategy for PsStrategy {
                         // (pipelined) pull
                         let state2 = state.clone();
                         let worker_tx2 = worker_tx.clone();
-                        let unmapped2 = unmapped.clone();
+                        let unmapped2 = unmapped_ref.clone();
                         e.after(SimTime::from_us(update_us(bytes)), move |e| {
                             for w2 in 0..w_count {
                                 let mut pull_ops = vec![
@@ -293,19 +467,10 @@ impl Strategy for PsStrategy {
             self.skew_us_per_rank,
         );
         let mut report = IterationReport::from_times(self.name(), ws, iter);
-        let agg = |e: &Engine, ids: &[ResourceId], name: &str| {
-            let (mut served, mut busy) = (0u64, SimTime::ZERO);
-            for &r in ids {
-                let (s, b) = e.resource_stats(r);
-                served += s;
-                busy += b;
-            }
-            ResourceUse { name: name.to_string(), served, busy }
-        };
-        report.resource_util.push(agg(&engine, &ingress, "ps-nic-in"));
-        report.resource_util.push(agg(&engine, &egress, "ps-nic-out"));
+        report.resource_util.push(agg_util(&engine, &ingress, "ps-nic-in"));
+        report.resource_util.push(agg_util(&engine, &egress, "ps-nic-out"));
         if let Some(tx) = &worker_tx {
-            report.resource_util.push(agg(&engine, tx, "worker-mpi-thread"));
+            report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
         }
         Ok(report)
     }
@@ -326,6 +491,26 @@ mod tests {
             let r = s.iteration(&ws).unwrap();
             assert!(r.scaling_efficiency > 0.1 && r.scaling_efficiency <= 1.0,
                 "{}: eff {}", s.name(), r.scaling_efficiency);
+        }
+    }
+
+    #[test]
+    fn graph_port_matches_reference_implementation() {
+        // the zero-skew pin at module level: the fan-in DAG execution
+        // reproduces the PR-1 countdown implementation (same shards,
+        // same NIC queues, same durations — only the scheduling substrate
+        // changed; residual divergence is same-timestamp FIFO tie order)
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        for s in [PsStrategy::grpc(), PsStrategy::grpc_mpi(), PsStrategy::grpc_verbs()] {
+            let graph = s.iteration(&ws).unwrap().iter.as_us();
+            let reference =
+                s.iteration_reference(&ws, &Scenario::default()).unwrap().iter.as_us();
+            let rel = (graph - reference).abs() / reference;
+            assert!(
+                rel < 2e-3,
+                "{}: graph {graph}us vs reference {reference}us (rel {rel:.2e})",
+                s.name()
+            );
         }
     }
 
@@ -402,5 +587,16 @@ mod tests {
         assert!(r.resource_util.iter().all(|u| u.name != "worker-mpi-thread"));
         let m = PsStrategy::grpc_mpi().iteration(&ws).unwrap();
         assert!(m.resource_util.iter().any(|u| u.name == "worker-mpi-thread"));
+    }
+
+    #[test]
+    fn straggler_worker_delays_ps_iteration() {
+        // the per-rank knob flows into the fan-in DAG: a slow worker's
+        // push/pull nodes stretch, which delays every shard's update
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        let s = PsStrategy::grpc();
+        let base = s.iteration(&ws).unwrap().iter;
+        let skewed = s.iteration_in(&ws, &Scenario::straggler(1, 2.0)).unwrap().iter;
+        assert!(skewed > base, "straggler must slow PS: {skewed} vs {base}");
     }
 }

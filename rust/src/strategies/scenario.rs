@@ -1,21 +1,28 @@
 //! Scenario knobs: perturbations layered over any strategy, plus the
-//! two-job link-sharing run the `CommOp`→`Engine` refactor unlocks.
+//! two-job link-sharing runs the `CommOp`→`Engine` refactor unlocks.
 //!
 //! The paper measures pristine, dedicated clusters; production clusters
 //! are not.  A [`Scenario`] injects the deviations operators actually
 //! see — stragglers (one slow rank paces every synchronous collective),
 //! heterogeneous node mixes (part of the allocation on an older GPU),
 //! per-step OS/sync jitter, and a fabric shared with other traffic —
-//! without touching the calibrated cost models.  Since every strategy now
-//! schedules `CommOp`s onto engine resources, two *whole jobs* can also
-//! share one wire resource and contend step-by-step ([`link_share`]).
+//! without touching the calibrated cost models.  Knobs that skew
+//! *individual ranks* apart ([`Scenario::per_rank_skew`]) route the
+//! strategies onto per-rank `CommGraph` execution, where a slow rank's
+//! delay propagates along the algorithm's dependency edges
+//! ([`Scenario::perturb_graph`]); whole-job knobs keep the provably
+//! equivalent serialized replay.  Two *whole jobs* can also share one
+//! fabric and contend transfer-by-transfer ([`link_share`] for the
+//! Horovod family, [`link_share_ps`] for the PS family).
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
 use super::horovod::Horovod;
+use super::ps::{PsFabric, PsJob, PsStrategy};
 use super::{JobTrace, Strategy, WorldSpec};
 use crate::comm::commop::CommResources;
+use crate::comm::graph::CommGraph;
 use crate::sim::{Engine, SimTime};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
@@ -45,6 +52,12 @@ pub struct Scenario {
     /// Fraction of inter-node wire bandwidth consumed by unrelated
     /// traffic (0.0 = dedicated fabric, 0.5 = half the wire is gone).
     pub link_load: f64,
+    /// Run a second identical job sharing the fabric (the experiment
+    /// launcher's `[scenario] second_job = true` emits a link-share table
+    /// per supported strategy; `iteration_in` itself ignores it).
+    pub second_job: bool,
+    /// Start offset of the second job, µs.
+    pub second_job_offset_us: f64,
 }
 
 impl Default for Scenario {
@@ -57,6 +70,8 @@ impl Default for Scenario {
             jitter_us: 0.0,
             seed: 0,
             link_load: 0.0,
+            second_job: false,
+            second_job_offset_us: 0.0,
         }
     }
 }
@@ -112,6 +127,63 @@ impl Scenario {
             .map(|_| rng.next_below(1 << 20) as f64 / (1u64 << 20) as f64 * self.jitter_us)
             .fold(0.0, f64::max)
     }
+
+    /// Do the knobs skew *individual ranks* apart (rather than shifting
+    /// the whole job)?  When true, the allreduce-family strategies execute
+    /// per-rank `CommGraph`s so the skew propagates along dependency
+    /// edges; when false they keep the serialized critical-path replay,
+    /// which is provably identical under uniform per-rank timing (and
+    /// orders of magnitude fewer engine events at p=128).
+    pub fn per_rank_skew(&self) -> bool {
+        (self.straggler_ranks > 0 && self.straggler_factor > 1.0)
+            || (self.hetero_ranks > 0 && self.hetero_factor > 1.0)
+            || self.jitter_us > 0.0
+    }
+
+    /// Deterministic per-node jitter draw, µs, keyed by `(seed, salt,
+    /// rank, step)` — independent of execution order, so perturbed runs
+    /// stay bit-reproducible.  `salt` distinguishes collectives within an
+    /// iteration (fusion-buffer / tensor / shard ordinal); without it
+    /// every collective would replay one identical jitter pattern instead
+    /// of drawing independently.  (The iteration-level barrier draw
+    /// [`Scenario::sync_jitter_us`] is separate and unchanged.)
+    pub fn node_jitter_us(&self, salt: u64, rank: usize, step: u32) -> f64 {
+        if self.jitter_us <= 0.0 {
+            return 0.0;
+        }
+        let key = ((rank as u64) << 32) | step as u64;
+        let mut rng = Rng::new(
+            self.seed
+                ^ 0x6A09_E667_F3BC_C908
+                ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ salt.wrapping_mul(0xBF58_476D_1CE4_E5B9),
+        );
+        rng.next_f64() * self.jitter_us
+    }
+
+    /// Apply the per-rank knobs to one collective's dependency graph:
+    /// straggler ranks (the first `straggler_ranks` of `world`) run every
+    /// op `straggler_factor`× slower, heterogeneous ranks (the last
+    /// `hetero_ranks`) pay `hetero_factor`× on GPU-side ops, and each
+    /// node draws its `(salt, rank, step)` jitter (`salt` = the
+    /// collective's ordinal within the iteration).  The skew then
+    /// *propagates* through the graph's edges instead of shifting the
+    /// whole schedule.
+    pub fn perturb_graph(&self, g: &mut CommGraph, world: usize, salt: u64) {
+        if self.straggler_ranks > 0 && self.straggler_factor > 1.0 {
+            for r in 0..self.straggler_ranks.min(world) {
+                g.scale_rank(r, self.straggler_factor);
+            }
+        }
+        if self.hetero_ranks > 0 && self.hetero_factor > 1.0 {
+            for r in world.saturating_sub(self.hetero_ranks)..world {
+                g.scale_rank_gpu(r, self.hetero_factor);
+            }
+        }
+        if self.jitter_us > 0.0 {
+            g.jitter_nodes(|rank, step| self.node_jitter_us(salt, rank, step));
+        }
+    }
 }
 
 /// Outcome of two identical Horovod jobs contending on one fabric.
@@ -155,6 +227,36 @@ pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkSh
     let iter_a = h.close_job(ws, &sc, &trace_a.borrow(), SimTime::ZERO);
     let iter_b = h.close_job(ws, &sc, &trace_b.borrow(), offset);
     let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
+    Ok(LinkShareReport {
+        solo_iter: solo.iter,
+        job_iters: [iter_a, iter_b],
+        wire_busy,
+        wire_served,
+    })
+}
+
+/// Two identical PS jobs on one engine, sharing every parameter server's
+/// ingress/egress NIC (the co-tenant lands on the same hosts) while each
+/// job keeps its own worker-side resources.  Job B starts at `offset`.
+/// This is the PS-family counterpart of [`link_share`]: fan-in congestion
+/// now comes from *both* jobs' pushes queueing on the shared NICs.
+pub fn link_share_ps(ps: &PsStrategy, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
+    let sc = Scenario::default();
+    let solo = ps.iteration(ws)?;
+
+    let mut e = Engine::new();
+    let fabric = PsFabric::install(&mut e, ws.world);
+    let job_a = ps.schedule_job(ws, &sc, &mut e, &fabric, SimTime::ZERO)?;
+    let job_b = ps.schedule_job(ws, &sc, &mut e, &fabric, offset)?;
+    e.run();
+
+    let close = |job: &PsJob, off: SimTime| -> Result<SimTime> {
+        let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+        Ok(super::close_iteration(ws, &sc, &trace, off, ps.runtime_tax, ps.skew_us_per_rank))
+    };
+    let iter_a = close(&job_a, SimTime::ZERO)?;
+    let iter_b = close(&job_b, offset)?;
+    let (wire_served, wire_busy) = fabric.wire_stats(&e);
     Ok(LinkShareReport {
         solo_iter: solo.iter,
         job_iters: [iter_a, iter_b],
@@ -235,6 +337,65 @@ mod tests {
             "two jobs on one wire must contend somewhere: {a} {b}"
         );
         assert!(r.wire_busy > SimTime::ZERO);
+    }
+
+    #[test]
+    fn per_rank_skew_classifies_knobs() {
+        assert!(!Scenario::default().per_rank_skew());
+        assert!(!Scenario::link_loaded(0.5).per_rank_skew());
+        assert!(Scenario::straggler(1, 1.5).per_rank_skew());
+        assert!(!Scenario::straggler(1, 0.5).per_rank_skew(), "sub-1.0 factor is inert");
+        assert!(Scenario::hetero(2, 2.0).per_rank_skew());
+        let j = Scenario { jitter_us: 50.0, ..Scenario::default() };
+        assert!(j.per_rank_skew());
+    }
+
+    #[test]
+    fn node_jitter_deterministic_bounded_and_keyed() {
+        let sc = Scenario { jitter_us: 100.0, seed: 3, ..Scenario::default() };
+        let a = sc.node_jitter_us(0, 2, 7);
+        assert_eq!(a, sc.node_jitter_us(0, 2, 7), "same key, same draw");
+        assert!((0.0..100.0).contains(&a));
+        assert_ne!(a, sc.node_jitter_us(0, 3, 7), "rank changes the draw");
+        assert_ne!(a, sc.node_jitter_us(0, 2, 8), "step changes the draw");
+        assert_ne!(a, sc.node_jitter_us(1, 2, 7), "collective ordinal changes the draw");
+        assert_eq!(Scenario::default().node_jitter_us(0, 2, 7), 0.0);
+    }
+
+    #[test]
+    fn perturb_graph_scales_only_the_straggler() {
+        use crate::comm::commop::{CommOp, ResKind};
+        let mut g = CommGraph::default();
+        for r in 0..4 {
+            g.push_node(r, 0, vec![CommOp::fixed(ResKind::Wire, 10.0)], Vec::new());
+        }
+        Scenario::straggler(1, 2.0).perturb_graph(&mut g, 4, 0);
+        let durs: Vec<f64> = g.nodes.iter().map(|n| n.dur_us()).collect();
+        assert_eq!(durs, vec![20.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn straggler_skews_individual_ranks_not_just_the_job() {
+        // With the graph path, one straggler must cost *more* than the
+        // pure compute stretch the serialized model charged (its slow
+        // comm steps push the dependent ring steps outward too).
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let ws = ws16();
+        let neutral = h.iteration(&ws).unwrap().iter;
+        let skewed = h.iteration_in(&ws, &Scenario::straggler(2, 1.5)).unwrap().iter;
+        assert!(skewed > neutral);
+    }
+
+    #[test]
+    fn two_ps_jobs_sharing_nics_contend() {
+        use crate::models::mobilenet;
+        let ps = crate::strategies::PsStrategy::grpc();
+        let ws = WorldSpec::new(presets::ri2(), mobilenet::mobilenet_v1(), 8);
+        let r = link_share_ps(&ps, &ws, SimTime::ZERO).unwrap();
+        let [a, b] = r.slowdowns();
+        assert!(a >= 1.0 && b >= 1.0, "sharing cannot speed anyone up: {a} {b}");
+        assert!(a > 1.0 || b > 1.0, "shared PS NICs must contend: {a} {b}");
+        assert!(r.wire_busy > SimTime::ZERO && r.wire_served > 0);
     }
 
     #[test]

@@ -1,8 +1,18 @@
-//! Regression pins for the `CommOp`→`Engine` port: the DES-scheduled
-//! Horovod/Baidu iteration times must stay within tolerance of the
-//! pre-refactor closed-form accumulators on the paper configurations, so
-//! the Figure 3/7/8/9 assertions (efficiency ordering, MPI-Opt > stock,
-//! ≈90% Owens@64) keep meaning what they meant.
+//! Regression pins for the `CommOp`→`Engine` port AND the `CommGraph`
+//! port on top of it:
+//!
+//!  1. the DES-scheduled Horovod/Baidu iteration times must stay within
+//!     tolerance of the pre-refactor closed-form accumulators on the
+//!     paper configurations, so the Figure 3/7/8/9 assertions (efficiency
+//!     ordering, MPI-Opt > stock, ≈90% Owens@64) keep meaning what they
+//!     meant;
+//!  2. the **zero-skew equivalence suite**: with no scenario
+//!     perturbation, per-rank `CommGraph` execution must reproduce the
+//!     serialized critical-path timings (Horovod/Baidu via
+//!     `iteration_graph`, PS via the retained PR-1
+//!     `iteration_reference`);
+//!  3. straggler propagation: a slow rank delays only its *dependent*
+//!     ring steps, deterministically.
 //!
 //! The analytic reference below *is* the old model, re-expressed through
 //! the public cost APIs: a float `thread_free` timeline serializing fused
@@ -14,7 +24,7 @@ use mpi_dnn_train::comm::allreduce::Algo;
 use mpi_dnn_train::comm::nccl::NcclWorld;
 use mpi_dnn_train::comm::{MpiFlavor, MpiWorld};
 use mpi_dnn_train::models::{mobilenet, nasnet, resnet, ModelProfile};
-use mpi_dnn_train::strategies::{Baidu, Horovod, HorovodBackend, Strategy, WorldSpec};
+use mpi_dnn_train::strategies::{Baidu, Horovod, HorovodBackend, PsStrategy, Scenario, Strategy, WorldSpec};
 
 /// Relative tolerance: per-op ns rounding across a few hundred ops is
 /// well under a microsecond; iterations are 1e4–1e6 µs.
@@ -148,6 +158,122 @@ fn baidu_des_matches_analytic_on_paper_configs() {
         let des = b.iteration(&ws).unwrap().iter.as_us();
         let analytic = analytic_baidu_us(&b, &ws);
         assert_close(des, analytic, what);
+    }
+}
+
+#[test]
+fn graph_replay_matches_serialized_on_paper_configs() {
+    // the zero-skew equivalence suite: forcing per-rank CommGraph
+    // execution under a neutral scenario must reproduce the serialized
+    // critical-path timings the figures (and the analytic pins above)
+    // are built on — so the Figure 3/7/8/9 claims survive the port.
+    let neutral = Scenario::default();
+    let horovod_points: Vec<(&str, WorldSpec, Horovod)> = vec![
+        (
+            "fig7 ri2@16 opt",
+            WorldSpec::new(presets::ri2(), resnet::resnet50(), 16),
+            Horovod::mpi(MpiFlavor::Mvapich2GdrOpt),
+        ),
+        (
+            "fig7 ri2@16 nccl",
+            WorldSpec::new(presets::ri2(), resnet::resnet50(), 16),
+            Horovod::nccl(),
+        ),
+        (
+            "fig8 owens@64 opt",
+            WorldSpec::new(presets::owens(), resnet::resnet50(), 64),
+            Horovod::mpi(MpiFlavor::Mvapich2GdrOpt),
+        ),
+        (
+            "fig9 pizdaint@128 resnet",
+            WorldSpec::new(presets::piz_daint(), resnet::resnet50(), 128),
+            Horovod::mpi(MpiFlavor::CrayMpich),
+        ),
+        (
+            "fig9 pizdaint@128 mobilenet",
+            WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 128),
+            Horovod::mpi(MpiFlavor::CrayMpich),
+        ),
+    ];
+    for (what, ws, h) in horovod_points {
+        let serial = h.iteration(&ws).unwrap().iter.as_us();
+        let graph = h.iteration_graph(&ws, &neutral).unwrap().iter.as_us();
+        assert_close(graph, serial, &format!("graph {what}"));
+    }
+    let baidu_points: Vec<(&str, WorldSpec, Baidu)> = vec![
+        (
+            "fig3 ri2@16",
+            WorldSpec::new(presets::ri2(), resnet::resnet50(), 16),
+            Baidu::new(),
+        ),
+        (
+            "fig9 pizdaint@32 resnet",
+            WorldSpec::new(presets::piz_daint(), resnet::resnet50(), 32),
+            Baidu::with_flavor(MpiFlavor::CrayMpich),
+        ),
+    ];
+    for (what, ws, b) in baidu_points {
+        let serial = b.iteration(&ws).unwrap().iter.as_us();
+        let graph = b.iteration_graph(&ws, &neutral).unwrap().iter.as_us();
+        assert_close(graph, serial, &format!("graph {what}"));
+    }
+}
+
+#[test]
+fn ps_graph_port_matches_pr1_reference() {
+    // PS has no closed-form reference (its timings are queueing), so the
+    // pre-graph implementation is retained verbatim as the oracle: the
+    // per-shard fan-in DAGs must reproduce it on the paper configs.
+    let neutral = Scenario::default();
+    for world in [4usize, 16] {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), world);
+        for s in [PsStrategy::grpc(), PsStrategy::grpc_mpi(), PsStrategy::grpc_verbs()] {
+            let graph = s.iteration(&ws).unwrap().iter.as_us();
+            let reference = s.iteration_reference(&ws, &neutral).unwrap().iter.as_us();
+            assert_close(graph, reference, &format!("{} ri2@{world}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn straggler_propagation_is_step_local_and_deterministic() {
+    use mpi_dnn_train::comm::allreduce::shadow_steps;
+    use mpi_dnn_train::comm::graph::{execute, ring_graph, CommGraph, GraphResources};
+    use mpi_dnn_train::sim::Engine;
+
+    // a real RI2 ring (per-step costs from the validated models)
+    let p = 8usize;
+    let w = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+    let (_, mut ctx) = w.plan(1 << 20);
+    let (_, steps) = shadow_steps(Algo::Ring, p, (1 << 20) / 4, &mut ctx);
+    let g0 = ring_graph(p, &steps);
+
+    let run = |g: &CommGraph| {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, p);
+        let run = execute(&mut e, g, res.mapper(), Box::new(|_| {}));
+        e.run();
+        let r = run.borrow();
+        r.finish.clone()
+    };
+    let base = run(&g0);
+    let mut g = g0.clone();
+    g.scale_rank(3, 2.0); // rank 3 runs 2x slow
+    let a = run(&g);
+    let b = run(&g);
+    assert_eq!(a, b, "perturbed graph runs must be bit-identical");
+
+    // ring builder layout: node index = step * p + rank; skew cone:
+    // (r, s) is delayed iff s >= ring-distance(3 -> r)
+    let id = |r: usize, s: usize| s * p + r;
+    for (r, s) in [(4usize, 0usize), (5, 1), (6, 2), (2, 5)] {
+        assert_eq!(a[id(r, s)], base[id(r, s)], "(r{r}, s{s}) is outside the cone");
+    }
+    for (r, s) in [(3usize, 0usize), (4, 1), (5, 2), (6, 3)] {
+        assert!(
+            a[id(r, s)] > base[id(r, s)],
+            "(r{r}, s{s}) must inherit the straggler's delay"
+        );
     }
 }
 
