@@ -294,29 +294,76 @@ pub fn scenario_compare(
     Ok(t)
 }
 
-/// Two identical Horovod jobs sharing one fabric — the link-sharing run
-/// the `CommOp`→engine port unlocks (`mpi-dnn-train scenario two-jobs`).
+/// The Horovod variant a cluster would actually run: MPI-Opt where the
+/// fabric has GDR, Cray-MPICH otherwise (one place encodes this policy).
+fn default_horovod(cluster: &crate::cluster::ClusterSpec) -> Horovod {
+    if cluster.fabric.gdr {
+        Horovod::mpi(MpiFlavor::Mvapich2GdrOpt)
+    } else {
+        Horovod::mpi(MpiFlavor::CrayMpich)
+    }
+}
+
+/// Two identical jobs sharing one fabric — a Horovod variant (one shared
+/// wire resource) or a PS transport (shared per-server NIC queues).
+/// `family` is either a family name (`horovod` picks the cluster's
+/// default variant, `ps` = gRPC) or a concrete strategy name
+/// (`horovod-mpi-opt`, `grpc+verbs`, …) so the experiment launcher can
+/// run the link-share with the exact strategy the config selected.
 pub fn scenario_two_jobs(
     cluster: crate::cluster::ClusterSpec,
     model: ModelProfile,
     world: usize,
     offset_us: f64,
+    family: &str,
 ) -> Result<Table> {
     use crate::sim::SimTime;
-    use crate::strategies::scenario::link_share;
+    use crate::strategies::scenario::{link_share, link_share_ps};
+    let cluster_name = cluster.name;
+    let ws = WorldSpec::new(cluster.clone(), model, world);
+    let offset = SimTime::from_us(offset_us);
+    let (label, r) = match family.to_ascii_lowercase().as_str() {
+        "horovod" => {
+            let h = default_horovod(&cluster);
+            (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "horovod-mpi" => {
+            let h = Horovod::mpi(MpiFlavor::Mvapich2);
+            (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "horovod-mpi-opt" => {
+            let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+            (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "horovod-cray" => {
+            let h = Horovod::mpi(MpiFlavor::CrayMpich);
+            (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "horovod-nccl" => {
+            let h = Horovod::nccl();
+            (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "ps" | "grpc" => {
+            let ps = PsStrategy::grpc();
+            (ps.name(), link_share_ps(&ps, &ws, offset)?)
+        }
+        "ps-mpi" | "grpc+mpi" | "grpc-mpi" => {
+            let ps = PsStrategy::grpc_mpi();
+            (ps.name(), link_share_ps(&ps, &ws, offset)?)
+        }
+        "ps-verbs" | "grpc+verbs" | "grpc-verbs" => {
+            let ps = PsStrategy::grpc_verbs();
+            (ps.name(), link_share_ps(&ps, &ws, offset)?)
+        }
+        other => crate::bail!(
+            "two-jobs family must be horovod[-mpi|-mpi-opt|-cray|-nccl] or \
+             ps (grpc | grpc+mpi | grpc+verbs), got `{other}`"
+        ),
+    };
     let title = format!(
-        "Scenario: two {}-GPU Horovod jobs sharing the {} fabric (B offset {})",
-        world,
-        cluster.name,
+        "Scenario: two {world}-GPU {label} jobs sharing the {cluster_name} fabric (B offset {})",
         fmt_us(offset_us)
     );
-    let h = if cluster.fabric.gdr {
-        Horovod::mpi(MpiFlavor::Mvapich2GdrOpt)
-    } else {
-        Horovod::mpi(MpiFlavor::CrayMpich)
-    };
-    let ws = WorldSpec::new(cluster, model, world);
-    let r = link_share(&h, &ws, SimTime::from_us(offset_us))?;
     let [sa, sb] = r.slowdowns();
     let mut t = Table::new(&title, &["job", "iter", "slowdown vs solo"]);
     t.row(["solo".into(), format!("{}", r.solo_iter), "1.00x".into()]);
@@ -326,6 +373,51 @@ pub fn scenario_two_jobs(
         "shared wire: {} ops, {} busy — contention emerges from FIFO queueing, not a formula",
         r.wire_served, r.wire_busy
     ));
+    Ok(t)
+}
+
+/// Ablation: fusion-cycle knob (`HOROVOD_CYCLE_TIME`) × scenario grid —
+/// how the cycle choice interacts with degraded conditions.  The
+/// straggler/jitter columns run on the per-rank `CommGraph` path, so the
+/// knob's interplay with step-level skew propagation is what's measured.
+pub fn ablation_cycle_grid(cluster_name: &str, world: usize) -> Result<Table> {
+    use crate::strategies::Scenario;
+    let cluster = presets::by_name(cluster_name)?;
+    let model = resnet::resnet50();
+    let scenarios: Vec<(&str, Scenario)> = vec![
+        ("pristine", Scenario::default()),
+        ("straggler 1×1.5", Scenario::straggler(1, 1.5)),
+        ("jitter 250us", Scenario { jitter_us: 250.0, ..Scenario::default() }),
+        ("link 50%", Scenario::link_loaded(0.5)),
+    ];
+    let mut headers = vec!["cycle".to_string()];
+    headers.extend(scenarios.iter().map(|(n, _)| format!("img/s ({n})")));
+    let mut t = Table::new(
+        &format!("Ablation: fusion cycle × scenario (ResNet-50, {cluster_name}@{world})"),
+        &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
+    );
+    let cycles = [500.0f64, 1_000.0, 2_500.0, 5_000.0, 10_000.0];
+    let rows = par_map_ordered(cycles.iter().copied(), |cycle_us| {
+        let mut h = default_horovod(&cluster);
+        h.cycle_us = cycle_us;
+        let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+        let mut row = vec![format!("{:.1}ms", cycle_us / 1_000.0)];
+        for (_, sc) in &scenarios {
+            row.push(match h.iteration_in(&ws, sc) {
+                Ok(r) => format!("{:.0}", r.imgs_per_sec),
+                Err(_) => "n/a".into(),
+            });
+        }
+        row
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(
+        "long cycles fuse more tensors per collective but delay the pipeline; \
+         per-rank skew scenarios shift the optimum (fewer, larger buffers ride \
+         out step-level jitter better)",
+    );
     Ok(t)
 }
 
@@ -363,6 +455,27 @@ mod tests {
             .parse()
             .unwrap();
         assert!(measured >= 5.0, "H1: got {measured}x");
+    }
+
+    #[test]
+    fn two_jobs_families_and_cycle_grid_build() {
+        use crate::models::mobilenet;
+        for family in ["horovod", "ps", "grpc+verbs", "horovod-mpi"] {
+            let t = scenario_two_jobs(
+                presets::ri2(),
+                mobilenet::mobilenet_v1(),
+                4,
+                0.0,
+                family,
+            )
+            .unwrap();
+            assert_eq!(t.rows.len(), 3, "{family}: solo/A/B rows");
+        }
+        assert!(scenario_two_jobs(presets::ri2(), mobilenet::mobilenet_v1(), 4, 0.0, "baidu")
+            .is_err());
+        let g = ablation_cycle_grid("ri2", 4).unwrap();
+        assert_eq!(g.rows.len(), 5);
+        assert_eq!(g.headers.len(), 5); // cycle + 4 scenario columns
     }
 
     #[test]
