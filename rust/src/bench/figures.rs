@@ -304,10 +304,21 @@ fn default_horovod(cluster: &crate::cluster::ClusterSpec) -> Horovod {
     }
 }
 
+/// The Baidu flavor a cluster would actually run: stock MVAPICH2 on the
+/// IB clusters, Cray-MPICH on Piz Daint (mirrors `default_horovod`).
+fn default_baidu(cluster: &crate::cluster::ClusterSpec) -> Baidu {
+    if cluster.fabric.gdr {
+        Baidu::new()
+    } else {
+        Baidu::with_flavor(MpiFlavor::CrayMpich)
+    }
+}
+
 /// Two identical jobs sharing one fabric — a Horovod variant (one shared
-/// wire resource) or a PS transport (shared per-server NIC queues).
-/// `family` is either a family name (`horovod` picks the cluster's
-/// default variant, `ps` = gRPC) or a concrete strategy name
+/// wire resource), Baidu's per-tensor rings (same shared wire), or a PS
+/// transport (shared per-server NIC queues).
+/// `family` is either a family name (`horovod` / `baidu` pick the
+/// cluster's default variant, `ps` = gRPC) or a concrete strategy name
 /// (`horovod-mpi-opt`, `grpc+verbs`, …) so the experiment launcher can
 /// run the link-share with the exact strategy the config selected.
 pub fn scenario_two_jobs(
@@ -318,7 +329,7 @@ pub fn scenario_two_jobs(
     family: &str,
 ) -> Result<Table> {
     use crate::sim::SimTime;
-    use crate::strategies::scenario::{link_share, link_share_ps};
+    use crate::strategies::scenario::{link_share, link_share_baidu, link_share_ps};
     let cluster_name = cluster.name;
     let ws = WorldSpec::new(cluster.clone(), model, world);
     let offset = SimTime::from_us(offset_us);
@@ -326,6 +337,20 @@ pub fn scenario_two_jobs(
         "horovod" => {
             let h = default_horovod(&cluster);
             (h.name(), link_share(&h, &ws, offset)?)
+        }
+        "baidu" => {
+            let b = default_baidu(&cluster);
+            (b.name(), link_share_baidu(&b, &ws, offset)?)
+        }
+        // concrete names pin the exact flavor the config selected,
+        // mirroring strategies::by_name
+        "baidu-mpi" => {
+            let b = Baidu::new();
+            (b.name(), link_share_baidu(&b, &ws, offset)?)
+        }
+        "baidu-cray" => {
+            let b = Baidu::with_flavor(MpiFlavor::CrayMpich);
+            (b.name(), link_share_baidu(&b, &ws, offset)?)
         }
         "horovod-mpi" => {
             let h = Horovod::mpi(MpiFlavor::Mvapich2);
@@ -356,7 +381,7 @@ pub fn scenario_two_jobs(
             (ps.name(), link_share_ps(&ps, &ws, offset)?)
         }
         other => crate::bail!(
-            "two-jobs family must be horovod[-mpi|-mpi-opt|-cray|-nccl] or \
+            "two-jobs family must be horovod[-mpi|-mpi-opt|-cray|-nccl], baidu[-mpi|-cray], or \
              ps (grpc | grpc+mpi | grpc+verbs), got `{other}`"
         ),
     };
@@ -460,7 +485,7 @@ mod tests {
     #[test]
     fn two_jobs_families_and_cycle_grid_build() {
         use crate::models::mobilenet;
-        for family in ["horovod", "ps", "grpc+verbs", "horovod-mpi"] {
+        for family in ["horovod", "ps", "grpc+verbs", "horovod-mpi", "baidu", "baidu-mpi"] {
             let t = scenario_two_jobs(
                 presets::ri2(),
                 mobilenet::mobilenet_v1(),
@@ -471,7 +496,7 @@ mod tests {
             .unwrap();
             assert_eq!(t.rows.len(), 3, "{family}: solo/A/B rows");
         }
-        assert!(scenario_two_jobs(presets::ri2(), mobilenet::mobilenet_v1(), 4, 0.0, "baidu")
+        assert!(scenario_two_jobs(presets::ri2(), mobilenet::mobilenet_v1(), 4, 0.0, "gloo")
             .is_err());
         let g = ablation_cycle_grid("ri2", 4).unwrap();
         assert_eq!(g.rows.len(), 5);

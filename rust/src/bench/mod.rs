@@ -3,6 +3,7 @@
 //! emit as JSON).  `rust/benches/fig*.rs` are thin wrappers over these.
 
 pub mod figures;
+pub mod perf;
 pub mod table;
 
 pub use figures::*;

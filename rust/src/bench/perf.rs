@@ -1,0 +1,251 @@
+//! §Perf harness — `mpi-dnn-train perf`.
+//!
+//! Times representative simulator workloads and reports events/s + wall
+//! milliseconds, seeding the repo's engine-throughput trajectory
+//! (`BENCH_engine.json`).  Event *counts* are deterministic (the engine
+//! is bit-reproducible); wall times vary with the host, which is why the
+//! CI job that runs this is non-gating.
+//!
+//! Workloads:
+//!  * `engine-churn` — pure event-core throughput: schedule-and-serve
+//!    churn through the typed event heap, no strategy logic.
+//!  * `graph-replay` — one cached ring [`GraphTemplate`] replayed many
+//!    times under the neutral overlay: the build-once/replay-many path
+//!    every per-rank-skew iteration rides.
+//!  * `sweep-serialized` — fig9-style Horovod iterations (neutral
+//!    scenario → serialized `CommOp` replay), the path every figure
+//!    sweep point takes.
+//!  * `sweep-graph` — the same points under a straggler scenario, which
+//!    routes onto per-rank `CommGraph` execution (~`world`× the events).
+
+use std::time::Instant;
+
+use super::table::Table;
+use crate::cluster::presets;
+use crate::comm::allreduce::{shadow_steps, Algo};
+use crate::comm::graph::{ring_graph, GraphOverlay, GraphResources, GraphTemplate};
+use crate::comm::{MpiFlavor, MpiWorld};
+use crate::models::mobilenet;
+use crate::sim::{Engine, SimTime};
+use crate::strategies::{Horovod, Scenario, Strategy, WorldSpec};
+use crate::util::error::Result;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One timed workload: `events` is deterministic, `wall_ms` is not.
+#[derive(Debug, Clone)]
+pub struct PerfWorkload {
+    pub name: String,
+    pub detail: String,
+    pub runs: usize,
+    pub events: u64,
+    pub wall_ms: f64,
+}
+
+impl PerfWorkload {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / (self.wall_ms / 1e3).max(1e-9)
+    }
+}
+
+fn timed(name: &str, detail: String, runs: usize, body: impl FnOnce() -> u64) -> PerfWorkload {
+    let t0 = Instant::now();
+    let events = body();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    PerfWorkload { name: name.to_string(), detail, runs, events, wall_ms }
+}
+
+/// Run every workload.  `quick` shrinks sizes for CI smoke runs.
+pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
+    let mut out = Vec::new();
+
+    // --- 1. pure event-core churn --------------------------------------
+    let n: u64 = if quick { 50_000 } else { 200_000 };
+    let reps = if quick { 2 } else { 5 };
+    out.push(timed(
+        "engine-churn",
+        format!("{n} timers + {n} FIFO serves per run"),
+        reps,
+        || {
+            let mut events = 0u64;
+            for _ in 0..reps {
+                let mut e = Engine::new();
+                let r = e.resource(10.0, SimTime::ZERO);
+                for i in 0..n {
+                    e.at(SimTime(i * 10), move |e| {
+                        e.serve(r, 64.0, |_| {});
+                    });
+                }
+                e.run();
+                events += e.executed();
+            }
+            events
+        },
+    ));
+
+    // --- 2. cached-template graph replay -------------------------------
+    let p = if quick { 16 } else { 32 };
+    let replays = if quick { 20 } else { 100 };
+    let bytes = 4usize << 20;
+    let w = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+    let (_, mut ctx) = w.plan(bytes);
+    let (_, steps) = shadow_steps(Algo::Ring, p, bytes / 4, &mut ctx);
+    let template = GraphTemplate::new(ring_graph(p, &steps));
+    let nodes = template.graph().len();
+    let neutral = GraphOverlay::neutral();
+    out.push(timed(
+        "graph-replay",
+        format!("ring p={p} ({nodes} nodes) × {replays} replays of one template"),
+        replays,
+        || {
+            let mut events = 0u64;
+            for _ in 0..replays {
+                let mut e = Engine::new();
+                let res = GraphResources::install(&mut e, p);
+                template.execute(&mut e, res.mapper(), &neutral, Box::new(|_| {}));
+                e.run();
+                events += e.executed();
+            }
+            events
+        },
+    ));
+
+    // --- 3/4. fig9-style strategy sweeps --------------------------------
+    let worlds: &[usize] = if quick { &[16] } else { &[32, 64, 128] };
+    let passes = if quick { 1 } else { 3 };
+    let cluster = presets::piz_daint();
+    let model = mobilenet::mobilenet_v1();
+    let h = Horovod::mpi(MpiFlavor::CrayMpich);
+    let sweep = |sc: &Scenario| -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..passes {
+            for &world in worlds {
+                let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+                events += h.iteration_in(&ws, sc)?.engine_events;
+            }
+        }
+        Ok(events)
+    };
+
+    let neutral_sc = Scenario::default();
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "sweep-serialized",
+        format!("Horovod-MPI MobileNet pizdaint@{worlds:?} × {passes} passes, neutral"),
+        passes * worlds.len(),
+        || match sweep(&neutral_sc) {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
+    let straggler = Scenario::straggler(1, 1.5);
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "sweep-graph",
+        format!(
+            "Horovod-MPI MobileNet pizdaint@{worlds:?} × {passes} passes, straggler 1×1.5 \
+             (per-rank CommGraph path)"
+        ),
+        passes * worlds.len(),
+        || match sweep(&straggler) {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
+    Ok(out)
+}
+
+/// Render the workloads as the CLI table.
+pub fn perf_table(workloads: &[PerfWorkload], quick: bool) -> Table {
+    let title = if quick {
+        "Perf harness (quick): simulator throughput"
+    } else {
+        "Perf harness: simulator throughput"
+    };
+    let mut t = Table::new(title, &["workload", "runs", "events", "wall ms", "events/s"]);
+    for w in workloads {
+        t.row([
+            w.name.clone(),
+            w.runs.to_string(),
+            w.events.to_string(),
+            format!("{:.1}", w.wall_ms),
+            format!("{:.0}", w.events_per_sec()),
+        ]);
+    }
+    for w in workloads {
+        t.note(format!("{}: {}", w.name, w.detail));
+    }
+    t.note("event counts are deterministic; wall times vary with the host (non-gating in CI)");
+    t
+}
+
+/// The `BENCH_engine.json` payload.
+pub fn perf_json(workloads: &[PerfWorkload], quick: bool) -> Json {
+    obj(vec![
+        ("schema", s("mpi-dnn-train/bench-engine/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "workloads",
+            arr(workloads.iter().map(|w| {
+                obj(vec![
+                    ("name", s(&w.name)),
+                    ("detail", s(&w.detail)),
+                    ("runs", num(w.runs as f64)),
+                    ("events", num(w.events as f64)),
+                    ("wall_ms", num(w.wall_ms)),
+                    ("events_per_sec", num(w.events_per_sec())),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_perf_produces_all_workloads_with_events() {
+        let ws = run_perf(true).unwrap();
+        assert_eq!(ws.len(), 4);
+        for w in &ws {
+            assert!(w.events > 0, "{}: no events", w.name);
+            assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
+        }
+        // the graph path must schedule far more events than the
+        // serialized path on the same sweep points
+        let serialized = ws.iter().find(|w| w.name == "sweep-serialized").unwrap();
+        let graph = ws.iter().find(|w| w.name == "sweep-graph").unwrap();
+        assert!(
+            graph.events > 2 * serialized.events,
+            "graph sweep {} should dwarf serialized {}",
+            graph.events,
+            serialized.events
+        );
+        let t = perf_table(&ws, true);
+        assert_eq!(t.rows.len(), 4);
+        let j = perf_json(&ws, true);
+        assert_eq!(
+            j.get("schema").and_then(|v| v.as_str()),
+            Some("mpi-dnn-train/bench-engine/v1")
+        );
+        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+    }
+
+    #[test]
+    fn event_counts_are_deterministic() {
+        let a = run_perf(true).unwrap();
+        let b = run_perf(true).unwrap();
+        let ev = |v: &[PerfWorkload]| v.iter().map(|w| w.events).collect::<Vec<_>>();
+        assert_eq!(ev(&a), ev(&b));
+    }
+}

@@ -19,7 +19,7 @@
 use std::rc::Rc;
 
 use crate::comm::CostBreakdown;
-use crate::sim::{Engine, ResourceId, SimTime};
+use crate::sim::{Action, Engine, ProgStep, ResourceId, SimTime};
 
 /// Which resource class a [`CommOp`] occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -108,6 +108,25 @@ impl StepCost {
         s.push_step(&self.cost, self.gpu_reduce);
         s.ops
     }
+}
+
+/// The exact bit pattern of a step sequence — the "step-cost signature"
+/// part of a graph-template cache key (§Perf).  Two step sequences with
+/// the same signature produce byte-identical graphs, and any change to
+/// cluster, message size, derate or backend perturbs at least one f64
+/// bit, so a cache keyed on this can never serve a stale template.
+pub fn steps_sig(steps: &[StepCost]) -> Vec<u64> {
+    let mut sig = Vec::with_capacity(steps.len() * 7);
+    for st in steps {
+        sig.push(st.cost.wire_us.to_bits());
+        sig.push(st.cost.staging_us.to_bits());
+        sig.push(st.cost.reduce_us.to_bits());
+        sig.push(st.cost.driver_us.to_bits());
+        sig.push(st.cost.launch_us.to_bits());
+        sig.push(st.cost.sw_us.to_bits());
+        sig.push(st.gpu_reduce as u64);
+    }
+    sig
 }
 
 /// An ordered list of [`CommOp`]s — the schedule of one collective (or
@@ -274,38 +293,25 @@ impl ResourceUse {
     }
 }
 
-/// Replay a schedule onto the engine: op *i+1* starts when op *i*
-/// finishes service; each op queues FIFO on its backing resource.
-/// `done` fires when the last op completes.
-pub fn replay(
-    e: &mut Engine,
-    map: ResMap,
-    ops: Rc<Vec<CommOp>>,
-    done: Box<dyn FnOnce(&mut Engine)>,
-) {
-    replay_from(e, map, ops, 0, done);
+/// Resolve a schedule against a resource map into an engine program:
+/// each op becomes one [`ProgStep`] with its backing resource decided up
+/// front (maps are pure, so eager resolution equals the old lazy per-op
+/// lookup bit-for-bit).
+pub fn resolve_ops(ops: &[CommOp], map: &ResMap) -> Rc<[ProgStep]> {
+    ops.iter()
+        .map(|op| ProgStep { us: op.us, on: op.on.or_else(|| map(op.kind)) })
+        .collect::<Vec<_>>()
+        .into()
 }
 
-fn replay_from(
-    e: &mut Engine,
-    map: ResMap,
-    ops: Rc<Vec<CommOp>>,
-    i: usize,
-    done: Box<dyn FnOnce(&mut Engine)>,
-) {
-    let op = match ops.get(i) {
-        Some(&op) => op,
-        None => {
-            done(e);
-            return;
-        }
-    };
-    let target = op.on.or_else(|| map(op.kind));
-    let next = move |e: &mut Engine| replay_from(e, map, ops, i + 1, done);
-    match target {
-        Some(r) => e.serve_for(r, SimTime::from_us(op.us), next),
-        None => e.after(SimTime::from_us(op.us), next),
-    }
+/// Replay a schedule onto the engine: op *i+1* starts when op *i*
+/// finishes service; each op queues FIFO on its backing resource.
+/// `done` fires when the last op completes.  §Perf: this is a typed
+/// engine program — one `Copy` event per op — where the old
+/// implementation boxed a fresh continuation closure per op.
+pub fn replay(e: &mut Engine, map: ResMap, ops: Rc<Vec<CommOp>>, done: Action) {
+    let steps = resolve_ops(&ops, &map);
+    e.run_program(steps, done);
 }
 
 #[cfg(test)]

@@ -20,9 +20,21 @@
 //!    predecessor has finished.  Builders wire ring / halving-doubling /
 //!    tree / PS fan-in topologies.
 //!  * **Eligibility vs queueing** — eligibility is an engine *join*
-//!    ([`Engine::join`]); once eligible, a node's ops queue FIFO on its
-//!    rank's **node-local** resources ([`GraphResources`]: per-rank NIC,
-//!    PCIe link, GPU, …) instead of the one shared per-job proxy.
+//!    ([`Engine::join`]); once eligible, a node's ops run as a typed
+//!    engine program queueing FIFO on its rank's **node-local** resources
+//!    ([`GraphResources`]: per-rank NIC, PCIe link, GPU, …) instead of
+//!    the one shared per-job proxy.
+//!
+//! §Perf — build once, replay many: a [`GraphTemplate`] is an immutable
+//! built graph plus its precomputed successor/in-degree plan, cached in a
+//! [`TemplateCache`] keyed by `(algo, world, step-cost signature)`
+//! ([`crate::comm::commop::steps_sig`]).  Per-iteration variation — what
+//! the old code expressed by cloning the node vector and mutating op
+//! durations — is a [`GraphOverlay`]: multiplicative per-rank factors and
+//! per-node jitter leads applied at *execute* time, in the same order the
+//! mutators applied them, so replayed timings are bit-identical to a
+//! freshly built perturbed graph (pinned by `tests` here and the
+//! equivalence suites in `tests/des_regression.rs` / `proptest_lite.rs`).
 //!
 //! With uniform per-step durations (no scenario perturbation) the graph's
 //! completion time provably equals the serialized schedule's total: every
@@ -33,11 +45,13 @@
 //! ranks apart.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::comm::allreduce::Algo;
-use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse, StepCost};
-use crate::sim::{Engine, ResourceId, SimTime};
+use crate::comm::commop::{CommOp, ResKind, ResourceUse, StepCost};
+use crate::sim::{Action, Engine, ProgStep, ResourceId, SimTime};
 
 /// Handle to a node inside one [`CommGraph`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -62,7 +76,9 @@ impl GraphNode {
 
 /// A DAG of per-rank [`GraphNode`]s.  Nodes are created in topological
 /// order (dependencies always point backwards), which keeps execution and
-/// critical-path evaluation single-pass.
+/// critical-path evaluation single-pass.  A built graph is immutable in
+/// spirit: per-iteration perturbation goes through [`GraphOverlay`], not
+/// mutation, so one build can be replayed many times.
 #[derive(Debug, Clone, Default)]
 pub struct CommGraph {
     pub nodes: Vec<GraphNode>,
@@ -117,58 +133,10 @@ impl CommGraph {
         best
     }
 
-    /// Scale every op duration (Baidu's ring-pipeline amortization).
-    pub fn scale(&mut self, s: f64) {
-        for n in &mut self.nodes {
-            for op in &mut n.ops {
-                op.us *= s;
-            }
-        }
-    }
-
-    /// Scale every op of one rank's nodes — a straggler whose progress
-    /// engine, host and links all run slow.
-    pub fn scale_rank(&mut self, rank: usize, f: f64) {
-        for n in &mut self.nodes {
-            if n.rank == rank {
-                for op in &mut n.ops {
-                    op.us *= f;
-                }
-            }
-        }
-    }
-
-    /// Scale only the GPU-side ops (reduce kernel, launch, PCIe staging)
-    /// of one rank — a rank placed on an older GPU generation.
-    pub fn scale_rank_gpu(&mut self, rank: usize, f: f64) {
-        for n in &mut self.nodes {
-            if n.rank == rank {
-                for op in &mut n.ops {
-                    if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
-                        op.us *= f;
-                    }
-                }
-            }
-        }
-    }
-
-    /// Add per-node extra delay from a deterministic draw of
-    /// `(rank, step)` — OS/sync jitter at step granularity.  The delay is
-    /// prepended as an *unpinned* `Sw` op (per-rank pre-start stall), so
-    /// it never inflates the occupancy of a shared pinned resource — a
-    /// jittery worker delays itself, not the NIC queue behind it.
-    pub fn jitter_nodes(&mut self, draw: impl Fn(usize, u32) -> f64) {
-        for n in &mut self.nodes {
-            let j = draw(n.rank, n.step);
-            if j > 0.0 {
-                n.ops.insert(0, CommOp::fixed(ResKind::Sw, j));
-            }
-        }
-    }
-
     /// Prepend a root node every current source depends on — Horovod's
     /// rank-0 coordination round before the buffer's Allreduce.  Existing
-    /// step indices shift by one.
+    /// step indices shift by one.  (A template-build step, not a
+    /// per-iteration one.)
     pub fn prefix_root(&mut self, rank: usize, ops: Vec<CommOp>) {
         let mut nodes = Vec::with_capacity(self.nodes.len() + 1);
         nodes.push(GraphNode { rank, step: 0, ops, deps: Vec::new() });
@@ -366,6 +334,271 @@ pub fn unmapped() -> GraphResMap {
     Rc::new(|_, _| None)
 }
 
+/// Per-iteration execution overlay (§Perf): everything that may vary
+/// between iterations of one cached [`GraphTemplate`].  The template is
+/// immutable; the overlay carries multiplicative duration factors and a
+/// per-node lead delay, applied at execute time in the exact order the
+/// old clone-and-mutate path applied them —
+///
+///   1. `global` (Baidu's ring-pipeline amortization, ex-`scale`),
+///   2. per-rank all-op factor (stragglers, ex-`scale_rank`),
+///   3. per-rank GPU-side factor on `GpuReduce`/`Launch`/`Pcie` ops
+///      (hetero GPU generations, ex-`scale_rank_gpu`),
+///   4. a leading per-node stall resolved through the rank's `Sw`
+///      resource (OS/sync jitter, ex-`jitter_nodes`) —
+///
+/// so an overlay replay is bit-identical to executing a freshly built,
+/// mutated graph.  What is *baked into the template* instead: topology,
+/// dep edges, step indices, op kinds/pins, and unperturbed durations.
+#[derive(Clone)]
+pub struct GraphOverlay {
+    global: f64,
+    rank_all: Vec<f64>,
+    rank_gpu: Vec<f64>,
+    lead: Option<Rc<dyn Fn(usize, u32) -> f64>>,
+}
+
+/// `Default` is the neutral overlay (identity factors, no lead).
+impl Default for GraphOverlay {
+    fn default() -> GraphOverlay {
+        GraphOverlay::neutral()
+    }
+}
+
+impl GraphOverlay {
+    /// The identity overlay: replaying under it equals the bare template.
+    pub fn neutral() -> GraphOverlay {
+        GraphOverlay { global: 1.0, rank_all: Vec::new(), rank_gpu: Vec::new(), lead: None }
+    }
+
+    /// Multiply every op of every rank (pipeline amortization).
+    pub fn scale_global(&mut self, f: f64) {
+        self.global *= f;
+    }
+
+    /// Multiply every op of one rank — a straggler whose progress engine,
+    /// host and links all run slow.  (Out-of-`world` ranks have no nodes,
+    /// matching the old mutator's no-op; the factor table grows to cover
+    /// the largest `world` seen, so composed calls never drop a factor.)
+    pub fn scale_rank(&mut self, world: usize, rank: usize, f: f64) {
+        if self.rank_all.len() < world {
+            self.rank_all.resize(world, 1.0);
+        }
+        if let Some(s) = self.rank_all.get_mut(rank) {
+            *s *= f;
+        }
+    }
+
+    /// Multiply only the GPU-side ops (reduce kernel, launch, PCIe
+    /// staging) of one rank — a rank placed on an older GPU generation.
+    pub fn scale_rank_gpu(&mut self, world: usize, rank: usize, f: f64) {
+        if self.rank_gpu.len() < world {
+            self.rank_gpu.resize(world, 1.0);
+        }
+        if let Some(s) = self.rank_gpu.get_mut(rank) {
+            *s *= f;
+        }
+    }
+
+    /// Per-node extra lead delay from a deterministic `(rank, step)` draw
+    /// — OS/sync jitter at step granularity.  The delay occupies the
+    /// rank's own `Sw` resource (never a shared pinned one), so a jittery
+    /// worker delays itself, not the NIC queue behind it.
+    pub fn set_lead(&mut self, draw: impl Fn(usize, u32) -> f64 + 'static) {
+        self.lead = Some(Rc::new(draw));
+    }
+
+    pub fn is_neutral(&self) -> bool {
+        self.global == 1.0
+            && self.rank_all.is_empty()
+            && self.rank_gpu.is_empty()
+            && self.lead.is_none()
+    }
+
+    fn all_factor(&self, rank: usize) -> f64 {
+        self.rank_all.get(rank).copied().unwrap_or(1.0)
+    }
+
+    fn gpu_factor(&self, rank: usize) -> f64 {
+        self.rank_gpu.get(rank).copied().unwrap_or(1.0)
+    }
+
+    fn lead_us(&self, rank: usize, step: u32) -> f64 {
+        self.lead.as_ref().map_or(0.0, |f| f(rank, step))
+    }
+}
+
+impl std::fmt::Debug for GraphOverlay {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphOverlay")
+            .field("global", &self.global)
+            .field("rank_all", &self.rank_all)
+            .field("rank_gpu", &self.rank_gpu)
+            .field("lead", &self.lead.is_some())
+            .finish()
+    }
+}
+
+/// Resolve one node against the resource map and overlay into a typed
+/// engine program.  The multiplication order (global → rank → rank-GPU)
+/// replicates the old sequential `op.us *= f` mutations bit-for-bit, and
+/// `f * 1.0 == f` exactly, so a neutral overlay changes nothing.
+fn resolve_node(node: &GraphNode, map: &GraphResMap, ov: &GraphOverlay) -> Rc<[ProgStep]> {
+    let rank = node.rank;
+    let lead = ov.lead_us(rank, node.step);
+    let mut steps = Vec::with_capacity(node.ops.len() + usize::from(lead > 0.0));
+    if lead > 0.0 {
+        steps.push(ProgStep { us: lead, on: map(rank, ResKind::Sw) });
+    }
+    let all = ov.all_factor(rank);
+    let gpu = ov.gpu_factor(rank);
+    for op in &node.ops {
+        let mut us = op.us;
+        us *= ov.global;
+        us *= all;
+        if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
+            us *= gpu;
+        }
+        steps.push(ProgStep { us, on: op.on.or_else(|| map(rank, op.kind)) });
+    }
+    steps.into()
+}
+
+/// The precomputed execution plan of a graph: successor lists, in-degrees
+/// and the sink count — everything `execute` used to rebuild per run.
+#[derive(Debug)]
+struct GraphPlan {
+    succ: Vec<Vec<usize>>,
+    indeg: Vec<usize>,
+    sink_count: usize,
+}
+
+impl GraphPlan {
+    fn of(g: &CommGraph) -> GraphPlan {
+        let n = g.nodes.len();
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg: Vec<usize> = vec![0; n];
+        for (i, node) in g.nodes.iter().enumerate() {
+            for d in &node.deps {
+                succ[d.0].push(i);
+                indeg[i] += 1;
+            }
+        }
+        let sink_count = succ.iter().filter(|s| s.is_empty()).count();
+        GraphPlan { succ, indeg, sink_count }
+    }
+}
+
+/// An immutable, build-once graph plus its execution plan — the unit the
+/// strategies cache and replay (§Perf).  Executing a template never
+/// mutates it; per-iteration variation goes through [`GraphOverlay`].
+#[derive(Debug)]
+pub struct GraphTemplate {
+    graph: CommGraph,
+    plan: GraphPlan,
+}
+
+impl GraphTemplate {
+    pub fn new(graph: CommGraph) -> GraphTemplate {
+        let plan = GraphPlan::of(&graph);
+        GraphTemplate { graph, plan }
+    }
+
+    pub fn graph(&self) -> &CommGraph {
+        &self.graph
+    }
+
+    /// Execute the template now (source nodes release at the current
+    /// virtual time).  See [`GraphTemplate::execute_at`].
+    pub fn execute(
+        &self,
+        e: &mut Engine,
+        map: GraphResMap,
+        ov: &GraphOverlay,
+        done: Action,
+    ) -> Rc<RefCell<GraphRun>> {
+        let at = e.now();
+        self.execute_at(e, map, ov, at, done)
+    }
+
+    /// Execute the template with sources released at virtual time `at`
+    /// (>= now), under `ov`.  Each node becomes *eligible* when all its
+    /// predecessors complete (an [`Engine::join`]), then its resolved op
+    /// program queues FIFO on the resources `map` resolves for its rank.
+    /// `done` fires when every node has finished.  Source nodes release
+    /// in node order (deterministic FIFO ties).
+    pub fn execute_at(
+        &self,
+        e: &mut Engine,
+        map: GraphResMap,
+        ov: &GraphOverlay,
+        at: SimTime,
+        done: Action,
+    ) -> Rc<RefCell<GraphRun>> {
+        execute_planned(e, &self.graph, &self.plan, &map, ov, at, done)
+    }
+}
+
+/// A shared template-cache handle: clones of a strategy share one map,
+/// and the parallel sweep drivers may probe it from several threads.
+/// Keys are exact ([`TemplateKey`] embeds the full step-cost bit
+/// signature), so a hit can never be stale.
+#[derive(Debug, Clone, Default)]
+pub struct TemplateCache {
+    inner: Arc<Mutex<HashMap<TemplateKey, Arc<GraphTemplate>>>>,
+}
+
+/// Cache key of one built collective graph: algorithm tag, world size,
+/// and the exact bit signature of the per-step costs (plus any builder
+/// extras the caller appends, e.g. Horovod's coordination-root cost).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TemplateKey {
+    pub algo: u8,
+    pub world: usize,
+    pub sig: Vec<u64>,
+}
+
+impl TemplateKey {
+    pub fn allreduce(algo: Algo, world: usize, sig: Vec<u64>) -> TemplateKey {
+        let algo = match algo {
+            Algo::Tree => 0,
+            Algo::Ring => 1,
+            Algo::Rhd => 2,
+        };
+        TemplateKey { algo, world, sig }
+    }
+}
+
+impl TemplateCache {
+    /// Return the cached template for `key`, building (and caching) it
+    /// with `build` on a miss.  The build runs *outside* the lock: cold
+    /// parallel sweeps may build a key twice (first insert wins, the
+    /// duplicate is dropped) rather than serializing every thread on one
+    /// graph construction — and a panicking builder cannot poison the
+    /// cache for the surviving threads.
+    pub fn get_or_build(
+        &self,
+        key: TemplateKey,
+        build: impl FnOnce() -> CommGraph,
+    ) -> Arc<GraphTemplate> {
+        if let Some(hit) = self.inner.lock().expect("template cache poisoned").get(&key) {
+            return hit.clone();
+        }
+        let built = Arc::new(GraphTemplate::new(build()));
+        let mut m = self.inner.lock().expect("template cache poisoned");
+        m.entry(key).or_insert(built).clone()
+    }
+
+    /// Number of distinct templates built so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("template cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Node-local resources, one full bundle per rank: the wire NIC and PCIe
 /// link stop being one shared per-job proxy and become the rank's own
 /// (every paper cluster places one GPU per node, so rank ≡ node here).
@@ -456,16 +689,14 @@ impl GraphRun {
     }
 }
 
-/// Execute a graph on the engine: each node becomes *eligible* when all
-/// its predecessors complete (an [`Engine::join`]), then its ops queue
-/// FIFO on the resources `map` resolves for its rank.  `done` fires when
-/// every node has finished.  Source nodes release at the current virtual
-/// time, in node order (deterministic FIFO ties).
+/// Execute a graph on the engine under the neutral overlay — the
+/// one-shot path (plan rebuilt per call).  Cached replay goes through
+/// [`GraphTemplate::execute`].
 pub fn execute(
     e: &mut Engine,
     g: &CommGraph,
     map: GraphResMap,
-    done: Box<dyn FnOnce(&mut Engine)>,
+    done: Action,
 ) -> Rc<RefCell<GraphRun>> {
     let now = e.now();
     execute_at(e, g, map, now, done)
@@ -473,14 +704,29 @@ pub fn execute(
 
 /// [`execute`] with the source release deferred to virtual time `at`
 /// (>= now) — lets a caller wire up many graphs at setup time, each
-/// releasing when its data is ready (the PS strategy schedules one
-/// fan-in graph per parameter shard this way).
+/// releasing when its data is ready.
 pub fn execute_at(
     e: &mut Engine,
     g: &CommGraph,
     map: GraphResMap,
     at: SimTime,
-    done: Box<dyn FnOnce(&mut Engine)>,
+    done: Action,
+) -> Rc<RefCell<GraphRun>> {
+    let plan = GraphPlan::of(g);
+    execute_planned(e, g, &plan, &map, &GraphOverlay::neutral(), at, done)
+}
+
+/// The shared executor: wire joins from the (pre)computed plan, resolve
+/// each node against `map` + `ov` into a typed engine program, release
+/// sources at `at`.
+fn execute_planned(
+    e: &mut Engine,
+    g: &CommGraph,
+    plan: &GraphPlan,
+    map: &GraphResMap,
+    ov: &GraphOverlay,
+    at: SimTime,
+    done: Action,
 ) -> Rc<RefCell<GraphRun>> {
     let n = g.nodes.len();
     let run = Rc::new(RefCell::new(GraphRun {
@@ -491,38 +737,24 @@ pub fn execute_at(
         e.at(at, done);
         return run;
     }
-    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
-    let mut indeg: Vec<usize> = vec![0; n];
-    for (i, node) in g.nodes.iter().enumerate() {
-        for d in &node.deps {
-            succ[d.0].push(i);
-            indeg[i] += 1;
-        }
-    }
-    let sink_count = succ.iter().filter(|s| s.is_empty()).count();
-    let terminal = e.join(sink_count, done);
+    let terminal = e.join(plan.sink_count, done);
 
     // Joins must exist before the node actions that arrive at them are
     // built; nodes are created in topological order, so walking in
     // reverse guarantees every successor's join is already allocated.
     let mut joins = vec![None; n];
-    let mut sources: Vec<(usize, Box<dyn FnOnce(&mut Engine)>)> = Vec::new();
+    let mut sources: Vec<(usize, Action)> = Vec::new();
     for i in (0..n).rev() {
         let node = &g.nodes[i];
-        let rank = node.rank;
-        let ops = Rc::new(node.ops.clone());
+        let steps = resolve_node(node, map, ov);
         let succ_joins: Vec<_> =
-            succ[i].iter().map(|&j| joins[j].expect("topological order")).collect();
-        let map_i = map.clone();
+            plan.succ[i].iter().map(|&j| joins[j].expect("topological order")).collect();
         let run_i = run.clone();
         let action = move |e: &mut Engine| {
             run_i.borrow_mut().start[i] = e.now();
-            let rank_map: ResMap = Rc::new(move |k| map_i(rank, k));
             let run_done = run_i.clone();
-            replay(
-                e,
-                rank_map,
-                ops,
+            e.run_program(
+                steps,
                 Box::new(move |e| {
                     run_done.borrow_mut().finish[i] = e.now();
                     if succ_joins.is_empty() {
@@ -534,10 +766,10 @@ pub fn execute_at(
                 }),
             );
         };
-        if indeg[i] == 0 {
+        if plan.indeg[i] == 0 {
             sources.push((i, Box::new(action)));
         } else {
-            joins[i] = Some(e.join(indeg[i], action));
+            joins[i] = Some(e.join(plan.indeg[i], action));
         }
     }
     sources.sort_by_key(|&(i, _)| i);
@@ -567,6 +799,15 @@ mod tests {
         let mut e = Engine::new();
         let res = GraphResources::install(&mut e, ranks);
         let run = execute(&mut e, g, res.mapper(), Box::new(|_| {}));
+        let end = e.run();
+        let out = run.borrow().clone();
+        (end, out)
+    }
+
+    fn run_template(t: &GraphTemplate, ranks: usize, ov: &GraphOverlay) -> (SimTime, GraphRun) {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ranks);
+        let run = t.execute(&mut e, res.mapper(), ov, Box::new(|_| {}));
         let end = e.run();
         let out = run.borrow().clone();
         (end, out)
@@ -636,16 +877,16 @@ mod tests {
 
     #[test]
     fn straggler_skew_propagates_one_rank_per_step() {
-        // Ring p=4, 6 uniform 10us steps; rank 1 runs 2x slow.  The skew
-        // cone: a node (r, s) is delayed iff s >= ring-distance(1 -> r);
-        // outside the cone finish times match the pristine run exactly.
+        // Ring p=4, 6 uniform 10us steps; rank 1 runs 2x slow (overlay).
+        // The skew cone: a node (r, s) is delayed iff s >= ring-distance
+        // (1 -> r); outside the cone finish times match the pristine run.
         let p = 4;
         let steps = wire_steps(2 * (p - 1), 10.0);
-        let g0 = ring_graph(p, &steps);
-        let (_, base) = run_graph(&g0, p);
-        let mut g = g0.clone();
-        g.scale_rank(1, 2.0);
-        let (end, run) = run_graph(&g, p);
+        let t = GraphTemplate::new(ring_graph(p, &steps));
+        let (_, base) = run_template(&t, p, &GraphOverlay::neutral());
+        let mut ov = GraphOverlay::neutral();
+        ov.scale_rank(p, 1, 2.0);
+        let (end, run) = run_template(&t, p, &ov);
 
         let at = |r: usize, s: usize| NodeId(s * p + r); // ring builder layout
         // unaffected: early steps of downstream ranks
@@ -704,11 +945,12 @@ mod tests {
     }
 
     #[test]
-    fn jitter_is_additive_and_keyed_by_rank_step() {
+    fn jitter_lead_is_additive_and_keyed_by_rank_step() {
         let steps = wire_steps(2, 10.0);
-        let mut g = ring_graph(2, &steps);
-        g.jitter_nodes(|rank, step| if rank == 0 && step == 0 { 3.0 } else { 0.0 });
-        let (end, run) = run_graph(&g, 2);
+        let t = GraphTemplate::new(ring_graph(2, &steps));
+        let mut ov = GraphOverlay::neutral();
+        ov.set_lead(|rank, step| if rank == 0 && step == 0 { 3.0 } else { 0.0 });
+        let (end, run) = run_template(&t, 2, &ov);
         assert_eq!(run.finish_of(NodeId(0)), SimTime::from_us(13.0));
         // rank 1 step 1 depends on rank 0 step 0: jitter propagates
         assert_eq!(end, SimTime::from_us(23.0));
@@ -728,6 +970,114 @@ mod tests {
         let end = e.run();
         assert!(*fired.borrow());
         assert_eq!(end, SimTime::ZERO);
+    }
+
+    #[test]
+    fn template_replay_matches_one_shot_execute_bitwise() {
+        // the §Perf pin at graph level: executing a cached template under
+        // the neutral overlay reproduces the one-shot path exactly, and
+        // replaying the SAME template again gives the same trace
+        for p in [3usize, 8] {
+            let steps = wire_steps(2 * (p - 1), 9.5);
+            let g = ring_graph(p, &steps);
+            let (end0, run0) = run_graph(&g, p);
+            let t = GraphTemplate::new(g);
+            let (end1, run1) = run_template(&t, p, &GraphOverlay::neutral());
+            let (end2, run2) = run_template(&t, p, &GraphOverlay::neutral());
+            assert_eq!(end0, end1);
+            assert_eq!(run0.finish, run1.finish);
+            assert_eq!(end1, end2);
+            assert_eq!(run1.finish, run2.finish);
+        }
+    }
+
+    /// Materialize an overlay into a mutated graph the way the old
+    /// in-place perturbation API did — the oracle for overlay replay.
+    fn materialize(g: &CommGraph, ov_global: f64, all: &[f64], gpu: &[f64],
+                   lead: impl Fn(usize, u32) -> f64) -> CommGraph {
+        let mut out = g.clone();
+        for n in &mut out.nodes {
+            for op in &mut n.ops {
+                op.us *= ov_global;
+                op.us *= all.get(n.rank).copied().unwrap_or(1.0);
+                if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
+                    op.us *= gpu.get(n.rank).copied().unwrap_or(1.0);
+                }
+            }
+            let j = lead(n.rank, n.step);
+            if j > 0.0 {
+                n.ops.insert(0, CommOp::fixed(ResKind::Sw, j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn overlay_replay_equals_materialized_mutation() {
+        // straggler + hetero + jitter overlays on a mixed-kind ring must
+        // reproduce a freshly built mutated graph bit-for-bit
+        let p = 5;
+        let steps: Vec<StepCost> = (0..2 * (p - 1))
+            .map(|i| StepCost {
+                cost: CostBreakdown {
+                    wire_us: 7.0 + i as f64,
+                    staging_us: 1.5,
+                    reduce_us: 2.25,
+                    launch_us: 0.5,
+                    sw_us: 0.75,
+                    ..Default::default()
+                },
+                gpu_reduce: true,
+            })
+            .collect();
+        let g = ring_graph(p, &steps);
+        let lead = |rank: usize, step: u32| {
+            if (rank + step as usize) % 3 == 0 { 1.0 + rank as f64 * 0.37 } else { 0.0 }
+        };
+        let mut all = vec![1.0; p];
+        all[1] = 1.7;
+        let mut gpu = vec![1.0; p];
+        gpu[4] = 2.5;
+        gpu[1] = 1.3; // rank 1 is both straggler and on a slow GPU
+
+        let oracle = materialize(&g, 1.25, &all, &gpu, lead);
+        let (end_o, run_o) = run_graph(&oracle, p);
+
+        let t = GraphTemplate::new(g);
+        let mut ov = GraphOverlay::neutral();
+        ov.scale_global(1.25);
+        ov.scale_rank(p, 1, 1.7);
+        ov.scale_rank_gpu(p, 4, 2.5);
+        ov.scale_rank_gpu(p, 1, 1.3);
+        ov.set_lead(lead);
+        let (end_t, run_t) = run_template(&t, p, &ov);
+
+        assert_eq!(end_o, end_t, "overlay end diverged from materialized graph");
+        assert_eq!(run_o.finish, run_t.finish, "per-node finishes diverged");
+        assert_eq!(run_o.start, run_t.start, "per-node starts diverged");
+    }
+
+    #[test]
+    fn template_cache_hits_on_equal_keys_only() {
+        let cache = TemplateCache::default();
+        let steps = wire_steps(4, 10.0);
+        let sig = crate::comm::commop::steps_sig(&steps);
+        let t1 = cache.get_or_build(TemplateKey::allreduce(Algo::Ring, 3, sig.clone()), || {
+            ring_graph(3, &steps)
+        });
+        let t2 = cache.get_or_build(TemplateKey::allreduce(Algo::Ring, 3, sig.clone()), || {
+            panic!("must hit the cache")
+        });
+        assert!(Arc::ptr_eq(&t1, &t2), "same key must be pointer-cached");
+        assert_eq!(cache.len(), 1);
+        // different world or perturbed costs miss
+        cache.get_or_build(TemplateKey::allreduce(Algo::Ring, 4, sig), || ring_graph(4, &steps));
+        let steps2 = wire_steps(4, 10.000001);
+        let sig2 = crate::comm::commop::steps_sig(&steps2);
+        cache.get_or_build(TemplateKey::allreduce(Algo::Ring, 3, sig2), || {
+            ring_graph(3, &steps2)
+        });
+        assert_eq!(cache.len(), 3);
     }
 
     #[test]

@@ -18,8 +18,14 @@ pub mod nccl;
 pub mod ptrcache;
 pub mod verbs;
 
-pub use commop::{replay, CommOp, CommResources, CommSchedule, ResKind, ResMap, ResourceUse, StepCost};
-pub use graph::{allreduce_graph, ps_fanin_graph, CommGraph, GraphResources, NodeId};
+pub use commop::{
+    replay, resolve_ops, steps_sig, CommOp, CommResources, CommSchedule, ResKind, ResMap,
+    ResourceUse, StepCost,
+};
+pub use graph::{
+    allreduce_graph, ps_fanin_graph, CommGraph, GraphOverlay, GraphResources, GraphTemplate,
+    NodeId, TemplateCache, TemplateKey,
+};
 pub use mpi::{MpiFlavor, MpiWorld};
 pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};
 

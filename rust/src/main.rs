@@ -10,6 +10,7 @@
 //! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5
 //! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet --family ps
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
+//! mpi-dnn-train perf [--quick] [--out BENCH_engine.json]   # §Perf harness
 //! mpi-dnn-train validate               # artifacts + numerics smoke
 //! mpi-dnn-train list
 //! ```
@@ -60,12 +61,13 @@ fn run(args: Args) -> Result<()> {
         Some("ablation") => cmd_ablation(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("graph") => cmd_graph(&args),
+        Some("perf") => cmd_perf(&args),
         Some("validate") => cmd_validate(&args),
         Some("list") => cmd_list(&args),
         Some(other) => mpi_dnn_train::bail!("unknown subcommand `{other}` (see README)"),
         None => {
             println!(
-                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|graph|validate|list> [flags]"
+                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|graph|perf|validate|list> [flags]"
             );
             Ok(())
         }
@@ -226,14 +228,17 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     emit(&t, cfg.json_output);
     // `[scenario] second_job = true`: run the link-sharing co-tenant
     // tables on the sweep's largest point, one per configured strategy
-    // that has a runner (Horovod variants share the wire, PS transports
-    // the per-server NICs; Baidu has no runner yet and is skipped).
+    // that has a runner (Horovod variants and Baidu share the wire, PS
+    // transports the per-server NICs).
     if cfg.scenario.second_job {
         let world = *cfg.gpus.iter().max().unwrap();
         let offset = cfg.scenario.second_job_offset_us;
         for name in &cfg.strategies {
             let lower = name.to_ascii_lowercase();
-            if !(lower.starts_with("horovod") || lower.starts_with("grpc")) {
+            if !(lower.starts_with("horovod")
+                || lower.starts_with("grpc")
+                || lower.starts_with("baidu"))
+            {
                 println!("(two-jobs: no link-share runner for `{name}`, skipped)");
                 continue;
             }
@@ -366,11 +371,15 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 }
 
 /// Dump the per-rank execution timeline of one collective's `CommGraph`:
-/// which algorithm step finished when on every rank, with optional
-/// straggler/jitter perturbation to watch the skew cone propagate.
+/// when each node of each rank started and finished, with optional
+/// straggler/jitter perturbation to watch the skew cone propagate.  Runs
+/// through the §Perf cached-template path (an immutable `GraphTemplate`
+/// replayed under the scenario's overlay — the same code the strategies
+/// execute), and rows sort by (rank, start, step) so dumps are
+/// diff-stable across runs and display modes.
 fn cmd_graph(args: &Args) -> Result<()> {
     use mpi_dnn_train::comm::allreduce::{shadow_steps, Algo};
-    use mpi_dnn_train::comm::graph::{allreduce_graph, execute, GraphResources};
+    use mpi_dnn_train::comm::graph::{allreduce_graph, GraphResources, GraphTemplate};
     use mpi_dnn_train::comm::CommSchedule;
     use mpi_dnn_train::sim::Engine;
     use mpi_dnn_train::strategies::Scenario;
@@ -405,7 +414,7 @@ fn cmd_graph(args: &Args) -> Result<()> {
     let (report, steps) = shadow_steps(algo, ranks, (bytes / 4).max(1), &mut ctx);
     let serial_us = CommSchedule::from_steps(&steps).total_us();
 
-    let mut g = allreduce_graph(algo, ranks, &steps);
+    let template = GraphTemplate::new(allreduce_graph(algo, ranks, &steps));
     let sc = Scenario {
         straggler_ranks: straggler,
         straggler_factor: factor,
@@ -413,13 +422,14 @@ fn cmd_graph(args: &Args) -> Result<()> {
         seed,
         ..Scenario::default()
     };
-    sc.perturb_graph(&mut g, ranks, 0);
+    let overlay = sc.overlay(ranks, 0);
 
     let mut e = Engine::new();
     let res = GraphResources::install(&mut e, ranks);
-    let run = execute(&mut e, &g, res.mapper(), Box::new(|_| {}));
+    let run = template.execute(&mut e, res.mapper(), &overlay, Box::new(|_| {}));
     let end = e.run();
     let run = run.borrow();
+    let g = template.graph();
 
     let title = format!(
         "CommGraph timeline: {:?} allreduce of {} across {ranks} ranks ({}, {})",
@@ -428,34 +438,26 @@ fn cmd_graph(args: &Args) -> Result<()> {
         cluster.name,
         flavor.name()
     );
+    // per-rank timelines, one row per node, sorted by (rank, start, step)
+    // — stable under both perturbation and display width
+    let mut order: Vec<usize> = (0..g.len()).collect();
+    order.sort_by_key(|&i| (g.nodes[i].rank, run.start[i], g.nodes[i].step));
     let mut table = if ranks <= 16 {
-        // per-step × per-rank finish times (µs); "-" where a rank has no
-        // node at that step (tree phases, RHD pre/post)
-        let max_step = g.nodes.iter().map(|n| n.step).max().unwrap_or(0);
-        let mut cells = vec![vec![None; ranks]; max_step as usize + 1];
-        for (i, node) in g.nodes.iter().enumerate() {
-            cells[node.step as usize][node.rank] = Some(run.finish[i]);
-        }
-        let mut headers = vec!["step".to_string()];
-        headers.extend((0..ranks).map(|r| format!("r{r}")));
-        let mut t =
-            Table::new(&title, &headers.iter().map(|h| h.as_str()).collect::<Vec<_>>());
-        for (s, row) in cells.iter().enumerate() {
-            let mut out = vec![s.to_string()];
-            for c in row {
-                out.push(match c {
-                    Some(ts) => format!("{:.1}", ts.as_us()),
-                    None => "-".into(),
-                });
-            }
-            t.row(out);
+        let mut t = Table::new(&title, &["rank", "step", "start", "finish"]);
+        for &i in &order {
+            t.row([
+                format!("r{}", g.nodes[i].rank),
+                g.nodes[i].step.to_string(),
+                format!("{:.1}", run.start[i].as_us()),
+                format!("{:.1}", run.finish[i].as_us()),
+            ]);
         }
         t
     } else {
-        // wide worlds: per-rank summary
+        // wide worlds: per-rank summary (one row per rank, rank-sorted)
         let mut t = Table::new(&title, &["rank", "nodes", "first start", "last finish"]);
         for r in 0..ranks {
-            let ids: Vec<usize> = (0..g.nodes.len()).filter(|&i| g.nodes[i].rank == r).collect();
+            let ids: Vec<usize> = (0..g.len()).filter(|&i| g.nodes[i].rank == r).collect();
             let first = ids.iter().map(|&i| run.start[i]).min().unwrap_or_default();
             let last = ids.iter().map(|&i| run.finish[i]).max().unwrap_or_default();
             t.row([
@@ -478,10 +480,28 @@ fn cmd_graph(args: &Args) -> Result<()> {
     if sc.per_rank_skew() {
         table.note(format!(
             "perturbed: {straggler} straggler rank(s) ×{factor}, jitter ≤{jitter}us (seed {seed}) — \
-             deterministic, same seed ⇒ same timeline"
+             deterministic, same seed ⇒ same timeline (cached-template replay)"
         ));
     }
     emit(&table, json);
+    Ok(())
+}
+
+/// §Perf harness: time representative simulator workloads and write
+/// `BENCH_engine.json` (events/s + wall-ms per workload) — the repo's
+/// engine-throughput trajectory.
+fn cmd_perf(args: &Args) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let json = args.get_bool("json");
+    let out = args.get_or("out", "BENCH_engine.json");
+    args.reject_unknown().map_err(Error::msg)?;
+
+    let workloads = bench::perf::run_perf(quick)?;
+    let table = bench::perf::perf_table(&workloads, quick);
+    emit(&table, json);
+    let payload = bench::perf::perf_json(&workloads, quick).to_string() + "\n";
+    std::fs::write(&out, payload).context(format!("writing {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -549,10 +569,11 @@ fn cmd_list(args: &Args) -> Result<()> {
     );
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
-        "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|ps] \
+        "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps] \
          (see `scenario --help` flags)"
     );
     println!("graph: per-rank CommGraph timelines (--algo auto|ring|rhd|tree, --straggler, --jitter-us)");
+    println!("perf: engine/graph-replay/sweep throughput harness (--quick; writes BENCH_engine.json)");
     Ok(())
 }
 

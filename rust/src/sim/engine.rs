@@ -1,8 +1,14 @@
 //! Event heap + FIFO resources — the core of the cluster simulator.
 //!
-//! Events are `FnOnce(&mut Engine)` closures ordered by (time, sequence);
-//! the sequence number makes simultaneous events fire in scheduling order,
-//! which is what makes whole-cluster runs bit-reproducible.
+//! Events are *typed* (§Perf): the heap entry carries an [`EventKind`]
+//! ordered by (time, sequence) — the sequence number makes simultaneous
+//! events fire in scheduling order, which is what makes whole-cluster
+//! runs bit-reproducible.  The hot-path primitives (op-program steps,
+//! gate grants, join firings) schedule `Copy` variants, so steady-state
+//! event traffic allocates nothing on the heap; `Call` is the rare
+//! fallback for arbitrary closures (setup events, strategy callbacks).
+//! One-shot state (op programs) lives in a slab with a generational
+//! free-list, so slots recycle instead of growing per collective.
 //!
 //! `Resource` models a serialized server (a NIC, a PCIe link, a single
 //! gRPC service thread): `serve()` requests are queued FIFO and each
@@ -12,19 +18,47 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::rc::Rc;
 
 use super::time::SimTime;
 
-type Action = Box<dyn FnOnce(&mut Engine)>;
+/// A boxed engine callback — the *fallback* event payload (and the
+/// storage form of gate waiters, join actions and program completions,
+/// which are allocated once per collective/node, not once per event).
+pub type Action = Box<dyn FnOnce(&mut Engine)>;
 
-/// Heap entry carrying its action inline (§Perf: the original design
-/// parked actions in a HashMap side table keyed by seq — one hash insert
-/// + one hash remove per event; inlining them into the heap entry with an
-/// order that ignores the closure removed both).
+/// One resolved step of an event program (see [`Engine::run_program`]):
+/// occupy `on` FIFO — or elapse as uncontended delay when `None` — for
+/// `us` microseconds.  Durations stay in f64 µs so callers can apply
+/// overlay scale factors *before* the ns conversion, bit-identically to
+/// scaling the source op list.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgStep {
+    pub us: f64,
+    pub on: Option<ResourceId>,
+}
+
+/// Typed event payload.  Hot-path variants are `Copy`; only `Call`
+/// carries an allocation (made by the caller, once, for an arbitrary
+/// closure).  The ordering of the heap ignores the payload entirely.
+enum EventKind {
+    /// Rare fallback: an arbitrary boxed closure ([`Engine::at`]).
+    Call(Action),
+    /// A join whose final `arrive` happened: fire its stored action.
+    FireJoin(JoinId),
+    /// A gate grant: run the front waiter of the gate.
+    Grant(GateId),
+    /// Advance program `slot` (stale generations are a wiring bug).
+    Prog { slot: u32, gen: u32 },
+}
+
+/// Heap entry.  §Perf: the original design boxed a closure per event;
+/// typed payloads keep the entry `Copy`-sized on the hot path and the
+/// order comparison never looks at the payload.
 struct Event {
     at: SimTime,
     seq: u64,
-    action: Action,
+    kind: EventKind,
 }
 
 impl PartialEq for Event {
@@ -65,9 +99,14 @@ struct ResourceState {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GateId(usize);
 
-/// Handle to a dependency join (see [`Engine::join`]).
+/// Handle to a dependency join (see [`Engine::join`]).  Generational:
+/// join slots recycle once fired, and a stale handle is a detected bug
+/// rather than silent corruption.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct JoinId(usize);
+pub struct JoinId {
+    slot: u32,
+    gen: u32,
+}
 
 /// A join is the *eligibility* primitive of dependency-graph scheduling:
 /// its action fires once all `count` predecessors have called `arrive`.
@@ -75,6 +114,7 @@ pub struct JoinId(usize);
 /// queueing are deliberately separate (a `CommGraph` node first becomes
 /// eligible here, then its ops queue on per-rank resources).
 struct JoinState {
+    gen: u32,
     remaining: usize,
     action: Option<Action>,
 }
@@ -95,6 +135,17 @@ struct GateState {
     busy_time: SimTime,
 }
 
+/// One in-flight op program: a shared immutable step list (a template
+/// resolution — the `Rc` is a clone, not a rebuild), a cursor, and the
+/// completion to run after the last step.  Slots recycle through
+/// `prog_free` with a generation bump.
+struct ProgState {
+    gen: u32,
+    next: u32,
+    steps: Rc<[ProgStep]>,
+    done: Option<Action>,
+}
+
 /// Discrete-event engine with a virtual clock.
 #[derive(Default)]
 pub struct Engine {
@@ -104,6 +155,9 @@ pub struct Engine {
     resources: Vec<ResourceState>,
     gates: Vec<GateState>,
     joins: Vec<JoinState>,
+    join_free: Vec<u32>,
+    progs: Vec<ProgState>,
+    prog_free: Vec<u32>,
     executed: u64,
 }
 
@@ -122,12 +176,17 @@ impl Engine {
         self.executed
     }
 
-    /// Schedule `action` at absolute time `at` (>= now).
-    pub fn at(&mut self, at: SimTime, action: impl FnOnce(&mut Engine) + 'static) {
+    /// The allocation-free scheduling primitive every typed path uses.
+    fn push_event(&mut self, at: SimTime, kind: EventKind) {
         debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Event { at, seq, action: Box::new(action) }));
+        self.heap.push(Reverse(Event { at, seq, kind }));
+    }
+
+    /// Schedule `action` at absolute time `at` (>= now).
+    pub fn at(&mut self, at: SimTime, action: impl FnOnce(&mut Engine) + 'static) {
+        self.push_event(at, EventKind::Call(Box::new(action)));
     }
 
     /// Schedule `action` after a delay.
@@ -140,7 +199,18 @@ impl Engine {
         while let Some(Reverse(ev)) = self.heap.pop() {
             self.now = ev.at;
             self.executed += 1;
-            (ev.action)(self);
+            match ev.kind {
+                EventKind::Call(action) => action(self),
+                EventKind::FireJoin(j) => self.fire_join(j),
+                EventKind::Grant(g) => self.fire_grant(g),
+                EventKind::Prog { slot, gen } => {
+                    // a real assert (one u32 compare): a stale handle must
+                    // be a detected bug in release builds too, never a
+                    // silently-advanced recycled program
+                    assert_eq!(self.progs[slot as usize].gen, gen, "stale program event");
+                    self.advance_program(slot);
+                }
+            }
         }
         self.now
     }
@@ -159,17 +229,37 @@ impl Engine {
         ResourceId(self.resources.len() - 1)
     }
 
+    /// Rate-derived transfer time of `bytes` on `r`, *excluding* the
+    /// fixed overhead — the single formula [`Engine::serve`] and
+    /// [`Engine::peek_completion`] both consult, so the analytic shortcut
+    /// cannot drift from the served path.
+    fn transfer_time(&self, r: ResourceId, bytes: f64) -> SimTime {
+        SimTime::from_us(bytes / self.resources[r.0].rate_bytes_per_us)
+    }
+
+    /// Shared enqueue accounting of every FIFO request (`serve`,
+    /// `serve_for`, program steps): start at max(busy_until, now), occupy
+    /// for `dur` plus the resource's fixed overhead, schedule `kind` at
+    /// completion.
+    fn occupy(&mut self, r: ResourceId, dur: SimTime, kind: EventKind) {
+        let end = {
+            let state = &mut self.resources[r.0];
+            let service = dur + state.overhead;
+            let start = state.busy_until.max(self.now);
+            let end = start + service;
+            state.busy_until = end;
+            state.served += 1;
+            state.busy_time += service;
+            end
+        };
+        self.push_event(end, kind);
+    }
+
     /// Enqueue a `bytes`-sized request on resource `r`; `done` fires when
     /// the request finishes service (FIFO order, serialized).
     pub fn serve(&mut self, r: ResourceId, bytes: f64, done: impl FnOnce(&mut Engine) + 'static) {
-        let state = &mut self.resources[r.0];
-        let start = state.busy_until.max(self.now);
-        let service = SimTime::from_us(bytes / state.rate_bytes_per_us) + state.overhead;
-        let end = start + service;
-        state.busy_until = end;
-        state.served += 1;
-        state.busy_time += service;
-        self.at(end, done);
+        let dur = self.transfer_time(r, bytes);
+        self.occupy(r, dur, EventKind::Call(Box::new(done)));
     }
 
     /// A serialized resource with no rate semantics: requests occupy it
@@ -184,14 +274,62 @@ impl Engine {
     /// the resource's fixed overhead); `done` fires at completion.  FIFO
     /// with respect to `serve` requests on the same resource.
     pub fn serve_for(&mut self, r: ResourceId, dur: SimTime, done: impl FnOnce(&mut Engine) + 'static) {
-        let state = &mut self.resources[r.0];
-        let start = state.busy_until.max(self.now);
-        let service = dur + state.overhead;
-        let end = start + service;
-        state.busy_until = end;
-        state.served += 1;
-        state.busy_time += service;
-        self.at(end, done);
+        self.occupy(r, dur, EventKind::Call(Box::new(done)));
+    }
+
+    /// Run an op program: step *i+1* starts when step *i* finishes
+    /// service (each step queues FIFO on its resource, or elapses as a
+    /// pure delay), and `done` runs synchronously after the last step —
+    /// exactly the old closure-chain `replay` semantics, with one typed
+    /// `Copy` event per step instead of one boxed closure per step.  An
+    /// empty program runs `done` immediately.
+    pub fn run_program(&mut self, steps: Rc<[ProgStep]>, done: Action) {
+        let slot = match self.prog_free.pop() {
+            Some(s) => {
+                let st = &mut self.progs[s as usize];
+                st.steps = steps;
+                st.next = 0;
+                st.done = Some(done);
+                s
+            }
+            None => {
+                self.progs.push(ProgState { gen: 0, next: 0, steps, done: Some(done) });
+                (self.progs.len() - 1) as u32
+            }
+        };
+        self.advance_program(slot);
+    }
+
+    fn advance_program(&mut self, slot: u32) {
+        let next = {
+            let st = &mut self.progs[slot as usize];
+            let i = st.next as usize;
+            if i < st.steps.len() {
+                st.next += 1;
+                Some((st.steps[i], st.gen))
+            } else {
+                None
+            }
+        };
+        match next {
+            Some((step, gen)) => {
+                let kind = EventKind::Prog { slot, gen };
+                match step.on {
+                    Some(r) => self.occupy(r, SimTime::from_us(step.us), kind),
+                    None => self.push_event(self.now + SimTime::from_us(step.us), kind),
+                }
+            }
+            None => {
+                let done = {
+                    let st = &mut self.progs[slot as usize];
+                    let done = st.done.take().expect("program finished twice");
+                    st.gen = st.gen.wrapping_add(1);
+                    done
+                };
+                self.prog_free.push(slot);
+                done(self);
+            }
+        }
     }
 
     /// Create a FIFO gate (open, no waiters).
@@ -210,43 +348,52 @@ impl Engine {
     /// Waiters are granted in arrival order; a grant fires through the
     /// event heap so ties stay deterministic.
     pub fn acquire(&mut self, g: GateId, action: impl FnOnce(&mut Engine) + 'static) {
-        if self.gates[g.0].busy {
-            self.gates[g.0].waiters.push_back(Box::new(action));
-            return;
-        }
         let now = self.now;
-        {
+        let granted = {
             let st = &mut self.gates[g.0];
-            st.busy = true;
-            st.acquired_at = now;
-            st.grants += 1;
+            st.waiters.push_back(Box::new(action));
+            if st.busy {
+                false
+            } else {
+                st.busy = true;
+                st.acquired_at = now;
+                st.grants += 1;
+                true
+            }
+        };
+        if granted {
+            self.push_event(now, EventKind::Grant(g));
         }
-        self.at(now, action);
     }
 
     /// Release gate `g`, granting the next waiter (if any) at the current
     /// virtual time.
     pub fn release(&mut self, g: GateId) {
         let now = self.now;
-        let next = {
+        let grant = {
             let st = &mut self.gates[g.0];
             debug_assert!(st.busy, "release of a free gate");
             st.busy_time += now.saturating_sub(st.acquired_at);
-            match st.waiters.pop_front() {
-                Some(next) => {
-                    st.acquired_at = now;
-                    st.grants += 1;
-                    Some(next)
-                }
-                None => {
-                    st.busy = false;
-                    None
-                }
+            if st.waiters.is_empty() {
+                st.busy = false;
+                false
+            } else {
+                st.acquired_at = now;
+                st.grants += 1;
+                true
             }
         };
-        if let Some(next) = next {
-            self.at(now, next);
+        if grant {
+            self.push_event(now, EventKind::Grant(g));
         }
+    }
+
+    fn fire_grant(&mut self, g: GateId) {
+        // waiters only leave the queue here, and at most one grant event
+        // is in flight per gate, so the front waiter at grant-schedule
+        // time is still the front now.
+        let action = self.gates[g.0].waiters.pop_front().expect("grant with no waiter");
+        action(self);
     }
 
     /// (grants so far, cumulative held time) — gate utilization.
@@ -259,30 +406,61 @@ impl Engine {
     /// the virtual time of the final arrival — once [`Engine::arrive`] has
     /// been called `count` times.  The firing goes through the event heap,
     /// so simultaneous joins resolve in arrival order (deterministic).
+    /// Join slots recycle after firing (generational free-list).
     pub fn join(&mut self, count: usize, action: impl FnOnce(&mut Engine) + 'static) -> JoinId {
         assert!(count > 0, "a join needs at least one dependency");
-        self.joins.push(JoinState { remaining: count, action: Some(Box::new(action)) });
-        JoinId(self.joins.len() - 1)
+        let action: Action = Box::new(action);
+        match self.join_free.pop() {
+            Some(slot) => {
+                let st = &mut self.joins[slot as usize];
+                st.remaining = count;
+                st.action = Some(action);
+                JoinId { slot, gen: st.gen }
+            }
+            None => {
+                self.joins.push(JoinState { gen: 0, remaining: count, action: Some(action) });
+                JoinId { slot: (self.joins.len() - 1) as u32, gen: 0 }
+            }
+        }
     }
 
     /// Record one predecessor completion on join `j`.
     pub fn arrive(&mut self, j: JoinId) {
-        let st = &mut self.joins[j.0];
-        debug_assert!(st.remaining > 0, "arrive on an already-fired join");
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            let action = st.action.take().expect("join fired twice");
+        let fire = {
+            let st = &mut self.joins[j.slot as usize];
+            // real assert: with slot recycling, a stale arrival would
+            // otherwise corrupt an unrelated join's countdown in release
+            assert_eq!(st.gen, j.gen, "arrive on a recycled join");
+            debug_assert!(st.remaining > 0, "arrive on an already-fired join");
+            st.remaining -= 1;
+            st.remaining == 0
+        };
+        if fire {
             let now = self.now;
-            self.at(now, action);
+            self.push_event(now, EventKind::FireJoin(j));
         }
+    }
+
+    fn fire_join(&mut self, j: JoinId) {
+        let action = {
+            let st = &mut self.joins[j.slot as usize];
+            assert_eq!(st.gen, j.gen, "stale join firing");
+            let action = st.action.take().expect("join fired twice");
+            st.gen = st.gen.wrapping_add(1);
+            action
+        };
+        self.join_free.push(j.slot);
+        action(self);
     }
 
     /// When would a `bytes` request complete if enqueued now (without
     /// actually enqueuing)?  Used by analytic shortcuts in the strategies.
+    /// Shares [`Engine::transfer_time`] (and the overhead term) with the
+    /// served path, so the two cannot drift.
     pub fn peek_completion(&self, r: ResourceId, bytes: f64) -> SimTime {
         let state = &self.resources[r.0];
         let start = state.busy_until.max(self.now);
-        start + SimTime::from_us(bytes / state.rate_bytes_per_us) + state.overhead
+        start + self.transfer_time(r, bytes) + state.overhead
     }
 
     /// (requests served, cumulative busy time) — utilization metrics.
@@ -393,6 +571,20 @@ mod tests {
     }
 
     #[test]
+    fn peek_matches_served_completion_including_overhead() {
+        // the shared service formula: what peek predicts is exactly when
+        // the served request completes, overhead included
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::from_us(2.5));
+        let predicted = e.peek_completion(r, 100.0);
+        let done = Rc::new(RefCell::new(SimTime::ZERO));
+        let d2 = done.clone();
+        e.serve(r, 100.0, move |e| *d2.borrow_mut() = e.now());
+        e.run();
+        assert_eq!(*done.borrow(), predicted);
+    }
+
+    #[test]
     fn serve_for_occupies_exact_duration() {
         let mut e = Engine::new();
         let r = e.unit_resource();
@@ -408,6 +600,74 @@ mod tests {
         let (served, busy) = e.resource_stats(r);
         assert_eq!(served, 2);
         assert_eq!(busy, SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn program_runs_steps_in_order_with_fifo_queueing() {
+        // a program's pinned steps queue FIFO behind other traffic; the
+        // unpinned step elapses in parallel with nothing blocking it
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        e.serve_for(r, SimTime::from_us(5.0), |_| {}); // background occupancy
+        let end = Rc::new(RefCell::new(0.0));
+        let e2 = end.clone();
+        let steps: Rc<[ProgStep]> = vec![
+            ProgStep { us: 3.0, on: Some(r) }, // starts at 5 (FIFO), ends 8
+            ProgStep { us: 2.0, on: None },    // pure delay → 10
+            ProgStep { us: 1.0, on: Some(r) }, // resource free → 11
+        ]
+        .into();
+        e.run_program(steps, Box::new(move |e| *e2.borrow_mut() = e.now().as_us()));
+        e.run();
+        assert!((*end.borrow() - 11.0).abs() < 1e-9);
+        let (served, busy) = e.resource_stats(r);
+        assert_eq!(served, 3);
+        assert_eq!(busy, SimTime::from_us(9.0));
+    }
+
+    #[test]
+    fn empty_program_completes_synchronously() {
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(false));
+        let f = fired.clone();
+        let steps: Rc<[ProgStep]> = Vec::new().into();
+        e.run_program(steps, Box::new(move |_| *f.borrow_mut() = true));
+        assert!(*fired.borrow(), "empty program must complete without events");
+        assert_eq!(e.run(), SimTime::ZERO);
+        assert_eq!(e.executed(), 0);
+    }
+
+    #[test]
+    fn program_slots_recycle() {
+        // sequential programs reuse one slab slot (generational free-list)
+        let mut e = Engine::new();
+        let steps: Rc<[ProgStep]> = vec![ProgStep { us: 1.0, on: None }].into();
+        for _ in 0..3 {
+            e.run_program(steps.clone(), Box::new(|_| {}));
+            e.run();
+        }
+        assert_eq!(e.progs.len(), 1, "sequential programs must share a slot");
+        assert_eq!(e.progs[0].gen, 3);
+        // two concurrent programs need two slots
+        e.run_program(steps.clone(), Box::new(|_| {}));
+        e.run_program(steps, Box::new(|_| {}));
+        e.run();
+        assert_eq!(e.progs.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_programs_events_count_one_per_step() {
+        let mut e = Engine::new();
+        let steps: Rc<[ProgStep]> = vec![
+            ProgStep { us: 1.0, on: None },
+            ProgStep { us: 1.0, on: None },
+        ]
+        .into();
+        for _ in 0..5 {
+            e.run_program(steps.clone(), Box::new(|_| {}));
+        }
+        e.run();
+        assert_eq!(e.executed(), 10, "one event per program step");
     }
 
     #[test]
@@ -457,6 +717,20 @@ mod tests {
         e.after(SimTime::from_us(12.0), move |e| e.arrive(j));
         e.run();
         assert_eq!(*fired.borrow(), vec![12.0]);
+    }
+
+    #[test]
+    fn join_slots_recycle_with_fresh_generation() {
+        let mut e = Engine::new();
+        let j1 = e.join(1, |_| {});
+        e.arrive(j1);
+        e.run();
+        let j2 = e.join(1, |_| {});
+        // the slot is reused, the generation is not
+        assert_eq!(e.joins.len(), 1);
+        assert_ne!(j1, j2);
+        e.arrive(j2);
+        e.run();
     }
 
     #[test]

@@ -12,5 +12,5 @@
 pub mod engine;
 pub mod time;
 
-pub use engine::{Engine, GateId, JoinId, ResourceId};
+pub use engine::{Action, Engine, GateId, JoinId, ProgStep, ResourceId};
 pub use time::SimTime;

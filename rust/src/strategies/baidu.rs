@@ -11,6 +11,7 @@
 //! Horovod's fusion buffers serialize.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
@@ -18,10 +19,10 @@ use crate::util::error::Result;
 use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::comm::allreduce::Algo;
-use crate::comm::commop::{replay, CommResources, CommSchedule, StepCost};
-use crate::comm::graph::{ring_graph, GraphResources};
+use crate::comm::commop::{replay, steps_sig, CommOp, CommResources, CommSchedule, StepCost};
+use crate::comm::graph::{ring_graph, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, GateId, SimTime};
 
 #[derive(Debug, Clone)]
 pub struct Baidu {
@@ -31,11 +32,22 @@ pub struct Baidu {
     pub runtime_tax: f64,
     /// Per-iteration synchronization skew, µs per rank (see horovod.rs).
     pub skew_us_per_rank: f64,
+    /// Build-once/replay-many ring templates (§Perf), keyed by
+    /// `(ring, world, step-cost signature)`; tensors bucket by size, so
+    /// a per-tensor iteration builds one graph per distinct tensor size.
+    /// The pipeline-amortization scale is per-iteration overlay state,
+    /// not part of the template.
+    pub cache: TemplateCache,
 }
 
 impl Baidu {
     pub fn new() -> Baidu {
-        Baidu { flavor: MpiFlavor::Mvapich2, runtime_tax: 0.05, skew_us_per_rank: 550.0 }
+        Baidu {
+            flavor: MpiFlavor::Mvapich2,
+            runtime_tax: 0.05,
+            skew_us_per_rank: 550.0,
+            cache: TemplateCache::default(),
+        }
     }
 
     pub fn with_flavor(flavor: MpiFlavor) -> Baidu {
@@ -89,7 +101,9 @@ impl Baidu {
     /// dependency graph (see `Horovod::iteration_graph`); `iteration_in`
     /// routes here when the scenario skews individual ranks, and the
     /// neutral-scenario equivalence with the serialized replay is pinned
-    /// by `tests/des_regression.rs`.
+    /// by `tests/des_regression.rs`.  §Perf: rings are cached templates
+    /// per tensor-size bucket; the pipeline amortization is the overlay's
+    /// global scale, applied at replay time.
     pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
@@ -101,14 +115,21 @@ impl Baidu {
         let thread = e.gate();
         let readiness = ws.tensor_readiness();
         let mut items = Vec::with_capacity(readiness.len());
+        let mut per_bytes: HashMap<usize, (Vec<StepCost>, f64, f64)> = HashMap::new();
         for (i, ready) in readiness {
             let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[i].bytes();
-            let (steps, scale, staging) = self.ring_steps(ws, sc, bytes);
-            let mut g = ring_graph(ws.world, &steps);
-            g.scale(scale);
-            sc.perturb_graph(&mut g, ws.world, i as u64);
-            items.push((ready, g, staging));
+            let (steps, scale, staging) = per_bytes
+                .entry(bytes)
+                .or_insert_with(|| self.ring_steps(ws, sc, bytes));
+            let template = self
+                .cache
+                .get_or_build(TemplateKey::allreduce(Algo::Ring, ws.world, steps_sig(steps)), || {
+                    ring_graph(ws.world, steps)
+                });
+            let mut overlay = sc.overlay(ws.world, i as u64);
+            overlay.scale_global(*scale);
+            items.push(super::GraphWork { ready, template, overlay, staging_us: *staging });
         }
         let job = super::GraphJob::schedule(&mut e, &res, thread, items);
         e.run();
@@ -128,6 +149,55 @@ impl Baidu {
             &e,
             thread,
         ))
+    }
+
+    /// Schedule one Baidu job's communication onto an engine: per tensor,
+    /// an event at its (stretched) ready time acquires the graph-rewrite
+    /// comm-thread gate, replays the pipelined ring schedule on the job's
+    /// resources, and releases.  Schedules bucket by tensor size (§Perf)
+    /// and are shared across equal-size tensors.  Used by `iteration_in`
+    /// (offset 0) and the two-job link-share runner.
+    pub(crate) fn schedule_job(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        e: &mut Engine,
+        res: CommResources,
+        thread: GateId,
+        offset: SimTime,
+    ) -> Result<Rc<RefCell<JobTrace>>> {
+        let stretch = sc.compute_stretch();
+        let map = res.mapper();
+        let trace = Rc::new(RefCell::new(JobTrace::default()));
+        let mut memo: HashMap<usize, (Rc<Vec<CommOp>>, f64)> = HashMap::new();
+        for (i, ready) in ws.tensor_readiness() {
+            let ready = SimTime::from_us(ready.as_us() * stretch);
+            let bytes = ws.model.tensors[i].bytes();
+            let (ops, staging) = memo
+                .entry(bytes)
+                .or_insert_with(|| {
+                    let (sched, staging) = self.ring_schedule(ws, sc, bytes);
+                    (Rc::new(sched.ops), staging)
+                })
+                .clone();
+            trace.borrow_mut().staging_us += staging;
+            let map = map.clone();
+            let trace = trace.clone();
+            e.at(offset + ready, move |e| {
+                e.acquire(thread, move |e| {
+                    replay(
+                        e,
+                        map,
+                        ops,
+                        Box::new(move |e| {
+                            trace.borrow_mut().comm_end = e.now();
+                            e.release(thread);
+                        }),
+                    );
+                });
+            });
+        }
+        Ok(trace)
     }
 }
 
@@ -159,34 +229,10 @@ impl Strategy for Baidu {
         }
         // per-tensor rings serialize on the comm thread (a FIFO gate);
         // each ring replays its CommOp schedule on the job's resources
-        let stretch = sc.compute_stretch();
         let mut e = Engine::new();
         let res = CommResources::install(&mut e);
         let thread = e.gate();
-        let map = res.mapper();
-        let trace = Rc::new(RefCell::new(JobTrace::default()));
-        for (i, ready) in ws.tensor_readiness() {
-            let ready = SimTime::from_us(ready.as_us() * stretch);
-            let bytes = ws.model.tensors[i].bytes();
-            let (sched, staging) = self.ring_schedule(ws, sc, bytes);
-            trace.borrow_mut().staging_us += staging;
-            let ops = Rc::new(sched.ops);
-            let map = map.clone();
-            let trace = trace.clone();
-            e.at(ready, move |e| {
-                e.acquire(thread, move |e| {
-                    replay(
-                        e,
-                        map,
-                        ops,
-                        Box::new(move |e| {
-                            trace.borrow_mut().comm_end = e.now();
-                            e.release(thread);
-                        }),
-                    );
-                });
-            });
-        }
+        let trace = self.schedule_job(ws, sc, &mut e, res, thread, SimTime::ZERO)?;
         e.run();
         let iter = super::close_iteration(
             ws,

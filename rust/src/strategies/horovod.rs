@@ -21,6 +21,7 @@
 //! almost everything, NASNet almost nothing).
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
@@ -29,8 +30,10 @@ use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::allreduce::Algo;
-use crate::comm::commop::{replay, CommOp, CommResources, CommSchedule, ResKind, StepCost};
-use crate::comm::graph::{allreduce_graph, GraphResources};
+use crate::comm::commop::{
+    replay, steps_sig, CommOp, CommResources, CommSchedule, ResKind, StepCost,
+};
+use crate::comm::graph::{allreduce_graph, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::nccl::NcclWorld;
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::sim::{Engine, GateId, SimTime};
@@ -68,6 +71,11 @@ pub struct Horovod {
     /// — the paper's "communication cannot be hidden behind the relatively
     /// smaller computation".
     pub skew_us_per_rank: f64,
+    /// Build-once/replay-many graph templates (§Perf), keyed by
+    /// `(algo, world, step-cost signature ⧺ coord cost)`.  Shared across
+    /// clones; any knob that changes a buffer's per-step costs changes
+    /// the key, so hits can never be stale.
+    pub cache: TemplateCache,
 }
 
 impl Horovod {
@@ -80,6 +88,7 @@ impl Horovod {
             coord_per_rank_us: 0.4,
             runtime_tax: 0.02,
             skew_us_per_rank: 470.0,
+            cache: TemplateCache::default(),
         }
     }
 
@@ -206,13 +215,25 @@ impl Horovod {
         let coord = self.coord_us(ws);
         let map = res.mapper();
         let trace = Rc::new(RefCell::new(JobTrace::default()));
+        // buffers bucket by size (most close exactly at `fusion_bytes`):
+        // build the [coord + Allreduce] op schedule once per size and
+        // share the Rc across buffers (§Perf, serialized-path analogue of
+        // the graph-template cache)
+        let mut memo: HashMap<usize, (Rc<Vec<CommOp>>, f64)> = HashMap::new();
         for (ready, bytes) in self.fusion_schedule_in(ws, sc.compute_stretch()) {
-            let (sched, staging) = self.buffer_schedule(ws, sc, bytes)?;
+            let (ops, staging) = match memo.get(&bytes) {
+                Some(hit) => hit.clone(),
+                None => {
+                    let (sched, staging) = self.buffer_schedule(ws, sc, bytes)?;
+                    let mut ops = Vec::with_capacity(sched.ops.len() + 1);
+                    ops.push(CommOp::fixed(ResKind::Sw, coord));
+                    ops.extend(sched.ops);
+                    let built = (Rc::new(ops), staging);
+                    memo.insert(bytes, built.clone());
+                    built
+                }
+            };
             trace.borrow_mut().staging_us += staging;
-            let mut ops = Vec::with_capacity(sched.ops.len() + 1);
-            ops.push(CommOp::fixed(ResKind::Sw, coord));
-            ops.extend(sched.ops);
-            let ops = Rc::new(ops);
             let map = map.clone();
             let trace = trace.clone();
             e.at(offset + ready, move |e| {
@@ -253,6 +274,10 @@ impl Horovod {
     /// skews individual ranks; with a neutral scenario this path is
     /// provably equivalent to the serialized replay (pinned by
     /// `tests/des_regression.rs`), just ~`world`× more engine events.
+    /// §Perf: each buffer's graph is an immutable cached template
+    /// (buffers bucket by size, so a ResNet iteration builds a handful of
+    /// graphs instead of one per buffer) replayed under the scenario's
+    /// per-buffer overlay.
     pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
         crate::ensure!(
             self.available(&ws.cluster),
@@ -272,11 +297,24 @@ impl Horovod {
         let mut items = Vec::with_capacity(buffers.len());
         for (bi, (ready, bytes)) in buffers.into_iter().enumerate() {
             let (algo, steps, staging) = self.buffer_steps(ws, sc, bytes)?;
-            let mut g = allreduce_graph(algo, ws.world, &steps);
-            // the rank-0 negotiation round gates every rank's first step
-            g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, coord)]);
-            sc.perturb_graph(&mut g, ws.world, bi as u64);
-            items.push((ready, g, staging));
+            // the coord cost is baked into the template (root node), so
+            // it is part of the cache key alongside the step costs
+            let mut sig = steps_sig(&steps);
+            sig.push(coord.to_bits());
+            let template =
+                self.cache.get_or_build(TemplateKey::allreduce(algo, ws.world, sig), || {
+                    let mut g = allreduce_graph(algo, ws.world, &steps);
+                    // the rank-0 negotiation round gates every rank's
+                    // first step
+                    g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, coord)]);
+                    g
+                });
+            items.push(super::GraphWork {
+                ready,
+                template,
+                overlay: sc.overlay(ws.world, bi as u64),
+                staging_us: staging,
+            });
         }
         let job = super::GraphJob::schedule(&mut e, &res, thread, items);
         e.run();
@@ -460,6 +498,23 @@ mod tests {
             let rel = (graph.as_us() - serial.as_us()).abs() / serial.as_us();
             assert!(rel < 2e-3, "{}: graph {graph} vs serialized {serial}", h.name());
         }
+    }
+
+    #[test]
+    fn graph_templates_are_cached_and_replays_are_stable() {
+        // §Perf: one straggler iteration builds ≤ one template per buffer
+        // size bucket; a second identical call replays from cache and
+        // reproduces the exact same iteration time
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 8);
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let sc = Scenario::straggler(1, 1.5);
+        let a = h.iteration_in(&ws, &sc).unwrap().iter;
+        let built = h.cache.len();
+        let buffers = h.fusion_schedule(&ws).len();
+        assert!(built >= 1 && built <= buffers, "{built} templates for {buffers} buffers");
+        let b = h.iteration_in(&ws, &sc).unwrap().iter;
+        assert_eq!(a, b, "cached replay must be bit-identical");
+        assert_eq!(h.cache.len(), built, "second run must not rebuild templates");
     }
 
     #[test]

@@ -33,9 +33,10 @@ pub use scenario::Scenario;
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
-use crate::comm::graph::{execute, CommGraph, GraphResources};
+use crate::comm::graph::{GraphOverlay, GraphResources, GraphTemplate};
 use crate::comm::ResourceUse;
 use crate::models::ModelProfile;
 use crate::sim::{Engine, GateId, SimTime};
@@ -102,6 +103,9 @@ pub struct IterationReport {
     /// Per-resource (served, busy) ledger of the engine run that produced
     /// `iter` — derived from `Engine::resource_stats`, not hand-kept.
     pub resource_util: Vec<ResourceUse>,
+    /// Events the engine executed to produce `iter` (0 for analytic
+    /// shortcuts like world=1) — the §Perf events/s numerator.
+    pub engine_events: u64,
 }
 
 impl IterationReport {
@@ -117,6 +121,7 @@ impl IterationReport {
             imgs_per_sec: imgs,
             scaling_efficiency: imgs / ideal,
             resource_util: Vec::new(),
+            engine_events: 0,
         }
     }
 }
@@ -131,8 +136,18 @@ pub struct JobTrace {
     pub staging_us: f64,
 }
 
+/// One collective of a [`GraphJob`]: a cached immutable template, the
+/// per-iteration overlay to replay it under, its release time, and the
+/// critical host-staging share it charges the compute path.
+pub(crate) struct GraphWork {
+    pub ready: SimTime,
+    pub template: Arc<GraphTemplate>,
+    pub overlay: GraphOverlay,
+    pub staging_us: f64,
+}
+
 /// One allreduce-family job's per-collective dependency graphs scheduled
-/// onto an engine: each graph releases at its ready time and runs under
+/// onto an engine: each template replays at its ready time and runs under
 /// the strategy's background comm-thread gate (FIFO, one collective at a
 /// time — the same serialization the serialized-replay path uses), on the
 /// job's per-rank [`GraphResources`].  Shared by `Horovod` and `Baidu`'s
@@ -144,29 +159,30 @@ pub(crate) struct GraphJob {
 }
 
 impl GraphJob {
-    /// Schedule `(ready, graph, critical_staging_us)` collectives; read
-    /// the result back with [`GraphJob::trace`] after `Engine::run`.
+    /// Schedule the job's collectives; read the result back with
+    /// [`GraphJob::trace`] after `Engine::run`.
     pub(crate) fn schedule(
         e: &mut Engine,
         res: &GraphResources,
         thread: GateId,
-        items: Vec<(SimTime, CommGraph, f64)>,
+        items: Vec<GraphWork>,
     ) -> GraphJob {
         let trace = Rc::new(RefCell::new(JobTrace::default()));
         let completed = Rc::new(RefCell::new(0usize));
         let scheduled = items.len();
         let map = res.mapper();
-        for (ready, g, staging) in items {
-            trace.borrow_mut().staging_us += staging;
+        for w in items {
+            trace.borrow_mut().staging_us += w.staging_us;
             let map = map.clone();
             let trace = trace.clone();
             let completed = completed.clone();
-            e.at(ready, move |e| {
+            e.at(w.ready, move |e| {
+                let GraphWork { template, overlay, .. } = w;
                 e.acquire(thread, move |e| {
-                    execute(
+                    template.execute(
                         e,
-                        &g,
                         map,
+                        &overlay,
                         Box::new(move |e| {
                             trace.borrow_mut().comm_end = e.now();
                             *completed.borrow_mut() += 1;
@@ -206,6 +222,7 @@ pub(crate) fn report_with_comm_thread(
 ) -> IterationReport {
     let mut report = IterationReport::from_times(name, ws, iter);
     report.resource_util = util;
+    report.engine_events = e.executed();
     let (grants, busy) = e.gate_stats(thread);
     report.resource_util.push(ResourceUse {
         name: "comm-thread".to_string(),

@@ -24,6 +24,7 @@
 //! round-robin across them.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
@@ -32,7 +33,7 @@ use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse};
-use crate::comm::graph::{execute_at, ps_fanin_graph, unmapped, GraphRun, NodeId};
+use crate::comm::graph::{ps_fanin_graph, unmapped, GraphRun, GraphTemplate, NodeId};
 use crate::comm::grpc::GrpcTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
@@ -169,6 +170,10 @@ impl PsStrategy {
     /// released at the shard's readiness plus `offset`.  Wire ops pin to
     /// the (shareable) fabric's NIC queues; the gRPC+MPI single service
     /// thread is a per-worker pinned resource private to this job.
+    /// §Perf: shards bucket by `(bytes, server)` — the fan-in DAG is
+    /// built once per bucket (a `GraphTemplate`, call-local because the
+    /// pinned NIC ids are engine-specific) and replayed per shard under
+    /// the scenario's overlay.
     pub(crate) fn schedule_job(
         &self,
         ws: &WorldSpec,
@@ -200,43 +205,60 @@ impl PsStrategy {
         let update_us = move |bytes: usize| 2.0 + w_count as f64 * bytes as f64 / 8e3;
 
         let done = Rc::new(RefCell::new(0usize));
+        let map = unmapped();
+        // fan-in templates per (bytes, server): push/pull fixed costs are
+        // functions of bytes, and the pinned NICs of the server, so the
+        // bucket key fully determines the graph
+        type FaninTemplate = Rc<(GraphTemplate, Vec<NodeId>)>;
+        let mut templates: HashMap<(usize, usize), FaninTemplate> = HashMap::new();
         let mut runs = Vec::with_capacity(per_shard.len());
         for (si, &(bytes, push_fixed, pull_fixed, ps, ready)) in per_shard.iter().enumerate() {
-            let push_ops = |w: usize| {
-                let mut ops = Vec::new();
-                if let Some(tx) = &worker_tx {
-                    ops.push(
-                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us).pinned(tx[w]),
-                    );
-                }
-                ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
-                ops.push(CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.ingress[ps]));
-                ops
-            };
-            let update = vec![CommOp::fixed(ResKind::CpuReduce, update_us(bytes))];
-            let pull_ops = |w: usize| {
-                let mut ops = vec![
-                    CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps]),
-                    CommOp::fixed(ResKind::Sw, pull_fixed),
-                ];
-                if let Some(tx) = &worker_tx {
-                    ops.push(
-                        CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us).pinned(tx[w]),
-                    );
-                }
-                ops
-            };
-            let (mut g, pulls) = ps_fanin_graph(w_count, ps, push_ops, update, pull_ops);
-            sc.perturb_graph(&mut g, w_count, si as u64);
+            let template = templates
+                .entry((bytes, ps))
+                .or_insert_with(|| {
+                    let push_ops = |w: usize| {
+                        let mut ops = Vec::new();
+                        if let Some(tx) = &worker_tx {
+                            ops.push(
+                                CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
+                                    .pinned(tx[w]),
+                            );
+                        }
+                        ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
+                        ops.push(
+                            CommOp::fixed(ResKind::Wire, wire_us(bytes))
+                                .pinned(fabric.ingress[ps]),
+                        );
+                        ops
+                    };
+                    let update = vec![CommOp::fixed(ResKind::CpuReduce, update_us(bytes))];
+                    let pull_ops = |w: usize| {
+                        let mut ops = vec![
+                            CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps]),
+                            CommOp::fixed(ResKind::Sw, pull_fixed),
+                        ];
+                        if let Some(tx) = &worker_tx {
+                            ops.push(
+                                CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
+                                    .pinned(tx[w]),
+                            );
+                        }
+                        ops
+                    };
+                    let (g, pulls) = ps_fanin_graph(w_count, ps, push_ops, update, pull_ops);
+                    Rc::new((GraphTemplate::new(g), pulls))
+                })
+                .clone();
+            let overlay = sc.overlay(w_count, si as u64);
             let shard_done = done.clone();
-            let run = execute_at(
+            let run = template.0.execute_at(
                 e,
-                &g,
-                unmapped(),
+                map.clone(),
+                &overlay,
                 offset + ready,
                 Box::new(move |_| *shard_done.borrow_mut() += 1),
             );
-            runs.push((run, pulls));
+            runs.push((run, template.1.clone()));
         }
         Ok(PsJob { runs, done, worker_tx })
     }
@@ -324,6 +346,7 @@ impl Strategy for PsStrategy {
             self.skew_us_per_rank,
         );
         let mut report = IterationReport::from_times(self.name(), ws, iter);
+        report.engine_events = engine.executed();
         report.resource_util.push(agg_util(&engine, &fabric.ingress, "ps-nic-in"));
         report.resource_util.push(agg_util(&engine, &fabric.egress, "ps-nic-out"));
         if let Some(tx) = &job.worker_tx {
@@ -467,6 +490,7 @@ impl PsStrategy {
             self.skew_us_per_rank,
         );
         let mut report = IterationReport::from_times(self.name(), ws, iter);
+        report.engine_events = engine.executed();
         report.resource_util.push(agg_util(&engine, &ingress, "ps-nic-in"));
         report.resource_util.push(agg_util(&engine, &egress, "ps-nic-out"));
         if let Some(tx) = &worker_tx {

@@ -8,21 +8,22 @@
 //! per-step OS/sync jitter, and a fabric shared with other traffic —
 //! without touching the calibrated cost models.  Knobs that skew
 //! *individual ranks* apart ([`Scenario::per_rank_skew`]) route the
-//! strategies onto per-rank `CommGraph` execution, where a slow rank's
-//! delay propagates along the algorithm's dependency edges
-//! ([`Scenario::perturb_graph`]); whole-job knobs keep the provably
-//! equivalent serialized replay.  Two *whole jobs* can also share one
+//! strategies onto per-rank `CommGraph` execution — cached templates
+//! replayed under the knobs' [`Scenario::overlay`], so a slow rank's
+//! delay propagates along the algorithm's dependency edges; whole-job
+//! knobs keep the provably equivalent serialized replay.  Two *whole jobs* can also share one
 //! fabric and contend transfer-by-transfer ([`link_share`] for the
 //! Horovod family, [`link_share_ps`] for the PS family).
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use super::baidu::Baidu;
 use super::horovod::Horovod;
 use super::ps::{PsFabric, PsJob, PsStrategy};
 use super::{JobTrace, Strategy, WorldSpec};
 use crate::comm::commop::CommResources;
-use crate::comm::graph::CommGraph;
+use crate::comm::graph::GraphOverlay;
 use crate::sim::{Engine, SimTime};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
@@ -161,28 +162,33 @@ impl Scenario {
         rng.next_f64() * self.jitter_us
     }
 
-    /// Apply the per-rank knobs to one collective's dependency graph:
+    /// The per-rank knobs as a [`GraphOverlay`] for one collective
+    /// (§Perf: the overlay replaces the old clone-and-mutate
+    /// `perturb_graph`, so a cached template can be replayed under it):
     /// straggler ranks (the first `straggler_ranks` of `world`) run every
     /// op `straggler_factor`× slower, heterogeneous ranks (the last
     /// `hetero_ranks`) pay `hetero_factor`× on GPU-side ops, and each
-    /// node draws its `(salt, rank, step)` jitter (`salt` = the
+    /// node draws its `(salt, rank, step)` jitter lead (`salt` = the
     /// collective's ordinal within the iteration).  The skew then
     /// *propagates* through the graph's edges instead of shifting the
     /// whole schedule.
-    pub fn perturb_graph(&self, g: &mut CommGraph, world: usize, salt: u64) {
+    pub fn overlay(&self, world: usize, salt: u64) -> GraphOverlay {
+        let mut ov = GraphOverlay::neutral();
         if self.straggler_ranks > 0 && self.straggler_factor > 1.0 {
             for r in 0..self.straggler_ranks.min(world) {
-                g.scale_rank(r, self.straggler_factor);
+                ov.scale_rank(world, r, self.straggler_factor);
             }
         }
         if self.hetero_ranks > 0 && self.hetero_factor > 1.0 {
             for r in world.saturating_sub(self.hetero_ranks)..world {
-                g.scale_rank_gpu(r, self.hetero_factor);
+                ov.scale_rank_gpu(world, r, self.hetero_factor);
             }
         }
         if self.jitter_us > 0.0 {
-            g.jitter_nodes(|rank, step| self.node_jitter_us(salt, rank, step));
+            let sc = self.clone();
+            ov.set_lead(move |rank, step| sc.node_jitter_us(salt, rank, step));
         }
+        ov
     }
 }
 
@@ -226,6 +232,39 @@ pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkSh
 
     let iter_a = h.close_job(ws, &sc, &trace_a.borrow(), SimTime::ZERO);
     let iter_b = h.close_job(ws, &sc, &trace_b.borrow(), offset);
+    let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
+    Ok(LinkShareReport {
+        solo_iter: solo.iter,
+        job_iters: [iter_a, iter_b],
+        wire_busy,
+        wire_served,
+    })
+}
+
+/// Two identical Baidu jobs on one engine, sharing the inter-node wire
+/// (private PCIe/GPU/host resources — different nodes), job B offset by
+/// `offset`.  The Baidu counterpart of [`link_share`]: per-tensor rings
+/// (no fusion) contend transfer-by-transfer, so the co-tenant's traffic
+/// interleaves between every ring's wire steps.
+pub fn link_share_baidu(b: &Baidu, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
+    let sc = Scenario::default();
+    let solo = b.iteration(ws)?;
+
+    let mut e = Engine::new();
+    let res_a = CommResources::install(&mut e);
+    let res_b = CommResources::sharing_wire(&mut e, res_a.wire);
+    let gate_a = e.gate();
+    let gate_b = e.gate();
+    let trace_a: Rc<RefCell<JobTrace>> =
+        b.schedule_job(ws, &sc, &mut e, res_a, gate_a, SimTime::ZERO)?;
+    let trace_b: Rc<RefCell<JobTrace>> = b.schedule_job(ws, &sc, &mut e, res_b, gate_b, offset)?;
+    e.run();
+
+    let close = |trace: &JobTrace, off: SimTime| {
+        super::close_iteration(ws, &sc, trace, off, b.runtime_tax, b.skew_us_per_rank)
+    };
+    let iter_a = close(&trace_a.borrow(), SimTime::ZERO);
+    let iter_b = close(&trace_b.borrow(), offset);
     let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
     Ok(LinkShareReport {
         solo_iter: solo.iter,
@@ -363,15 +402,27 @@ mod tests {
     }
 
     #[test]
-    fn perturb_graph_scales_only_the_straggler() {
+    fn overlay_scales_only_the_straggler() {
         use crate::comm::commop::{CommOp, ResKind};
+        use crate::comm::graph::{unmapped, CommGraph, GraphTemplate};
         let mut g = CommGraph::default();
         for r in 0..4 {
             g.push_node(r, 0, vec![CommOp::fixed(ResKind::Wire, 10.0)], Vec::new());
         }
-        Scenario::straggler(1, 2.0).perturb_graph(&mut g, 4, 0);
-        let durs: Vec<f64> = g.nodes.iter().map(|n| n.dur_us()).collect();
+        let t = GraphTemplate::new(g);
+        let ov = Scenario::straggler(1, 2.0).overlay(4, 0);
+        let mut e = Engine::new();
+        let run = t.execute(&mut e, unmapped(), &ov, Box::new(|_| {}));
+        e.run();
+        // four independent nodes all release at t=0: finish time == dur
+        let durs: Vec<f64> = run.borrow().finish.iter().map(|f| f.as_us()).collect();
         assert_eq!(durs, vec![20.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn neutral_scenario_overlay_is_neutral() {
+        assert!(Scenario::default().overlay(8, 0).is_neutral());
+        assert!(!Scenario::straggler(1, 2.0).overlay(8, 0).is_neutral());
     }
 
     #[test]
@@ -384,6 +435,18 @@ mod tests {
         let neutral = h.iteration(&ws).unwrap().iter;
         let skewed = h.iteration_in(&ws, &Scenario::straggler(2, 1.5)).unwrap().iter;
         assert!(skewed > neutral);
+    }
+
+    #[test]
+    fn two_baidu_jobs_sharing_the_wire_contend() {
+        use crate::models::mobilenet;
+        let b = Baidu::with_flavor(MpiFlavor::CrayMpich);
+        let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 32);
+        let r = link_share_baidu(&b, &ws, SimTime::ZERO).unwrap();
+        let [a, bb] = r.slowdowns();
+        assert!(a >= 1.0 && bb >= 1.0, "sharing cannot speed anyone up: {a} {bb}");
+        assert!(a > 1.0 || bb > 1.0, "two rings on one wire must contend: {a} {bb}");
+        assert!(r.wire_busy > SimTime::ZERO && r.wire_served > 0);
     }
 
     #[test]

@@ -238,30 +238,31 @@ fn ps_graph_port_matches_pr1_reference() {
 #[test]
 fn straggler_propagation_is_step_local_and_deterministic() {
     use mpi_dnn_train::comm::allreduce::shadow_steps;
-    use mpi_dnn_train::comm::graph::{execute, ring_graph, CommGraph, GraphResources};
+    use mpi_dnn_train::comm::graph::{ring_graph, GraphOverlay, GraphResources, GraphTemplate};
     use mpi_dnn_train::sim::Engine;
 
-    // a real RI2 ring (per-step costs from the validated models)
+    // a real RI2 ring (per-step costs from the validated models), built
+    // ONCE as a template and replayed under overlays (§Perf path)
     let p = 8usize;
     let w = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
     let (_, mut ctx) = w.plan(1 << 20);
     let (_, steps) = shadow_steps(Algo::Ring, p, (1 << 20) / 4, &mut ctx);
-    let g0 = ring_graph(p, &steps);
+    let t = GraphTemplate::new(ring_graph(p, &steps));
 
-    let run = |g: &CommGraph| {
+    let run = |ov: &GraphOverlay| {
         let mut e = Engine::new();
         let res = GraphResources::install(&mut e, p);
-        let run = execute(&mut e, g, res.mapper(), Box::new(|_| {}));
+        let run = t.execute(&mut e, res.mapper(), ov, Box::new(|_| {}));
         e.run();
         let r = run.borrow();
         r.finish.clone()
     };
-    let base = run(&g0);
-    let mut g = g0.clone();
-    g.scale_rank(3, 2.0); // rank 3 runs 2x slow
-    let a = run(&g);
-    let b = run(&g);
-    assert_eq!(a, b, "perturbed graph runs must be bit-identical");
+    let base = run(&GraphOverlay::neutral());
+    let mut ov = GraphOverlay::neutral();
+    ov.scale_rank(p, 3, 2.0); // rank 3 runs 2x slow
+    let a = run(&ov);
+    let b = run(&ov);
+    assert_eq!(a, b, "perturbed template replays must be bit-identical");
 
     // ring builder layout: node index = step * p + rank; skew cone:
     // (r, s) is delayed iff s >= ring-distance(3 -> r)
@@ -275,6 +276,41 @@ fn straggler_propagation_is_step_local_and_deterministic() {
             "(r{r}, s{s}) must inherit the straggler's delay"
         );
     }
+}
+
+#[test]
+fn cached_template_iterations_are_replay_stable() {
+    // §Perf: the first perturbed iteration builds graph templates, the
+    // second replays them from cache — both must produce the exact same
+    // iteration time (SimTime equality, not tolerance), for every
+    // graph-path strategy family.
+    let sc = Scenario {
+        straggler_ranks: 1,
+        straggler_factor: 1.5,
+        jitter_us: 120.0,
+        seed: 9,
+        ..Scenario::default()
+    };
+    let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 16);
+    let horovod = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+    let baidu = Baidu::new();
+    let strategies: [&dyn Strategy; 2] = [&horovod, &baidu];
+    for s in strategies {
+        let a = s.iteration_in(&ws, &sc).unwrap();
+        let b = s.iteration_in(&ws, &sc).unwrap();
+        assert_eq!(a.iter, b.iter, "{}: warm-cache replay diverged", s.name());
+        assert_eq!(
+            a.engine_events, b.engine_events,
+            "{}: warm-cache event count diverged",
+            s.name()
+        );
+        assert!(a.engine_events > 0, "{}: graph path must report events", s.name());
+    }
+    let ps = PsStrategy::grpc();
+    let a = ps.iteration_in(&ws, &sc).unwrap();
+    let b = ps.iteration_in(&ws, &sc).unwrap();
+    assert_eq!(a.iter, b.iter, "PS: shard-template replay diverged");
+    assert_eq!(a.engine_events, b.engine_events);
 }
 
 #[test]

@@ -168,6 +168,182 @@ fn prop_intercept_cache_coherent() {
     }
 }
 
+/// prop (§Perf): cached-template + overlay execution equals a freshly
+/// built, mutated graph bit-for-bit — ring / RHD / tree and the PS
+/// fan-in — under random straggler/hetero/jitter scenarios over random
+/// worlds and step costs.  The materializer below replicates the old
+/// in-place perturbation semantics (scale straggler ranks, scale hetero
+/// ranks' GPU-side ops, insert jitter ops at node front) as the oracle.
+#[test]
+fn prop_overlay_replay_equals_fresh_perturbed_graphs() {
+    use mpi_dnn_train::comm::allreduce::flp2;
+    use mpi_dnn_train::comm::graph::{
+        execute, ps_fanin_graph, rhd_graph, ring_graph, tree_graph, unmapped, CommGraph,
+        GraphResources, GraphTemplate,
+    };
+    use mpi_dnn_train::comm::{CommOp, CostBreakdown, ResKind, StepCost};
+    use mpi_dnn_train::strategies::Scenario;
+
+    fn materialize(g: &CommGraph, sc: &Scenario, world: usize, salt: u64) -> CommGraph {
+        let mut out = g.clone();
+        if sc.straggler_ranks > 0 && sc.straggler_factor > 1.0 {
+            for r in 0..sc.straggler_ranks.min(world) {
+                for n in &mut out.nodes {
+                    if n.rank == r {
+                        for op in &mut n.ops {
+                            op.us *= sc.straggler_factor;
+                        }
+                    }
+                }
+            }
+        }
+        if sc.hetero_ranks > 0 && sc.hetero_factor > 1.0 {
+            for r in world.saturating_sub(sc.hetero_ranks)..world {
+                for n in &mut out.nodes {
+                    if n.rank == r {
+                        for op in &mut n.ops {
+                            if matches!(
+                                op.kind,
+                                ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie
+                            ) {
+                                op.us *= sc.hetero_factor;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if sc.jitter_us > 0.0 {
+            for n in &mut out.nodes {
+                let j = sc.node_jitter_us(salt, n.rank, n.step);
+                if j > 0.0 {
+                    n.ops.insert(0, CommOp::fixed(ResKind::Sw, j));
+                }
+            }
+        }
+        out
+    }
+
+    for case in 0..30u64 {
+        let mut rng = Rng::new(0xD001 + case);
+        let p = 2 + rng.next_below(12) as usize; // 2..=13, incl. non-pow2
+        let mk_cost = |rng: &mut Rng| CostBreakdown {
+            wire_us: 1.0 + rng.next_f64() * 20.0,
+            staging_us: rng.next_f64() * 4.0,
+            reduce_us: rng.next_f64() * 3.0,
+            driver_us: rng.next_f64(),
+            launch_us: rng.next_f64(),
+            sw_us: rng.next_f64() * 2.0,
+        };
+        let mk_steps = |n: usize, rng: &mut Rng| -> Vec<StepCost> {
+            (0..n)
+                .map(|_| StepCost { cost: mk_cost(rng), gpu_reduce: rng.next_below(2) == 0 })
+                .collect()
+        };
+        let sc = Scenario {
+            straggler_ranks: rng.next_below(3) as usize,
+            straggler_factor: 1.0 + rng.next_f64() * 2.0,
+            hetero_ranks: rng.next_below(3) as usize,
+            hetero_factor: 1.0 + rng.next_f64() * 2.0,
+            jitter_us: if rng.next_below(2) == 0 { 50.0 } else { 0.0 },
+            seed: case,
+            ..Scenario::default()
+        };
+        let salt = rng.next_below(5);
+
+        let p2 = flp2(p);
+        let rhd_count = if p > p2 { 2 } else { 0 } + 2 * p2.trailing_zeros() as usize;
+        let tree_count = {
+            let mut c = 0;
+            let mut dist = 1;
+            while dist < p {
+                c += 1;
+                dist *= 2;
+            }
+            let mut dist = p.next_power_of_two() / 2;
+            while dist >= 1 {
+                if (0..p).step_by(2 * dist).any(|s| s + dist < p) {
+                    c += 1;
+                }
+                dist /= 2;
+            }
+            c
+        };
+        let graphs: Vec<(&str, CommGraph)> = vec![
+            ("ring", ring_graph(p, &mk_steps(2 * (p - 1), &mut rng))),
+            ("rhd", rhd_graph(p, &mk_steps(rhd_count, &mut rng))),
+            ("tree", tree_graph(p, &mk_steps(tree_count, &mut rng))),
+        ];
+        for (name, g) in graphs {
+            let oracle = materialize(&g, &sc, p, salt);
+            let (end_f, fin_f) = {
+                let mut e = Engine::new();
+                let res = GraphResources::install(&mut e, p);
+                let run = execute(&mut e, &oracle, res.mapper(), Box::new(|_| {}));
+                let end = e.run();
+                let fin = run.borrow().finish.clone();
+                (end, fin)
+            };
+            let t = GraphTemplate::new(g);
+            let ov = sc.overlay(p, salt);
+            let (end_t, fin_t) = {
+                let mut e = Engine::new();
+                let res = GraphResources::install(&mut e, p);
+                let run = t.execute(&mut e, res.mapper(), &ov, Box::new(|_| {}));
+                let end = e.run();
+                let fin = run.borrow().finish.clone();
+                (end, fin)
+            };
+            assert_eq!(end_f, end_t, "case {case} {name} (p={p}): end diverged");
+            assert_eq!(fin_f, fin_t, "case {case} {name} (p={p}): finishes diverged");
+        }
+
+        // PS fan-in with pinned NICs: identical resource-creation order in
+        // both engines makes the pinned ids resolve identically
+        let workers = 2 + rng.next_below(5) as usize;
+        let server = rng.next_below(workers as u64) as usize;
+        let wire = 2.0 + rng.next_f64() * 10.0;
+        let mut ea = Engine::new();
+        let (ni, no) = (ea.unit_resource(), ea.unit_resource());
+        let (g, _pulls) = ps_fanin_graph(
+            workers,
+            server,
+            |w| {
+                vec![
+                    CommOp::fixed(ResKind::Sw, 1.0 + w as f64),
+                    CommOp::fixed(ResKind::Wire, wire).pinned(ni),
+                ]
+            },
+            vec![CommOp::fixed(ResKind::CpuReduce, 3.0)],
+            |w| {
+                vec![
+                    CommOp::fixed(ResKind::Wire, wire).pinned(no),
+                    CommOp::fixed(ResKind::Sw, 0.5 + 0.5 * w as f64),
+                ]
+            },
+        );
+        let oracle = materialize(&g, &sc, workers, salt);
+        let (end_f, fin_f) = {
+            let run = execute(&mut ea, &oracle, unmapped(), Box::new(|_| {}));
+            let end = ea.run();
+            let fin = run.borrow().finish.clone();
+            (end, fin)
+        };
+        let mut eb = Engine::new();
+        let _nics = (eb.unit_resource(), eb.unit_resource());
+        let t = GraphTemplate::new(g);
+        let ov = sc.overlay(workers, salt);
+        let (end_t, fin_t) = {
+            let run = t.execute(&mut eb, unmapped(), &ov, Box::new(|_| {}));
+            let end = eb.run();
+            let fin = run.borrow().finish.clone();
+            (end, fin)
+        };
+        assert_eq!(end_f, end_t, "case {case} ps (w={workers}): end diverged");
+        assert_eq!(fin_f, fin_t, "case {case} ps (w={workers}): finishes diverged");
+    }
+}
+
 /// prop: the event engine is deterministic and clock-monotone for random
 /// schedules.
 #[test]
