@@ -314,9 +314,11 @@ fn default_baidu(cluster: &crate::cluster::ClusterSpec) -> Baidu {
     }
 }
 
-/// Two identical jobs sharing one fabric — a Horovod variant (one shared
-/// wire resource), Baidu's per-tensor rings (same shared wire), or a PS
-/// transport (shared per-server NIC queues).
+/// Two identical jobs sharing one fabric on the graph path — a Horovod
+/// variant or Baidu's per-tensor rings (both jobs' per-rank graphs queue
+/// on the same physical `(node, rail)` NIC ports via
+/// `GraphResources::sharing_wire`), or a PS transport (shared per-server
+/// NIC queues).
 /// `family` is either a family name (`horovod` / `baidu` pick the
 /// cluster's default variant, `ps` = gRPC) or a concrete strategy name
 /// (`horovod-mpi-opt`, `grpc+verbs`, …) so the experiment launcher can
@@ -397,6 +399,78 @@ pub fn scenario_two_jobs(
     t.note(format!(
         "shared wire: {} ops, {} busy — contention emerges from FIFO queueing, not a formula",
         r.wire_served, r.wire_busy
+    ));
+    Ok(t)
+}
+
+/// Placement sweep: one (cluster, model, world) point across node
+/// densities and NIC rail counts — the paper's 1-GPU-per-node layout vs
+/// dense nodes whose co-located ranks share a NIC/PCIe bundle vs dense
+/// nodes with multi-rail NICs.  Dense layouts run on the placed
+/// `CommGraph` path (the serialized replay cannot express placement):
+/// intra-node hops ride PCIe/NVLink instead of the wire, and co-located
+/// ranks queue on their node's shared ports.
+pub fn placement_sweep(
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    world: usize,
+    gpus_per_node: usize,
+    rails: usize,
+) -> Result<Table> {
+    crate::ensure!(gpus_per_node >= 1, "gpus-per-node must be >= 1, got {gpus_per_node}");
+    crate::ensure!(rails >= 1, "rails must be >= 1, got {rails}");
+    // each rank occupies one rail, so rails beyond the ranks per node
+    // would sit idle — an inert comparison is a request mistake
+    crate::ensure!(
+        rails <= gpus_per_node,
+        "rails = {rails} exceeds gpus-per-node = {gpus_per_node}: the extra rails would be idle"
+    );
+    let mut layouts: Vec<(usize, usize)> = vec![(1, 1)];
+    if gpus_per_node > 1 {
+        layouts.push((gpus_per_node, 1));
+    }
+    if rails > 1 && !layouts.contains(&(gpus_per_node, rails)) {
+        layouts.push((gpus_per_node, rails));
+    }
+    let cluster_name = cluster.name;
+    let title = format!(
+        "Placement sweep: {} on {cluster_name}@{world} (dense nodes / NIC rails)",
+        model.name
+    );
+    let mut t = Table::new(
+        &title,
+        &["gpus/node", "rails", "Horovod img/s", "Horovod eff", "Baidu img/s", "gRPC img/s"],
+    );
+    let rows = par_map_ordered(layouts, |(g, r)| {
+        let mut c = cluster.clone();
+        c.gpus_per_node = g;
+        c.nic_rails = r;
+        let ws = WorldSpec::new(c.clone(), model.clone(), world);
+        let fmt = |res: Result<crate::strategies::IterationReport>| match res {
+            Ok(rep) => format!("{:.0}", rep.imgs_per_sec),
+            Err(_) => "n/a".into(),
+        };
+        let h = default_horovod(&c).iteration(&ws);
+        let eff = h
+            .as_ref()
+            .map(|rep| format!("{:.0}%", 100.0 * rep.scaling_efficiency))
+            .unwrap_or_else(|_| "-".into());
+        vec![
+            g.to_string(),
+            r.to_string(),
+            fmt(h),
+            eff,
+            fmt(default_baidu(&c).iteration(&ws)),
+            fmt(PsStrategy::grpc().iteration(&ws)),
+        ]
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(format!(
+        "co-located ranks share their node's NIC port(s) and PCIe link; intra-node hops ride \
+         PCIe at {:.2}x the wire time; rails split the node NIC round-robin",
+        cluster.fabric.local_hop_factor()
     ));
     Ok(t)
 }
@@ -501,6 +575,28 @@ mod tests {
         let g = ablation_cycle_grid("ri2", 4).unwrap();
         assert_eq!(g.rows.len(), 5);
         assert_eq!(g.headers.len(), 5); // cycle + 4 scenario columns
+    }
+
+    #[test]
+    fn placement_sweep_builds_expected_layouts() {
+        use crate::models::mobilenet;
+        let t = placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 8, 2, 2).unwrap();
+        assert_eq!(t.rows.len(), 3, "(1,1), (2,1), (2,2) layouts");
+        let layout = |i: usize| (t.rows[i][0].as_str(), t.rows[i][1].as_str());
+        assert_eq!(layout(0), ("1", "1"));
+        assert_eq!(layout(1), ("2", "1"));
+        assert_eq!(layout(2), ("2", "2"));
+        // every cell filled (all three families run at this point)
+        for row in &t.rows {
+            assert!(row.iter().all(|c| c != "n/a"), "row {row:?}");
+        }
+        // degenerate request: only the trivial layout
+        let t1 = placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 1, 1).unwrap();
+        assert_eq!(t1.rows.len(), 1);
+        assert!(placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 0, 1).is_err());
+        // idle rails (rails > gpus/node) are a request mistake
+        assert!(placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 2, 4).is_err());
+        assert!(placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 1, 2).is_err());
     }
 
     #[test]

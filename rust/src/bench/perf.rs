@@ -17,6 +17,10 @@
 //!    sweep point takes.
 //!  * `sweep-graph` — the same points under a straggler scenario, which
 //!    routes onto per-rank `CommGraph` execution (~`world`× the events).
+//!  * `sweep-dense` — the same model on a dense-node cluster (4 GPUs per
+//!    node, 2 NIC rails): the placement-aware graph path, where
+//!    co-located ranks queue on shared node ports and intra-node hops
+//!    ride PCIe — tracks the placed `GraphResources` layout across PRs.
 
 use std::time::Instant;
 
@@ -161,6 +165,40 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
     ));
     failed?;
 
+    // --- 5. dense-node placement sweep ----------------------------------
+    let mut dense = cluster.clone();
+    dense.gpus_per_node = 4;
+    dense.nic_rails = 2;
+    let dense_sweep = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..passes {
+            for &world in worlds {
+                let ws = WorldSpec::new(dense.clone(), model.clone(), world);
+                // neutral scenario + dense placement routes onto the
+                // placed graph path
+                events += h.iteration_in(&ws, &Scenario::default())?.engine_events;
+            }
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "sweep-dense",
+        format!(
+            "Horovod-MPI MobileNet pizdaint(4 GPUs/node, 2 rails)@{worlds:?} × {passes} \
+             passes, neutral (placed CommGraph path)"
+        ),
+        passes * worlds.len(),
+        || match dense_sweep() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
     Ok(out)
 }
 
@@ -216,7 +254,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 4);
+        assert_eq!(ws.len(), 5);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -231,14 +269,22 @@ mod tests {
             graph.events,
             serialized.events
         );
+        // the dense point rides the per-rank graph path too
+        let dense = ws.iter().find(|w| w.name == "sweep-dense").unwrap();
+        assert!(
+            dense.events > 2 * serialized.events,
+            "dense sweep {} should dwarf serialized {}",
+            dense.events,
+            serialized.events
+        );
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows.len(), 5);
         let j = perf_json(&ws, true);
         assert_eq!(
             j.get("schema").and_then(|v| v.as_str()),
             Some("mpi-dnn-train/bench-engine/v1")
         );
-        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(5));
     }
 
     #[test]

@@ -111,6 +111,14 @@ impl Fabric {
         }
     }
 
+    /// Intra-node hop cost multiplier for placed collective graphs: a
+    /// hop between two ranks on one node rides the node's PCIe/NVLink
+    /// path instead of the NIC, so its wire component scales by
+    /// inter-node β ÷ local β (< 1 when the local link is faster).
+    pub fn local_hop_factor(&self) -> f64 {
+        self.inter.beta_gbs / self.pcie.beta_gbs
+    }
+
     /// GPU-to-GPU p2p transfer time for `bytes`, CUDA-aware path.
     /// With GDR: straight over the NIC.  Without: staged D2H → wire → H2D.
     pub fn p2p_cuda_aware(&self, bytes: usize) -> SimTime {
@@ -168,6 +176,19 @@ mod tests {
         let direct = f.p2p_cuda_aware(n);
         let staged = f.staged(n);
         assert!(staged.as_us() > 2.5 * direct.as_us(), "staged {staged} vs direct {direct}");
+    }
+
+    #[test]
+    fn local_hop_factor_is_beta_ratio() {
+        for f in [Fabric::ib_edr_gdr(), Fabric::aries()] {
+            let k = f.local_hop_factor();
+            assert!((k - f.inter.beta_gbs / f.pcie.beta_gbs).abs() < 1e-12);
+            assert!(k > 0.0 && k.is_finite());
+        }
+        // both era fabrics have PCIe3 at least as fast as the wire, so
+        // intra-node hops never cost more than the NIC path
+        assert!(Fabric::ib_edr_gdr().local_hop_factor() <= 1.0);
+        assert!(Fabric::aries().local_hop_factor() <= 1.0);
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod topology;
 
 pub use gpu::GpuModel;
 pub use interconnect::{Fabric, Link};
-pub use topology::ClusterSpec;
+pub use topology::{ClusterSpec, Placement};

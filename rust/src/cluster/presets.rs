@@ -12,6 +12,7 @@ pub fn ri2() -> ClusterSpec {
         gpu: GpuModel::k80(),
         nodes: 20,
         gpus_per_node: 1,
+        nic_rails: 1,
         fabric: Fabric::ib_edr_gdr(),
         driver_query_us: 1.0,
     }
@@ -24,6 +25,7 @@ pub fn owens() -> ClusterSpec {
         gpu: GpuModel::p100(),
         nodes: 160,
         gpus_per_node: 1,
+        nic_rails: 1,
         fabric: Fabric::ib_edr_gdr(),
         driver_query_us: 1.0,
     }
@@ -37,6 +39,7 @@ pub fn piz_daint() -> ClusterSpec {
         gpu: GpuModel::p100(),
         nodes: 5704,
         gpus_per_node: 1,
+        nic_rails: 1,
         fabric: Fabric::aries(),
         driver_query_us: 1.2,
     }

@@ -1,17 +1,91 @@
-//! Cluster topology: nodes × GPUs-per-node over a fabric.
+//! Cluster topology: nodes × GPUs-per-node over a fabric, plus the
+//! [`Placement`] map (rank → node, rank → NIC rail) the resource layers
+//! lay their per-node bundles out over.
 
 use super::gpu::GpuModel;
 use super::interconnect::Fabric;
 
+/// Rank → node placement plus the node's NIC rail layout: the geometry
+/// `GraphResources` (comm/graph.rs) lays resource bundles out over.
+/// Ranks distribute over nodes in blocks (`node_of`), co-located ranks
+/// round-robin over the node's `rails` independent NIC ports
+/// (`rail_of`).  With `gpus_per_node == 1` and `rails == 1` — every
+/// cluster in the paper — the placement is *trivial*: rank ≡ node,
+/// one port per node, and the placed paths are bit-identical to the
+/// historical per-rank bundles (pinned by `tests/proptest_lite.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Placement {
+    pub gpus_per_node: usize,
+    /// Independent NIC rails per node (dual-rail IB and the like).
+    pub rails: usize,
+}
+
+impl Placement {
+    pub fn new(gpus_per_node: usize, rails: usize) -> Placement {
+        assert!(gpus_per_node >= 1, "placement needs >= 1 GPU per node");
+        assert!(rails >= 1, "placement needs >= 1 NIC rail per node");
+        Placement { gpus_per_node, rails }
+    }
+
+    /// The paper's layout: one GPU (rank) per node, single-rail NICs.
+    pub fn one_per_node() -> Placement {
+        Placement { gpus_per_node: 1, rails: 1 }
+    }
+
+    /// Trivial placements change nothing: rank ≡ node, port ≡ node.
+    pub fn is_trivial(&self) -> bool {
+        self.gpus_per_node == 1 && self.rails == 1
+    }
+
+    /// Rank → node (block distribution).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Rank → local index on its node.
+    pub fn local_of(&self, rank: usize) -> usize {
+        rank % self.gpus_per_node
+    }
+
+    /// Rank → NIC rail on its node (round-robin over local index).
+    pub fn rail_of(&self, rank: usize) -> usize {
+        self.local_of(rank) % self.rails
+    }
+
+    /// Are two ranks on the same node?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Nodes a world of `ranks` ranks occupies.
+    pub fn nodes_for(&self, ranks: usize) -> usize {
+        ranks.div_ceil(self.gpus_per_node)
+    }
+
+    /// The cache-key signature: two placements with different layouts
+    /// must never alias one graph template.
+    pub fn key(&self) -> (usize, usize) {
+        (self.gpus_per_node, self.rails)
+    }
+}
+
+impl Default for Placement {
+    fn default() -> Placement {
+        Placement::one_per_node()
+    }
+}
+
 /// One testbed (all three of the paper's systems are 1 GPU per node, which
-/// keeps rank == node; the struct still carries `gpus_per_node` so denser
-/// systems like DGX boxes can be expressed).
+/// keeps rank == node; the struct still carries `gpus_per_node` and
+/// `nic_rails` so denser systems like DGX boxes can be expressed).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     pub name: &'static str,
     pub gpu: GpuModel,
     pub nodes: usize,
     pub gpus_per_node: usize,
+    /// Independent NIC rails per node (1 everywhere in the paper).
+    pub nic_rails: usize,
     pub fabric: Fabric,
     /// CUDA driver pointer-attribute query cost, µs (the §V-B overhead the
     /// pointer cache removes; per-query, and MPI issues several per call).
@@ -21,6 +95,11 @@ pub struct ClusterSpec {
 impl ClusterSpec {
     pub fn max_gpus(&self) -> usize {
         self.nodes * self.gpus_per_node
+    }
+
+    /// The cluster's rank/rail layout as a [`Placement`].
+    pub fn placement(&self) -> Placement {
+        Placement::new(self.gpus_per_node, self.nic_rails)
     }
 
     /// Rank → node placement (block distribution).
@@ -59,6 +138,28 @@ mod tests {
         assert_eq!(c.node_of(2), 1);
         assert!(c.same_node(0, 1));
         assert!(!c.same_node(1, 2));
+    }
+
+    #[test]
+    fn placement_rails_round_robin_and_triviality() {
+        use super::Placement;
+        let p = Placement::new(4, 2);
+        assert!(!p.is_trivial());
+        assert_eq!((0..4).map(|r| p.node_of(r)).collect::<Vec<_>>(), vec![0, 0, 0, 0]);
+        assert_eq!(p.node_of(4), 1);
+        // local ranks 0..3 round-robin over 2 rails
+        assert_eq!((0..4).map(|r| p.rail_of(r)).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+        assert_eq!(p.rail_of(5), 1); // rank 5 = node 1, local 1
+        assert_eq!(p.nodes_for(5), 2);
+        assert_eq!(p.nodes_for(8), 2);
+        assert!(Placement::one_per_node().is_trivial());
+        assert_eq!(Placement::default(), Placement::one_per_node());
+        assert_ne!(Placement::new(2, 1).key(), Placement::new(2, 2).key());
+        let mut c = presets::ri2();
+        assert_eq!(c.placement(), Placement::one_per_node());
+        c.gpus_per_node = 2;
+        c.nic_rails = 2;
+        assert_eq!(c.placement().key(), (2, 2));
     }
 
     #[test]

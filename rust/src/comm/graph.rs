@@ -21,14 +21,17 @@
 //!    tree / PS fan-in topologies.
 //!  * **Eligibility vs queueing** — eligibility is an engine *join*
 //!    ([`Engine::join`]); once eligible, a node's ops run as a typed
-//!    engine program queueing FIFO on its rank's **node-local** resources
-//!    ([`GraphResources`]: per-rank NIC, PCIe link, GPU, …) instead of
-//!    the one shared per-job proxy.
+//!    engine program queueing FIFO on the **node-local** resources a
+//!    [`Placement`] lays out for its rank ([`GraphResources`]: NIC ports
+//!    per `(node, rail)`, PCIe per node, GPU per rank, …) instead of the
+//!    one shared per-job proxy.  Dense placements colocate ranks on
+//!    shared NIC/PCIe bundles, and the placed builders cost hops between
+//!    co-located ranks over the node-local link instead of the wire.
 //!
 //! §Perf — build once, replay many: a [`GraphTemplate`] is an immutable
 //! built graph plus its precomputed successor/in-degree plan, cached in a
-//! [`TemplateCache`] keyed by `(algo, world, step-cost signature)`
-//! ([`crate::comm::commop::steps_sig`]).  Per-iteration variation — what
+//! [`TemplateCache`] keyed by `(algo, world, placement, step-cost
+//! signature)` ([`crate::comm::commop::steps_sig`]).  Per-iteration variation — what
 //! the old code expressed by cloning the node vector and mutating op
 //! durations — is a [`GraphOverlay`]: multiplicative per-rank factors and
 //! per-node jitter leads applied at *execute* time, in the same order the
@@ -49,6 +52,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 
+use crate::cluster::Placement;
 use crate::comm::allreduce::Algo;
 use crate::comm::commop::{CommOp, ResKind, ResourceUse, StepCost};
 use crate::sim::{Action, Engine, ProgStep, ResourceId, SimTime};
@@ -165,30 +169,79 @@ fn dep2(a: Option<NodeId>, b: Option<NodeId>) -> Vec<NodeId> {
     v
 }
 
+/// The ops of one algorithm step for rank `rank` exchanging with `peer`
+/// under a placement: an inter-node hop keeps the step's decomposition;
+/// an intra-node hop re-kinds the `Wire` component to `Pcie` — it rides
+/// the node's PCIe/NVLink path (queueing on the node's local link, not
+/// the NIC) scaled by `local` (inter-node β ÷ local β, see
+/// [`crate::cluster::Fabric::local_hop_factor`]).  With one GPU per node
+/// no hop is ever intra, so the output is bit-identical to
+/// [`StepCost::ops`] — the placement-invariance guarantee.
+fn step_ops(st: &StepCost, place: &Placement, local: f64, rank: usize, peer: usize) -> Vec<CommOp> {
+    let mut ops = st.ops();
+    if place.gpus_per_node > 1 && place.same_node(rank, peer) {
+        for op in &mut ops {
+            if op.kind == ResKind::Wire {
+                op.kind = ResKind::Pcie;
+                op.us *= local;
+            }
+        }
+    }
+    ops
+}
+
 /// Build the dependency graph of an allreduce from its validated per-step
-/// costs (the same [`StepCost`] sequence the serialized schedule uses).
+/// costs (the same [`StepCost`] sequence the serialized schedule uses),
+/// with every rank on its own node (the paper's layout).
 pub fn allreduce_graph(algo: Algo, p: usize, steps: &[StepCost]) -> CommGraph {
+    allreduce_graph_placed(algo, p, steps, Placement::one_per_node(), 1.0)
+}
+
+/// [`allreduce_graph`] under a [`Placement`]: hops between co-located
+/// ranks are re-costed onto the node-local link (`local` = inter-node β
+/// ÷ local β).  Trivial placements reproduce [`allreduce_graph`]
+/// bit-for-bit regardless of `local`.
+pub fn allreduce_graph_placed(
+    algo: Algo,
+    p: usize,
+    steps: &[StepCost],
+    place: Placement,
+    local: f64,
+) -> CommGraph {
     match algo {
-        Algo::Ring => ring_graph(p, steps),
-        Algo::Rhd => rhd_graph(p, steps),
-        Algo::Tree => tree_graph(p, steps),
+        Algo::Ring => ring_graph_placed(p, steps, place, local),
+        Algo::Rhd => rhd_graph_placed(p, steps, place, local),
+        Algo::Tree => tree_graph_placed(p, steps, place, local),
     }
 }
 
 /// Ring: step *s* on rank *r* waits on its own step *s−1* and on the
 /// matching send of rank *r−1* (the data it receives this step).
 pub fn ring_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    ring_graph_placed(p, steps, Placement::one_per_node(), 1.0)
+}
+
+/// Placed ring: under a block placement the hop from *r−1* into *r* is
+/// intra-node whenever `r` is not its node's first rank — the classic
+/// hierarchical-ring benefit (one wire crossing per node per step, the
+/// rest rides PCIe/NVLink).
+pub fn ring_graph_placed(
+    p: usize,
+    steps: &[StepCost],
+    place: Placement,
+    local: f64,
+) -> CommGraph {
     let mut g = CommGraph::default();
     if p < 2 {
         return g;
     }
     let mut last: Vec<Option<NodeId>> = vec![None; p];
     for (s, st) in steps.iter().enumerate() {
-        let ops = st.ops();
         let prev = last.clone();
         for (r, slot) in last.iter_mut().enumerate() {
             let from = (r + p - 1) % p;
-            *slot = Some(g.push_node(r, s as u32, ops.clone(), dep2(prev[r], prev[from])));
+            let ops = step_ops(st, &place, local, r, from);
+            *slot = Some(g.push_node(r, s as u32, ops, dep2(prev[r], prev[from])));
         }
     }
     g
@@ -199,6 +252,18 @@ pub fn ring_graph(p: usize, steps: &[StepCost]) -> CommGraph {
 /// base partner first (pre) and unfolds them last (post) — the same phase
 /// sequence `shadow::rhd_shadow` charges.
 pub fn rhd_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    rhd_graph_placed(p, steps, Placement::one_per_node(), 1.0)
+}
+
+/// Placed RHD: small-mask exchanges pair near ranks — under a block
+/// placement every mask < `gpus_per_node` stays on-node, the larger
+/// masks always cross the wire.
+pub fn rhd_graph_placed(
+    p: usize,
+    steps: &[StepCost],
+    place: Placement,
+    local: f64,
+) -> CommGraph {
     let mut g = CommGraph::default();
     if p < 2 {
         return g;
@@ -209,14 +274,16 @@ pub fn rhd_graph(p: usize, steps: &[StepCost]) -> CommGraph {
     let mut si = 0usize;
 
     let mut fold_step = |g: &mut CommGraph, last: &mut Vec<Option<NodeId>>, si: &mut usize| {
-        let ops = steps[*si].ops();
+        let st = &steps[*si];
         let stepi = *si as u32;
         *si += 1;
         let prev = last.clone();
         for r in p2..p {
             let base = r - p2;
-            last[r] = Some(g.push_node(r, stepi, ops.clone(), dep2(prev[r], prev[base])));
-            last[base] = Some(g.push_node(base, stepi, ops.clone(), dep2(prev[base], prev[r])));
+            let ops_r = step_ops(st, &place, local, r, base);
+            let ops_b = step_ops(st, &place, local, base, r);
+            last[r] = Some(g.push_node(r, stepi, ops_r, dep2(prev[r], prev[base])));
+            last[base] = Some(g.push_node(base, stepi, ops_b, dep2(prev[base], prev[r])));
         }
     };
 
@@ -233,13 +300,14 @@ pub fn rhd_graph(p: usize, steps: &[StepCost]) -> CommGraph {
         v
     };
     for &mask in masks.iter().chain(masks.iter().rev()) {
-        let ops = steps[si].ops();
+        let st = &steps[si];
         let stepi = si as u32;
         si += 1;
         let prev = last.clone();
         for (r, slot) in last.iter_mut().enumerate().take(p2) {
             let q = r ^ mask;
-            *slot = Some(g.push_node(r, stepi, ops.clone(), dep2(prev[r], prev[q])));
+            let ops = step_ops(st, &place, local, r, q);
+            *slot = Some(g.push_node(r, stepi, ops, dep2(prev[r], prev[q])));
         }
     }
     if rem > 0 {
@@ -254,6 +322,17 @@ pub fn rhd_graph(p: usize, steps: &[StepCost]) -> CommGraph {
 /// sender's latest node, which serializes a rank's consecutive sends
 /// (rank 0 broadcasts one level at a time).
 pub fn tree_graph(p: usize, steps: &[StepCost]) -> CommGraph {
+    tree_graph_placed(p, steps, Placement::one_per_node(), 1.0)
+}
+
+/// Placed binomial tree: the lowest levels pair adjacent ranks, which a
+/// block placement keeps on-node; the top levels always cross the wire.
+pub fn tree_graph_placed(
+    p: usize,
+    steps: &[StepCost],
+    place: Placement,
+    local: f64,
+) -> CommGraph {
     let mut g = CommGraph::default();
     if p < 2 {
         return g;
@@ -265,12 +344,13 @@ pub fn tree_graph(p: usize, steps: &[StepCost]) -> CommGraph {
                      last: &mut Vec<Option<NodeId>>,
                      si: &mut usize,
                      pairs: &[(usize, usize)]| {
-        let ops = steps[*si].ops();
+        let st = &steps[*si];
         let stepi = *si as u32;
         *si += 1;
         let prev = last.clone();
         for &(src, dst) in pairs {
-            let id = g.push_node(dst, stepi, ops.clone(), dep2(prev[dst], prev[src]));
+            let ops = step_ops(st, &place, local, dst, src);
+            let id = g.push_node(dst, stepi, ops, dep2(prev[dst], prev[src]));
             last[dst] = Some(id);
             last[src] = Some(id);
         }
@@ -549,23 +629,39 @@ pub struct TemplateCache {
 }
 
 /// Cache key of one built collective graph: algorithm tag, world size,
-/// and the exact bit signature of the per-step costs (plus any builder
-/// extras the caller appends, e.g. Horovod's coordination-root cost).
+/// the placement signature, and the exact bit signature of the per-step
+/// costs (plus any builder extras the caller appends, e.g. Horovod's
+/// coordination-root cost or the intra-node hop factor).  The placement
+/// is part of the key because a placed builder bakes intra-node hop
+/// re-kinding *into the graph*: two layouts of the same collective must
+/// never alias one template (and rails, though resource-side only, keep
+/// the key honest about what layout a template was built for).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct TemplateKey {
     pub algo: u8,
     pub world: usize,
+    /// `(gpus_per_node, rails)` — [`Placement::key`].
+    pub place: (usize, usize),
     pub sig: Vec<u64>,
 }
 
 impl TemplateKey {
     pub fn allreduce(algo: Algo, world: usize, sig: Vec<u64>) -> TemplateKey {
+        TemplateKey::allreduce_placed(algo, world, Placement::one_per_node(), sig)
+    }
+
+    pub fn allreduce_placed(
+        algo: Algo,
+        world: usize,
+        place: Placement,
+        sig: Vec<u64>,
+    ) -> TemplateKey {
         let algo = match algo {
             Algo::Tree => 0,
             Algo::Ring => 1,
             Algo::Rhd => 2,
         };
-        TemplateKey { algo, world, sig }
+        TemplateKey { algo, world, place: place.key(), sig }
     }
 }
 
@@ -599,63 +695,104 @@ impl TemplateCache {
     }
 }
 
-/// Node-local resources, one full bundle per rank: the wire NIC and PCIe
-/// link stop being one shared per-job proxy and become the rank's own
-/// (every paper cluster places one GPU per node, so rank ≡ node here).
-/// Cross-rank contention inside one collective disappears — replaced by
-/// the dependency edges — while co-tenant jobs sharing the fabric contend
-/// per NIC via [`GraphResources::sharing_wire`].
+/// Node-local resources laid out over a [`Placement`]: co-located ranks
+/// share their node's NIC ports (`wire`, one per `(node, rail)`) and
+/// its PCIe/NVLink path (`pcie`, one per node) while keeping private
+/// GPU/CPU/driver/launch/software resources.  With the paper's trivial
+/// placement (1 GPU per node, 1 rail) every bundle is per-rank, exactly
+/// the historical layout.  Cross-rank contention inside one collective
+/// comes from co-located ranks queueing on shared node resources (plus
+/// the dependency edges); co-tenant *jobs* sharing the fabric contend
+/// per NIC port via [`GraphResources::sharing_wire`].
 #[derive(Clone)]
 pub struct GraphResources {
+    /// NIC ports, node-major rail-minor: `wire[node * rails + rail]`.
     pub wire: Vec<ResourceId>,
+    /// Host staging / intra-node transfer links, one per node.
     pub pcie: Vec<ResourceId>,
     pub gpu: Vec<ResourceId>,
     pub cpu: Vec<ResourceId>,
     pub driver: Vec<ResourceId>,
     pub launch: Vec<ResourceId>,
     pub sw: Vec<ResourceId>,
+    place: Placement,
+    ranks: usize,
 }
 
 impl GraphResources {
     pub fn install(e: &mut Engine, ranks: usize) -> GraphResources {
-        let mk = |e: &mut Engine| -> Vec<ResourceId> {
+        GraphResources::install_placed(e, ranks, Placement::one_per_node())
+    }
+
+    /// Install a job's bundle under a placement.  Resource-creation
+    /// order (wire ports, pcie, then the per-rank vectors) matches the
+    /// historical per-rank install when the placement is trivial, so
+    /// engine resource ids — and therefore FIFO tie-breaking — are
+    /// unchanged on the paper's layouts.
+    pub fn install_placed(e: &mut Engine, ranks: usize, place: Placement) -> GraphResources {
+        let nodes = place.nodes_for(ranks);
+        let wire = (0..nodes * place.rails).map(|_| e.unit_resource()).collect();
+        let pcie = (0..nodes).map(|_| e.unit_resource()).collect();
+        let per_rank = |e: &mut Engine| -> Vec<ResourceId> {
             (0..ranks).map(|_| e.unit_resource()).collect()
         };
         GraphResources {
-            wire: mk(e),
-            pcie: mk(e),
-            gpu: mk(e),
-            cpu: mk(e),
-            driver: mk(e),
-            launch: mk(e),
-            sw: mk(e),
+            wire,
+            pcie,
+            gpu: per_rank(e),
+            cpu: per_rank(e),
+            driver: per_rank(e),
+            launch: per_rank(e),
+            sw: per_rank(e),
+            place,
+            ranks,
         }
     }
 
-    /// A co-tenant job's bundle sharing another job's per-node NICs
-    /// (both jobs' wire steps queue FIFO on the same physical ports) but
-    /// owning every other node-local resource.
-    pub fn sharing_wire(e: &mut Engine, other: &GraphResources) -> GraphResources {
-        let mut mine = GraphResources::install(e, other.wire.len());
-        mine.wire = other.wire.clone();
+    /// A co-tenant job's bundle sharing another job's physical NIC ports
+    /// (both jobs' wire steps queue FIFO on the same `(node, rail)`
+    /// ports) while owning every other node-local resource.  The
+    /// co-tenant lands on the same physical nodes, so it inherits
+    /// `other`'s placement geometry; `ranks` is the co-tenant's own
+    /// world size — when it spans more nodes than `other`, the extra
+    /// nodes' ports stay private (nobody there to share with), and when
+    /// it spans fewer, only the overlapping ports are shared.
+    pub fn sharing_wire(e: &mut Engine, ranks: usize, other: &GraphResources) -> GraphResources {
+        let mut mine = GraphResources::install_placed(e, ranks, other.place);
+        let shared = mine.wire.len().min(other.wire.len());
+        mine.wire[..shared].copy_from_slice(&other.wire[..shared]);
         mine
     }
 
     pub fn ranks(&self) -> usize {
-        self.wire.len()
+        self.ranks
     }
 
+    pub fn placement(&self) -> Placement {
+        self.place
+    }
+
+    /// The engine resource backing `rank`'s ops of kind `k`.  Panics on
+    /// an out-of-range rank — the old modulo indexing silently wrapped
+    /// such ranks onto another rank's bundle, turning a caller bug into
+    /// phantom contention.
     pub fn get(&self, rank: usize, k: ResKind) -> ResourceId {
-        let v = match k {
-            ResKind::Wire => &self.wire,
-            ResKind::Pcie => &self.pcie,
-            ResKind::GpuReduce => &self.gpu,
-            ResKind::CpuReduce => &self.cpu,
-            ResKind::Driver => &self.driver,
-            ResKind::Launch => &self.launch,
-            ResKind::Sw => &self.sw,
-        };
-        v[rank % v.len()]
+        assert!(
+            rank < self.ranks,
+            "rank {rank} out of range: bundle installed for {} ranks",
+            self.ranks
+        );
+        match k {
+            ResKind::Wire => {
+                self.wire[self.place.node_of(rank) * self.place.rails + self.place.rail_of(rank)]
+            }
+            ResKind::Pcie => self.pcie[self.place.node_of(rank)],
+            ResKind::GpuReduce => self.gpu[rank],
+            ResKind::CpuReduce => self.cpu[rank],
+            ResKind::Driver => self.driver[rank],
+            ResKind::Launch => self.launch[rank],
+            ResKind::Sw => self.sw[rank],
+        }
     }
 
     pub fn mapper(&self) -> GraphResMap {
@@ -663,14 +800,22 @@ impl GraphResources {
         Rc::new(move |rank, k| Some(me.get(rank, k)))
     }
 
-    /// Per-kind (served, busy) rows aggregated across ranks — same row
-    /// names as the serialized path's `CommResources::utilization`.
+    /// Per-kind (served, busy) rows aggregated across the *distinct*
+    /// underlying resources (shared node resources count once, not once
+    /// per co-located rank) — same row names as the serialized path's
+    /// `CommResources::utilization`.
     pub fn utilization(&self, e: &Engine) -> Vec<ResourceUse> {
-        ResKind::ALL
-            .iter()
-            .map(|&k| {
-                ResourceUse::aggregate(e, k.name(), (0..self.ranks()).map(|r| self.get(r, k)))
-            })
+        let rows: [(&str, &Vec<ResourceId>); 7] = [
+            (ResKind::Wire.name(), &self.wire),
+            (ResKind::Pcie.name(), &self.pcie),
+            (ResKind::GpuReduce.name(), &self.gpu),
+            (ResKind::CpuReduce.name(), &self.cpu),
+            (ResKind::Driver.name(), &self.driver),
+            (ResKind::Launch.name(), &self.launch),
+            (ResKind::Sw.name(), &self.sw),
+        ];
+        rows.iter()
+            .map(|(name, ids)| ResourceUse::aggregate(e, name, ids.iter().copied()))
             .filter(|u| u.served > 0)
             .collect()
     }
@@ -1086,7 +1231,7 @@ mod tests {
         // the private gpu phases overlap — the two-job model at rank level.
         let mut e = Engine::new();
         let a = GraphResources::install(&mut e, 2);
-        let b = GraphResources::sharing_wire(&mut e, &a);
+        let b = GraphResources::sharing_wire(&mut e, 2, &a);
         let mut ends = Vec::new();
         for res in [&a, &b] {
             let g = CommGraph::chain(
@@ -1108,5 +1253,169 @@ mod tests {
         assert_eq!(*ends[1].borrow(), 25.0);
         let (_, busy) = e.resource_stats(a.wire[0]);
         assert_eq!(busy, SimTime::from_us(20.0));
+    }
+
+    #[test]
+    fn placed_bundle_shares_node_nic_and_pcie_keeps_gpu_private() {
+        // Two co-located ranks (2 GPUs/node, 1 rail): their wire ops
+        // serialize on the node's one port, their gpu ops overlap.
+        let mut e = Engine::new();
+        let res = GraphResources::install_placed(&mut e, 2, Placement::new(2, 1));
+        assert_eq!(res.ranks(), 2);
+        assert_eq!(res.wire.len(), 1);
+        assert_eq!(res.pcie.len(), 1);
+        assert_eq!(res.gpu.len(), 2);
+        assert_eq!(res.get(0, ResKind::Wire), res.get(1, ResKind::Wire));
+        assert_eq!(res.get(0, ResKind::Pcie), res.get(1, ResKind::Pcie));
+        assert_ne!(res.get(0, ResKind::GpuReduce), res.get(1, ResKind::GpuReduce));
+        let mut g = CommGraph::default();
+        for r in 0..2 {
+            g.push_node(
+                r,
+                0,
+                vec![CommOp::fixed(ResKind::Wire, 10.0), CommOp::fixed(ResKind::GpuReduce, 5.0)],
+                Vec::new(),
+            );
+        }
+        let (end, run) = {
+            let run = execute(&mut e, &g, res.mapper(), Box::new(|_| {}));
+            let end = e.run();
+            let out = run.borrow().clone();
+            (end, out)
+        };
+        // rank 0 wire 0-10, gpu 10-15; rank 1 wire queues 10-20, gpu 20-25
+        assert_eq!(run.finish, vec![SimTime::from_us(15.0), SimTime::from_us(25.0)]);
+        assert_eq!(end, SimTime::from_us(25.0));
+    }
+
+    #[test]
+    fn second_rail_splits_the_node_nic() {
+        // same two-rank node, 2 rails: each rank gets its own port, the
+        // wire ops run in parallel again
+        let mut e = Engine::new();
+        let res = GraphResources::install_placed(&mut e, 2, Placement::new(2, 2));
+        assert_eq!(res.wire.len(), 2);
+        assert_ne!(res.get(0, ResKind::Wire), res.get(1, ResKind::Wire));
+        let mut g = CommGraph::default();
+        for r in 0..2 {
+            g.push_node(r, 0, vec![CommOp::fixed(ResKind::Wire, 10.0)], Vec::new());
+        }
+        let run = execute(&mut e, &g, res.mapper(), Box::new(|_| {}));
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(10.0));
+        assert_eq!(
+            run.borrow().finish,
+            vec![SimTime::from_us(10.0), SimTime::from_us(10.0)]
+        );
+    }
+
+    #[test]
+    fn placed_ring_rekind_intra_hops_onto_pcie() {
+        // p=4 in 2-GPU nodes: odd ranks receive from their on-node
+        // neighbour — those hops re-kind to Pcie and scale by `local`;
+        // even ranks' hops stay on the wire, untouched.
+        let steps = wire_steps(1, 10.0);
+        let place = Placement::new(2, 1);
+        let g = ring_graph_placed(4, &steps, place, 0.5);
+        assert_eq!(g.len(), 4);
+        for node in &g.nodes {
+            let op = node.ops[0];
+            if node.rank % 2 == 1 {
+                assert_eq!(op.kind, ResKind::Pcie, "rank {} hop should be local", node.rank);
+                assert!((op.us - 5.0).abs() < 1e-12);
+            } else {
+                assert_eq!(op.kind, ResKind::Wire, "rank {} hop should cross", node.rank);
+                assert!((op.us - 10.0).abs() < 1e-12);
+            }
+        }
+        // trivial placement reproduces the unplaced builder bit-for-bit,
+        // whatever the local factor
+        let a = ring_graph(4, &steps);
+        let b = ring_graph_placed(4, &steps, Placement::one_per_node(), 0.25);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.deps, y.deps);
+            assert_eq!(x.ops.len(), y.ops.len());
+            for (ox, oy) in x.ops.iter().zip(&y.ops) {
+                assert_eq!(ox.kind, oy.kind);
+                assert_eq!(ox.us.to_bits(), oy.us.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sharing_wire_handles_different_rank_counts() {
+        // job A spans 2 nodes, job B spans 4: the first two nodes' ports
+        // are shared, B's extra nodes get private ports (the old code
+        // sized B's whole bundle off A and wrapped B's high ranks onto
+        // A's ports)
+        let mut e = Engine::new();
+        let place = Placement::new(2, 1);
+        let a = GraphResources::install_placed(&mut e, 4, place);
+        let b = GraphResources::sharing_wire(&mut e, 8, &a);
+        assert_eq!(b.ranks(), 8);
+        assert_eq!(b.wire.len(), 4);
+        assert_eq!(b.get(0, ResKind::Wire), a.get(0, ResKind::Wire));
+        assert_eq!(b.get(3, ResKind::Wire), a.get(3, ResKind::Wire));
+        // beyond A's span: private ports, and B's own non-wire resources
+        assert!(a.wire.iter().all(|&w| w != b.get(6, ResKind::Wire)));
+        assert_ne!(b.get(0, ResKind::GpuReduce), a.get(0, ResKind::GpuReduce));
+        // the smaller-job direction shares only the overlap
+        let c = GraphResources::sharing_wire(&mut e, 2, &a);
+        assert_eq!(c.wire.len(), 1);
+        assert_eq!(c.get(1, ResKind::Wire), a.get(0, ResKind::Wire));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn get_rejects_out_of_range_ranks() {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, 4);
+        let _ = res.get(4, ResKind::Wire);
+    }
+
+    #[test]
+    fn template_cache_distinguishes_placements() {
+        // same (algo, world, step costs), three layouts: three distinct
+        // keys, three distinct templates — and the dense timelines
+        // actually differ from the trivial one
+        let cache = TemplateCache::default();
+        let steps = wire_steps(6, 10.0);
+        let sig = crate::comm::commop::steps_sig(&steps);
+        let trivial = cache.get_or_build(TemplateKey::allreduce(Algo::Ring, 4, sig.clone()), || {
+            ring_graph(4, &steps)
+        });
+        let dense = cache.get_or_build(
+            TemplateKey::allreduce_placed(Algo::Ring, 4, Placement::new(2, 1), sig.clone()),
+            || ring_graph_placed(4, &steps, Placement::new(2, 1), 3.0),
+        );
+        let railed = cache.get_or_build(
+            TemplateKey::allreduce_placed(Algo::Ring, 4, Placement::new(2, 2), sig.clone()),
+            || ring_graph_placed(4, &steps, Placement::new(2, 2), 3.0),
+        );
+        assert_eq!(cache.len(), 3, "placements must not alias in the cache");
+        assert!(!Arc::ptr_eq(&trivial, &dense));
+        assert!(!Arc::ptr_eq(&dense, &railed));
+        // distinct timelines: intra hops at 3x make the dense chains
+        // strictly longer than the trivial 6 × 10us serialization
+        let run = |t: &GraphTemplate, place: Placement| {
+            let mut e = Engine::new();
+            let res = GraphResources::install_placed(&mut e, 4, place);
+            t.execute(&mut e, res.mapper(), &GraphOverlay::neutral(), Box::new(|_| {}));
+            e.run()
+        };
+        let end_trivial = run(&trivial, Placement::one_per_node());
+        let end_dense = run(&dense, Placement::new(2, 1));
+        assert_eq!(end_trivial, SimTime::from_us(60.0));
+        assert!(end_dense > end_trivial, "{end_dense} vs {end_trivial}");
+        // warm-vs-cold under placement: the same key replays the same
+        // pointer and the same timeline
+        let warm = cache.get_or_build(
+            TemplateKey::allreduce_placed(Algo::Ring, 4, Placement::new(2, 1), sig),
+            || panic!("placement key must hit the cache"),
+        );
+        assert!(Arc::ptr_eq(&dense, &warm));
+        assert_eq!(run(&warm, Placement::new(2, 1)), end_dense);
     }
 }

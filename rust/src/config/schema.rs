@@ -44,7 +44,7 @@ impl ExperimentConfig {
             .to_string();
 
         let wl = doc.get("workload").context("missing [workload] table")?;
-        let cluster = presets::by_name(
+        let mut cluster = presets::by_name(
             wl.get("cluster").and_then(|v| v.as_str()).unwrap_or("ri2"),
         )?;
         let model =
@@ -55,9 +55,6 @@ impl ExperimentConfig {
             .map(|a| a.iter().filter_map(|x| x.as_int()).map(|i| i as usize).collect())
             .unwrap_or_else(|| vec![1, 2, 4, 8, 16]);
         crate::ensure!(!gpus.is_empty(), "empty gpu sweep");
-        for &g in &gpus {
-            cluster.check_world(g)?;
-        }
         let batch_per_gpu = wl
             .get("batch")
             .and_then(|v| v.as_int())
@@ -134,6 +131,31 @@ impl ExperimentConfig {
                 scenario.second_job_offset_us >= 0.0,
                 "[scenario] second_job_offset_us must be >= 0"
             );
+            // placement keys ride the [scenario] table: they reshape the
+            // cluster the whole sweep runs on — dense nodes colocate
+            // ranks on shared NIC/PCIe bundles, rails split the node NIC
+            // (graph-path execution; serialized replay cannot express it)
+            for (key, slot) in [
+                ("gpus_per_node", &mut cluster.gpus_per_node),
+                ("rails", &mut cluster.nic_rails),
+            ] {
+                if let Some(v) = sc.get(key).and_then(|v| v.as_int()) {
+                    crate::ensure!(v >= 1, "[scenario] {key} must be >= 1, got {v}");
+                    *slot = v as usize;
+                }
+            }
+            // each rank occupies one rail: more rails than ranks per
+            // node would sit idle — an inert knob is a config mistake
+            crate::ensure!(
+                cluster.nic_rails <= cluster.gpus_per_node,
+                "[scenario] rails = {} exceeds gpus_per_node = {}: the extra rails would be idle",
+                cluster.nic_rails,
+                cluster.gpus_per_node
+            );
+        }
+        // worlds validate against the (possibly densified) machine
+        for &g in &gpus {
+            cluster.check_world(g)?;
         }
 
         Ok(ExperimentConfig {
@@ -230,6 +252,42 @@ second_job_offset_us = 500.0
         assert!(!c.scenario.is_neutral());
         // an offset without the job is a config mistake, not a no-op
         assert!(parse("[workload]\n[scenario]\nsecond_job_offset_us = 10.0").is_err());
+    }
+
+    #[test]
+    fn scenario_placement_keys_reshape_the_cluster() {
+        let c = parse(
+            r#"
+[workload]
+model = "resnet50"
+gpus = [4, 16]
+
+[scenario]
+gpus_per_node = 4
+rails = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.gpus_per_node, 4);
+        assert_eq!(c.cluster.nic_rails, 2);
+        assert_eq!(c.cluster.placement().key(), (4, 2));
+        // the scenario knobs themselves stay neutral — placement is a
+        // cluster reshape, not a per-rank perturbation
+        assert!(c.scenario.is_neutral());
+        assert!(parse("[workload]\n[scenario]\ngpus_per_node = 0").is_err());
+        assert!(parse("[workload]\n[scenario]\nrails = 0").is_err());
+        // rails beyond the ranks per node would sit idle — rejected
+        assert!(parse("[workload]\n[scenario]\nrails = 2").is_err());
+        assert!(
+            parse("[workload]\n[scenario]\ngpus_per_node = 2\nrails = 4").is_err()
+        );
+        // worlds validate against the densified machine
+        let big = parse(
+            "[workload]\ncluster = \"ri2\"\ngpus = [40]\n[scenario]\ngpus_per_node = 2",
+        )
+        .unwrap();
+        assert_eq!(big.cluster.max_gpus(), 40);
+        assert!(parse("[workload]\ncluster = \"ri2\"\ngpus = [40]").is_err());
     }
 
     #[test]

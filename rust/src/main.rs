@@ -9,7 +9,9 @@
 //! mpi-dnn-train ablation --cluster owens --world 64 [--sweep fusion|cycle-grid]
 //! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5
 //! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet --family ps
+//! mpi-dnn-train scenario placement --cluster owens --world 16 --gpus-per-node 4 --rails 2
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
+//! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
 //! mpi-dnn-train perf [--quick] [--out BENCH_engine.json]   # §Perf harness
 //! mpi-dnn-train validate               # artifacts + numerics smoke
 //! mpi-dnn-train list
@@ -276,7 +278,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 fn cmd_scenario(args: &Args) -> Result<()> {
     use mpi_dnn_train::strategies::Scenario;
     let kind = args.positional.first().map(String::as_str).unwrap_or("straggler");
-    let cluster = presets::by_name(&args.get_or("cluster", "owens"))?;
+    let mut cluster = presets::by_name(&args.get_or("cluster", "owens"))?;
     let world = args.get_usize("world", 16).map_err(Error::msg)?;
     let model = mpi_dnn_train::models::by_name(&args.get_or("model", "resnet50"))?;
     let json = args.get_bool("json");
@@ -287,7 +289,48 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
     let offset = args.get_f64("offset-us", 0.0).map_err(Error::msg)?;
     let family = args.get_or("family", "horovod");
+    // placement overrides: dense nodes / multi-rail NICs reshape the
+    // cluster every scenario runs on (the `placement` kind sweeps them
+    // instead, defaulting to a 2-GPU / 2-rail comparison)
+    let gpn_flag = match args.get("gpus-per-node") {
+        Some(_) => Some(args.get_usize("gpus-per-node", 1).map_err(Error::msg)?),
+        None => None,
+    };
+    let rails_flag = match args.get("rails") {
+        Some(_) => Some(args.get_usize("rails", 1).map_err(Error::msg)?),
+        None => None,
+    };
     args.reject_unknown().map_err(Error::msg)?;
+    for (name, v) in [("--gpus-per-node", gpn_flag), ("--rails", rails_flag)] {
+        if let Some(v) = v {
+            mpi_dnn_train::ensure!(v >= 1, "{name} must be >= 1, got {v}");
+        }
+    }
+    if kind == "placement" {
+        let table = bench::placement_sweep(
+            cluster,
+            model,
+            world,
+            gpn_flag.unwrap_or(2),
+            rails_flag.unwrap_or(2),
+        )?;
+        emit(&table, json);
+        return Ok(());
+    }
+    if let Some(g) = gpn_flag {
+        cluster.gpus_per_node = g;
+    }
+    if let Some(r) = rails_flag {
+        cluster.nic_rails = r;
+    }
+    // each rank occupies one rail: more rails than ranks per node would
+    // sit idle and silently change nothing but the execution path
+    mpi_dnn_train::ensure!(
+        cluster.nic_rails <= cluster.gpus_per_node,
+        "--rails {} exceeds --gpus-per-node {}: the extra rails would be idle",
+        cluster.nic_rails,
+        cluster.gpus_per_node
+    );
 
     if matches!(kind, "straggler" | "hetero") {
         // a sub-1.0 factor is inert (the unperturbed ranks still pace the
@@ -363,7 +406,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset, &family)?,
         other => mpi_dnn_train::bail!(
-            "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs)"
+            "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs | \
+             placement)"
         ),
     };
     emit(&table, json);
@@ -379,27 +423,39 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 /// diff-stable across runs and display modes.
 fn cmd_graph(args: &Args) -> Result<()> {
     use mpi_dnn_train::comm::allreduce::{shadow_steps, Algo};
-    use mpi_dnn_train::comm::graph::{allreduce_graph, GraphResources, GraphTemplate};
+    use mpi_dnn_train::comm::graph::{allreduce_graph_placed, GraphResources, GraphTemplate};
     use mpi_dnn_train::comm::CommSchedule;
     use mpi_dnn_train::sim::Engine;
     use mpi_dnn_train::strategies::Scenario;
 
     let ranks = args.get_usize("ranks", 8).map_err(Error::msg)?;
     let bytes = parse_bytes(&args.get_or("size", "4MB")).map_err(Error::msg)?;
-    let cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
+    let mut cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
     let flavor = parse_flavor(&args.get_or("flavor", "mvapich2"))?;
     let algo_flag = args.get_or("algo", "auto");
     let straggler = args.get_usize("straggler", 0).map_err(Error::msg)?;
     let factor = args.get_f64("factor", 1.5).map_err(Error::msg)?;
     let jitter = args.get_f64("jitter-us", 0.0).map_err(Error::msg)?;
     let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
+    let gpus_per_node =
+        args.get_usize("gpus-per-node", cluster.gpus_per_node).map_err(Error::msg)?;
+    let rails = args.get_usize("rails", cluster.nic_rails).map_err(Error::msg)?;
     let json = args.get_bool("json");
     args.reject_unknown().map_err(Error::msg)?;
     mpi_dnn_train::ensure!(ranks >= 2, "--ranks must be at least 2");
+    mpi_dnn_train::ensure!(gpus_per_node >= 1, "--gpus-per-node must be >= 1");
+    mpi_dnn_train::ensure!(rails >= 1, "--rails must be >= 1");
+    mpi_dnn_train::ensure!(
+        rails <= gpus_per_node,
+        "--rails {rails} exceeds --gpus-per-node {gpus_per_node}: the extra rails would be idle"
+    );
     mpi_dnn_train::ensure!(
         straggler == 0 || (factor.is_finite() && factor > 1.0),
         "--factor must be > 1.0 when --straggler is set, got {factor}"
     );
+    cluster.gpus_per_node = gpus_per_node;
+    cluster.nic_rails = rails;
+    let place = cluster.placement();
 
     let w = MpiWorld::new(flavor, cluster.clone());
     let (planned, mut ctx) = w.plan(bytes);
@@ -414,7 +470,13 @@ fn cmd_graph(args: &Args) -> Result<()> {
     let (report, steps) = shadow_steps(algo, ranks, (bytes / 4).max(1), &mut ctx);
     let serial_us = CommSchedule::from_steps(&steps).total_us();
 
-    let template = GraphTemplate::new(allreduce_graph(algo, ranks, &steps));
+    let template = GraphTemplate::new(allreduce_graph_placed(
+        algo,
+        ranks,
+        &steps,
+        place,
+        cluster.fabric.local_hop_factor(),
+    ));
     let sc = Scenario {
         straggler_ranks: straggler,
         straggler_factor: factor,
@@ -425,7 +487,7 @@ fn cmd_graph(args: &Args) -> Result<()> {
     let overlay = sc.overlay(ranks, 0);
 
     let mut e = Engine::new();
-    let res = GraphResources::install(&mut e, ranks);
+    let res = GraphResources::install_placed(&mut e, ranks, place);
     let run = template.execute(&mut e, res.mapper(), &overlay, Box::new(|_| {}));
     let end = e.run();
     let run = run.borrow();
@@ -481,6 +543,14 @@ fn cmd_graph(args: &Args) -> Result<()> {
         table.note(format!(
             "perturbed: {straggler} straggler rank(s) ×{factor}, jitter ≤{jitter}us (seed {seed}) — \
              deterministic, same seed ⇒ same timeline (cached-template replay)"
+        ));
+    }
+    if !place.is_trivial() {
+        table.note(format!(
+            "placement: {gpus_per_node} GPU(s)/node × {rails} NIC rail(s) — co-located ranks \
+             share their node's NIC port(s) and PCIe link; intra-node hops ride PCIe at \
+             {:.2}x the wire time",
+            cluster.fabric.local_hop_factor()
         ));
     }
     emit(&table, json);
@@ -569,8 +639,12 @@ fn cmd_list(args: &Args) -> Result<()> {
     );
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
-        "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps] \
-         (see `scenario --help` flags)"
+        "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps], \
+         placement (see `scenario --help` flags)"
+    );
+    println!(
+        "placement: every scenario/graph accepts --gpus-per-node N --rails R (dense nodes \
+         share a NIC/PCIe bundle; rails split the node NIC; intra-node hops ride PCIe)"
     );
     println!("graph: per-rank CommGraph timelines (--algo auto|ring|rhd|tree, --straggler, --jitter-us)");
     println!("perf: engine/graph-replay/sweep throughput harness (--quick; writes BENCH_engine.json)");

@@ -20,7 +20,7 @@ use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::comm::allreduce::Algo;
 use crate::comm::commop::{replay, steps_sig, CommOp, CommResources, CommSchedule, StepCost};
-use crate::comm::graph::{ring_graph, GraphResources, TemplateCache, TemplateKey};
+use crate::comm::graph::{ring_graph_placed, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::sim::{Engine, GateId, SimTime};
 
@@ -97,22 +97,20 @@ impl Baidu {
         (steps, scale, staging_crit)
     }
 
-    /// One iteration with every per-tensor ring executed as a per-rank
-    /// dependency graph (see `Horovod::iteration_graph`); `iteration_in`
-    /// routes here when the scenario skews individual ranks, and the
-    /// neutral-scenario equivalence with the serialized replay is pinned
-    /// by `tests/des_regression.rs`.  §Perf: rings are cached templates
-    /// per tensor-size bucket; the pipeline amortization is the overlay's
-    /// global scale, applied at replay time.
-    pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
-        if ws.world == 1 {
-            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
-            return Ok(IterationReport::from_times(self.name(), ws, iter));
-        }
+    /// The iteration's per-tensor rings as cached graph templates plus
+    /// per-tensor overlays and release times — shared by
+    /// [`Baidu::iteration_graph`] and the two-job graph-path link-share
+    /// runner.  Templates build under the cluster's placement (hops
+    /// between co-located ranks re-cost onto the node-local link; the
+    /// layout and intra-hop factor join the cache key).
+    pub(crate) fn graph_items(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+    ) -> Result<Vec<super::GraphWork>> {
+        let place = ws.cluster.placement();
+        let local = ws.cluster.fabric.local_hop_factor();
         let stretch = sc.compute_stretch();
-        let mut e = Engine::new();
-        let res = GraphResources::install(&mut e, ws.world);
-        let thread = e.gate();
         let readiness = ws.tensor_readiness();
         let mut items = Vec::with_capacity(readiness.len());
         let mut per_bytes: HashMap<usize, (Vec<StepCost>, f64, f64)> = HashMap::new();
@@ -122,16 +120,38 @@ impl Baidu {
             let (steps, scale, staging) = per_bytes
                 .entry(bytes)
                 .or_insert_with(|| self.ring_steps(ws, sc, bytes));
-            let template = self
-                .cache
-                .get_or_build(TemplateKey::allreduce(Algo::Ring, ws.world, steps_sig(steps)), || {
-                    ring_graph(ws.world, steps)
-                });
+            let mut sig = steps_sig(steps);
+            sig.push(local.to_bits());
+            let template = self.cache.get_or_build(
+                TemplateKey::allreduce_placed(Algo::Ring, ws.world, place, sig),
+                || ring_graph_placed(ws.world, steps, place, local),
+            );
             let mut overlay = sc.overlay(ws.world, i as u64);
             overlay.scale_global(*scale);
             items.push(super::GraphWork { ready, template, overlay, staging_us: *staging });
         }
-        let job = super::GraphJob::schedule(&mut e, &res, thread, items);
+        Ok(items)
+    }
+
+    /// One iteration with every per-tensor ring executed as a per-rank
+    /// dependency graph on placement-aware resources (see
+    /// `Horovod::iteration_graph`); `iteration_in` routes here when the
+    /// scenario skews individual ranks or the cluster places more than
+    /// one GPU per node, and the neutral-scenario 1-GPU-per-node
+    /// equivalence with the serialized replay is pinned by
+    /// `tests/des_regression.rs`.  §Perf: rings are cached templates
+    /// per tensor-size bucket; the pipeline amortization is the overlay's
+    /// global scale, applied at replay time.
+    pub fn iteration_graph(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if ws.world == 1 {
+            let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
+            return Ok(IterationReport::from_times(self.name(), ws, iter));
+        }
+        let mut e = Engine::new();
+        let res = GraphResources::install_placed(&mut e, ws.world, ws.cluster.placement());
+        let thread = e.gate();
+        let items = self.graph_items(ws, sc)?;
+        let job = super::GraphJob::schedule(&mut e, &res, thread, items, SimTime::ZERO);
         e.run();
         let iter = super::close_iteration(
             ws,
@@ -224,7 +244,7 @@ impl Strategy for Baidu {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        if sc.per_rank_skew() {
+        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() {
             return self.iteration_graph(ws, sc);
         }
         // per-tensor rings serialize on the comm thread (a FIFO gate);

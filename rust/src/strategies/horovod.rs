@@ -33,7 +33,7 @@ use crate::comm::allreduce::Algo;
 use crate::comm::commop::{
     replay, steps_sig, CommOp, CommResources, CommSchedule, ResKind, StepCost,
 };
-use crate::comm::graph::{allreduce_graph, GraphResources, TemplateCache, TemplateKey};
+use crate::comm::graph::{allreduce_graph_placed, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::nccl::NcclWorld;
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::sim::{Engine, GateId, SimTime};
@@ -265,14 +265,63 @@ impl Horovod {
         super::close_iteration(ws, sc, trace, offset, self.runtime_tax, self.skew_us_per_rank)
     }
 
+    /// The iteration's fused buffers as cached graph templates plus
+    /// their per-buffer overlays and release times — the unit both
+    /// [`Horovod::iteration_graph`] and the two-job graph-path
+    /// link-share runner schedule.  Templates are built under the
+    /// cluster's [`Placement`](crate::cluster::Placement): hops between
+    /// co-located ranks re-cost onto the node-local link, and the
+    /// placement (plus the intra-hop factor) joins the cache key so
+    /// layouts can never alias.
+    pub(crate) fn graph_items(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+    ) -> Result<Vec<super::GraphWork>> {
+        let place = ws.cluster.placement();
+        let local = ws.cluster.fabric.local_hop_factor();
+        let coord = self.coord_us(ws);
+        let buffers = self.fusion_schedule_in(ws, sc.compute_stretch());
+        let mut items = Vec::with_capacity(buffers.len());
+        for (bi, (ready, bytes)) in buffers.into_iter().enumerate() {
+            let (algo, steps, staging) = self.buffer_steps(ws, sc, bytes)?;
+            // the coord cost and intra-hop factor are baked into the
+            // template (root node / re-kinded hop durations), so they
+            // are part of the cache key alongside the step costs
+            let mut sig = steps_sig(&steps);
+            sig.push(coord.to_bits());
+            sig.push(local.to_bits());
+            let template = self.cache.get_or_build(
+                TemplateKey::allreduce_placed(algo, ws.world, place, sig),
+                || {
+                    let mut g = allreduce_graph_placed(algo, ws.world, &steps, place, local);
+                    // the rank-0 negotiation round gates every rank's
+                    // first step
+                    g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, coord)]);
+                    g
+                },
+            );
+            items.push(super::GraphWork {
+                ready,
+                template,
+                overlay: sc.overlay(ws.world, bi as u64),
+                staging_us: staging,
+            });
+        }
+        Ok(items)
+    }
+
     /// One iteration with every fused buffer executed as a **per-rank
-    /// dependency graph** on node-local resources: ring/RHD/tree step *s*
-    /// of rank *r* becomes eligible when its predecessors (own step *s−1*
-    /// and the partner's matching send) finish, so a perturbed rank's
-    /// delay propagates step-by-step instead of shifting the whole
-    /// collective.  `iteration_in` routes here whenever the scenario
-    /// skews individual ranks; with a neutral scenario this path is
-    /// provably equivalent to the serialized replay (pinned by
+    /// dependency graph** on placement-aware node-local resources:
+    /// ring/RHD/tree step *s* of rank *r* becomes eligible when its
+    /// predecessors (own step *s−1* and the partner's matching send)
+    /// finish, so a perturbed rank's delay propagates step-by-step
+    /// instead of shifting the whole collective, and co-located ranks
+    /// queue on their shared NIC/PCIe bundle.  `iteration_in` routes
+    /// here whenever the scenario skews individual ranks OR the cluster
+    /// places more than one GPU per node; with a neutral scenario and
+    /// the paper's 1-GPU-per-node layout this path is provably
+    /// equivalent to the serialized replay (pinned by
     /// `tests/des_regression.rs`), just ~`world`× more engine events.
     /// §Perf: each buffer's graph is an immutable cached template
     /// (buffers bucket by size, so a ResNet iteration builds a handful of
@@ -290,33 +339,10 @@ impl Horovod {
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
         let mut e = Engine::new();
-        let res = GraphResources::install(&mut e, ws.world);
+        let res = GraphResources::install_placed(&mut e, ws.world, ws.cluster.placement());
         let thread = e.gate();
-        let coord = self.coord_us(ws);
-        let buffers = self.fusion_schedule_in(ws, sc.compute_stretch());
-        let mut items = Vec::with_capacity(buffers.len());
-        for (bi, (ready, bytes)) in buffers.into_iter().enumerate() {
-            let (algo, steps, staging) = self.buffer_steps(ws, sc, bytes)?;
-            // the coord cost is baked into the template (root node), so
-            // it is part of the cache key alongside the step costs
-            let mut sig = steps_sig(&steps);
-            sig.push(coord.to_bits());
-            let template =
-                self.cache.get_or_build(TemplateKey::allreduce(algo, ws.world, sig), || {
-                    let mut g = allreduce_graph(algo, ws.world, &steps);
-                    // the rank-0 negotiation round gates every rank's
-                    // first step
-                    g.prefix_root(0, vec![CommOp::fixed(ResKind::Sw, coord)]);
-                    g
-                });
-            items.push(super::GraphWork {
-                ready,
-                template,
-                overlay: sc.overlay(ws.world, bi as u64),
-                staging_us: staging,
-            });
-        }
-        let job = super::GraphJob::schedule(&mut e, &res, thread, items);
+        let items = self.graph_items(ws, sc)?;
+        let job = super::GraphJob::schedule(&mut e, &res, thread, items, SimTime::ZERO);
         e.run();
         let iter = self.close_job(ws, sc, &job.trace()?, SimTime::ZERO);
         Ok(super::report_with_comm_thread(
@@ -353,10 +379,12 @@ impl Strategy for Horovod {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        if sc.per_rank_skew() {
-            // per-rank skew needs per-rank schedules: execute the
+        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() {
+            // per-rank skew needs per-rank schedules, and a dense
+            // placement needs per-node resource sharing: execute the
             // dependency graphs (equivalent to the replay below when the
-            // scenario is neutral — des_regression pins it)
+            // scenario is neutral and every rank owns its node —
+            // des_regression pins it)
             return self.iteration_graph(ws, sc);
         }
         let mut e = Engine::new();

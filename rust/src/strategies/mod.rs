@@ -159,13 +159,16 @@ pub(crate) struct GraphJob {
 }
 
 impl GraphJob {
-    /// Schedule the job's collectives; read the result back with
-    /// [`GraphJob::trace`] after `Engine::run`.
+    /// Schedule the job's collectives, each releasing at `offset` plus
+    /// its own ready time (two-job link-share runs stagger job B by an
+    /// offset); read the result back with [`GraphJob::trace`] after
+    /// `Engine::run`.
     pub(crate) fn schedule(
         e: &mut Engine,
         res: &GraphResources,
         thread: GateId,
         items: Vec<GraphWork>,
+        offset: SimTime,
     ) -> GraphJob {
         let trace = Rc::new(RefCell::new(JobTrace::default()));
         let completed = Rc::new(RefCell::new(0usize));
@@ -176,7 +179,7 @@ impl GraphJob {
             let map = map.clone();
             let trace = trace.clone();
             let completed = completed.clone();
-            e.at(w.ready, move |e| {
+            e.at(offset + w.ready, move |e| {
                 let GraphWork { template, overlay, .. } = w;
                 e.acquire(thread, move |e| {
                     template.execute(

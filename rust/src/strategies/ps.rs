@@ -168,7 +168,9 @@ impl PsStrategy {
     /// [`ps_fanin_graph`] — W push chains converging on the owning
     /// server's update node, fanning back out into W pull chains —
     /// released at the shard's readiness plus `offset`.  Wire ops pin to
-    /// the (shareable) fabric's NIC queues; the gRPC+MPI single service
+    /// the (shareable) fabric's NIC queues — except transfers between a
+    /// worker and a PS task co-located on one dense node, which ride the
+    /// node's PCIe/NVLink path off the port; the gRPC+MPI single service
     /// thread is a per-worker pinned resource private to this job.
     /// §Perf: shards bucket by `(bytes, server)` — the fan-in DAG is
     /// built once per bucket (a `GraphTemplate`, call-local because the
@@ -203,6 +205,15 @@ impl PsStrategy {
         // update (TF variable ops run single-threaded per variable, but
         // vectorized — ~8 GB/s of aggregated gradient data).
         let update_us = move |bytes: usize| 2.0 + w_count as f64 * bytes as f64 / 8e3;
+        // Dense placements: a worker exchanging with a PS task on its own
+        // node moves the payload over PCIe/NVLink, off the shared NIC
+        // port (mirrors the placed builders' intra-node hop re-costing).
+        // Inert at 1 GPU per node — there worker w ≡ server w is the
+        // historical full-wire loopback, which keeps the PR-1 reference
+        // oracle and every trivial-placement pin bit-identical.
+        let place = ws.cluster.placement();
+        let local = ws.cluster.fabric.local_hop_factor();
+        let node_local = move |w: usize, s: usize| place.gpus_per_node > 1 && place.same_node(w, s);
 
         let done = Rc::new(RefCell::new(0usize));
         let map = unmapped();
@@ -225,18 +236,26 @@ impl PsStrategy {
                             );
                         }
                         ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
-                        ops.push(
-                            CommOp::fixed(ResKind::Wire, wire_us(bytes))
-                                .pinned(fabric.ingress[ps]),
-                        );
+                        if node_local(w, ps) {
+                            // co-located pair: payload rides the node's
+                            // local link, not the shared NIC port
+                            ops.push(CommOp::fixed(ResKind::Pcie, wire_us(bytes) * local));
+                        } else {
+                            ops.push(
+                                CommOp::fixed(ResKind::Wire, wire_us(bytes))
+                                    .pinned(fabric.ingress[ps]),
+                            );
+                        }
                         ops
                     };
                     let update = vec![CommOp::fixed(ResKind::CpuReduce, update_us(bytes))];
                     let pull_ops = |w: usize| {
-                        let mut ops = vec![
-                            CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps]),
-                            CommOp::fixed(ResKind::Sw, pull_fixed),
-                        ];
+                        let mut ops = vec![if node_local(w, ps) {
+                            CommOp::fixed(ResKind::Pcie, wire_us(bytes) * local)
+                        } else {
+                            CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps])
+                        }];
+                        ops.push(CommOp::fixed(ResKind::Sw, pull_fixed));
                         if let Some(tx) = &worker_tx {
                             ops.push(
                                 CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
@@ -264,28 +283,65 @@ impl PsStrategy {
     }
 }
 
-/// Per-PS NIC resources of one fabric: ingress queues serialize gradient
-/// pushes, egress queues serialize pull payloads.  Link-share runs hand
-/// the *same* fabric to two jobs (the co-tenant's PS tasks land on the
-/// same hosts), so both jobs' transfers queue FIFO on shared ports.
+/// Per-PS NIC resources of one fabric, laid out over a
+/// [`Placement`](crate::cluster::Placement): the *physical* ports are
+/// per `(node, rail)` (ingress queues serialize gradient pushes, egress
+/// queues serialize pull payloads), and `ingress[s]` / `egress[s]` alias
+/// server `s` onto its node's rail — PS tasks colocated on one dense
+/// node contend on the same physical port.  With the paper's trivial
+/// placement every server owns its ports, the historical layout.
+/// Link-share runs hand the *same* fabric to two jobs (the co-tenant's
+/// PS tasks land on the same hosts), so both jobs' transfers queue FIFO
+/// on shared ports.
 pub struct PsFabric {
+    /// Physical ingress ports, node-major rail-minor (distinct
+    /// resources — aggregate these, not the per-server aliases).
+    in_ports: Vec<ResourceId>,
+    out_ports: Vec<ResourceId>,
+    /// Per-server aliases into the physical ports.
     pub ingress: Vec<ResourceId>,
     pub egress: Vec<ResourceId>,
 }
 
 impl PsFabric {
     pub fn install(e: &mut Engine, ps_count: usize) -> PsFabric {
+        PsFabric::install_placed(e, ps_count, crate::cluster::Placement::one_per_node())
+    }
+
+    pub fn install_placed(
+        e: &mut Engine,
+        ps_count: usize,
+        place: crate::cluster::Placement,
+    ) -> PsFabric {
+        let nodes = place.nodes_for(ps_count);
+        let in_ports: Vec<ResourceId> =
+            (0..nodes * place.rails).map(|_| e.unit_resource()).collect();
+        let out_ports: Vec<ResourceId> =
+            (0..nodes * place.rails).map(|_| e.unit_resource()).collect();
+        let port = |s: usize| place.node_of(s) * place.rails + place.rail_of(s);
         PsFabric {
-            ingress: (0..ps_count).map(|_| e.unit_resource()).collect(),
-            egress: (0..ps_count).map(|_| e.unit_resource()).collect(),
+            ingress: (0..ps_count).map(|s| in_ports[port(s)]).collect(),
+            egress: (0..ps_count).map(|s| out_ports[port(s)]).collect(),
+            in_ports,
+            out_ports,
         }
     }
 
-    /// Aggregate (served, busy) over every NIC queue — the fabric-level
-    /// wire ledger the link-share report exposes.
+    /// The distinct physical ingress ports (for utilization ledgers —
+    /// summing the per-server aliases would double-count shared ports).
+    pub fn in_ports(&self) -> &[ResourceId] {
+        &self.in_ports
+    }
+
+    pub fn out_ports(&self) -> &[ResourceId] {
+        &self.out_ports
+    }
+
+    /// Aggregate (served, busy) over every physical NIC port — the
+    /// fabric-level wire ledger the link-share report exposes.
     pub fn wire_stats(&self, e: &Engine) -> (u64, SimTime) {
         let u =
-            ResourceUse::aggregate(e, "wire", self.ingress.iter().chain(&self.egress).copied());
+            ResourceUse::aggregate(e, "wire", self.in_ports.iter().chain(&self.out_ports).copied());
         (u.served, u.busy)
     }
 }
@@ -333,7 +389,9 @@ impl Strategy for PsStrategy {
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
         let mut engine = Engine::new();
-        let fabric = PsFabric::install(&mut engine, ws.world); // one PS per worker node
+        // one PS task per worker, laid out over the cluster's placement
+        // (dense nodes colocate PS tasks on shared NIC ports)
+        let fabric = PsFabric::install_placed(&mut engine, ws.world, ws.cluster.placement());
         let job = self.schedule_job(ws, sc, &mut engine, &fabric, SimTime::ZERO)?;
         engine.run();
         let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
@@ -347,8 +405,8 @@ impl Strategy for PsStrategy {
         );
         let mut report = IterationReport::from_times(self.name(), ws, iter);
         report.engine_events = engine.executed();
-        report.resource_util.push(agg_util(&engine, &fabric.ingress, "ps-nic-in"));
-        report.resource_util.push(agg_util(&engine, &fabric.egress, "ps-nic-out"));
+        report.resource_util.push(agg_util(&engine, fabric.in_ports(), "ps-nic-in"));
+        report.resource_util.push(agg_util(&engine, fabric.out_ports(), "ps-nic-out"));
         if let Some(tx) = &job.worker_tx {
             report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
         }
@@ -611,6 +669,25 @@ mod tests {
         assert!(r.resource_util.iter().all(|u| u.name != "worker-mpi-thread"));
         let m = PsStrategy::grpc_mpi().iteration(&ws).unwrap();
         assert!(m.resource_util.iter().any(|u| u.name == "worker-mpi-thread"));
+    }
+
+    #[test]
+    fn placed_fabric_aliases_colocated_servers() {
+        use crate::cluster::Placement;
+        let mut e = Engine::new();
+        let f = PsFabric::install_placed(&mut e, 4, Placement::new(2, 1));
+        assert_eq!(f.in_ports().len(), 2, "one physical port per 2-GPU node");
+        assert_eq!(f.ingress.len(), 4, "one alias per server");
+        assert_eq!(f.ingress[0], f.ingress[1], "colocated servers share the port");
+        assert_ne!(f.ingress[1], f.ingress[2], "different nodes keep distinct ports");
+        // a second rail splits the colocated pair again
+        let f2 = PsFabric::install_placed(&mut e, 4, Placement::new(2, 2));
+        assert_eq!(f2.in_ports().len(), 4);
+        assert_ne!(f2.ingress[0], f2.ingress[1]);
+        // trivial placement: the alias is the identity (historical layout)
+        let f3 = PsFabric::install(&mut e, 3);
+        assert_eq!(f3.ingress, f3.in_ports().to_vec());
+        assert_eq!(f3.egress, f3.out_ports().to_vec());
     }
 
     #[test]

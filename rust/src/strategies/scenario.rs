@@ -11,19 +11,19 @@
 //! strategies onto per-rank `CommGraph` execution — cached templates
 //! replayed under the knobs' [`Scenario::overlay`], so a slow rank's
 //! delay propagates along the algorithm's dependency edges; whole-job
-//! knobs keep the provably equivalent serialized replay.  Two *whole jobs* can also share one
-//! fabric and contend transfer-by-transfer ([`link_share`] for the
-//! Horovod family, [`link_share_ps`] for the PS family).
-
-use std::cell::RefCell;
-use std::rc::Rc;
+//! knobs keep the provably equivalent serialized replay.  Two *whole
+//! jobs* can also share one fabric and contend transfer-by-transfer on
+//! the graph path's physical per-`(node, rail)` NIC ports
+//! ([`GraphResources::sharing_wire`]: [`link_share`] for the Horovod
+//! family, [`link_share_baidu`] for Baidu, [`link_share_ps`] for the PS
+//! family's shared server NICs).
 
 use super::baidu::Baidu;
 use super::horovod::Horovod;
 use super::ps::{PsFabric, PsJob, PsStrategy};
-use super::{JobTrace, Strategy, WorldSpec};
-use crate::comm::commop::CommResources;
-use crate::comm::graph::GraphOverlay;
+use super::{GraphJob, GraphWork, JobTrace, Strategy, WorldSpec};
+use crate::comm::commop::ResourceUse;
+use crate::comm::graph::{GraphOverlay, GraphResources};
 use crate::sim::{Engine, SimTime};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
@@ -213,26 +213,46 @@ impl LinkShareReport {
     }
 }
 
-/// Run two identical Horovod jobs on one engine, sharing the inter-node
-/// wire resource (private PCIe/GPU/host resources — different nodes).
-/// Job B's schedule starts `offset` after job A's.
-pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
-    let sc = Scenario::default();
-    let solo = h.iteration(ws)?;
-
+/// The shared graph-path two-job engine run behind [`link_share`] and
+/// [`link_share_baidu`]: each job's collectives execute as per-rank
+/// dependency graphs on its own placement-aware [`GraphResources`]
+/// bundle, with job B's bundle [`GraphResources::sharing_wire`] — both
+/// jobs' wire steps queue FIFO on the same physical `(node, rail)` NIC
+/// ports while PCIe/GPU/host resources stay private per job.  Returns
+/// both job traces plus the shared-port wire ledger.
+fn run_shared_wire_jobs(
+    ws: &WorldSpec,
+    items_a: Vec<GraphWork>,
+    items_b: Vec<GraphWork>,
+    offset: SimTime,
+) -> Result<(JobTrace, JobTrace, u64, SimTime)> {
     let mut e = Engine::new();
-    let res_a = CommResources::install(&mut e);
-    let res_b = CommResources::sharing_wire(&mut e, res_a.wire);
+    let place = ws.cluster.placement();
+    let res_a = GraphResources::install_placed(&mut e, ws.world, place);
+    let res_b = GraphResources::sharing_wire(&mut e, ws.world, &res_a);
     let gate_a = e.gate();
     let gate_b = e.gate();
-    let trace_a: Rc<RefCell<JobTrace>> =
-        h.schedule_job(ws, &sc, &mut e, res_a, gate_a, SimTime::ZERO)?;
-    let trace_b: Rc<RefCell<JobTrace>> = h.schedule_job(ws, &sc, &mut e, res_b, gate_b, offset)?;
+    let job_a = GraphJob::schedule(&mut e, &res_a, gate_a, items_a, SimTime::ZERO);
+    let job_b = GraphJob::schedule(&mut e, &res_b, gate_b, items_b, offset);
     e.run();
+    let wire = ResourceUse::aggregate(&e, "wire", res_a.wire.iter().copied());
+    Ok((job_a.trace()?, job_b.trace()?, wire.served, wire.busy))
+}
 
-    let iter_a = h.close_job(ws, &sc, &trace_a.borrow(), SimTime::ZERO);
-    let iter_b = h.close_job(ws, &sc, &trace_b.borrow(), offset);
-    let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
+/// Run two identical Horovod jobs on one engine, sharing the physical
+/// per-node NIC ports (private PCIe/GPU/host resources).  Job B's
+/// schedule starts `offset` after job A's.  Both jobs — and the solo
+/// baseline — run on the per-rank graph path, so the co-tenant's
+/// transfers interleave between individual ring/RHD steps instead of
+/// between whole serialized collectives (the old serialized-chain
+/// runner), and dense placements share ports within each job too.
+pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
+    let sc = Scenario::default();
+    let solo = h.iteration_graph(ws, &sc)?;
+    let (trace_a, trace_b, wire_served, wire_busy) =
+        run_shared_wire_jobs(ws, h.graph_items(ws, &sc)?, h.graph_items(ws, &sc)?, offset)?;
+    let iter_a = h.close_job(ws, &sc, &trace_a, SimTime::ZERO);
+    let iter_b = h.close_job(ws, &sc, &trace_b, offset);
     Ok(LinkShareReport {
         solo_iter: solo.iter,
         job_iters: [iter_a, iter_b],
@@ -241,31 +261,21 @@ pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkSh
     })
 }
 
-/// Two identical Baidu jobs on one engine, sharing the inter-node wire
-/// (private PCIe/GPU/host resources — different nodes), job B offset by
-/// `offset`.  The Baidu counterpart of [`link_share`]: per-tensor rings
-/// (no fusion) contend transfer-by-transfer, so the co-tenant's traffic
-/// interleaves between every ring's wire steps.
+/// Two identical Baidu jobs on one engine, sharing the physical NIC
+/// ports, job B offset by `offset`.  The Baidu counterpart of
+/// [`link_share`]: per-tensor rings (no fusion) contend
+/// transfer-by-transfer on the graph path, so the co-tenant's traffic
+/// interleaves between every ring step's sends.
 pub fn link_share_baidu(b: &Baidu, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
     let sc = Scenario::default();
-    let solo = b.iteration(ws)?;
-
-    let mut e = Engine::new();
-    let res_a = CommResources::install(&mut e);
-    let res_b = CommResources::sharing_wire(&mut e, res_a.wire);
-    let gate_a = e.gate();
-    let gate_b = e.gate();
-    let trace_a: Rc<RefCell<JobTrace>> =
-        b.schedule_job(ws, &sc, &mut e, res_a, gate_a, SimTime::ZERO)?;
-    let trace_b: Rc<RefCell<JobTrace>> = b.schedule_job(ws, &sc, &mut e, res_b, gate_b, offset)?;
-    e.run();
-
+    let solo = b.iteration_graph(ws, &sc)?;
+    let (trace_a, trace_b, wire_served, wire_busy) =
+        run_shared_wire_jobs(ws, b.graph_items(ws, &sc)?, b.graph_items(ws, &sc)?, offset)?;
     let close = |trace: &JobTrace, off: SimTime| {
         super::close_iteration(ws, &sc, trace, off, b.runtime_tax, b.skew_us_per_rank)
     };
-    let iter_a = close(&trace_a.borrow(), SimTime::ZERO);
-    let iter_b = close(&trace_b.borrow(), offset);
-    let (wire_served, wire_busy) = e.resource_stats(res_a.wire);
+    let iter_a = close(&trace_a, SimTime::ZERO);
+    let iter_b = close(&trace_b, offset);
     Ok(LinkShareReport {
         solo_iter: solo.iter,
         job_iters: [iter_a, iter_b],
@@ -284,7 +294,7 @@ pub fn link_share_ps(ps: &PsStrategy, ws: &WorldSpec, offset: SimTime) -> Result
     let solo = ps.iteration(ws)?;
 
     let mut e = Engine::new();
-    let fabric = PsFabric::install(&mut e, ws.world);
+    let fabric = PsFabric::install_placed(&mut e, ws.world, ws.cluster.placement());
     let job_a = ps.schedule_job(ws, &sc, &mut e, &fabric, SimTime::ZERO)?;
     let job_b = ps.schedule_job(ws, &sc, &mut e, &fabric, offset)?;
     e.run();

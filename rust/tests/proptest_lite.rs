@@ -344,6 +344,182 @@ fn prop_overlay_replay_equals_fresh_perturbed_graphs() {
     }
 }
 
+/// prop (placement): with `gpus_per_node = 1` and `rails = 1`, the
+/// placement-aware builders and resource bundles are **bit-identical**
+/// to the historical per-rank path — ring / RHD / tree through the
+/// placed builders (whatever the intra-hop factor, which must be inert
+/// at one rank per node) and the PS fan-in on a trivially-placed
+/// fabric — under random worlds, step costs, scenarios and overlays.
+/// This is the seed-pin guarantee of the placement layer: every
+/// pre-placement number survives verbatim on the paper's layouts.
+#[test]
+fn prop_trivial_placement_is_bit_identical_to_per_rank_bundles() {
+    use mpi_dnn_train::cluster::Placement;
+    use mpi_dnn_train::comm::allreduce::flp2;
+    use mpi_dnn_train::comm::graph::{
+        execute, ps_fanin_graph, rhd_graph, rhd_graph_placed, ring_graph, ring_graph_placed,
+        tree_graph, tree_graph_placed, CommGraph, GraphResources, GraphTemplate,
+    };
+    use mpi_dnn_train::comm::{CommOp, CostBreakdown, ResKind, StepCost};
+    use mpi_dnn_train::strategies::Scenario;
+
+    for case in 0..30u64 {
+        let mut rng = Rng::new(0xB001 + case);
+        let p = 2 + rng.next_below(12) as usize; // 2..=13, incl. non-pow2
+        let mk_cost = |rng: &mut Rng| CostBreakdown {
+            wire_us: 1.0 + rng.next_f64() * 20.0,
+            staging_us: rng.next_f64() * 4.0,
+            reduce_us: rng.next_f64() * 3.0,
+            driver_us: rng.next_f64(),
+            launch_us: rng.next_f64(),
+            sw_us: rng.next_f64() * 2.0,
+        };
+        let mk_steps = |n: usize, rng: &mut Rng| -> Vec<StepCost> {
+            (0..n)
+                .map(|_| StepCost { cost: mk_cost(rng), gpu_reduce: rng.next_below(2) == 0 })
+                .collect()
+        };
+        let sc = Scenario {
+            straggler_ranks: rng.next_below(3) as usize,
+            straggler_factor: 1.0 + rng.next_f64() * 2.0,
+            hetero_ranks: rng.next_below(3) as usize,
+            hetero_factor: 1.0 + rng.next_f64() * 2.0,
+            jitter_us: if rng.next_below(2) == 0 { 50.0 } else { 0.0 },
+            seed: case,
+            ..Scenario::default()
+        };
+        let salt = rng.next_below(5);
+        // an arbitrary intra-hop factor: with one rank per node no hop
+        // is ever intra, so it must not perturb a single bit
+        let local = 0.1 + rng.next_f64() * 3.0;
+        let trivial = Placement::one_per_node();
+
+        let p2 = flp2(p);
+        let rhd_count = if p > p2 { 2 } else { 0 } + 2 * p2.trailing_zeros() as usize;
+        let tree_count = {
+            let mut c = 0;
+            let mut dist = 1;
+            while dist < p {
+                c += 1;
+                dist *= 2;
+            }
+            let mut dist = p.next_power_of_two() / 2;
+            while dist >= 1 {
+                if (0..p).step_by(2 * dist).any(|s| s + dist < p) {
+                    c += 1;
+                }
+                dist /= 2;
+            }
+            c
+        };
+        let ring_steps = mk_steps(2 * (p - 1), &mut rng);
+        let rhd_steps = mk_steps(rhd_count, &mut rng);
+        let tree_steps = mk_steps(tree_count, &mut rng);
+        let pairs: Vec<(&str, CommGraph, CommGraph)> = vec![
+            (
+                "ring",
+                ring_graph(p, &ring_steps),
+                ring_graph_placed(p, &ring_steps, trivial, local),
+            ),
+            (
+                "rhd",
+                rhd_graph(p, &rhd_steps),
+                rhd_graph_placed(p, &rhd_steps, trivial, local),
+            ),
+            (
+                "tree",
+                tree_graph(p, &tree_steps),
+                tree_graph_placed(p, &tree_steps, trivial, local),
+            ),
+        ];
+        let ov = sc.overlay(p, salt);
+        for (name, legacy, placed) in pairs {
+            // graphs must be structurally identical down to the f64 bits
+            assert_eq!(legacy.len(), placed.len(), "case {case} {name}: node count");
+            for (a, b) in legacy.nodes.iter().zip(&placed.nodes) {
+                assert_eq!(a.rank, b.rank, "case {case} {name}");
+                assert_eq!(a.step, b.step, "case {case} {name}");
+                assert_eq!(a.deps, b.deps, "case {case} {name}");
+                assert_eq!(a.ops.len(), b.ops.len(), "case {case} {name}");
+                for (x, y) in a.ops.iter().zip(&b.ops) {
+                    assert_eq!(x.kind, y.kind, "case {case} {name}: op kind");
+                    assert_eq!(x.us.to_bits(), y.us.to_bits(), "case {case} {name}: op bits");
+                }
+            }
+            // executions must agree bit-for-bit too: legacy graph on the
+            // legacy per-rank install vs placed graph (as a cached
+            // template under the scenario overlay) on the placed install
+            let (end_l, fin_l) = {
+                let mut e = Engine::new();
+                let res = GraphResources::install(&mut e, p);
+                let t = GraphTemplate::new(legacy);
+                let run = t.execute(&mut e, res.mapper(), &ov, Box::new(|_| {}));
+                let end = e.run();
+                let fin = run.borrow().finish.clone();
+                (end, fin)
+            };
+            let (end_p, fin_p) = {
+                let mut e = Engine::new();
+                let res = GraphResources::install_placed(&mut e, p, trivial);
+                let t = GraphTemplate::new(placed);
+                let run = t.execute(&mut e, res.mapper(), &ov, Box::new(|_| {}));
+                let end = e.run();
+                let fin = run.borrow().finish.clone();
+                (end, fin)
+            };
+            assert_eq!(end_l, end_p, "case {case} {name}: end diverged");
+            assert_eq!(fin_l, fin_p, "case {case} {name}: finishes diverged");
+        }
+
+        // PS fan-in: a trivially-placed fabric aliases every server onto
+        // its own ports, so pinned-NIC graphs execute identically
+        let workers = 2 + rng.next_below(5) as usize;
+        let server = rng.next_below(workers as u64) as usize;
+        let wire = 2.0 + rng.next_f64() * 10.0;
+        let build = |ni, no| {
+            ps_fanin_graph(
+                workers,
+                server,
+                move |w| {
+                    vec![
+                        CommOp::fixed(ResKind::Sw, 1.0 + w as f64),
+                        CommOp::fixed(ResKind::Wire, wire).pinned(ni),
+                    ]
+                },
+                vec![CommOp::fixed(ResKind::CpuReduce, 3.0)],
+                move |w| {
+                    vec![
+                        CommOp::fixed(ResKind::Wire, wire).pinned(no),
+                        CommOp::fixed(ResKind::Sw, 0.5 + 0.5 * w as f64),
+                    ]
+                },
+            )
+        };
+        use mpi_dnn_train::comm::graph::unmapped;
+        use mpi_dnn_train::strategies::ps::PsFabric;
+        let (end_l, fin_l) = {
+            let mut e = Engine::new();
+            let f = PsFabric::install(&mut e, workers);
+            let (g, _) = build(f.ingress[server], f.egress[server]);
+            let run = execute(&mut e, &g, unmapped(), Box::new(|_| {}));
+            let end = e.run();
+            let fin = run.borrow().finish.clone();
+            (end, fin)
+        };
+        let (end_p, fin_p) = {
+            let mut e = Engine::new();
+            let f = PsFabric::install_placed(&mut e, workers, trivial);
+            let (g, _) = build(f.ingress[server], f.egress[server]);
+            let run = execute(&mut e, &g, unmapped(), Box::new(|_| {}));
+            let end = e.run();
+            let fin = run.borrow().finish.clone();
+            (end, fin)
+        };
+        assert_eq!(end_l, end_p, "case {case} ps: end diverged");
+        assert_eq!(fin_l, fin_p, "case {case} ps: finishes diverged");
+    }
+}
+
 /// prop: the event engine is deterministic and clock-monotone for random
 /// schedules.
 #[test]
