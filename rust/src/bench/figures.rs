@@ -475,6 +475,65 @@ pub fn placement_sweep(
     Ok(t)
 }
 
+/// §Overlap sweep: the comm stream-count knob (the
+/// `HOROVOD_NUM_NCCL_STREAMS` analogue) on one (cluster, model, world)
+/// point — how much Allreduce time hides under the backward pass once
+/// fusion buffers (Horovod) / per-tensor rings (Baidu) may interleave
+/// instead of serializing on the comm thread.  `streams = 1` is the
+/// paper's serialized baseline; beyond it, per-rank wire/PCIe FIFO
+/// contention arbitrates the in-flight graphs.  Powers of two up to
+/// `max_streams` (at least [1, 2, 4]).
+pub fn overlap_sweep(
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    world: usize,
+    max_streams: usize,
+) -> Result<Table> {
+    use crate::strategies::Scenario;
+    let mut streams = vec![1usize];
+    while *streams.last().unwrap() * 2 <= max_streams.max(4) {
+        let next = streams.last().unwrap() * 2;
+        streams.push(next);
+    }
+    let cluster_name = cluster.name;
+    let mut t = Table::new(
+        &format!("Overlap sweep: {} on {cluster_name}@{world} (comm streams)", model.name),
+        &["streams", "Horovod img/s", "Horovod exposed", "Horovod eff", "Baidu img/s"],
+    );
+    let rows = par_map_ordered(streams, |s| {
+        let sc = Scenario::overlap(s);
+        let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+        let h = default_horovod(&cluster).iteration_in(&ws, &sc);
+        let (img, exposed, eff) = match &h {
+            Ok(r) => (
+                format!("{:.0}", r.imgs_per_sec),
+                format!("{}", r.exposed_comm),
+                format!("{:.0}%", 100.0 * r.scaling_efficiency),
+            ),
+            Err(_) => ("n/a".into(), "-".into(), "-".into()),
+        };
+        vec![
+            s.to_string(),
+            img,
+            exposed,
+            eff,
+            match default_baidu(&cluster).iteration_in(&ws, &sc) {
+                Ok(r) => format!("{:.0}", r.imgs_per_sec),
+                Err(_) => "n/a".into(),
+            },
+        ]
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(
+        "streams > 1 launch ready collectives immediately, round-robin across lanes; \
+         per-rank wire/PCIe FIFO contention arbitrates the interleaved graphs \
+         (comm-thread serialization at streams = 1)",
+    );
+    Ok(t)
+}
+
 /// Ablation: fusion-cycle knob (`HOROVOD_CYCLE_TIME`) × scenario grid —
 /// how the cycle choice interacts with degraded conditions.  The
 /// straggler/jitter columns run on the per-rank `CommGraph` path, so the
@@ -523,6 +582,27 @@ pub fn ablation_cycle_grid(cluster_name: &str, world: usize) -> Result<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn overlap_sweep_rows_and_monotone_throughput() {
+        // streams 1/2/4 on a comm-bound point: Horovod img/s must be
+        // nondecreasing in the stream count (and strictly better by 2)
+        let t = overlap_sweep(presets::piz_daint(), mobilenet::mobilenet_v1(), 32, 4).unwrap();
+        assert_eq!(t.headers.len(), 5);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(
+            t.rows.iter().map(|r| r[0].as_str()).collect::<Vec<_>>(),
+            vec!["1", "2", "4"]
+        );
+        let imgs: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        // rounded to whole img/s in the table, so >= here; the strict
+        // full-precision pins live in des_regression / strategy tests
+        assert!(imgs[1] >= imgs[0], "2 streams must not lose to serialized: {imgs:?}");
+        assert!(imgs[2] >= imgs[1] * 0.999, "4 streams must not lose to 2: {imgs:?}");
+        // the ceiling clamps to at least [1, 2, 4]
+        let t = overlap_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 1).unwrap();
+        assert_eq!(t.rows.len(), 3);
+    }
 
     #[test]
     fn fig2_shape() {

@@ -21,6 +21,15 @@
 //!    node, 2 NIC rails): the placement-aware graph path, where
 //!    co-located ranks queue on shared node ports and intra-node hops
 //!    ride PCIe — tracks the placed `GraphResources` layout across PRs.
+//!  * `overlap-sweep` — a streams × fusion-cycle grid (§Overlap): the
+//!    stream-lane execution model where fusion buffers' graphs
+//!    interleave instead of serializing on the comm thread — tracks the
+//!    overlapped hot path across PRs.
+//!
+//! `check_against` diffs a fresh run's deterministic event counts
+//! against the committed `BENCH_engine.json` baseline (the CI
+//! `perf-smoke` job runs it), so the bench trajectory accumulates
+//! instead of each PR's numbers vanishing into artifacts.
 
 use std::time::Instant;
 
@@ -199,6 +208,131 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
     ));
     failed?;
 
+    // --- 6. overlap sweep: streams × fusion-cycle grid ------------------
+    let overlap_worlds: &[usize] = if quick { &[16] } else { &[32, 64] };
+    let stream_counts = [1usize, 2, 4];
+    let cycle_grid = [2_500.0f64, 5_000.0];
+    let overlap_sweep = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..passes {
+            for &world in overlap_worlds {
+                for &cycle_us in &cycle_grid {
+                    let mut hv = h.clone();
+                    hv.cycle_us = cycle_us;
+                    for &s in &stream_counts {
+                        let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+                        events += hv.iteration_in(&ws, &Scenario::overlap(s))?.engine_events;
+                    }
+                }
+            }
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "overlap-sweep",
+        format!(
+            "Horovod-MPI MobileNet pizdaint@{overlap_worlds:?} × streams {stream_counts:?} × \
+             cycle {cycle_grid:?}us × {passes} passes (stream-lane interleaving; streams = 1 \
+             is the serialized baseline)"
+        ),
+        passes * overlap_worlds.len() * stream_counts.len() * cycle_grid.len(),
+        || match overlap_sweep() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
+    Ok(out)
+}
+
+/// Diff a fresh run's workloads against a committed baseline file.
+/// Event counts are deterministic, so a count delta is a real
+/// execution-model change worth a look (the report is informational —
+/// the CI job that prints it is non-gating); wall times are
+/// host-dependent and only summarized.  A missing or empty baseline
+/// seeds the trajectory instead of failing.
+pub fn check_against(
+    fresh: &[PerfWorkload],
+    quick: bool,
+    path: &std::path::Path,
+) -> Result<String> {
+    use std::fmt::Write as _;
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            return Ok(format!(
+                "perf-check: no baseline at {} — this run seeds the trajectory",
+                path.display()
+            ))
+        }
+    };
+    let json = Json::parse(&text)
+        .map_err(|e| crate::anyhow!("perf-check: {} is not valid JSON: {e}", path.display()))?;
+    let base: &[Json] = json.get("workloads").and_then(|w| w.as_arr()).unwrap_or(&[]);
+    if base.is_empty() {
+        return Ok(format!(
+            "perf-check: baseline {} has no workloads yet — this run seeds the trajectory",
+            path.display()
+        ));
+    }
+    // quick and full runs size their workloads differently, so their
+    // event counts are incomparable by design — flag the mode mismatch
+    // instead of reporting every row as drift
+    if let Some(base_quick) = json.get("quick").and_then(|v| v.as_bool()) {
+        if base_quick != quick {
+            return Ok(format!(
+                "perf-check: mode mismatch — this run is {} but baseline {} is {}; \
+                 regenerate the baseline in the same mode before comparing",
+                if quick { "--quick" } else { "full" },
+                path.display(),
+                if base_quick { "--quick" } else { "full" },
+            ));
+        }
+    }
+    let base_of = |name: &str| {
+        base.iter()
+            .find(|w| w.get("name").and_then(|n| n.as_str()) == Some(name))
+    };
+    let mut out = format!("perf-check vs {}:\n", path.display());
+    for w in fresh {
+        match base_of(&w.name) {
+            None => {
+                let _ = writeln!(out, "  {:<16} NEW workload ({} events)", w.name, w.events);
+            }
+            Some(b) => {
+                let b_events = b.get("events").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let b_wall = b.get("wall_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                if b_events == w.events {
+                    let _ = writeln!(
+                        out,
+                        "  {:<16} events unchanged ({}); wall {:.1}ms (baseline {:.1}ms)",
+                        w.name, w.events, w.wall_ms, b_wall
+                    );
+                } else {
+                    let delta =
+                        100.0 * (w.events as f64 - b_events as f64) / (b_events as f64).max(1.0);
+                    let _ = writeln!(
+                        out,
+                        "  {:<16} events {} vs baseline {} ({delta:+.1}%) — deterministic \
+                         drift, review the execution-model change",
+                        w.name, w.events, b_events
+                    );
+                }
+            }
+        }
+    }
+    for b in base {
+        if let Some(name) = b.get("name").and_then(|n| n.as_str()) {
+            if !fresh.iter().any(|w| w.name == name) {
+                let _ = writeln!(out, "  {name:<16} REMOVED (present only in the baseline)");
+            }
+        }
+    }
     Ok(out)
 }
 
@@ -254,7 +388,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 5);
+        assert_eq!(ws.len(), 6);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -277,14 +411,64 @@ mod tests {
             dense.events,
             serialized.events
         );
+        // the overlap grid mixes serialized (streams = 1) and graph-path
+        // (streams > 1) points, so it must out-event the serialized sweep
+        let overlap = ws.iter().find(|w| w.name == "overlap-sweep").unwrap();
+        assert!(
+            overlap.events > serialized.events,
+            "overlap sweep {} should exceed serialized {}",
+            overlap.events,
+            serialized.events
+        );
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 5);
+        assert_eq!(t.rows.len(), 6);
         let j = perf_json(&ws, true);
         assert_eq!(
             j.get("schema").and_then(|v| v.as_str()),
             Some("mpi-dnn-train/bench-engine/v1")
         );
-        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(5));
+        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+    }
+
+    #[test]
+    fn check_against_reports_seed_match_and_drift() {
+        let mk = |name: &str, events: u64| PerfWorkload {
+            name: name.into(),
+            detail: String::new(),
+            runs: 1,
+            events,
+            wall_ms: 1.0,
+        };
+        let dir = std::env::temp_dir().join("mpi-dnn-train-perf-check-test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // missing baseline seeds the trajectory
+        let missing = dir.join("does-not-exist.json");
+        let r = check_against(&[mk("a", 10)], true, &missing).unwrap();
+        assert!(r.contains("seeds the trajectory"), "{r}");
+
+        // empty-workloads baseline (the committed seed file) also seeds
+        let empty = dir.join("empty.json");
+        std::fs::write(&empty, perf_json(&[], true).to_string()).unwrap();
+        let r = check_against(&[mk("a", 10)], true, &empty).unwrap();
+        assert!(r.contains("no workloads yet"), "{r}");
+
+        // populated baseline: unchanged, drifted, new and removed rows
+        let base = dir.join("base.json");
+        let baseline = perf_json(&[mk("same", 100), mk("drift", 100), mk("gone", 5)], true);
+        std::fs::write(&base, baseline.to_string()).unwrap();
+        let r =
+            check_against(&[mk("same", 100), mk("drift", 110), mk("new", 7)], true, &base).unwrap();
+        assert!(r.contains("same") && r.contains("unchanged"), "{r}");
+        assert!(r.contains("drift") && r.contains("+10.0%"), "{r}");
+        assert!(r.contains("NEW workload"), "{r}");
+        assert!(r.contains("REMOVED"), "{r}");
+
+        // quick vs full event counts are incomparable by design: the
+        // mode mismatch is reported instead of per-row drift noise
+        let r = check_against(&[mk("same", 999)], false, &base).unwrap();
+        assert!(r.contains("mode mismatch"), "{r}");
+        assert!(!r.contains("drift,"), "{r}");
     }
 
     #[test]

@@ -64,28 +64,53 @@ impl ResKind {
     }
 }
 
+/// A template-relative resource pin: *names* the resource an op needs
+/// ("server 3's ingress NIC") instead of baking a concrete engine
+/// [`ResourceId`] into the op.  The execution map resolves the name onto
+/// that engine run's physical resources at replay time, which is what
+/// lets PS fan-in templates live in the strategy-level
+/// [`TemplateCache`](crate::comm::graph::TemplateCache) and replay
+/// across calls and engines (the old engine-id pins made them
+/// call-local).  Graph-path only: serialized replays keep `on`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RelPin {
+    /// Ingress NIC queue of parameter server `s` (gradient pushes).
+    PsIn(u32),
+    /// Egress NIC queue of parameter server `s` (pull payloads).
+    PsOut(u32),
+    /// The single MPI service thread of worker `w` (gRPC+MPI §III-B1).
+    WorkerTx(u32),
+}
+
 /// One resource-occupancy step of a communication operation.
 ///
 /// `us` is the modeled duration (computed by the cost models at schedule
 /// build time).  `on` optionally pins the op to a concrete engine
-/// resource (the PS strategy routes wire ops to a *specific* server's
-/// NIC); otherwise the replay's resource map resolves the kind — and a
-/// kind the map does not back simply elapses as a pure delay (per-rank
-/// private work that contends with nothing).
+/// resource; `rel` pins it to a *named* resource the execution map
+/// resolves at replay time ([`RelPin`]); otherwise the map resolves the
+/// kind — and a kind the map does not back simply elapses as a pure
+/// delay (per-rank private work that contends with nothing).
 #[derive(Debug, Clone, Copy)]
 pub struct CommOp {
     pub kind: ResKind,
     pub us: f64,
     pub on: Option<ResourceId>,
+    /// Template-relative pin; consulted when `on` is `None`.
+    pub rel: Option<RelPin>,
 }
 
 impl CommOp {
     pub fn fixed(kind: ResKind, us: f64) -> CommOp {
-        CommOp { kind, us, on: None }
+        CommOp { kind, us, on: None, rel: None }
     }
 
     pub fn pinned(self, r: ResourceId) -> CommOp {
         CommOp { on: Some(r), ..self }
+    }
+
+    /// Pin to a template-relative resource resolved at execute time.
+    pub fn rel_pinned(self, pin: RelPin) -> CommOp {
+        CommOp { rel: Some(pin), ..self }
     }
 }
 
@@ -299,7 +324,12 @@ impl ResourceUse {
 /// lookup bit-for-bit).
 pub fn resolve_ops(ops: &[CommOp], map: &ResMap) -> Rc<[ProgStep]> {
     ops.iter()
-        .map(|op| ProgStep { us: op.us, on: op.on.or_else(|| map(op.kind)) })
+        .map(|op| {
+            // rel pins are a graph-path concept: a kind-only map cannot
+            // name resources, so a rel-pinned op here is a wiring bug
+            debug_assert!(op.rel.is_none(), "rel-pinned op in a serialized replay");
+            ProgStep { us: op.us, on: op.on.or_else(|| map(op.kind)) }
+        })
         .collect::<Vec<_>>()
         .into()
 }

@@ -54,8 +54,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::cluster::Placement;
 use crate::comm::allreduce::Algo;
-use crate::comm::commop::{CommOp, ResKind, ResourceUse, StepCost};
-use crate::sim::{Action, Engine, ProgStep, ResourceId, SimTime};
+use crate::comm::commop::{CommOp, RelPin, ResKind, ResourceUse, StepCost};
+use crate::sim::{Action, Engine, LaneSetId, OnDone, ProgStep, ResourceId, SimTime};
 
 /// Handle to a node inside one [`CommGraph`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -401,17 +401,30 @@ pub fn ps_fanin_graph(
     let update = g.push_node(server_rank, 1, update_ops, pushes);
     let pulls: Vec<NodeId> =
         (0..workers).map(|w| g.push_node(w, 2, pull_ops(w), vec![update])).collect();
+    debug_assert_eq!(pulls, ps_fanin_pulls(workers), "fan-in layout drifted from the helper");
     (g, pulls)
 }
 
-/// Resolves `(rank, kind)` to the engine resource backing that rank's op
-/// (or `None` for uncontended per-rank work).
-pub type GraphResMap = Rc<dyn Fn(usize, ResKind) -> Option<ResourceId>>;
+/// The pull-sink node ids of [`ps_fanin_graph`] for `workers` workers.
+/// The builder's layout is fixed — pushes `0..w`, update `w`, pulls
+/// `w+1..=2w` — so a cached fan-in template can recover its sinks
+/// without storing them alongside (cross-call PS templating).
+pub fn ps_fanin_pulls(workers: usize) -> Vec<NodeId> {
+    (0..workers).map(|w| NodeId(workers + 1 + w)).collect()
+}
+
+/// Resolves an op to the engine resource backing it: by `(rank, kind)`
+/// for per-rank work, or by the op's template-relative [`RelPin`] (PS
+/// fan-in NIC queues, worker service threads) when one is present —
+/// `None` elapses as an uncontended per-rank delay.  Rel pins are what
+/// keep cached templates engine-independent: the graph names the
+/// resource, each run's map resolves the name.
+pub type GraphResMap = Rc<dyn Fn(usize, ResKind, Option<RelPin>) -> Option<ResourceId>>;
 
 /// A map backing nothing: every op elapses as a pure per-rank delay
-/// (pinned ops still hit their resources).
+/// (engine-pinned ops still hit their resources).
 pub fn unmapped() -> GraphResMap {
-    Rc::new(|_, _| None)
+    Rc::new(|_, _, _| None)
 }
 
 /// Per-iteration execution overlay (§Perf): everything that may vary
@@ -528,7 +541,7 @@ fn resolve_node(node: &GraphNode, map: &GraphResMap, ov: &GraphOverlay) -> Rc<[P
     let lead = ov.lead_us(rank, node.step);
     let mut steps = Vec::with_capacity(node.ops.len() + usize::from(lead > 0.0));
     if lead > 0.0 {
-        steps.push(ProgStep { us: lead, on: map(rank, ResKind::Sw) });
+        steps.push(ProgStep { us: lead, on: map(rank, ResKind::Sw, None) });
     }
     let all = ov.all_factor(rank);
     let gpu = ov.gpu_factor(rank);
@@ -539,7 +552,7 @@ fn resolve_node(node: &GraphNode, map: &GraphResMap, ov: &GraphOverlay) -> Rc<[P
         if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
             us *= gpu;
         }
-        steps.push(ProgStep { us, on: op.on.or_else(|| map(rank, op.kind)) });
+        steps.push(ProgStep { us, on: op.on.or_else(|| map(rank, op.kind, op.rel)) });
     }
     steps.into()
 }
@@ -615,7 +628,24 @@ impl GraphTemplate {
         at: SimTime,
         done: Action,
     ) -> Rc<RefCell<GraphRun>> {
-        execute_planned(e, &self.graph, &self.plan, &map, ov, at, done)
+        execute_planned(e, &self.graph, &self.plan, &map, ov, at, OnDone::Call(done))
+    }
+
+    /// Execute the template as stream-lane job `job` of `set`: sources
+    /// release now (this is the job's launch turn), and the terminal
+    /// join's completion is the typed [`Engine::lane_done`] — no boxed
+    /// `done` per collective, which is what keeps the fusion-overlap
+    /// buffer loop allocation-free (§Overlap).
+    pub fn execute_lane(
+        &self,
+        e: &mut Engine,
+        map: GraphResMap,
+        ov: &GraphOverlay,
+        set: LaneSetId,
+        job: u32,
+    ) -> Rc<RefCell<GraphRun>> {
+        let at = e.now();
+        execute_planned(e, &self.graph, &self.plan, &map, ov, at, OnDone::Lane(set, job))
     }
 }
 
@@ -662,6 +692,15 @@ impl TemplateKey {
             Algo::Rhd => 2,
         };
         TemplateKey { algo, world, place: place.key(), sig }
+    }
+
+    /// Key of a PS fan-in template: `world` is the worker count, and the
+    /// caller's `sig` carries everything the shard's ops depend on
+    /// (server index, transfer/update costs, single-thread flag, the
+    /// intra-node factor) bit-exactly.  Tag 3 keeps fan-ins disjoint
+    /// from every allreduce algorithm.
+    pub fn ps_fanin(world: usize, place: Placement, sig: Vec<u64>) -> TemplateKey {
+        TemplateKey { algo: 3, world, place: place.key(), sig }
     }
 }
 
@@ -797,7 +836,7 @@ impl GraphResources {
 
     pub fn mapper(&self) -> GraphResMap {
         let me = self.clone();
-        Rc::new(move |rank, k| Some(me.get(rank, k)))
+        Rc::new(move |rank, k, _rel| Some(me.get(rank, k)))
     }
 
     /// Per-kind (served, busy) rows aggregated across the *distinct*
@@ -858,7 +897,7 @@ pub fn execute_at(
     done: Action,
 ) -> Rc<RefCell<GraphRun>> {
     let plan = GraphPlan::of(g);
-    execute_planned(e, g, &plan, &map, &GraphOverlay::neutral(), at, done)
+    execute_planned(e, g, &plan, &map, &GraphOverlay::neutral(), at, OnDone::Call(done))
 }
 
 /// The shared executor: wire joins from the (pre)computed plan, resolve
@@ -871,7 +910,7 @@ fn execute_planned(
     map: &GraphResMap,
     ov: &GraphOverlay,
     at: SimTime,
-    done: Action,
+    done: OnDone,
 ) -> Rc<RefCell<GraphRun>> {
     let n = g.nodes.len();
     let run = Rc::new(RefCell::new(GraphRun {
@@ -879,10 +918,15 @@ fn execute_planned(
         finish: vec![SimTime::ZERO; n],
     }));
     if n == 0 {
-        e.at(at, done);
+        match done {
+            OnDone::Call(a) => e.at(at, a),
+            // lane executions always release at `at == now` (the job's
+            // launch turn), so the empty graph completes on the spot
+            OnDone::Lane(set, job) => e.lane_done(set, job),
+        }
         return run;
     }
-    let terminal = e.join(plan.sink_count, done);
+    let terminal = e.join_with(plan.sink_count, done);
 
     // Joins must exist before the node actions that arrive at them are
     // built; nodes are created in topological order, so walking in
@@ -1200,6 +1244,79 @@ mod tests {
         assert_eq!(end_o, end_t, "overlay end diverged from materialized graph");
         assert_eq!(run_o.finish, run_t.finish, "per-node finishes diverged");
         assert_eq!(run_o.start, run_t.start, "per-node starts diverged");
+    }
+
+    #[test]
+    fn rel_pins_resolve_through_the_map() {
+        // a named (template-relative) pin routes onto whatever resource
+        // THIS engine's map resolves it to — two executions contend on
+        // the named NIC exactly like the old engine-id pin
+        let mut e = Engine::new();
+        let nic = e.unit_resource();
+        let g = CommGraph::chain(
+            0,
+            vec![CommOp::fixed(ResKind::Wire, 10.0).rel_pinned(RelPin::PsIn(3))],
+        );
+        let map: GraphResMap = Rc::new(move |_, _, rel| match rel {
+            Some(RelPin::PsIn(3)) => Some(nic),
+            _ => None,
+        });
+        for _ in 0..2 {
+            execute(&mut e, &g, map.clone(), Box::new(|_| {}));
+        }
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(20.0));
+        let (served, busy) = e.resource_stats(nic);
+        assert_eq!((served, busy), (2, SimTime::from_us(20.0)));
+        // under a map that does not name it, the op elapses per-rank
+        let mut e2 = Engine::new();
+        execute(&mut e2, &g, unmapped(), Box::new(|_| {}));
+        assert_eq!(e2.run(), SimTime::from_us(10.0));
+    }
+
+    #[test]
+    fn execute_lane_completes_through_typed_join() {
+        // the §Overlap execution shape: templates launched as lane jobs
+        // finish through the typed terminal join, hand the lane back,
+        // and a width-1 set reproduces back-to-back serialized rings
+        use crate::sim::{LaneDriver, LaneSetId};
+        struct D {
+            t: Arc<GraphTemplate>,
+            map: GraphResMap,
+        }
+        impl LaneDriver for D {
+            fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+                self.t.execute_lane(e, self.map.clone(), &GraphOverlay::neutral(), set, job);
+            }
+        }
+        let p = 3;
+        let steps = wire_steps(2 * (p - 1), 10.0);
+        let t = Arc::new(GraphTemplate::new(ring_graph(p, &steps)));
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, p);
+        let set = e.lane_set(1, 1, Rc::new(D { t, map: res.mapper() }));
+        e.lane_submit(set, SimTime::ZERO, 0);
+        e.lane_submit(set, SimTime::ZERO, 1);
+        let end = e.run();
+        let serial = CommSchedule::from_steps(&steps).total_us();
+        assert!((end.as_us() - 2.0 * serial).abs() < 1e-9);
+        assert_eq!(e.lane_completed(set), 2);
+        let (launches, busy) = e.lane_stats(set);
+        assert_eq!(launches, 2);
+        assert_eq!(busy, end);
+    }
+
+    #[test]
+    fn ps_fanin_pulls_match_builder_layout() {
+        let (g, pulls) = ps_fanin_graph(
+            4,
+            1,
+            |_| vec![CommOp::fixed(ResKind::Sw, 1.0)],
+            vec![CommOp::fixed(ResKind::CpuReduce, 1.0)],
+            |_| vec![CommOp::fixed(ResKind::Sw, 1.0)],
+        );
+        assert_eq!(pulls, ps_fanin_pulls(4));
+        assert_eq!(g.len(), 9);
     }
 
     #[test]

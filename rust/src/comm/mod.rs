@@ -19,12 +19,12 @@ pub mod ptrcache;
 pub mod verbs;
 
 pub use commop::{
-    replay, resolve_ops, steps_sig, CommOp, CommResources, CommSchedule, ResKind, ResMap,
+    replay, resolve_ops, steps_sig, CommOp, CommResources, CommSchedule, RelPin, ResKind, ResMap,
     ResourceUse, StepCost,
 };
 pub use graph::{
-    allreduce_graph, ps_fanin_graph, CommGraph, GraphOverlay, GraphResources, GraphTemplate,
-    NodeId, TemplateCache, TemplateKey,
+    allreduce_graph, ps_fanin_graph, ps_fanin_pulls, CommGraph, GraphOverlay, GraphResources,
+    GraphTemplate, NodeId, TemplateCache, TemplateKey,
 };
 pub use mpi::{MpiFlavor, MpiWorld};
 pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};

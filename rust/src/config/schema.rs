@@ -94,7 +94,49 @@ impl ExperimentConfig {
                 link_load: f("link_load", 0.0),
                 second_job: sc.get("second_job").and_then(|v| v.as_bool()).unwrap_or(false),
                 second_job_offset_us: f("second_job_offset_us", 0.0),
+                // validated below BEFORE the usize cast: a negative TOML
+                // int must be a friendly config error, not a wrapped
+                // 2^64-lane allocation
+                streams: 1,
+                depth: 0,
             };
+            // §Overlap knobs: streams opens the interleaved regime,
+            // depth caps in-flight collectives.  Same inert-knob policy
+            // as the factors below — a depth without streams > 1 (or
+            // deeper than the lanes it caps) would silently change
+            // nothing.
+            let streams_raw = sc.get("streams").and_then(|v| v.as_int()).unwrap_or(1);
+            crate::ensure!(
+                streams_raw >= 1,
+                "[scenario] streams must be >= 1, got {streams_raw}"
+            );
+            scenario.streams = streams_raw as usize;
+            let depth_raw = sc.get("depth").and_then(|v| v.as_int()).unwrap_or(0);
+            crate::ensure!(depth_raw >= 0, "[scenario] depth must be >= 0, got {depth_raw}");
+            scenario.depth = depth_raw as usize;
+            if scenario.depth > 0 {
+                crate::ensure!(
+                    scenario.streams > 1,
+                    "[scenario] depth requires streams > 1 (one stream is always depth 1)"
+                );
+                crate::ensure!(
+                    scenario.depth <= scenario.streams,
+                    "[scenario] depth = {} exceeds streams = {}: each lane holds one \
+                     collective, the extra depth would be idle",
+                    scenario.depth,
+                    scenario.streams
+                );
+            }
+            // the two-job link-share tables run their own fixed
+            // comparison and do not consume the overlap knobs — same
+            // rejection the CLI's `scenario two-jobs` applies, so the
+            // co-tenant tables can never print serialized-baseline
+            // numbers under an overlap-configured experiment
+            crate::ensure!(
+                !(scenario.second_job && (scenario.streams > 1 || scenario.depth > 0)),
+                "[scenario] streams/depth are not consumed by the second_job link-share \
+                 tables — drop second_job or the overlap knobs"
+            );
             crate::ensure!(
                 (0.0..=crate::strategies::scenario::MAX_LINK_LOAD)
                     .contains(&scenario.link_load),
@@ -288,6 +330,40 @@ rails = 2
         .unwrap();
         assert_eq!(big.cluster.max_gpus(), 40);
         assert!(parse("[workload]\ncluster = \"ri2\"\ngpus = [40]").is_err());
+    }
+
+    #[test]
+    fn scenario_streams_and_depth_parse_and_validate() {
+        let c = parse(
+            r#"
+[workload]
+model = "mobilenet"
+
+[scenario]
+streams = 4
+depth = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.scenario.streams, 4);
+        assert_eq!(c.scenario.depth, 2);
+        assert_eq!(c.scenario.lanes(), (4, 2));
+        assert!(c.scenario.overlapped());
+        // defaults: one serialized stream, uncapped depth sentinel
+        let d = parse("[workload]\nmodel = \"resnet50\"\n[scenario]\nseed = 1").unwrap();
+        assert_eq!((d.scenario.streams, d.scenario.depth), (1, 0));
+        assert!(!d.scenario.overlapped());
+        // inert / invalid combinations are config mistakes
+        assert!(parse("[workload]\n[scenario]\nstreams = 0").is_err());
+        assert!(parse("[workload]\n[scenario]\ndepth = 2").is_err());
+        assert!(parse("[workload]\n[scenario]\nstreams = 2\ndepth = 4").is_err());
+        // negative ints must be friendly errors, not usize wraps into
+        // a 2^64-lane allocation
+        assert!(parse("[workload]\n[scenario]\nstreams = -1").is_err());
+        assert!(parse("[workload]\n[scenario]\nstreams = 2\ndepth = -3").is_err());
+        // the two-job runners don't consume the overlap knobs — the
+        // combination would silently print serialized numbers
+        assert!(parse("[workload]\n[scenario]\nsecond_job = true\nstreams = 2").is_err());
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! mpi-dnn-train train --config small --world 4 --steps 100
 //! mpi-dnn-train experiment cfgs/fig9.toml
 //! mpi-dnn-train ablation --cluster owens --world 64 [--sweep fusion|cycle-grid]
-//! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5
+//! mpi-dnn-train scenario straggler --cluster owens --world 64 --factor 1.5 [--streams 2]
 //! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet --family ps
 //! mpi-dnn-train scenario placement --cluster owens --world 16 --gpus-per-node 4 --rails 2
+//! mpi-dnn-train scenario overlap --cluster pizdaint --world 64 --model mobilenet --streams 8
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
 //! mpi-dnn-train perf [--quick] [--out BENCH_engine.json]   # §Perf harness
@@ -289,6 +290,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
     let offset = args.get_f64("offset-us", 0.0).map_err(Error::msg)?;
     let family = args.get_or("family", "horovod");
+    // §Overlap knobs: comm streams (1 = the classic serialized comm
+    // thread) and the in-flight depth cap (0 = as deep as the streams).
+    // They compose with every scenario kind; the `overlap` kind sweeps
+    // the stream count instead (--streams then sets the sweep ceiling).
+    let streams = args.get_usize("streams", 1).map_err(Error::msg)?;
+    let depth = args.get_usize("depth", 0).map_err(Error::msg)?;
     // placement overrides: dense nodes / multi-rail NICs reshape the
     // cluster every scenario runs on (the `placement` kind sweeps them
     // instead, defaulting to a 2-GPU / 2-rail comparison)
@@ -305,6 +312,30 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         if let Some(v) = v {
             mpi_dnn_train::ensure!(v >= 1, "{name} must be >= 1, got {v}");
         }
+    }
+    mpi_dnn_train::ensure!(streams >= 1, "--streams must be >= 1, got {streams}");
+    // the two-jobs and placement kinds run their own fixed comparisons
+    // and do not consume the overlap knobs — accepting them silently
+    // would report serialized-baseline numbers under an overlap label
+    // (the same inert-knob policy the `[scenario]` table enforces)
+    if matches!(kind, "two-jobs" | "placement") {
+        mpi_dnn_train::ensure!(
+            streams == 1 && depth == 0,
+            "--streams/--depth are not consumed by `scenario {kind}` — use them with \
+             straggler | hetero | jitter | link-load, or sweep them via `scenario overlap`"
+        );
+    }
+    if depth > 0 && kind != "overlap" {
+        // same inert-knob policy as the `[scenario]` config table
+        mpi_dnn_train::ensure!(
+            streams > 1,
+            "--depth requires --streams > 1 (one stream is always depth 1)"
+        );
+        mpi_dnn_train::ensure!(
+            depth <= streams,
+            "--depth {depth} exceeds --streams {streams}: each lane holds one collective, \
+             the extra depth would be idle"
+        );
     }
     if kind == "placement" {
         let table = bench::placement_sweep(
@@ -341,8 +372,23 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         );
     }
     let table = match kind {
+        "overlap" => {
+            // sweep the stream-count knob itself (--streams = ceiling)
+            mpi_dnn_train::ensure!(
+                depth == 0,
+                "--depth is not a sweep axis of `scenario overlap` (each point runs depth = \
+                 streams)"
+            );
+            bench::overlap_sweep(cluster, model, world, streams.max(4))?
+        }
         "straggler" => {
-            let sc = Scenario { jitter_us: jitter, seed, ..Scenario::straggler(ranks, factor) };
+            let sc = Scenario {
+                jitter_us: jitter,
+                seed,
+                streams,
+                depth,
+                ..Scenario::straggler(ranks, factor)
+            };
             bench::scenario_compare(
                 &format!(
                     "Scenario: {ranks} straggler rank(s) × {factor}x ({}, {}@{world})",
@@ -355,7 +401,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             )?
         }
         "hetero" => {
-            let sc = Scenario { jitter_us: jitter, seed, ..Scenario::hetero(ranks, factor) };
+            let sc = Scenario {
+                jitter_us: jitter,
+                seed,
+                streams,
+                depth,
+                ..Scenario::hetero(ranks, factor)
+            };
             bench::scenario_compare(
                 &format!(
                     "Scenario: {ranks} rank(s) on a {factor}x-slower GPU ({}, {}@{world})",
@@ -372,6 +424,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let sc = Scenario {
                 jitter_us: if jitter > 0.0 { jitter } else { 250.0 },
                 seed,
+                streams,
+                depth,
                 ..Scenario::default()
             };
             bench::scenario_compare(
@@ -392,7 +446,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 (0.0..=MAX_LINK_LOAD).contains(&load),
                 "--load must be in [0, {MAX_LINK_LOAD}], got {load}"
             );
-            let sc = Scenario::link_loaded(load);
+            let sc = Scenario { streams, depth, ..Scenario::link_loaded(load) };
             bench::scenario_compare(
                 &format!(
                     "Scenario: {:.0}% of the fabric taken by background traffic ({}, {}@{world})",
@@ -407,7 +461,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset, &family)?,
         other => mpi_dnn_train::bail!(
             "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs | \
-             placement)"
+             placement | overlap)"
         ),
     };
     emit(&table, json);
@@ -559,11 +613,15 @@ fn cmd_graph(args: &Args) -> Result<()> {
 
 /// §Perf harness: time representative simulator workloads and write
 /// `BENCH_engine.json` (events/s + wall-ms per workload) — the repo's
-/// engine-throughput trajectory.
+/// engine-throughput trajectory.  `--check BASELINE` diffs the run's
+/// deterministic event counts against a committed baseline (the CI
+/// perf-smoke job checks against the repo's `BENCH_engine.json`);
+/// refresh the baseline by re-running `perf --quick` and committing.
 fn cmd_perf(args: &Args) -> Result<()> {
     let quick = args.get_bool("quick");
     let json = args.get_bool("json");
     let out = args.get_or("out", "BENCH_engine.json");
+    let check = args.get("check").map(String::from);
     args.reject_unknown().map_err(Error::msg)?;
 
     let workloads = bench::perf::run_perf(quick)?;
@@ -572,6 +630,11 @@ fn cmd_perf(args: &Args) -> Result<()> {
     let payload = bench::perf::perf_json(&workloads, quick).to_string() + "\n";
     std::fs::write(&out, payload).context(format!("writing {out}"))?;
     println!("wrote {out}");
+    if let Some(baseline) = check {
+        let report =
+            bench::perf::check_against(&workloads, quick, std::path::Path::new(&baseline))?;
+        println!("{report}");
+    }
     Ok(())
 }
 
@@ -640,7 +703,11 @@ fn cmd_list(args: &Args) -> Result<()> {
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
         "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps], \
-         placement (see `scenario --help` flags)"
+         placement, overlap (see `scenario --help` flags)"
+    );
+    println!(
+        "overlap: every scenario accepts --streams N --depth D (N > 1 interleaves fusion \
+         buffers across comm streams, NCCL-stream semantics; `scenario overlap` sweeps N)"
     );
     println!(
         "placement: every scenario/graph accepts --gpus-per-node N --rails R (dense nodes \

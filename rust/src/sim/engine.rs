@@ -3,8 +3,18 @@
 //! Events are *typed* (§Perf): the heap entry carries an [`EventKind`]
 //! ordered by (time, sequence) — the sequence number makes simultaneous
 //! events fire in scheduling order, which is what makes whole-cluster
-//! runs bit-reproducible.  The hot-path primitives (op-program steps,
-//! gate grants, join firings) schedule `Copy` variants, so steady-state
+//! runs bit-reproducible.
+//!
+//! A **stream-lane set** ([`Engine::lane_set`]) is the typed overlap
+//! scheduler (§Overlap): jobs release at known times, round-robin across
+//! `streams` lanes with an in-flight depth cap, and every hand-off —
+//! release, launch, completion — is a typed event or [`OnDone`]
+//! completion, so the fusion-buffer loop schedules zero boxed closures.
+//! `streams = 1` is exactly the old comm-thread gate discipline.
+//!
+//! The hot-path primitives (op-program steps,
+//! gate grants, join firings, lane releases/launches) schedule `Copy`
+//! variants, so steady-state
 //! event traffic allocates nothing on the heap; `Call` is the rare
 //! fallback for arbitrary closures (setup events, strategy callbacks).
 //! One-shot state (op programs) lives in a slab with a generational
@@ -50,6 +60,10 @@ enum EventKind {
     Grant(GateId),
     /// Advance program `slot` (stale generations are a wiring bug).
     Prog { slot: u32, gen: u32 },
+    /// A released stream-lane job joining its lane's queue.
+    LaneArrive { set: u32, job: u32 },
+    /// A stream-lane job's launch turn: dispatch into the set's driver.
+    LaneLaunch { set: u32, job: u32 },
 }
 
 /// Heap entry.  §Perf: the original design boxed a closure per event;
@@ -116,7 +130,84 @@ pub struct JoinId {
 struct JoinState {
     gen: u32,
     remaining: usize,
-    action: Option<Action>,
+    action: Option<OnDone>,
+}
+
+/// A typed completion: either a boxed callback (the general case) or a
+/// stream-lane job completion routed to [`Engine::lane_done`].  Programs
+/// and joins store one of these, so the fusion-overlap hot path — where
+/// every completion is a lane hand-off — finishes collectives without a
+/// boxed `done` per buffer.
+pub enum OnDone {
+    Call(Action),
+    Lane(LaneSetId, u32),
+}
+
+impl OnDone {
+    fn run(self, e: &mut Engine) {
+        match self {
+            OnDone::Call(a) => a(e),
+            OnDone::Lane(set, job) => e.lane_done(set, job),
+        }
+    }
+}
+
+/// Handle to a stream-lane set (see [`Engine::lane_set`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LaneSetId(pub(crate) usize);
+
+/// What a lane set launches when a job's turn comes.  The engine
+/// dispatches typed [`EventKind::LaneLaunch`] events into this, so
+/// per-job scheduling allocates nothing — the driver itself is one
+/// allocation per set (per iteration), not per job.
+pub trait LaneDriver {
+    /// Launch job `job` of `set` on the engine.  The work this starts
+    /// must eventually call [`Engine::lane_done`] (directly or through a
+    /// typed [`OnDone::Lane`] completion) exactly once for `job`.
+    fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32);
+}
+
+/// The canonical typed gate-holder driver: each lane job is one resolved
+/// op program, launched with a typed lane completion.  This is what
+/// replaced the boxed gate waiters of the serialized comm-thread path —
+/// the "typed gate-holder programs" §Perf follow-up.
+pub struct ProgramLanes {
+    progs: Vec<Rc<[ProgStep]>>,
+}
+
+impl ProgramLanes {
+    pub fn new(progs: Vec<Rc<[ProgStep]>>) -> ProgramLanes {
+        ProgramLanes { progs }
+    }
+}
+
+impl LaneDriver for ProgramLanes {
+    fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+        e.run_program_lane(self.progs[job as usize].clone(), set, job);
+    }
+}
+
+/// One stream-lane set: `width` logical comm streams (lanes) over one
+/// FIFO discipline.  Jobs release onto their lane (`job % width`,
+/// round-robin — NCCL-stream assignment), each lane serializes its own
+/// jobs, different lanes interleave freely on whatever resources the
+/// launched work occupies, and at most `depth` jobs are in flight across
+/// the set (the queue-depth cap).  `width = 1` is exactly the comm-thread
+/// gate: one job at a time, FIFO hand-off at max(release, previous
+/// completion).
+struct LaneSetState {
+    width: usize,
+    depth: usize,
+    driver: Rc<dyn LaneDriver>,
+    lane_busy: Vec<bool>,
+    lane_acquired: Vec<SimTime>,
+    /// Released-but-not-launched jobs, one FIFO per lane (arrival order).
+    pending: Vec<VecDeque<u32>>,
+    in_flight: usize,
+    launches: u64,
+    busy_time: SimTime,
+    completed: usize,
+    last_done: SimTime,
 }
 
 /// A gate is a FIFO mutex with a virtual-clock ledger: `acquire` runs the
@@ -143,7 +234,7 @@ struct ProgState {
     gen: u32,
     next: u32,
     steps: Rc<[ProgStep]>,
-    done: Option<Action>,
+    done: Option<OnDone>,
 }
 
 /// Discrete-event engine with a virtual clock.
@@ -158,6 +249,7 @@ pub struct Engine {
     join_free: Vec<u32>,
     progs: Vec<ProgState>,
     prog_free: Vec<u32>,
+    lanes: Vec<LaneSetState>,
     executed: u64,
 }
 
@@ -209,6 +301,11 @@ impl Engine {
                     // silently-advanced recycled program
                     assert_eq!(self.progs[slot as usize].gen, gen, "stale program event");
                     self.advance_program(slot);
+                }
+                EventKind::LaneArrive { set, job } => self.lane_arrive(set as usize, job),
+                EventKind::LaneLaunch { set, job } => {
+                    let driver = self.lanes[set as usize].driver.clone();
+                    driver.launch(self, LaneSetId(set as usize), job);
                 }
             }
         }
@@ -284,6 +381,18 @@ impl Engine {
     /// `Copy` event per step instead of one boxed closure per step.  An
     /// empty program runs `done` immediately.
     pub fn run_program(&mut self, steps: Rc<[ProgStep]>, done: Action) {
+        self.run_program_with(steps, OnDone::Call(done));
+    }
+
+    /// [`Engine::run_program`] with a typed lane completion: the program
+    /// IS lane job `job` of `set`, and finishing it hands the lane back
+    /// ([`Engine::lane_done`]) without a boxed closure.
+    pub fn run_program_lane(&mut self, steps: Rc<[ProgStep]>, set: LaneSetId, job: u32) {
+        self.run_program_with(steps, OnDone::Lane(set, job));
+    }
+
+    /// Run an op program with an arbitrary typed completion.
+    pub fn run_program_with(&mut self, steps: Rc<[ProgStep]>, done: OnDone) {
         let slot = match self.prog_free.pop() {
             Some(s) => {
                 let st = &mut self.progs[s as usize];
@@ -327,7 +436,7 @@ impl Engine {
                     done
                 };
                 self.prog_free.push(slot);
-                done(self);
+                done.run(self);
             }
         }
     }
@@ -402,14 +511,138 @@ impl Engine {
         (st.grants, st.busy_time)
     }
 
+    /// Create a stream-lane set: `streams` logical lanes, at most `depth`
+    /// jobs in flight across them, launching through `driver`.  Jobs are
+    /// assigned to lanes round-robin by index (`job % streams`); each
+    /// lane serializes its own jobs in release order, distinct lanes
+    /// interleave.  `streams = 1, depth = 1` reproduces a FIFO gate
+    /// bit-for-bit: same grant times, same hand-off order, same event
+    /// count — which is what keeps every serialized-era pin standing.
+    pub fn lane_set(
+        &mut self,
+        streams: usize,
+        depth: usize,
+        driver: Rc<dyn LaneDriver>,
+    ) -> LaneSetId {
+        assert!(streams >= 1, "a lane set needs at least one stream");
+        assert!(depth >= 1, "a lane set needs an in-flight depth of at least one");
+        self.lanes.push(LaneSetState {
+            width: streams,
+            depth,
+            driver,
+            lane_busy: vec![false; streams],
+            lane_acquired: vec![SimTime::ZERO; streams],
+            pending: vec![VecDeque::new(); streams],
+            in_flight: 0,
+            launches: 0,
+            busy_time: SimTime::ZERO,
+            completed: 0,
+            last_done: SimTime::ZERO,
+        });
+        LaneSetId(self.lanes.len() - 1)
+    }
+
+    /// Release lane job `job` of `set` at virtual time `at` (>= now):
+    /// the job joins its lane's queue then and launches as soon as the
+    /// lane is free and the set is under its depth cap.  One typed event
+    /// per release — the overlap hot path's replacement for the old
+    /// boxed ready-time closure + gate waiter pair.
+    pub fn lane_submit(&mut self, set: LaneSetId, at: SimTime, job: u32) {
+        debug_assert!(set.0 < self.lanes.len(), "submit to an unknown lane set");
+        self.push_event(at, EventKind::LaneArrive { set: set.0 as u32, job });
+    }
+
+    fn lane_arrive(&mut self, set: usize, job: u32) {
+        let lane = job as usize % self.lanes[set].width;
+        self.lanes[set].pending[lane].push_back(job);
+        self.lane_try_launch(set);
+    }
+
+    /// Launch every currently launchable job of `set`: smallest released
+    /// job index whose lane is free, while the depth cap allows.  The
+    /// launch itself fires through the event heap (like a gate grant),
+    /// so simultaneous launches keep deterministic FIFO tie order.
+    fn lane_try_launch(&mut self, set: usize) {
+        loop {
+            let now = self.now;
+            let job = {
+                let st = &mut self.lanes[set];
+                if st.in_flight >= st.depth {
+                    break;
+                }
+                let mut pick: Option<(usize, u32)> = None;
+                for (lane, q) in st.pending.iter().enumerate() {
+                    if st.lane_busy[lane] {
+                        continue;
+                    }
+                    if let Some(&j) = q.front() {
+                        // (map_or, not is_none_or: the crate's MSRV is 1.79)
+                        if pick.map_or(true, |(_, pj)| j < pj) {
+                            pick = Some((lane, j));
+                        }
+                    }
+                }
+                let Some((lane, job)) = pick else { break };
+                st.pending[lane].pop_front();
+                st.lane_busy[lane] = true;
+                st.lane_acquired[lane] = now;
+                st.in_flight += 1;
+                st.launches += 1;
+                job
+            };
+            self.push_event(now, EventKind::LaneLaunch { set: set as u32, job });
+        }
+    }
+
+    /// Record lane job `job` of `set` as finished: frees its lane,
+    /// updates the occupancy ledger, and launches whatever became
+    /// eligible.  Typed completions ([`OnDone::Lane`]) land here.
+    pub fn lane_done(&mut self, set: LaneSetId, job: u32) {
+        let now = self.now;
+        {
+            let st = &mut self.lanes[set.0];
+            let lane = job as usize % st.width;
+            assert!(st.lane_busy[lane], "lane_done on a free lane");
+            st.lane_busy[lane] = false;
+            st.busy_time += now.saturating_sub(st.lane_acquired[lane]);
+            st.in_flight -= 1;
+            st.completed += 1;
+            st.last_done = now;
+        }
+        self.lane_try_launch(set.0);
+    }
+
+    /// (launches so far, cumulative lane-held time) — the comm-thread
+    /// utilization ledger of a lane set (grants/busy of the old gate).
+    pub fn lane_stats(&self, set: LaneSetId) -> (u64, SimTime) {
+        let st = &self.lanes[set.0];
+        (st.launches, st.busy_time)
+    }
+
+    /// How many jobs of `set` have completed.
+    pub fn lane_completed(&self, set: LaneSetId) -> usize {
+        self.lanes[set.0].completed
+    }
+
+    /// Virtual time of the set's most recent job completion.
+    pub fn lane_last_done(&self, set: LaneSetId) -> SimTime {
+        self.lanes[set.0].last_done
+    }
+
     /// Create a dependency join: `action` becomes eligible — scheduled at
     /// the virtual time of the final arrival — once [`Engine::arrive`] has
     /// been called `count` times.  The firing goes through the event heap,
     /// so simultaneous joins resolve in arrival order (deterministic).
     /// Join slots recycle after firing (generational free-list).
     pub fn join(&mut self, count: usize, action: impl FnOnce(&mut Engine) + 'static) -> JoinId {
+        self.join_with(count, OnDone::Call(Box::new(action)))
+    }
+
+    /// [`Engine::join`] with an arbitrary typed completion — a lane
+    /// completion makes a graph's terminal join hand its stream lane
+    /// back with no boxed action.
+    pub fn join_with(&mut self, count: usize, action: OnDone) -> JoinId {
         assert!(count > 0, "a join needs at least one dependency");
-        let action: Action = Box::new(action);
         match self.join_free.pop() {
             Some(slot) => {
                 let st = &mut self.joins[slot as usize];
@@ -450,7 +683,7 @@ impl Engine {
             action
         };
         self.join_free.push(j.slot);
-        action(self);
+        action.run(self);
     }
 
     /// When would a `bytes` request complete if enqueued now (without
@@ -768,6 +1001,171 @@ mod tests {
         });
         e.run();
         assert_eq!(*log.borrow(), vec!["b", "a"]);
+    }
+
+    /// Lane driver for the tests: each job is one `serve_for`-style
+    /// occupancy on a shared resource, completed through the typed path.
+    struct TestLanes {
+        durs: Vec<f64>,
+        on: ResourceId,
+    }
+
+    impl LaneDriver for TestLanes {
+        fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+            let steps: Rc<[ProgStep]> =
+                vec![ProgStep { us: self.durs[job as usize], on: Some(self.on) }].into();
+            e.run_program_lane(steps, set, job);
+        }
+    }
+
+    /// Unpinned variant: jobs elapse as pure delays (no shared resource),
+    /// so lane concurrency is directly visible in the completion times.
+    struct DelayLanes {
+        durs: Vec<f64>,
+    }
+
+    impl LaneDriver for DelayLanes {
+        fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+            let steps: Rc<[ProgStep]> =
+                vec![ProgStep { us: self.durs[job as usize], on: None }].into();
+            e.run_program_lane(steps, set, job);
+        }
+    }
+
+    #[test]
+    fn single_lane_matches_gate_semantics() {
+        // Three 10us holders released at 0/0/5: the gate serializes them
+        // 0-10/10-20/20-30; a width-1 depth-1 lane set must reproduce the
+        // same completions, launch count and busy ledger.
+        let mut e = Engine::new();
+        let set = e.lane_set(1, 1, Rc::new(DelayLanes { durs: vec![10.0; 3] }));
+        e.lane_submit(set, SimTime::ZERO, 0);
+        e.lane_submit(set, SimTime::ZERO, 1);
+        e.lane_submit(set, SimTime::from_us(5.0), 2);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(30.0));
+        let (launches, busy) = e.lane_stats(set);
+        assert_eq!(launches, 3);
+        assert_eq!(busy, SimTime::from_us(30.0));
+        assert_eq!(e.lane_completed(set), 3);
+        assert_eq!(e.lane_last_done(set), SimTime::from_us(30.0));
+    }
+
+    #[test]
+    fn two_lanes_interleave_uncontended_jobs() {
+        // Two 10us jobs released together: one lane serializes (20us),
+        // two lanes overlap them fully (10us).
+        for (streams, expect) in [(1usize, 20.0), (2, 10.0)] {
+            let mut e = Engine::new();
+            let set = e.lane_set(streams, streams, Rc::new(DelayLanes { durs: vec![10.0; 2] }));
+            e.lane_submit(set, SimTime::ZERO, 0);
+            e.lane_submit(set, SimTime::ZERO, 1);
+            assert_eq!(e.run(), SimTime::from_us(expect), "streams={streams}");
+        }
+    }
+
+    #[test]
+    fn lanes_share_resources_fifo() {
+        // Two lanes, both jobs pinned to one FIFO resource: the launches
+        // overlap but the occupancy serializes — contention arbitrates,
+        // not the lane order.
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        let set = e.lane_set(2, 2, Rc::new(TestLanes { durs: vec![10.0, 4.0], on: r }));
+        e.lane_submit(set, SimTime::ZERO, 0);
+        e.lane_submit(set, SimTime::ZERO, 1);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(14.0));
+        let (_, busy) = e.resource_stats(r);
+        assert_eq!(busy, SimTime::from_us(14.0));
+        // both lanes were held until their job's occupancy drained
+        let (launches, lane_busy) = e.lane_stats(set);
+        assert_eq!(launches, 2);
+        assert_eq!(lane_busy, SimTime::from_us(24.0));
+    }
+
+    #[test]
+    fn depth_cap_limits_in_flight() {
+        // Four 10us delay jobs on 4 lanes: depth 1 serializes (40us),
+        // depth 2 pairs them (20us), depth 4 runs all at once (10us).
+        for (depth, expect) in [(1usize, 40.0), (2, 20.0), (4, 10.0)] {
+            let mut e = Engine::new();
+            let set = e.lane_set(4, depth, Rc::new(DelayLanes { durs: vec![10.0; 4] }));
+            for j in 0..4 {
+                e.lane_submit(set, SimTime::ZERO, j);
+            }
+            assert_eq!(e.run(), SimTime::from_us(expect), "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn lane_round_robin_serializes_same_lane_jobs() {
+        // Jobs 0 and 2 share lane 0 of a 2-lane set: 2 waits for 0 even
+        // though lane 1 (job 1) finished long ago.
+        let mut e = Engine::new();
+        let done = Rc::new(RefCell::new(Vec::new()));
+        struct Log {
+            durs: Vec<f64>,
+            done: Rc<RefCell<Vec<(u32, f64)>>>,
+        }
+        impl LaneDriver for Log {
+            fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+                let steps: Rc<[ProgStep]> =
+                    vec![ProgStep { us: self.durs[job as usize], on: None }].into();
+                let d = self.done.clone();
+                e.run_program(
+                    steps,
+                    Box::new(move |e| {
+                        d.borrow_mut().push((job, e.now().as_us()));
+                        e.lane_done(set, job);
+                    }),
+                );
+            }
+        }
+        let set = e.lane_set(2, 2, Rc::new(Log { durs: vec![10.0, 1.0, 2.0], done: done.clone() }));
+        for j in 0..3 {
+            e.lane_submit(set, SimTime::ZERO, j);
+        }
+        e.run();
+        assert_eq!(*done.borrow(), vec![(1, 1.0), (0, 10.0), (2, 12.0)]);
+    }
+
+    #[test]
+    fn typed_join_completion_hands_lane_back() {
+        // A lane job completed through join_with(OnDone::Lane) frees the
+        // lane for the next job — the graph-path terminal join shape.
+        struct JoinLanes;
+        impl LaneDriver for JoinLanes {
+            fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+                let j = e.join_with(2, OnDone::Lane(set, job));
+                e.after(SimTime::from_us(3.0), move |e| e.arrive(j));
+                e.after(SimTime::from_us(7.0), move |e| e.arrive(j));
+            }
+        }
+        let mut e = Engine::new();
+        let set = e.lane_set(1, 1, Rc::new(JoinLanes));
+        e.lane_submit(set, SimTime::ZERO, 0);
+        e.lane_submit(set, SimTime::ZERO, 1);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(14.0));
+        assert_eq!(e.lane_completed(set), 2);
+    }
+
+    #[test]
+    fn program_lanes_driver_runs_resolved_programs() {
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        let progs: Vec<Rc<[ProgStep]>> = vec![
+            vec![ProgStep { us: 5.0, on: Some(r) }].into(),
+            vec![ProgStep { us: 2.0, on: Some(r) }].into(),
+        ];
+        let set = e.lane_set(1, 1, Rc::new(ProgramLanes::new(progs)));
+        e.lane_submit(set, SimTime::ZERO, 0);
+        e.lane_submit(set, SimTime::ZERO, 1);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(7.0));
+        let (served, busy) = e.resource_stats(r);
+        assert_eq!((served, busy), (2, SimTime::from_us(7.0)));
     }
 
     #[test]

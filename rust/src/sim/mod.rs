@@ -12,5 +12,8 @@
 pub mod engine;
 pub mod time;
 
-pub use engine::{Action, Engine, GateId, JoinId, ProgStep, ResourceId};
+pub use engine::{
+    Action, Engine, GateId, JoinId, LaneDriver, LaneSetId, OnDone, ProgStep, ProgramLanes,
+    ResourceId,
+};
 pub use time::SimTime;

@@ -7,22 +7,23 @@
 //! Each per-tensor ring is a `CommOp` schedule replayed onto the engine
 //! (or, when the scenario skews individual ranks, a per-rank ring
 //! `CommGraph` whose dependency edges propagate the skew); the
-//! graph-rewrite comm thread is a FIFO gate serializing tensors the way
-//! Horovod's fusion buffers serialize.
+//! graph-rewrite comm thread is a stream-lane set serializing tensors at
+//! the default `streams = 1` the way Horovod's fusion buffers serialize,
+//! and interleaving per-tensor rings across lanes when the scenario
+//! opens the overlapped regime (§Overlap).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
 
 use super::scenario::Scenario;
-use super::{IterationReport, JobTrace, Strategy, WorldSpec};
+use super::{IterationReport, LaneJob, Strategy, WorldSpec};
 use crate::comm::allreduce::Algo;
-use crate::comm::commop::{replay, steps_sig, CommOp, CommResources, CommSchedule, StepCost};
+use crate::comm::commop::{resolve_ops, steps_sig, CommResources, CommSchedule, StepCost};
 use crate::comm::graph::{ring_graph_placed, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::{Engine, GateId, SimTime};
+use crate::sim::{Engine, ProgStep, SimTime};
 
 #[derive(Debug, Clone)]
 pub struct Baidu {
@@ -149,14 +150,13 @@ impl Baidu {
         }
         let mut e = Engine::new();
         let res = GraphResources::install_placed(&mut e, ws.world, ws.cluster.placement());
-        let thread = e.gate();
         let items = self.graph_items(ws, sc)?;
-        let job = super::GraphJob::schedule(&mut e, &res, thread, items, SimTime::ZERO);
+        let job = LaneJob::graphs(&mut e, &res, sc.lanes(), items, SimTime::ZERO);
         e.run();
         let iter = super::close_iteration(
             ws,
             sc,
-            &job.trace()?,
+            &job.trace(&e)?,
             SimTime::ZERO,
             self.runtime_tax,
             self.skew_us_per_rank,
@@ -167,57 +167,43 @@ impl Baidu {
             iter,
             res.utilization(&e),
             &e,
-            thread,
+            job.set(),
         ))
     }
 
-    /// Schedule one Baidu job's communication onto an engine: per tensor,
-    /// an event at its (stretched) ready time acquires the graph-rewrite
-    /// comm-thread gate, replays the pipelined ring schedule on the job's
-    /// resources, and releases.  Schedules bucket by tensor size (§Perf)
-    /// and are shared across equal-size tensors.  Used by `iteration_in`
-    /// (offset 0) and the two-job link-share runner.
+    /// Schedule one Baidu job's communication onto an engine: the
+    /// per-tensor pipelined ring programs release at their (stretched)
+    /// ready times onto the job's comm stream lanes (`streams = 1` = the
+    /// classic graph-rewrite comm thread, serializing tensors FIFO).
+    /// Programs bucket by tensor size (§Perf) and are shared across
+    /// equal-size tensors; the tensor loop schedules only typed lane
+    /// events — no boxed closure per tensor.
     pub(crate) fn schedule_job(
         &self,
         ws: &WorldSpec,
         sc: &Scenario,
         e: &mut Engine,
         res: CommResources,
-        thread: GateId,
-        offset: SimTime,
-    ) -> Result<Rc<RefCell<JobTrace>>> {
+    ) -> Result<LaneJob> {
         let stretch = sc.compute_stretch();
         let map = res.mapper();
-        let trace = Rc::new(RefCell::new(JobTrace::default()));
-        let mut memo: HashMap<usize, (Rc<Vec<CommOp>>, f64)> = HashMap::new();
+        let mut memo: HashMap<usize, (Rc<[ProgStep]>, f64)> = HashMap::new();
+        let mut staging_total = 0.0;
+        let mut items = Vec::new();
         for (i, ready) in ws.tensor_readiness() {
             let ready = SimTime::from_us(ready.as_us() * stretch);
             let bytes = ws.model.tensors[i].bytes();
-            let (ops, staging) = memo
+            let (steps, staging) = memo
                 .entry(bytes)
                 .or_insert_with(|| {
                     let (sched, staging) = self.ring_schedule(ws, sc, bytes);
-                    (Rc::new(sched.ops), staging)
+                    (resolve_ops(&sched.ops, &map), staging)
                 })
                 .clone();
-            trace.borrow_mut().staging_us += staging;
-            let map = map.clone();
-            let trace = trace.clone();
-            e.at(offset + ready, move |e| {
-                e.acquire(thread, move |e| {
-                    replay(
-                        e,
-                        map,
-                        ops,
-                        Box::new(move |e| {
-                            trace.borrow_mut().comm_end = e.now();
-                            e.release(thread);
-                        }),
-                    );
-                });
-            });
+            staging_total += staging;
+            items.push((ready, steps));
         }
-        Ok(trace)
+        Ok(LaneJob::programs(e, sc.lanes(), items, staging_total, SimTime::ZERO))
     }
 }
 
@@ -244,20 +230,20 @@ impl Strategy for Baidu {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() {
+        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() || sc.overlapped() {
             return self.iteration_graph(ws, sc);
         }
-        // per-tensor rings serialize on the comm thread (a FIFO gate);
-        // each ring replays its CommOp schedule on the job's resources
+        // per-tensor rings serialize on the comm stream lane (streams =
+        // 1: the graph-rewrite comm thread); each ring runs its resolved
+        // program on the job's resources
         let mut e = Engine::new();
         let res = CommResources::install(&mut e);
-        let thread = e.gate();
-        let trace = self.schedule_job(ws, sc, &mut e, res, thread, SimTime::ZERO)?;
+        let job = self.schedule_job(ws, sc, &mut e, res)?;
         e.run();
         let iter = super::close_iteration(
             ws,
             sc,
-            &trace.borrow(),
+            &job.trace(&e)?,
             SimTime::ZERO,
             self.runtime_tax,
             self.skew_us_per_rank,
@@ -268,7 +254,7 @@ impl Strategy for Baidu {
             iter,
             res.utilization(&e),
             &e,
-            thread,
+            job.set(),
         ))
     }
 }

@@ -7,9 +7,14 @@
 //! rank-0 negotiation of §III-C2) plus one Allreduce on the configured
 //! backend.  The Allreduce is a `CommOp` schedule (wire, staging, reduce
 //! kernel, driver, launch steps) replayed onto the discrete-event engine;
-//! the background thread is a FIFO *gate*, so buffer *i* starts at
-//! max(ready_i, release_{i−1}) and — when another job shares the fabric —
-//! every wire step queues behind the co-tenant's traffic.  When the
+//! the background thread is a *stream-lane set* (§Overlap): at the
+//! default `streams = 1` buffers serialize exactly like the historical
+//! comm-thread gate — buffer *i* starts at max(ready_i, done_{i−1}) —
+//! while `streams > 1` launches ready buffers round-robin across lanes
+//! so their graphs interleave on the per-rank wire/PCIe resources
+//! (NCCL-stream semantics; `HOROVOD_NUM_NCCL_STREAMS`).  When another
+//! job shares the fabric, every wire step queues behind the co-tenant's
+//! traffic either way.  When the
 //! scenario skews individual ranks (stragglers, hetero mixes, per-step
 //! jitter) the Allreduce instead executes as a per-rank `CommGraph`
 //! ([`Horovod::iteration_graph`]) so the skew propagates along ring/RHD
@@ -20,23 +25,22 @@
 //! that erodes scaling efficiency (the Figure 9 story: MobileNet exposes
 //! almost everything, NASNet almost nothing).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
 
 use super::scenario::Scenario;
-use super::{IterationReport, JobTrace, Strategy, WorldSpec};
+use super::{IterationReport, JobTrace, LaneJob, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::allreduce::Algo;
 use crate::comm::commop::{
-    replay, steps_sig, CommOp, CommResources, CommSchedule, ResKind, StepCost,
+    resolve_ops, steps_sig, CommOp, CommResources, CommSchedule, ResKind, StepCost,
 };
 use crate::comm::graph::{allreduce_graph_placed, GraphResources, TemplateCache, TemplateKey};
 use crate::comm::nccl::NcclWorld;
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::{Engine, GateId, SimTime};
+use crate::sim::{Engine, ProgStep, SimTime};
 
 /// Which collective library backs the Allreduce.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -198,59 +202,44 @@ impl Horovod {
         buffers
     }
 
-    /// Schedule one training job's communication onto an engine: per
-    /// fusion buffer, an event at its ready time acquires the background
-    /// comm-thread gate, replays [coordination + Allreduce schedule] on
-    /// the job's resources, and releases.  Returns the live trace the
-    /// caller reads after `e.run()`.
+    /// Schedule one training job's communication onto an engine: the
+    /// fused buffers' [coordination + Allreduce] op programs release at
+    /// their ready times onto the job's comm stream lanes (`streams = 1`
+    /// = the classic background comm thread: FIFO, one buffer at a
+    /// time).  §Perf: programs are resolved once per buffer-size bucket
+    /// and shared across buffers, and the buffer loop schedules only
+    /// typed lane events — no `Engine::at` closure, no boxed gate waiter
+    /// per buffer (the retired "gate waiters box one closure per
+    /// acquire" follow-up).
     pub(crate) fn schedule_job(
         &self,
         ws: &WorldSpec,
         sc: &Scenario,
         e: &mut Engine,
         res: CommResources,
-        thread: GateId,
-        offset: SimTime,
-    ) -> Result<Rc<RefCell<JobTrace>>> {
+    ) -> Result<LaneJob> {
         let coord = self.coord_us(ws);
         let map = res.mapper();
-        let trace = Rc::new(RefCell::new(JobTrace::default()));
-        // buffers bucket by size (most close exactly at `fusion_bytes`):
-        // build the [coord + Allreduce] op schedule once per size and
-        // share the Rc across buffers (§Perf, serialized-path analogue of
-        // the graph-template cache)
-        let mut memo: HashMap<usize, (Rc<Vec<CommOp>>, f64)> = HashMap::new();
+        let mut memo: HashMap<usize, (Rc<[ProgStep]>, f64)> = HashMap::new();
+        let mut staging_total = 0.0;
+        let mut items = Vec::new();
         for (ready, bytes) in self.fusion_schedule_in(ws, sc.compute_stretch()) {
-            let (ops, staging) = match memo.get(&bytes) {
+            let (steps, staging) = match memo.get(&bytes) {
                 Some(hit) => hit.clone(),
                 None => {
                     let (sched, staging) = self.buffer_schedule(ws, sc, bytes)?;
                     let mut ops = Vec::with_capacity(sched.ops.len() + 1);
                     ops.push(CommOp::fixed(ResKind::Sw, coord));
                     ops.extend(sched.ops);
-                    let built = (Rc::new(ops), staging);
+                    let built = (resolve_ops(&ops, &map), staging);
                     memo.insert(bytes, built.clone());
                     built
                 }
             };
-            trace.borrow_mut().staging_us += staging;
-            let map = map.clone();
-            let trace = trace.clone();
-            e.at(offset + ready, move |e| {
-                e.acquire(thread, move |e| {
-                    replay(
-                        e,
-                        map,
-                        ops,
-                        Box::new(move |e| {
-                            trace.borrow_mut().comm_end = e.now();
-                            e.release(thread);
-                        }),
-                    );
-                });
-            });
+            staging_total += staging;
+            items.push((ready, steps));
         }
-        Ok(trace)
+        Ok(LaneJob::programs(e, sc.lanes(), items, staging_total, SimTime::ZERO))
     }
 
     /// Fold a finished job trace into an iteration time (see
@@ -340,18 +329,17 @@ impl Horovod {
         }
         let mut e = Engine::new();
         let res = GraphResources::install_placed(&mut e, ws.world, ws.cluster.placement());
-        let thread = e.gate();
         let items = self.graph_items(ws, sc)?;
-        let job = super::GraphJob::schedule(&mut e, &res, thread, items, SimTime::ZERO);
+        let job = LaneJob::graphs(&mut e, &res, sc.lanes(), items, SimTime::ZERO);
         e.run();
-        let iter = self.close_job(ws, sc, &job.trace()?, SimTime::ZERO);
+        let iter = self.close_job(ws, sc, &job.trace(&e)?, SimTime::ZERO);
         Ok(super::report_with_comm_thread(
             self.name(),
             ws,
             iter,
             res.utilization(&e),
             &e,
-            thread,
+            job.set(),
         ))
     }
 }
@@ -379,27 +367,28 @@ impl Strategy for Horovod {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
         }
-        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() {
-            // per-rank skew needs per-rank schedules, and a dense
-            // placement needs per-node resource sharing: execute the
-            // dependency graphs (equivalent to the replay below when the
-            // scenario is neutral and every rank owns its node —
-            // des_regression pins it)
+        if sc.per_rank_skew() || !ws.cluster.placement().is_trivial() || sc.overlapped() {
+            // per-rank skew needs per-rank schedules, a dense placement
+            // needs per-node resource sharing, and overlapped streams
+            // need per-rank resources for the interleaved buffer graphs
+            // to contend on: execute the dependency graphs (equivalent
+            // to the replay below when the scenario is neutral, every
+            // rank owns its node and streams = 1 — des_regression pins
+            // it)
             return self.iteration_graph(ws, sc);
         }
         let mut e = Engine::new();
         let res = CommResources::install(&mut e);
-        let thread = e.gate();
-        let trace = self.schedule_job(ws, sc, &mut e, res, thread, SimTime::ZERO)?;
+        let job = self.schedule_job(ws, sc, &mut e, res)?;
         e.run();
-        let iter = self.close_job(ws, sc, &trace.borrow(), SimTime::ZERO);
+        let iter = self.close_job(ws, sc, &job.trace(&e)?, SimTime::ZERO);
         Ok(super::report_with_comm_thread(
             self.name(),
             ws,
             iter,
             res.utilization(&e),
             &e,
-            thread,
+            job.set(),
         ))
     }
 }
@@ -543,6 +532,28 @@ mod tests {
         let b = h.iteration_in(&ws, &sc).unwrap().iter;
         assert_eq!(a, b, "cached replay must be bit-identical");
         assert_eq!(h.cache.len(), built, "second run must not rebuild templates");
+    }
+
+    #[test]
+    fn overlapped_streams_strictly_reduce_commbound_iterations() {
+        // §Overlap: on a comm-bound point (MobileNet at scale, Fig 9's
+        // worst case) two streams hide buffer k+1's coordination and
+        // staging under buffer k's wire time — the iteration must get
+        // strictly faster, and more streams never hurt.
+        use crate::models::mobilenet;
+        let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 64);
+        let h = Horovod::mpi(MpiFlavor::CrayMpich);
+        let base = h.iteration(&ws).unwrap().iter;
+        let s2 = h
+            .iteration_in(&ws, &Scenario { streams: 2, ..Scenario::default() })
+            .unwrap()
+            .iter;
+        let s4 = h
+            .iteration_in(&ws, &Scenario { streams: 4, ..Scenario::default() })
+            .unwrap()
+            .iter;
+        assert!(s2 < base, "2 streams must beat the serialized thread: {s2} vs {base}");
+        assert!(s4 <= s2, "4 streams must not lose to 2: {s4} vs {s2}");
     }
 
     #[test]

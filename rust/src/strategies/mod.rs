@@ -16,10 +16,12 @@
 //! strategy runs through the shared `CommOp` → `Engine` path: collectives
 //! emit resource-occupancy schedules (comm/commop.rs) that are replayed
 //! onto FIFO engine resources — PS fan-in congestion, Horovod's background
-//! comm-thread serialization (a FIFO gate), and the gRPC+MPI
-//! single-service-thread bottleneck are all queueing effects of the same
-//! substrate.  [`Scenario`] injects stragglers, heterogeneous node mixes,
-//! sync jitter and fabric sharing on top of any strategy.
+//! comm-thread serialization (a stream-lane set: `streams = 1` is the
+//! classic serialized comm thread, `streams > 1` opens NCCL-stream-style
+//! fusion overlap, §Overlap), and the gRPC+MPI single-service-thread
+//! bottleneck are all queueing effects of the same substrate.
+//! [`Scenario`] injects stragglers, heterogeneous node mixes, sync
+//! jitter, fabric sharing and the overlap knobs on top of any strategy.
 
 pub mod baidu;
 pub mod horovod;
@@ -31,15 +33,14 @@ pub use horovod::{Horovod, HorovodBackend};
 pub use ps::{PsStrategy, PsTransport};
 pub use scenario::Scenario;
 
-use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
-use crate::comm::graph::{GraphOverlay, GraphResources, GraphTemplate};
+use crate::comm::graph::{GraphOverlay, GraphResMap, GraphResources, GraphTemplate};
 use crate::comm::ResourceUse;
 use crate::models::ModelProfile;
-use crate::sim::{Engine, GateId, SimTime};
+use crate::sim::{Engine, LaneDriver, LaneSetId, ProgStep, ProgramLanes, SimTime};
 use crate::util::error::Result;
 
 /// One experiment point.
@@ -136,7 +137,7 @@ pub struct JobTrace {
     pub staging_us: f64,
 }
 
-/// One collective of a [`GraphJob`]: a cached immutable template, the
+/// One collective of a [`LaneJob`]: a cached immutable template, the
 /// per-iteration overlay to replay it under, its release time, and the
 /// critical host-staging share it charges the compute path.
 pub(crate) struct GraphWork {
@@ -146,90 +147,136 @@ pub(crate) struct GraphWork {
     pub staging_us: f64,
 }
 
-/// One allreduce-family job's per-collective dependency graphs scheduled
-/// onto an engine: each template replays at its ready time and runs under
-/// the strategy's background comm-thread gate (FIFO, one collective at a
-/// time — the same serialization the serialized-replay path uses), on the
-/// job's per-rank [`GraphResources`].  Shared by `Horovod` and `Baidu`'s
-/// `iteration_graph`.
-pub(crate) struct GraphJob {
-    trace: Rc<RefCell<JobTrace>>,
-    completed: Rc<RefCell<usize>>,
-    scheduled: usize,
+/// The driver behind a graph-path [`LaneJob`]: launching job `i`
+/// executes template `i` under its overlay with a typed lane
+/// completion.  One allocation per job set (per iteration) — the buffer
+/// loop itself schedules only typed lane events, never an `Engine::at`
+/// closure or boxed gate waiter per buffer.
+struct GraphLaneDriver {
+    map: GraphResMap,
+    items: Vec<(Arc<GraphTemplate>, GraphOverlay)>,
 }
 
-impl GraphJob {
-    /// Schedule the job's collectives, each releasing at `offset` plus
-    /// its own ready time (two-job link-share runs stagger job B by an
-    /// offset); read the result back with [`GraphJob::trace`] after
-    /// `Engine::run`.
-    pub(crate) fn schedule(
+impl LaneDriver for GraphLaneDriver {
+    fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+        let (template, overlay) = &self.items[job as usize];
+        template.execute_lane(e, self.map.clone(), overlay, set, job);
+    }
+}
+
+/// One allreduce-family job's collectives scheduled onto the engine's
+/// stream lanes (§Overlap): each collective releases at `offset` plus
+/// its ready time, round-robins across the scenario's `streams` lanes
+/// with at most `depth` in flight, and — once launched — interleaves
+/// with its co-resident collectives on the job's shared resources, where
+/// wire/PCIe/NIC FIFO contention does the arbitration (NCCL-stream
+/// semantics).  `streams = 1` reproduces the retired background
+/// comm-thread gate bit-for-bit: FIFO hand-off at max(ready, previous
+/// completion), same event count, same grant times.  Shared by `Horovod`
+/// and `Baidu` on both the graph path ([`LaneJob::graphs`]) and the
+/// serialized replay ([`LaneJob::programs`]).
+pub(crate) struct LaneJob {
+    set: LaneSetId,
+    scheduled: usize,
+    staging_us: f64,
+}
+
+impl LaneJob {
+    /// Graph-path job: collective `i` is a cached template replayed
+    /// under its overlay on the job's placement-aware resources.
+    pub(crate) fn graphs(
         e: &mut Engine,
         res: &GraphResources,
-        thread: GateId,
+        lanes: (usize, usize),
         items: Vec<GraphWork>,
         offset: SimTime,
-    ) -> GraphJob {
-        let trace = Rc::new(RefCell::new(JobTrace::default()));
-        let completed = Rc::new(RefCell::new(0usize));
-        let scheduled = items.len();
-        let map = res.mapper();
+    ) -> LaneJob {
+        let mut staging_us = 0.0;
+        let mut release = Vec::with_capacity(items.len());
+        let mut payload = Vec::with_capacity(items.len());
         for w in items {
-            trace.borrow_mut().staging_us += w.staging_us;
-            let map = map.clone();
-            let trace = trace.clone();
-            let completed = completed.clone();
-            e.at(offset + w.ready, move |e| {
-                let GraphWork { template, overlay, .. } = w;
-                e.acquire(thread, move |e| {
-                    template.execute(
-                        e,
-                        map,
-                        &overlay,
-                        Box::new(move |e| {
-                            trace.borrow_mut().comm_end = e.now();
-                            *completed.borrow_mut() += 1;
-                            e.release(thread);
-                        }),
-                    );
-                });
-            });
+            staging_us += w.staging_us;
+            release.push(w.ready);
+            payload.push((w.template, w.overlay));
         }
-        GraphJob { trace, completed, scheduled }
+        let driver = GraphLaneDriver { map: res.mapper(), items: payload };
+        LaneJob::submit(e, lanes, Rc::new(driver), release, staging_us, offset)
     }
 
-    /// The finished job trace — errors if any collective's graph never
-    /// completed (a wiring bug would otherwise silently report a too-fast
+    /// Serialized-path job: collective `i` is one pre-resolved op
+    /// program — the typed gate-holder form of the old boxed `acquire`
+    /// waiters (§Perf follow-up, retired here).
+    pub(crate) fn programs(
+        e: &mut Engine,
+        lanes: (usize, usize),
+        items: Vec<(SimTime, Rc<[ProgStep]>)>,
+        staging_us: f64,
+        offset: SimTime,
+    ) -> LaneJob {
+        let mut release = Vec::with_capacity(items.len());
+        let mut progs = Vec::with_capacity(items.len());
+        for (ready, steps) in items {
+            release.push(ready);
+            progs.push(steps);
+        }
+        LaneJob::submit(e, lanes, Rc::new(ProgramLanes::new(progs)), release, staging_us, offset)
+    }
+
+    fn submit(
+        e: &mut Engine,
+        lanes: (usize, usize),
+        driver: Rc<dyn LaneDriver>,
+        release: Vec<SimTime>,
+        staging_us: f64,
+        offset: SimTime,
+    ) -> LaneJob {
+        let scheduled = release.len();
+        let set = e.lane_set(lanes.0, lanes.1, driver);
+        for (i, r) in release.into_iter().enumerate() {
+            e.lane_submit(set, offset + r, i as u32);
+        }
+        LaneJob { set, scheduled, staging_us }
+    }
+
+    /// The job's lane set — the comm-thread ledger the report reads.
+    pub(crate) fn set(&self) -> LaneSetId {
+        self.set
+    }
+
+    /// The finished job trace — errors if any collective never completed
+    /// (a wiring bug would otherwise silently report a too-fast
     /// iteration; the PS path has the same guard in `PsJob::comm_end`).
-    pub(crate) fn trace(&self) -> Result<JobTrace> {
+    pub(crate) fn trace(&self, e: &Engine) -> Result<JobTrace> {
         crate::ensure!(
-            *self.completed.borrow() == self.scheduled,
-            "graph job did not converge: {} of {} collectives completed",
-            *self.completed.borrow(),
+            e.lane_completed(self.set) == self.scheduled,
+            "lane job did not converge: {} of {} collectives completed",
+            e.lane_completed(self.set),
             self.scheduled
         );
-        Ok(*self.trace.borrow())
+        Ok(JobTrace { comm_end: e.lane_last_done(self.set), staging_us: self.staging_us })
     }
 }
 
 /// Fold an engine run into the allreduce-family iteration report: the
-/// per-resource utilization rows plus the background comm-thread gate row
-/// (shared by the serialized and graph paths of Horovod and Baidu).
+/// per-resource utilization rows plus the comm stream-lane row (kept
+/// under the historical "comm-thread" name — at `streams = 1` it IS the
+/// old background comm thread; shared by the serialized and graph paths
+/// of Horovod and Baidu).
 pub(crate) fn report_with_comm_thread(
     name: String,
     ws: &WorldSpec,
     iter: SimTime,
     util: Vec<ResourceUse>,
     e: &Engine,
-    thread: GateId,
+    set: LaneSetId,
 ) -> IterationReport {
     let mut report = IterationReport::from_times(name, ws, iter);
     report.resource_util = util;
     report.engine_events = e.executed();
-    let (grants, busy) = e.gate_stats(thread);
+    let (launches, busy) = e.lane_stats(set);
     report.resource_util.push(ResourceUse {
         name: "comm-thread".to_string(),
-        served: grants,
+        served: launches,
         busy,
     });
     report

@@ -24,7 +24,6 @@
 //! round-robin across them.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::error::Result;
@@ -32,8 +31,10 @@ use crate::util::error::Result;
 use super::scenario::Scenario;
 use super::{IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
-use crate::comm::commop::{replay, CommOp, ResKind, ResMap, ResourceUse};
-use crate::comm::graph::{ps_fanin_graph, unmapped, GraphRun, GraphTemplate, NodeId};
+use crate::comm::commop::{replay, CommOp, RelPin, ResKind, ResMap, ResourceUse};
+use crate::comm::graph::{
+    ps_fanin_graph, ps_fanin_pulls, GraphResMap, GraphRun, NodeId, TemplateCache, TemplateKey,
+};
 use crate::comm::grpc::GrpcTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
@@ -62,6 +63,12 @@ pub struct PsStrategy {
     pub runtime_tax: f64,
     /// Per-iteration synchronization skew, µs per rank (see horovod.rs).
     pub skew_us_per_rank: f64,
+    /// Build-once/replay-many fan-in templates (§Perf follow-up,
+    /// cross-call PS templating): shard DAGs carry *named* resource pins
+    /// ([`RelPin`]) instead of engine ids, so one template serves every
+    /// call and engine; keyed per `(world, placement, server ⧺ cost
+    /// signature)`.  Shared across clones.
+    pub cache: TemplateCache,
 }
 
 impl PsStrategy {
@@ -72,6 +79,7 @@ impl PsStrategy {
             thread_dispatch_us: 0.0,
             runtime_tax: 0.10,
             skew_us_per_rank: 470.0,
+            cache: TemplateCache::default(),
         }
     }
 
@@ -82,6 +90,7 @@ impl PsStrategy {
             thread_dispatch_us: 700.0,
             runtime_tax: 0.10,
             skew_us_per_rank: 470.0,
+            cache: TemplateCache::default(),
         }
     }
 
@@ -92,6 +101,7 @@ impl PsStrategy {
             thread_dispatch_us: 0.0,
             runtime_tax: 0.10,
             skew_us_per_rank: 470.0,
+            cache: TemplateCache::default(),
         }
     }
 
@@ -173,9 +183,13 @@ impl PsStrategy {
     /// node's PCIe/NVLink path off the port; the gRPC+MPI single service
     /// thread is a per-worker pinned resource private to this job.
     /// §Perf: shards bucket by `(bytes, server)` — the fan-in DAG is
-    /// built once per bucket (a `GraphTemplate`, call-local because the
-    /// pinned NIC ids are engine-specific) and replayed per shard under
-    /// the scenario's overlay.
+    /// built once per bucket as a `GraphTemplate` in the **strategy-level
+    /// [`TemplateCache`]** and replayed per shard under the scenario's
+    /// overlay.  Templates carry *named* resource pins ([`RelPin`]:
+    /// server ingress/egress, worker MPI thread) that this call's map
+    /// resolves onto the engine's physical fabric ports, so one build
+    /// serves every call, job and engine (cross-call PS templating; the
+    /// old engine-id pins made fan-ins call-local).
     pub(crate) fn schedule_job(
         &self,
         ws: &WorldSpec,
@@ -198,9 +212,9 @@ impl PsStrategy {
         // per-worker MPI service thread (gRPC+MPI only): serialized AND
         // paying a fixed dispatch cost per message
         let dispatch_us = self.thread_dispatch_us;
-        let worker_tx: Option<Vec<ResourceId>> = self
-            .single_thread_worker
-            .then(|| (0..w_count).map(|_| e.unit_resource()).collect());
+        let single = self.single_thread_worker;
+        let worker_tx: Option<Vec<ResourceId>> =
+            single.then(|| (0..w_count).map(|_| e.unit_resource()).collect());
         // µs it takes a PS CPU to aggregate W gradients and apply the
         // update (TF variable ops run single-threaded per variable, but
         // vectorized — ~8 GB/s of aggregated gradient data).
@@ -215,24 +229,47 @@ impl PsStrategy {
         let local = ws.cluster.fabric.local_hop_factor();
         let node_local = move |w: usize, s: usize| place.gpus_per_node > 1 && place.same_node(w, s);
 
+        // this call's resolution of the templates' named pins: per-rank
+        // kinds stay uncontended (None, the historical unmapped()), rel
+        // pins land on the engine's fabric ports / worker threads
+        let map: GraphResMap = {
+            let ingress = fabric.ingress.clone();
+            let egress = fabric.egress.clone();
+            let tx = worker_tx.clone();
+            Rc::new(move |_rank, _kind, rel| match rel {
+                Some(RelPin::PsIn(s)) => Some(ingress[s as usize]),
+                Some(RelPin::PsOut(s)) => Some(egress[s as usize]),
+                Some(RelPin::WorkerTx(w)) => tx.as_ref().map(|t| t[w as usize]),
+                None => None,
+            })
+        };
+
         let done = Rc::new(RefCell::new(0usize));
-        let map = unmapped();
-        // fan-in templates per (bytes, server): push/pull fixed costs are
-        // functions of bytes, and the pinned NICs of the server, so the
-        // bucket key fully determines the graph
-        type FaninTemplate = Rc<(GraphTemplate, Vec<NodeId>)>;
-        let mut templates: HashMap<(usize, usize), FaninTemplate> = HashMap::new();
+        let pulls = ps_fanin_pulls(w_count);
         let mut runs = Vec::with_capacity(per_shard.len());
         for (si, &(bytes, push_fixed, pull_fixed, ps, ready)) in per_shard.iter().enumerate() {
-            let template = templates
-                .entry((bytes, ps))
-                .or_insert_with(|| {
+            // everything the shard's op durations and routing depend on,
+            // bit-exact (world and placement live in the key proper)
+            let sig = vec![
+                ps as u64,
+                single as u64,
+                bytes as u64,
+                push_fixed.to_bits(),
+                pull_fixed.to_bits(),
+                wire_us(bytes).to_bits(),
+                update_us(bytes).to_bits(),
+                dispatch_us.to_bits(),
+                local.to_bits(),
+            ];
+            let template = self.cache.get_or_build(
+                TemplateKey::ps_fanin(w_count, place, sig),
+                || {
                     let push_ops = |w: usize| {
                         let mut ops = Vec::new();
-                        if let Some(tx) = &worker_tx {
+                        if single {
                             ops.push(
                                 CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
-                                    .pinned(tx[w]),
+                                    .rel_pinned(RelPin::WorkerTx(w as u32)),
                             );
                         }
                         ops.push(CommOp::fixed(ResKind::Sw, push_fixed));
@@ -243,7 +280,7 @@ impl PsStrategy {
                         } else {
                             ops.push(
                                 CommOp::fixed(ResKind::Wire, wire_us(bytes))
-                                    .pinned(fabric.ingress[ps]),
+                                    .rel_pinned(RelPin::PsIn(ps as u32)),
                             );
                         }
                         ops
@@ -253,33 +290,33 @@ impl PsStrategy {
                         let mut ops = vec![if node_local(w, ps) {
                             CommOp::fixed(ResKind::Pcie, wire_us(bytes) * local)
                         } else {
-                            CommOp::fixed(ResKind::Wire, wire_us(bytes)).pinned(fabric.egress[ps])
+                            CommOp::fixed(ResKind::Wire, wire_us(bytes))
+                                .rel_pinned(RelPin::PsOut(ps as u32))
                         }];
                         ops.push(CommOp::fixed(ResKind::Sw, pull_fixed));
-                        if let Some(tx) = &worker_tx {
+                        if single {
                             ops.push(
                                 CommOp::fixed(ResKind::Sw, wire_us(bytes) + dispatch_us)
-                                    .pinned(tx[w]),
+                                    .rel_pinned(RelPin::WorkerTx(w as u32)),
                             );
                         }
                         ops
                     };
-                    let (g, pulls) = ps_fanin_graph(w_count, ps, push_ops, update, pull_ops);
-                    Rc::new((GraphTemplate::new(g), pulls))
-                })
-                .clone();
+                    ps_fanin_graph(w_count, ps, push_ops, update, pull_ops).0
+                },
+            );
             let overlay = sc.overlay(w_count, si as u64);
             let shard_done = done.clone();
-            let run = template.0.execute_at(
+            let run = template.execute_at(
                 e,
                 map.clone(),
                 &overlay,
                 offset + ready,
                 Box::new(move |_| *shard_done.borrow_mut() += 1),
             );
-            runs.push((run, template.1.clone()));
+            runs.push(run);
         }
-        Ok(PsJob { runs, done, worker_tx })
+        Ok(PsJob { runs, pulls, done, worker_tx })
     }
 }
 
@@ -346,10 +383,13 @@ impl PsFabric {
     }
 }
 
-/// One scheduled PS job: the per-shard fan-in graphs and their pull
-/// sinks, read back after the engine run.
+/// One scheduled PS job: the per-shard fan-in runs plus the (shared)
+/// pull-sink layout, read back after the engine run.
 pub struct PsJob {
-    runs: Vec<(Rc<RefCell<GraphRun>>, Vec<NodeId>)>,
+    runs: Vec<Rc<RefCell<GraphRun>>>,
+    /// Pull sinks of every shard's fan-in template (the builder layout
+    /// is fixed per worker count, so one list serves all shards).
+    pulls: Vec<NodeId>,
     done: Rc<RefCell<usize>>,
     worker_tx: Option<Vec<ResourceId>>,
 }
@@ -364,9 +404,9 @@ impl PsJob {
             self.runs.len()
         );
         let mut end = SimTime::ZERO;
-        for (run, pulls) in &self.runs {
+        for run in &self.runs {
             let r = run.borrow();
-            for &id in pulls {
+            for &id in &self.pulls {
                 end = end.max(r.finish_of(id));
             }
         }
@@ -688,6 +728,30 @@ mod tests {
         let f3 = PsFabric::install(&mut e, 3);
         assert_eq!(f3.ingress, f3.in_ports().to_vec());
         assert_eq!(f3.egress, f3.out_ports().to_vec());
+    }
+
+    #[test]
+    fn fanin_templates_are_cached_across_calls_and_replays_are_stable() {
+        // the cross-call templating pin: the first iteration builds one
+        // template per (bytes, server) bucket into the STRATEGY cache;
+        // a second iteration — a fresh engine — replays them warm,
+        // builds nothing new, and reproduces the exact same time
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        for s in [PsStrategy::grpc(), PsStrategy::grpc_mpi(), PsStrategy::grpc_verbs()] {
+            let a = s.iteration(&ws).unwrap();
+            let built = s.cache.len();
+            assert!(built >= 1, "{}: no fan-in templates cached", s.name());
+            let b = s.iteration(&ws).unwrap();
+            assert_eq!(a.iter, b.iter, "{}: warm replay diverged", s.name());
+            assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", s.name());
+            assert_eq!(s.cache.len(), built, "{}: warm call rebuilt templates", s.name());
+        }
+        // the scenario derate perturbs wire costs → new keys, no stale hit
+        let s = PsStrategy::grpc();
+        s.iteration(&ws).unwrap();
+        let cold = s.cache.len();
+        s.iteration_in(&ws, &Scenario::link_loaded(0.5)).unwrap();
+        assert!(s.cache.len() > cold, "derated wire must not alias the pristine templates");
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use super::baidu::Baidu;
 use super::horovod::Horovod;
 use super::ps::{PsFabric, PsJob, PsStrategy};
-use super::{GraphJob, GraphWork, JobTrace, Strategy, WorldSpec};
+use super::{GraphWork, JobTrace, LaneJob, Strategy, WorldSpec};
 use crate::comm::commop::ResourceUse;
 use crate::comm::graph::{GraphOverlay, GraphResources};
 use crate::sim::{Engine, SimTime};
@@ -59,6 +59,15 @@ pub struct Scenario {
     pub second_job: bool,
     /// Start offset of the second job, µs.
     pub second_job_offset_us: f64,
+    /// Logical comm streams (§Overlap, `HOROVOD_NUM_NCCL_STREAMS`): `1`
+    /// = the classic serialized background comm thread; `n > 1` launches
+    /// ready fusion buffers / per-tensor rings round-robin across `n`
+    /// lanes, so their graphs interleave on the shared per-rank
+    /// resources and wire/PCIe contention does the arbitration.
+    pub streams: usize,
+    /// Queue-depth cap: at most this many collectives in flight across
+    /// the lanes (`0` = the stream count, i.e. uncapped).
+    pub depth: usize,
 }
 
 impl Default for Scenario {
@@ -73,6 +82,8 @@ impl Default for Scenario {
             link_load: 0.0,
             second_job: false,
             second_job_offset_us: 0.0,
+            streams: 1,
+            depth: 0,
         }
     }
 }
@@ -88,6 +99,10 @@ impl Scenario {
 
     pub fn link_loaded(load: f64) -> Scenario {
         Scenario { link_load: load, ..Scenario::default() }
+    }
+
+    pub fn overlap(streams: usize) -> Scenario {
+        Scenario { streams, ..Scenario::default() }
     }
 
     pub fn is_neutral(&self) -> bool {
@@ -127,6 +142,27 @@ impl Scenario {
         (0..world)
             .map(|_| rng.next_below(1 << 20) as f64 / (1u64 << 20) as f64 * self.jitter_us)
             .fold(0.0, f64::max)
+    }
+
+    /// The comm stream-lane layout as `(streams, depth)`: `streams`
+    /// logical lanes with at most `depth` collectives in flight.  A
+    /// `depth` of 0 means "as deep as the stream count"; a configured
+    /// depth is clamped to the stream count (a deeper queue than there
+    /// are lanes would be inert — each lane holds one collective).
+    pub fn lanes(&self) -> (usize, usize) {
+        let streams = self.streams.max(1);
+        let depth = if self.depth == 0 { streams } else { self.depth.min(streams) };
+        (streams, depth)
+    }
+
+    /// Does the scenario open the overlapped regime (§Overlap — more
+    /// than one comm stream)?  When true, the allreduce-family
+    /// strategies execute per-rank `CommGraph`s even under neutral skew
+    /// and trivial placement, because interleaved buffer graphs need
+    /// per-rank resources to contend on; the serialized replay cannot
+    /// express two collectives in flight.
+    pub fn overlapped(&self) -> bool {
+        self.lanes().0 > 1
     }
 
     /// Do the knobs skew *individual ranks* apart (rather than shifting
@@ -222,6 +258,7 @@ impl LinkShareReport {
 /// both job traces plus the shared-port wire ledger.
 fn run_shared_wire_jobs(
     ws: &WorldSpec,
+    lanes: (usize, usize),
     items_a: Vec<GraphWork>,
     items_b: Vec<GraphWork>,
     offset: SimTime,
@@ -230,13 +267,11 @@ fn run_shared_wire_jobs(
     let place = ws.cluster.placement();
     let res_a = GraphResources::install_placed(&mut e, ws.world, place);
     let res_b = GraphResources::sharing_wire(&mut e, ws.world, &res_a);
-    let gate_a = e.gate();
-    let gate_b = e.gate();
-    let job_a = GraphJob::schedule(&mut e, &res_a, gate_a, items_a, SimTime::ZERO);
-    let job_b = GraphJob::schedule(&mut e, &res_b, gate_b, items_b, offset);
+    let job_a = LaneJob::graphs(&mut e, &res_a, lanes, items_a, SimTime::ZERO);
+    let job_b = LaneJob::graphs(&mut e, &res_b, lanes, items_b, offset);
     e.run();
     let wire = ResourceUse::aggregate(&e, "wire", res_a.wire.iter().copied());
-    Ok((job_a.trace()?, job_b.trace()?, wire.served, wire.busy))
+    Ok((job_a.trace(&e)?, job_b.trace(&e)?, wire.served, wire.busy))
 }
 
 /// Run two identical Horovod jobs on one engine, sharing the physical
@@ -249,8 +284,13 @@ fn run_shared_wire_jobs(
 pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
     let sc = Scenario::default();
     let solo = h.iteration_graph(ws, &sc)?;
-    let (trace_a, trace_b, wire_served, wire_busy) =
-        run_shared_wire_jobs(ws, h.graph_items(ws, &sc)?, h.graph_items(ws, &sc)?, offset)?;
+    let (trace_a, trace_b, wire_served, wire_busy) = run_shared_wire_jobs(
+        ws,
+        sc.lanes(),
+        h.graph_items(ws, &sc)?,
+        h.graph_items(ws, &sc)?,
+        offset,
+    )?;
     let iter_a = h.close_job(ws, &sc, &trace_a, SimTime::ZERO);
     let iter_b = h.close_job(ws, &sc, &trace_b, offset);
     Ok(LinkShareReport {
@@ -269,8 +309,13 @@ pub fn link_share(h: &Horovod, ws: &WorldSpec, offset: SimTime) -> Result<LinkSh
 pub fn link_share_baidu(b: &Baidu, ws: &WorldSpec, offset: SimTime) -> Result<LinkShareReport> {
     let sc = Scenario::default();
     let solo = b.iteration_graph(ws, &sc)?;
-    let (trace_a, trace_b, wire_served, wire_busy) =
-        run_shared_wire_jobs(ws, b.graph_items(ws, &sc)?, b.graph_items(ws, &sc)?, offset)?;
+    let (trace_a, trace_b, wire_served, wire_busy) = run_shared_wire_jobs(
+        ws,
+        sc.lanes(),
+        b.graph_items(ws, &sc)?,
+        b.graph_items(ws, &sc)?,
+        offset,
+    )?;
     let close = |trace: &JobTrace, off: SimTime| {
         super::close_iteration(ws, &sc, trace, off, b.runtime_tax, b.skew_us_per_rank)
     };
@@ -386,6 +431,35 @@ mod tests {
             "two jobs on one wire must contend somewhere: {a} {b}"
         );
         assert!(r.wire_busy > SimTime::ZERO);
+    }
+
+    #[test]
+    fn lanes_default_and_clamp() {
+        assert_eq!(Scenario::default().lanes(), (1, 1));
+        assert!(!Scenario::default().overlapped());
+        assert_eq!(Scenario::overlap(4).lanes(), (4, 4));
+        assert!(Scenario::overlap(2).overlapped());
+        // a configured depth caps in-flight; deeper than the stream
+        // count clamps (each lane holds one collective)
+        let sc = Scenario { streams: 4, depth: 2, ..Scenario::default() };
+        assert_eq!(sc.lanes(), (4, 2));
+        let sc = Scenario { streams: 2, depth: 9, ..Scenario::default() };
+        assert_eq!(sc.lanes(), (2, 2));
+        // streams alone is not per-rank skew — it is an execution-model
+        // knob, not a perturbation
+        assert!(!Scenario::overlap(4).per_rank_skew());
+    }
+
+    #[test]
+    fn overlap_keeps_baseline_at_one_stream_and_helps_beyond() {
+        use crate::models::mobilenet;
+        let h = Horovod::mpi(MpiFlavor::CrayMpich);
+        let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 32);
+        let base = h.iteration(&ws).unwrap().iter;
+        let one = h.iteration_in(&ws, &Scenario::overlap(1)).unwrap().iter;
+        assert_eq!(one, base, "streams = 1 must be the serialized baseline");
+        let two = h.iteration_in(&ws, &Scenario::overlap(2)).unwrap().iter;
+        assert!(two < base, "overlap must hide comm on a comm-bound point: {two} vs {base}");
     }
 
     #[test]

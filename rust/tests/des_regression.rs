@@ -446,6 +446,82 @@ fn dense_placement_monotonicity_pins() {
 }
 
 #[test]
+fn overlap_streams_reduce_iteration_and_are_monotone_in_depth() {
+    // §Overlap pins on the paper's comm-bound worst case (MobileNet at
+    // scale, Fig 9): (1) depth = 1 reproduces the serialized launch
+    // order bit-for-bit even with two lanes configured; (2) two streams
+    // strictly hide communication under backprop; (3) more streams and
+    // deeper in-flight caps never hurt.
+    let ws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 64);
+    let h = Horovod::mpi(MpiFlavor::CrayMpich);
+    let base = h.iteration(&ws).unwrap().iter;
+
+    // depth = 1 ≡ the serialized comm-thread order on the graph path
+    let graph1 = h.iteration_graph(&ws, &Scenario::default()).unwrap().iter;
+    let s2d1 = h
+        .iteration_in(&ws, &Scenario { streams: 2, depth: 1, ..Scenario::default() })
+        .unwrap()
+        .iter;
+    assert_eq!(
+        s2d1, graph1,
+        "two lanes at depth 1 must replay the serialized hand-off order exactly"
+    );
+
+    // overlap strictly reduces the comm-bound iteration
+    let s2 = h.iteration_in(&ws, &Scenario::overlap(2)).unwrap().iter;
+    assert!(s2 < base, "2 streams must hide comm under backprop: {s2} vs {base}");
+    let s4 = h.iteration_in(&ws, &Scenario::overlap(4)).unwrap().iter;
+    assert!(s4 <= s2, "4 streams must not lose to 2: {s4} vs {s2}");
+
+    // monotone in the depth cap at a fixed stream count
+    let at_depth = |d: usize| {
+        h.iteration_in(&ws, &Scenario { streams: 4, depth: d, ..Scenario::default() })
+            .unwrap()
+            .iter
+    };
+    let (d1, d2, d4) = (at_depth(1), at_depth(2), at_depth(4));
+    assert!(d2 <= d1, "depth 2 must not lose to depth 1: {d2} vs {d1}");
+    assert!(d4 <= d2, "depth 4 must not lose to depth 2: {d4} vs {d2}");
+    assert_eq!(d4, s4, "an uncapped depth equals depth = streams");
+
+    // Baidu rides the same lanes (smaller world: per-tensor rings build
+    // ~80 graphs per iteration, and tests run unoptimized)
+    let bws = WorldSpec::new(presets::piz_daint(), mobilenet::mobilenet_v1(), 32);
+    let b = Baidu::with_flavor(MpiFlavor::CrayMpich);
+    let b_base = b.iteration(&bws).unwrap().iter;
+    let b2 = b.iteration_in(&bws, &Scenario::overlap(2)).unwrap().iter;
+    assert!(b2 < b_base, "Baidu: 2 streams must overlap rings: {b2} vs {b_base}");
+}
+
+#[test]
+fn overlap_replays_are_stable_and_compose_with_skew() {
+    // warm-cache overlapped replays are bit-identical, and overlap
+    // composes with per-rank skew (straggler + jitter) without breaking
+    // determinism
+    let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 16);
+    let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+    let sc = Scenario {
+        streams: 2,
+        straggler_ranks: 1,
+        straggler_factor: 1.5,
+        jitter_us: 100.0,
+        seed: 11,
+        ..Scenario::default()
+    };
+    let a = h.iteration_in(&ws, &sc).unwrap();
+    let b = h.iteration_in(&ws, &sc).unwrap();
+    assert_eq!(a.iter, b.iter, "overlapped replay diverged");
+    assert_eq!(a.engine_events, b.engine_events);
+    // the comm-thread ledger reports one lane launch per fusion buffer
+    // (buffers re-packed under the straggler's compute stretch)
+    let thread = a.resource_util.iter().find(|u| u.name == "comm-thread").unwrap();
+    assert_eq!(
+        thread.served as usize,
+        h.fusion_schedule_in(&ws, sc.compute_stretch()).len()
+    );
+}
+
+#[test]
 fn parallel_sweeps_are_deterministic() {
     // The sweep drivers fan points across threads; each point owns its
     // engine, so two runs must produce byte-identical tables.

@@ -520,6 +520,171 @@ fn prop_trivial_placement_is_bit_identical_to_per_rank_bundles() {
     }
 }
 
+/// prop (§Overlap): scheduling a job's collectives on a single comm
+/// stream lane is **bit-identical** to the retired comm-thread gate
+/// path — random worlds, placements, step costs, overlays and release
+/// times; ring / RHD / tree templates.  The gate oracle below replicates
+/// the pre-overlap scheduling verbatim through the public engine API
+/// (`at` → `acquire` → execute → `release`), so every serialized-era
+/// figure pin is guaranteed to survive the stream-lane port at
+/// `streams = 1`.
+#[test]
+fn prop_single_stream_equals_gated_path() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    use std::sync::Arc;
+
+    use mpi_dnn_train::cluster::Placement;
+    use mpi_dnn_train::comm::allreduce::flp2;
+    use mpi_dnn_train::comm::graph::{
+        rhd_graph_placed, ring_graph_placed, tree_graph_placed, GraphOverlay, GraphResMap,
+        GraphResources, GraphTemplate,
+    };
+    use mpi_dnn_train::comm::{CostBreakdown, StepCost};
+    use mpi_dnn_train::sim::{LaneDriver, LaneSetId};
+    use mpi_dnn_train::strategies::Scenario;
+
+    struct Lanes {
+        items: Vec<(Arc<GraphTemplate>, GraphOverlay)>,
+        map: GraphResMap,
+    }
+    impl LaneDriver for Lanes {
+        fn launch(&self, e: &mut Engine, set: LaneSetId, job: u32) {
+            let (t, ov) = &self.items[job as usize];
+            t.execute_lane(e, self.map.clone(), ov, set, job);
+        }
+    }
+
+    /// Every distinct resource of a bundle, for the stats comparison.
+    fn all_resources(res: &GraphResources) -> Vec<mpi_dnn_train::sim::ResourceId> {
+        let mut v = Vec::new();
+        for ids in [&res.wire, &res.pcie, &res.gpu, &res.cpu, &res.driver, &res.launch, &res.sw] {
+            v.extend(ids.iter().copied());
+        }
+        v
+    }
+
+    for case in 0..30u64 {
+        let mut rng = Rng::new(0xA7_01 + case);
+        let p = 2 + rng.next_below(10) as usize; // 2..=11, incl. non-pow2
+        let gpn = 1 + rng.next_below(2) as usize; // 1 or 2 GPUs per node
+        let rails = 1 + rng.next_below(gpn as u64) as usize;
+        let place = Placement::new(gpn, rails);
+        let local = 0.2 + rng.next_f64() * 2.0;
+        let mk_cost = |rng: &mut Rng| CostBreakdown {
+            wire_us: 1.0 + rng.next_f64() * 20.0,
+            staging_us: rng.next_f64() * 4.0,
+            reduce_us: rng.next_f64() * 3.0,
+            driver_us: rng.next_f64(),
+            launch_us: rng.next_f64(),
+            sw_us: rng.next_f64() * 2.0,
+        };
+        let mk_steps = |n: usize, rng: &mut Rng| -> Vec<StepCost> {
+            (0..n)
+                .map(|_| StepCost { cost: mk_cost(rng), gpu_reduce: rng.next_below(2) == 0 })
+                .collect()
+        };
+        let sc = Scenario {
+            straggler_ranks: rng.next_below(3) as usize,
+            straggler_factor: 1.0 + rng.next_f64() * 2.0,
+            hetero_ranks: rng.next_below(3) as usize,
+            hetero_factor: 1.0 + rng.next_f64() * 2.0,
+            jitter_us: if rng.next_below(2) == 0 { 40.0 } else { 0.0 },
+            seed: case,
+            ..Scenario::default()
+        };
+
+        // 2..=5 collectives with random release times and per-collective
+        // overlays, each a randomly chosen placed builder
+        let count = 2 + rng.next_below(4) as usize;
+        let p2 = flp2(p);
+        let rhd_count = if p > p2 { 2 } else { 0 } + 2 * p2.trailing_zeros() as usize;
+        let tree_count = {
+            let mut c = 0;
+            let mut dist = 1;
+            while dist < p {
+                c += 1;
+                dist *= 2;
+            }
+            let mut dist = p.next_power_of_two() / 2;
+            while dist >= 1 {
+                if (0..p).step_by(2 * dist).any(|s| s + dist < p) {
+                    c += 1;
+                }
+                dist /= 2;
+            }
+            c
+        };
+        let mut items: Vec<(SimTime, Arc<GraphTemplate>, GraphOverlay)> = Vec::new();
+        for i in 0..count {
+            let g = match rng.next_below(3) {
+                0 => ring_graph_placed(p, &mk_steps(2 * (p - 1), &mut rng), place, local),
+                1 => rhd_graph_placed(p, &mk_steps(rhd_count, &mut rng), place, local),
+                _ => tree_graph_placed(p, &mk_steps(tree_count, &mut rng), place, local),
+            };
+            let ready = SimTime::from_us(rng.next_f64() * 150.0);
+            items.push((ready, Arc::new(GraphTemplate::new(g)), sc.overlay(p, i as u64)));
+        }
+
+        // (a) the gate oracle: ready-time event → acquire → execute →
+        // release, exactly the pre-overlap GraphJob scheduling
+        let (end_g, comm_end_g, stats_g) = {
+            let mut e = Engine::new();
+            let res = GraphResources::install_placed(&mut e, p, place);
+            let gate = e.gate();
+            let comm_end = Rc::new(RefCell::new(SimTime::ZERO));
+            for (ready, t, ov) in &items {
+                let map = res.mapper();
+                let t = t.clone();
+                let ov = ov.clone();
+                let ce = comm_end.clone();
+                e.at(*ready, move |e| {
+                    e.acquire(gate, move |e| {
+                        t.execute(
+                            e,
+                            map,
+                            &ov,
+                            Box::new(move |e| {
+                                *ce.borrow_mut() = e.now();
+                                e.release(gate);
+                            }),
+                        );
+                    });
+                });
+            }
+            let end = e.run();
+            let stats: Vec<_> =
+                all_resources(&res).into_iter().map(|r| e.resource_stats(r)).collect();
+            let (grants, busy) = e.gate_stats(gate);
+            assert_eq!(grants as usize, items.len(), "case {case}: oracle grants");
+            (end, (*comm_end.borrow(), busy), stats)
+        };
+
+        // (b) the stream-lane path at streams = 1
+        let (end_l, comm_end_l, stats_l) = {
+            let mut e = Engine::new();
+            let res = GraphResources::install_placed(&mut e, p, place);
+            let payload: Vec<_> =
+                items.iter().map(|(_, t, ov)| (t.clone(), ov.clone())).collect();
+            let set = e.lane_set(1, 1, Rc::new(Lanes { items: payload, map: res.mapper() }));
+            for (i, (ready, _, _)) in items.iter().enumerate() {
+                e.lane_submit(set, *ready, i as u32);
+            }
+            let end = e.run();
+            assert_eq!(e.lane_completed(set), items.len(), "case {case}: lane completions");
+            let stats: Vec<_> =
+                all_resources(&res).into_iter().map(|r| e.resource_stats(r)).collect();
+            let (launches, busy) = e.lane_stats(set);
+            assert_eq!(launches as usize, items.len(), "case {case}: lane launches");
+            (end, (e.lane_last_done(set), busy), stats)
+        };
+
+        assert_eq!(end_g, end_l, "case {case} (p={p}, gpn={gpn}): end diverged");
+        assert_eq!(comm_end_g, comm_end_l, "case {case}: comm_end/busy diverged");
+        assert_eq!(stats_g, stats_l, "case {case}: per-resource stats diverged");
+    }
+}
+
 /// prop: the event engine is deterministic and clock-monotone for random
 /// schedules.
 #[test]
