@@ -8,7 +8,7 @@
 //!
 //! Workloads:
 //!  * `engine-churn` — pure event-core throughput: schedule-and-serve
-//!    churn through the typed event heap, no strategy logic.
+//!    churn through the calendar bucket queue, no strategy logic.
 //!  * `graph-replay` — one cached ring [`GraphTemplate`] replayed many
 //!    times under the neutral overlay: the build-once/replay-many path
 //!    every per-rank-skew iteration rides.
@@ -25,26 +25,60 @@
 //!    stream-lane execution model where fusion buffers' graphs
 //!    interleave instead of serializing on the comm thread — tracks the
 //!    overlapped hot path across PRs.
+//!  * `ps-fanin` — gRPC+MPI parameter-server iterations: the fan-in
+//!    template path (cold build on the first pass, warm replays through
+//!    the strategy's [`TemplateCache`] after), so all three strategy
+//!    families appear in the bench file.
 //!
-//! `check_against` diffs a fresh run's deterministic event counts
-//! against the committed `BENCH_engine.json` baseline (the CI
-//! `perf-smoke` job runs it), so the bench trajectory accumulates
-//! instead of each PR's numbers vanishing into artifacts.
+//! `run_scale_sweep` (the `perf scale-sweep` subcommand) pushes the
+//! event core to fleet worlds — 256 → 16k ranks over ring, RHD and PS
+//! fan-in — recording events/s plus peak template and engine-slab
+//! memory per row (§Scale).  Symmetric worlds ride the shared
+//! [`crate::comm::SymTemplate`] plans (O(steps) resident, not
+//! O(world × steps)); the `scale-ring-full` row keeps the legacy
+//! per-rank template path as the throughput/memory baseline the shared
+//! plans are measured against.
+//!
+//! `check_against` diffs a fresh run against the committed
+//! `BENCH_engine.json` baseline (schema v2, one section per mode):
+//! event-count drift is reported informationally (counts are
+//! deterministic), while events/s regressions beyond the band — fresh
+//! rate below `band × baseline` — fail the check.  Wall times are
+//! host-dependent, hence the generous default band and the non-gating
+//! CI job.
 
 use std::time::Instant;
 
 use super::table::Table;
 use crate::cluster::presets;
+use crate::cluster::Placement;
 use crate::comm::allreduce::{shadow_steps, Algo};
-use crate::comm::graph::{ring_graph, GraphOverlay, GraphResources, GraphTemplate};
+use crate::comm::commop::{steps_sig, CommOp, ResKind};
+use crate::comm::graph::{
+    ps_fanin_graph, ring_graph, sym_allreduce_plan, GraphOverlay, GraphResources, GraphTemplate,
+    TemplateCache, TemplateKey,
+};
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::models::mobilenet;
 use crate::sim::{Engine, SimTime};
-use crate::strategies::{Horovod, Scenario, Strategy, WorldSpec};
+use crate::strategies::{Horovod, PsStrategy, Scenario, Strategy, WorldSpec};
 use crate::util::error::Result;
 use crate::util::json::{arr, num, obj, s, Json};
 
+/// `BENCH_engine.json` schema id: v2 keeps one section per mode (quick
+/// runs no longer clobber full baselines) and adds the §Scale peak
+/// template/slab memory fields.
+pub const BENCH_SCHEMA: &str = "mpi-dnn-train/bench-engine/v2";
+
+/// Default events/s regression band for [`check_against`]: a fresh rate
+/// below `band × baseline` fails.  Wall clocks differ across hosts, so
+/// the default is deliberately loose — it catches order-of-magnitude
+/// slumps (a degraded queue, an accidental O(world) scan), not noise.
+pub const DEFAULT_BAND: f64 = 0.25;
+
 /// One timed workload: `events` is deterministic, `wall_ms` is not.
+/// `template_bytes` / `slab_bytes` are the §Scale peak-memory figures
+/// (0 = not measured for this workload).
 #[derive(Debug, Clone)]
 pub struct PerfWorkload {
     pub name: String,
@@ -52,6 +86,8 @@ pub struct PerfWorkload {
     pub runs: usize,
     pub events: u64,
     pub wall_ms: f64,
+    pub template_bytes: usize,
+    pub slab_bytes: usize,
 }
 
 impl PerfWorkload {
@@ -61,10 +97,28 @@ impl PerfWorkload {
 }
 
 fn timed(name: &str, detail: String, runs: usize, body: impl FnOnce() -> u64) -> PerfWorkload {
+    timed_mem(name, detail, runs, || (body(), 0, 0))
+}
+
+/// Like [`timed`] but the body also reports (template, slab) peak bytes.
+fn timed_mem(
+    name: &str,
+    detail: String,
+    runs: usize,
+    body: impl FnOnce() -> (u64, usize, usize),
+) -> PerfWorkload {
     let t0 = Instant::now();
-    let events = body();
+    let (events, template_bytes, slab_bytes) = body();
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    PerfWorkload { name: name.to_string(), detail, runs, events, wall_ms }
+    PerfWorkload {
+        name: name.to_string(),
+        detail,
+        runs,
+        events,
+        wall_ms,
+        template_bytes,
+        slab_bytes,
+    }
 }
 
 /// Run every workload.  `quick` shrinks sizes for CI smoke runs.
@@ -247,19 +301,236 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
     ));
     failed?;
 
+    // --- 7. PS fan-in: cold template build + warm replays ---------------
+    let ps_worlds: &[usize] = if quick { &[8] } else { &[8, 16, 32] };
+    // at least two passes so the warm-replay path (cache hit → overlay
+    // replay) is always part of the measurement, even in --quick
+    let ps_passes = passes.max(2);
+    let ps = PsStrategy::grpc_mpi();
+    let ps_sweep = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..ps_passes {
+            for &world in ps_worlds {
+                let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+                events += ps.iteration_in(&ws, &Scenario::default())?.engine_events;
+            }
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "ps-fanin",
+        format!(
+            "gRPC+MPI PS MobileNet pizdaint@{ps_worlds:?} × {ps_passes} passes (pass 1 \
+             cold-builds the fan-in templates, later passes warm-replay)"
+        ),
+        ps_passes * ps_worlds.len(),
+        || match ps_sweep() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
     Ok(out)
 }
 
-/// Diff a fresh run's workloads against a committed baseline file.
-/// Event counts are deterministic, so a count delta is a real
-/// execution-model change worth a look (the report is informational —
-/// the CI job that prints it is non-gating); wall times are
-/// host-dependent and only summarized.  A missing or empty baseline
-/// seeds the trajectory instead of failing.
+/// The §Scale fleet sweep (`perf scale-sweep`): ring / RHD / PS fan-in
+/// at 256 → 16k ranks.  Symmetric worlds run through the shared
+/// [`crate::comm::SymTemplate`] plans; `scale-ring-full` keeps the
+/// legacy per-rank template path at one mid-size world as the baseline
+/// the shared plans' events/s and memory are compared against.  The
+/// ring is capped at 4k ranks (O(world²) node executions); RHD and PS
+/// cover the full span.
+pub fn run_scale_sweep(quick: bool) -> Result<Vec<PerfWorkload>> {
+    let worlds: &[usize] = if quick { &[256] } else { &[256, 1024, 4096, 16384] };
+    let bytes = 4usize << 20;
+    let w = MpiWorld::new(MpiFlavor::Mvapich2GdrOpt, presets::ri2());
+    let cache = TemplateCache::default();
+    let neutral = GraphOverlay::neutral();
+    let mut out = Vec::new();
+
+    let sym_row = |out: &mut Vec<PerfWorkload>, algo: Algo, tag: &str, p: usize, replays: usize| {
+        let (_, mut ctx) = w.plan(bytes);
+        let (_, steps) = shadow_steps(algo, p, bytes / 4, &mut ctx);
+        let sig = steps_sig(&steps);
+        let plan = cache.get_or_build_sym(TemplateKey::allreduce(algo, p, sig), || {
+            sym_allreduce_plan(algo, p, &steps, Placement::one_per_node())
+                .expect("trivial symmetric plan")
+        });
+        let nodes = plan.node_count();
+        let template_bytes = plan.approx_bytes();
+        out.push(timed_mem(
+            &format!("scale-{tag}@{p}"),
+            format!("shared symmetric {tag} plan, {nodes} nodes × {replays} replays"),
+            replays,
+            || {
+                let mut events = 0u64;
+                let mut slab = 0usize;
+                for _ in 0..replays {
+                    let mut e = Engine::new();
+                    let res = GraphResources::install(&mut e, p);
+                    plan.execute(&mut e, &res, &neutral, false, Box::new(|_| {}));
+                    e.run();
+                    events += e.executed();
+                    slab = slab.max(e.approx_slab_bytes());
+                }
+                (events, template_bytes, slab)
+            },
+        ));
+    };
+
+    for &p in worlds {
+        // ring: 2(p−1) steps → O(p²) node executions; 16k would be half
+        // a billion nodes per replay, so the ring stops at 4k
+        if p <= 4096 {
+            let replays = if quick { 2 } else { (4096 / p).max(1) };
+            sym_row(&mut out, Algo::Ring, "ring", p, replays);
+        }
+        // RHD: 2·log₂p steps — shallow enough to cover the full span
+        let replays = if quick { 2 } else { (16384 / p).max(1) };
+        sym_row(&mut out, Algo::Rhd, "rhd", p, replays);
+    }
+
+    // PS fan-in at every world: 2w+1 nodes through the generic planned
+    // executor, cold build into the cache then warm replays
+    for &p in worlds {
+        let push_us = 12.0;
+        let update_us = 3.0;
+        let sig = vec![p as u64, push_us.to_bits(), update_us.to_bits()];
+        let key = TemplateKey::ps_fanin(p, Placement::one_per_node(), sig);
+        let template = cache.get_or_build(key, || {
+            let (g, _) = ps_fanin_graph(
+                p,
+                0,
+                |_| vec![CommOp::fixed(ResKind::Wire, push_us)],
+                vec![CommOp::fixed(ResKind::CpuReduce, update_us)],
+                |_| vec![CommOp::fixed(ResKind::Wire, push_us)],
+            );
+            g
+        });
+        let template_bytes = template.approx_bytes();
+        let replays = if quick { 4 } else { 16 };
+        out.push(timed_mem(
+            &format!("scale-ps@{p}"),
+            format!("PS fan-in template, {} nodes × {replays} replays", template.graph().len()),
+            replays,
+            || {
+                let mut events = 0u64;
+                let mut slab = 0usize;
+                for _ in 0..replays {
+                    let mut e = Engine::new();
+                    let res = GraphResources::install(&mut e, p);
+                    template.execute(&mut e, res.mapper(), &neutral, Box::new(|_| {}));
+                    e.run();
+                    events += e.executed();
+                    slab = slab.max(e.approx_slab_bytes());
+                }
+                (events, template_bytes, slab)
+            },
+        ));
+    }
+
+    // legacy per-rank template at one mid-size world: the baseline row
+    // the shared plans' ≥2× events/s and O(1)-in-world memory claims
+    // are checked against
+    let p = if quick { 256 } else { 1024 };
+    let (_, mut ctx) = w.plan(bytes);
+    let (_, steps) = shadow_steps(Algo::Ring, p, bytes / 4, &mut ctx);
+    let template = GraphTemplate::new(ring_graph(p, &steps));
+    let template_bytes = template.approx_bytes();
+    let replays = 2;
+    out.push(timed_mem(
+        &format!("scale-ring-full@{p}"),
+        format!(
+            "legacy per-rank ring template, {} nodes × {replays} replays (baseline)",
+            template.graph().len()
+        ),
+        replays,
+        || {
+            let mut events = 0u64;
+            let mut slab = 0usize;
+            for _ in 0..replays {
+                let mut e = Engine::new();
+                let res = GraphResources::install(&mut e, p);
+                template.execute(&mut e, res.mapper(), &neutral, Box::new(|_| {}));
+                e.run();
+                events += e.executed();
+                slab = slab.max(e.approx_slab_bytes());
+            }
+            (events, template_bytes, slab)
+        },
+    ));
+
+    Ok(out)
+}
+
+fn workloads_json(workloads: &[PerfWorkload]) -> Json {
+    arr(workloads.iter().map(|w| {
+        obj(vec![
+            ("name", s(&w.name)),
+            ("detail", s(&w.detail)),
+            ("runs", num(w.runs as f64)),
+            ("events", num(w.events as f64)),
+            ("wall_ms", num(w.wall_ms)),
+            ("events_per_sec", num(w.events_per_sec())),
+            ("template_bytes", num(w.template_bytes as f64)),
+            ("slab_bytes", num(w.slab_bytes as f64)),
+        ])
+    }))
+}
+
+/// The mode key a run's workloads file under in the v2 document:
+/// standard vs scale-sweep runs × quick vs full sizing.  Each key owns
+/// its own baseline section, so no run ever clobbers another's.
+pub fn bench_mode(scale: bool, quick: bool) -> &'static str {
+    match (scale, quick) {
+        (false, true) => "quick",
+        (false, false) => "full",
+        (true, true) => "scale-quick",
+        (true, false) => "scale-full",
+    }
+}
+
+/// A fresh v2 `BENCH_engine.json` payload holding only this run's mode.
+pub fn perf_json(workloads: &[PerfWorkload], mode: &str) -> Json {
+    merge_bench(None, workloads, mode)
+}
+
+/// Build the v2 payload, replacing this run's mode section while
+/// preserving every *other* mode from `existing` (a quick smoke run
+/// must not clobber a committed full or scale baseline, and vice
+/// versa).  A missing, invalid, or pre-v2 `existing` starts fresh.
+pub fn merge_bench(existing: Option<&Json>, workloads: &[PerfWorkload], mode: &str) -> Json {
+    use std::collections::BTreeMap;
+    let mut modes: BTreeMap<String, Json> = match existing {
+        Some(j) if j.get("schema").and_then(|v| v.as_str()) == Some(BENCH_SCHEMA) => {
+            match j.get("modes") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            }
+        }
+        _ => BTreeMap::new(),
+    };
+    modes.insert(mode.to_string(), obj(vec![("workloads", workloads_json(workloads))]));
+    obj(vec![("schema", s(BENCH_SCHEMA)), ("modes", Json::Obj(modes))])
+}
+
+/// Diff a fresh run against a committed baseline file (schema v2).
+/// Event-count drift is informational — counts are deterministic, so a
+/// delta is a real execution-model change worth a look.  Events/s is
+/// *banded*: a fresh rate below `band × baseline` is a regression and
+/// fails the check (wall clocks vary across hosts; the band absorbs
+/// that).  A missing baseline, a pre-v2 schema, or an empty mode
+/// section seeds the trajectory instead of failing.
 pub fn check_against(
     fresh: &[PerfWorkload],
-    quick: bool,
+    mode: &str,
     path: &std::path::Path,
+    band: f64,
 ) -> Result<String> {
     use std::fmt::Write as _;
     let text = match std::fs::read_to_string(path) {
@@ -273,67 +544,85 @@ pub fn check_against(
     };
     let json = Json::parse(&text)
         .map_err(|e| crate::anyhow!("perf-check: {} is not valid JSON: {e}", path.display()))?;
-    let base: &[Json] = json.get("workloads").and_then(|w| w.as_arr()).unwrap_or(&[]);
-    if base.is_empty() {
+    if json.get("schema").and_then(|v| v.as_str()) != Some(BENCH_SCHEMA) {
         return Ok(format!(
-            "perf-check: baseline {} has no workloads yet — this run seeds the trajectory",
+            "perf-check: baseline {} predates {BENCH_SCHEMA} — this run seeds the v2 trajectory",
             path.display()
         ));
     }
-    // quick and full runs size their workloads differently, so their
-    // event counts are incomparable by design — flag the mode mismatch
-    // instead of reporting every row as drift
-    if let Some(base_quick) = json.get("quick").and_then(|v| v.as_bool()) {
-        if base_quick != quick {
-            return Ok(format!(
-                "perf-check: mode mismatch — this run is {} but baseline {} is {}; \
-                 regenerate the baseline in the same mode before comparing",
-                if quick { "--quick" } else { "full" },
-                path.display(),
-                if base_quick { "--quick" } else { "full" },
-            ));
-        }
+    let base: &[Json] = json
+        .get("modes")
+        .and_then(|m| m.get(mode))
+        .and_then(|m| m.get("workloads"))
+        .and_then(|w| w.as_arr())
+        .unwrap_or(&[]);
+    if base.is_empty() {
+        return Ok(format!(
+            "perf-check: baseline {} has no `{mode}` workloads yet — this run seeds the \
+             trajectory",
+            path.display()
+        ));
     }
-    let base_of = |name: &str| {
-        base.iter()
-            .find(|w| w.get("name").and_then(|n| n.as_str()) == Some(name))
-    };
-    let mut out = format!("perf-check vs {}:\n", path.display());
+    let base_of =
+        |name: &str| base.iter().find(|w| w.get("name").and_then(|n| n.as_str()) == Some(name));
+    let mut out = format!("perf-check vs {} ({mode} mode, band {band:.2}):\n", path.display());
+    let mut regressions: Vec<String> = Vec::new();
     for w in fresh {
-        match base_of(&w.name) {
-            None => {
-                let _ = writeln!(out, "  {:<16} NEW workload ({} events)", w.name, w.events);
-            }
-            Some(b) => {
-                let b_events = b.get("events").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-                let b_wall = b.get("wall_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
-                if b_events == w.events {
-                    let _ = writeln!(
-                        out,
-                        "  {:<16} events unchanged ({}); wall {:.1}ms (baseline {:.1}ms)",
-                        w.name, w.events, w.wall_ms, b_wall
-                    );
-                } else {
-                    let delta =
-                        100.0 * (w.events as f64 - b_events as f64) / (b_events as f64).max(1.0);
-                    let _ = writeln!(
-                        out,
-                        "  {:<16} events {} vs baseline {} ({delta:+.1}%) — deterministic \
-                         drift, review the execution-model change",
-                        w.name, w.events, b_events
-                    );
-                }
-            }
+        let Some(b) = base_of(&w.name) else {
+            let _ = writeln!(out, "  {:<20} NEW workload ({} events)", w.name, w.events);
+            continue;
+        };
+        let b_events = b.get("events").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let b_eps = b.get("events_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let f_eps = w.events_per_sec();
+        let rate = if b_eps > 0.0 {
+            format!("events/s {:.0} vs baseline {:.0} (×{:.2})", f_eps, b_eps, f_eps / b_eps)
+        } else {
+            format!("events/s {f_eps:.0} (no baseline rate)")
+        };
+        if b_events == w.events {
+            let _ = writeln!(out, "  {:<20} events unchanged ({}); {rate}", w.name, w.events);
+        } else {
+            let delta = 100.0 * (w.events as f64 - b_events as f64) / (b_events as f64).max(1.0);
+            let _ = writeln!(
+                out,
+                "  {:<20} events {} vs baseline {} ({delta:+.1}%) — deterministic drift, \
+                 review the execution-model change; {rate}",
+                w.name, w.events, b_events
+            );
+        }
+        if b_eps > 0.0 && f_eps < band * b_eps {
+            regressions
+                .push(format!("{}: {f_eps:.0} events/s < {band:.2} × baseline {b_eps:.0}", w.name));
+            let _ = writeln!(out, "  {:<20} REGRESSION below the events/s band", w.name);
         }
     }
     for b in base {
         if let Some(name) = b.get("name").and_then(|n| n.as_str()) {
             if !fresh.iter().any(|w| w.name == name) {
-                let _ = writeln!(out, "  {name:<16} REMOVED (present only in the baseline)");
+                let _ = writeln!(out, "  {name:<20} REMOVED (present only in the baseline)");
             }
         }
     }
+    if !regressions.is_empty() {
+        return Err(crate::anyhow!(
+            "perf-check: events/s regression beyond band {band:.2}:\n  {}\n{out}",
+            regressions.join("\n  ")
+        ));
+    }
     Ok(out)
+}
+
+fn fmt_bytes(b: usize) -> String {
+    if b == 0 {
+        "-".to_string()
+    } else if b >= 1 << 20 {
+        format!("{:.1}M", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}K", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}")
+    }
 }
 
 /// Render the workloads as the CLI table.
@@ -343,7 +632,10 @@ pub fn perf_table(workloads: &[PerfWorkload], quick: bool) -> Table {
     } else {
         "Perf harness: simulator throughput"
     };
-    let mut t = Table::new(title, &["workload", "runs", "events", "wall ms", "events/s"]);
+    let mut t = Table::new(
+        title,
+        &["workload", "runs", "events", "wall ms", "events/s", "tmpl B", "slab B"],
+    );
     for w in workloads {
         t.row([
             w.name.clone(),
@@ -351,6 +643,8 @@ pub fn perf_table(workloads: &[PerfWorkload], quick: bool) -> Table {
             w.events.to_string(),
             format!("{:.1}", w.wall_ms),
             format!("{:.0}", w.events_per_sec()),
+            fmt_bytes(w.template_bytes),
+            fmt_bytes(w.slab_bytes),
         ]);
     }
     for w in workloads {
@@ -360,27 +654,6 @@ pub fn perf_table(workloads: &[PerfWorkload], quick: bool) -> Table {
     t
 }
 
-/// The `BENCH_engine.json` payload.
-pub fn perf_json(workloads: &[PerfWorkload], quick: bool) -> Json {
-    obj(vec![
-        ("schema", s("mpi-dnn-train/bench-engine/v1")),
-        ("quick", Json::Bool(quick)),
-        (
-            "workloads",
-            arr(workloads.iter().map(|w| {
-                obj(vec![
-                    ("name", s(&w.name)),
-                    ("detail", s(&w.detail)),
-                    ("runs", num(w.runs as f64)),
-                    ("events", num(w.events as f64)),
-                    ("wall_ms", num(w.wall_ms)),
-                    ("events_per_sec", num(w.events_per_sec())),
-                ])
-            })),
-        ),
-    ])
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,7 +661,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 6);
+        assert_eq!(ws.len(), 7);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -420,55 +693,161 @@ mod tests {
             overlap.events,
             serialized.events
         );
+        // the third strategy family is on the board
+        assert!(ws.iter().any(|w| w.name == "ps-fanin"));
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 6);
-        let j = perf_json(&ws, true);
-        assert_eq!(
-            j.get("schema").and_then(|v| v.as_str()),
-            Some("mpi-dnn-train/bench-engine/v1")
-        );
-        assert_eq!(j.get("workloads").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+        assert_eq!(t.rows.len(), 7);
+        let j = perf_json(&ws, "quick");
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(BENCH_SCHEMA));
+        let quick_rows = j
+            .get("modes")
+            .and_then(|m| m.get("quick"))
+            .and_then(|m| m.get("workloads"))
+            .and_then(|w| w.as_arr())
+            .map(|a| a.len());
+        assert_eq!(quick_rows, Some(7));
     }
 
     #[test]
-    fn check_against_reports_seed_match_and_drift() {
-        let mk = |name: &str, events: u64| PerfWorkload {
+    fn scale_sweep_quick_reports_throughput_and_memory() {
+        let ws = run_scale_sweep(true).unwrap();
+        let names: Vec<&str> = ws.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["scale-ring@256", "scale-rhd@256", "scale-ps@256", "scale-ring-full@256"]
+        );
+        for w in &ws {
+            assert!(w.events > 0, "{}: no events", w.name);
+            assert!(w.template_bytes > 0, "{}: no template bytes", w.name);
+            assert!(w.slab_bytes > 0, "{}: no slab bytes", w.name);
+        }
+        // the whole point of the shared plans: O(steps) resident vs the
+        // full template's O(world × steps) at the same world/costs
+        let sym = ws.iter().find(|w| w.name == "scale-ring@256").unwrap();
+        let full = ws.iter().find(|w| w.name == "scale-ring-full@256").unwrap();
+        assert!(
+            sym.template_bytes * 100 < full.template_bytes,
+            "shared plan {} B should be ≪ full template {} B",
+            sym.template_bytes,
+            full.template_bytes
+        );
+        // per replay the two paths run the same programs on the same
+        // resources; only launch plumbing differs (the sym path releases
+        // all sources through one event, the full path one per source)
+        let per_sym = sym.events / sym.runs as u64;
+        let per_full = full.events / full.runs as u64;
+        assert!(
+            per_sym.abs_diff(per_full) as f64 <= 0.01 * per_full as f64,
+            "sym {per_sym} vs full {per_full} events per replay"
+        );
+    }
+
+    #[test]
+    fn merge_bench_preserves_the_other_mode() {
+        let mk = |name: &str| PerfWorkload {
+            name: name.into(),
+            detail: String::new(),
+            runs: 1,
+            events: 10,
+            wall_ms: 1.0,
+            template_bytes: 0,
+            slab_bytes: 0,
+        };
+        let quick_doc = merge_bench(None, &[mk("a")], "quick");
+        assert!(quick_doc.get("modes").and_then(|m| m.get("quick")).is_some());
+        assert!(quick_doc.get("modes").and_then(|m| m.get("full")).is_none());
+        // a full run on top keeps the quick section
+        let both = merge_bench(Some(&quick_doc), &[mk("b")], "full");
+        for mode in ["quick", "full"] {
+            assert!(both.get("modes").and_then(|m| m.get(mode)).is_some(), "missing {mode}");
+        }
+        // re-running quick replaces quick but keeps full
+        let again = merge_bench(Some(&both), &[mk("c")], "quick");
+        let name_of = |j: &Json, mode: &str| {
+            j.get("modes")
+                .and_then(|m| m.get(mode))
+                .and_then(|m| m.get("workloads"))
+                .and_then(|w| w.as_arr())
+                .and_then(|a| a[0].get("name").and_then(|n| n.as_str()).map(String::from))
+        };
+        assert_eq!(name_of(&again, "quick").as_deref(), Some("c"));
+        assert_eq!(name_of(&again, "full").as_deref(), Some("b"));
+        // scale modes are their own sections — a sweep never clobbers
+        // the standard rows
+        let with_scale = merge_bench(Some(&again), &[mk("e")], "scale-quick");
+        assert_eq!(name_of(&with_scale, "quick").as_deref(), Some("c"));
+        assert_eq!(name_of(&with_scale, "scale-quick").as_deref(), Some("e"));
+        // a v1 document is not merged from — fresh start
+        let v1 = obj(vec![("schema", s("mpi-dnn-train/bench-engine/v1"))]);
+        let fresh = merge_bench(Some(&v1), &[mk("d")], "quick");
+        assert!(fresh.get("modes").and_then(|m| m.get("full")).is_none());
+    }
+
+    #[test]
+    fn check_against_seeds_bands_and_reports_drift() {
+        let mk = |name: &str, events: u64, wall_ms: f64| PerfWorkload {
             name: name.into(),
             detail: String::new(),
             runs: 1,
             events,
-            wall_ms: 1.0,
+            wall_ms,
+            template_bytes: 0,
+            slab_bytes: 0,
         };
         let dir = std::env::temp_dir().join("mpi-dnn-train-perf-check-test");
         std::fs::create_dir_all(&dir).unwrap();
 
         // missing baseline seeds the trajectory
         let missing = dir.join("does-not-exist.json");
-        let r = check_against(&[mk("a", 10)], true, &missing).unwrap();
+        let r = check_against(&[mk("a", 10, 1.0)], "quick", &missing, DEFAULT_BAND).unwrap();
         assert!(r.contains("seeds the trajectory"), "{r}");
 
-        // empty-workloads baseline (the committed seed file) also seeds
+        // the committed v2 seed (empty modes) also seeds
         let empty = dir.join("empty.json");
-        std::fs::write(&empty, perf_json(&[], true).to_string()).unwrap();
-        let r = check_against(&[mk("a", 10)], true, &empty).unwrap();
-        assert!(r.contains("no workloads yet"), "{r}");
+        std::fs::write(&empty, perf_json(&[], "quick").to_string()).unwrap();
+        let r = check_against(&[mk("a", 10, 1.0)], "quick", &empty, DEFAULT_BAND).unwrap();
+        assert!(r.contains("no `quick` workloads yet"), "{r}");
+
+        // a pre-v2 baseline seeds instead of mis-diffing
+        let v1 = dir.join("v1.json");
+        std::fs::write(&v1, "{\"schema\": \"mpi-dnn-train/bench-engine/v1\"}").unwrap();
+        let r = check_against(&[mk("a", 10, 1.0)], "quick", &v1, DEFAULT_BAND).unwrap();
+        assert!(r.contains("seeds the v2 trajectory"), "{r}");
 
         // populated baseline: unchanged, drifted, new and removed rows
         let base = dir.join("base.json");
-        let baseline = perf_json(&[mk("same", 100), mk("drift", 100), mk("gone", 5)], true);
+        let baseline = perf_json(
+            &[mk("same", 100, 1.0), mk("drift", 100, 1.0), mk("gone", 5, 1.0)],
+            "quick",
+        );
         std::fs::write(&base, baseline.to_string()).unwrap();
-        let r =
-            check_against(&[mk("same", 100), mk("drift", 110), mk("new", 7)], true, &base).unwrap();
+        let fresh = [mk("same", 100, 1.0), mk("drift", 110, 1.0), mk("new", 7, 1.0)];
+        let r = check_against(&fresh, "quick", &base, DEFAULT_BAND).unwrap();
         assert!(r.contains("same") && r.contains("unchanged"), "{r}");
         assert!(r.contains("drift") && r.contains("+10.0%"), "{r}");
         assert!(r.contains("NEW workload"), "{r}");
         assert!(r.contains("REMOVED"), "{r}");
 
-        // quick vs full event counts are incomparable by design: the
-        // mode mismatch is reported instead of per-row drift noise
-        let r = check_against(&[mk("same", 999)], false, &base).unwrap();
-        assert!(r.contains("mode mismatch"), "{r}");
-        assert!(!r.contains("drift,"), "{r}");
+        // within the band: 2× slower passes under the default 0.25 band
+        let r = check_against(&[mk("same", 100, 2.0)], "quick", &base, DEFAULT_BAND).unwrap();
+        assert!(!r.contains("REGRESSION"), "{r}");
+
+        // beyond the band: 100× slower fails
+        let err = check_against(&[mk("same", 100, 100.0)], "quick", &base, DEFAULT_BAND);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("regression beyond band"), "{msg}");
+
+        // the band is caller-tunable: a strict 0.99 band flags 2× slower
+        let err = check_against(&[mk("same", 100, 2.0)], "quick", &base, 0.99);
+        assert!(err.is_err());
+
+        // quick baselines never gate a full run (separate mode sections)
+        let r = check_against(&[mk("same", 999, 100.0)], "full", &base, DEFAULT_BAND).unwrap();
+        assert!(r.contains("no `full` workloads yet"), "{r}");
+
+        // mode names from the CLI axes
+        assert_eq!(bench_mode(false, true), "quick");
+        assert_eq!(bench_mode(true, false), "scale-full");
     }
 
     #[test]

@@ -47,7 +47,7 @@
 //! lets the strategies keep the fast serialized replay when nothing skews
 //! ranks apart.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
@@ -55,7 +55,14 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::Placement;
 use crate::comm::allreduce::Algo;
 use crate::comm::commop::{CommOp, RelPin, ResKind, ResourceUse, StepCost};
-use crate::sim::{Action, Engine, LaneSetId, OnDone, ProgStep, ResourceId, SimTime};
+use crate::sim::{
+    Action, Engine, EngineHook, HookId, LaneSetId, OnDone, ProgStep, ResourceId, SimTime,
+};
+
+/// Builders whose node count reaches this materialize their node vectors
+/// on scoped worker threads (§Scale) — below it the spawn overhead beats
+/// the build.
+const PAR_BUILD_MIN_NODES: usize = 1 << 16;
 
 /// Handle to a node inside one [`CommGraph`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -235,6 +242,12 @@ pub fn ring_graph_placed(
     if p < 2 {
         return g;
     }
+    if p * steps.len() >= PAR_BUILD_MIN_NODES {
+        g.nodes = par_build_nodes(p * steps.len(), |lo, hi| {
+            ring_nodes_range(p, steps, &place, local, lo, hi)
+        });
+        return g;
+    }
     let mut last: Vec<Option<NodeId>> = vec![None; p];
     for (s, st) in steps.iter().enumerate() {
         let prev = last.clone();
@@ -245,6 +258,65 @@ pub fn ring_graph_placed(
         }
     }
     g
+}
+
+/// The ring builder's nodes for flat indices `lo..hi` (node `(s, r)` is
+/// index `s * p + r`), derived from the closed-form edge rule instead of
+/// the sequential `last` scan — bit-identical to the serial builder
+/// (pinned by `parallel_ring_build_matches_serial`), which is what lets
+/// large worlds build on worker threads.
+fn ring_nodes_range(
+    p: usize,
+    steps: &[StepCost],
+    place: &Placement,
+    local: f64,
+    lo: usize,
+    hi: usize,
+) -> Vec<GraphNode> {
+    let mut out = Vec::with_capacity(hi - lo);
+    for id in lo..hi {
+        let (s, r) = (id / p, id % p);
+        let from = (r + p - 1) % p;
+        let ops = step_ops(&steps[s], place, local, r, from);
+        let deps = if s == 0 {
+            Vec::new()
+        } else {
+            // dep2(prev[r], prev[from]) with prev[x] = (s-1)*p + x
+            vec![NodeId((s - 1) * p + r), NodeId((s - 1) * p + from)]
+        };
+        out.push(GraphNode { rank: r, step: s as u32, ops, deps });
+    }
+    out
+}
+
+/// Materialize `total` nodes by splitting the flat index range across
+/// scoped threads and concatenating the chunks in thread order — a
+/// deterministic merge, so the parallel build is bit-identical to the
+/// serial one whatever the machine's core count.
+fn par_build_nodes(
+    total: usize,
+    build: impl Fn(usize, usize) -> Vec<GraphNode> + Sync,
+) -> Vec<GraphNode> {
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get()).min(16);
+    if threads < 2 {
+        return build(0, total);
+    }
+    let chunk = total.div_ceil(threads);
+    let mut out = Vec::with_capacity(total);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let lo = (t * chunk).min(total);
+                let hi = ((t + 1) * chunk).min(total);
+                let build = &build;
+                scope.spawn(move || build(lo, hi))
+            })
+            .collect();
+        for h in handles {
+            out.append(&mut h.join().expect("graph build worker panicked"));
+        }
+    });
+    out
 }
 
 /// Recursive halving-doubling: mask step exchanges pair rank *r* with
@@ -267,6 +339,15 @@ pub fn rhd_graph_placed(
     let mut g = CommGraph::default();
     if p < 2 {
         return g;
+    }
+    if p.is_power_of_two() && p * steps.len() >= PAR_BUILD_MIN_NODES {
+        let masks = rhd_mask_sequence(p);
+        if masks.len() == steps.len() {
+            g.nodes = par_build_nodes(p * steps.len(), |lo, hi| {
+                rhd_nodes_range(p, steps, &place, local, &masks, lo, hi)
+            });
+            return g;
+        }
     }
     let p2 = crate::comm::allreduce::flp2(p);
     let rem = p - p2;
@@ -315,6 +396,49 @@ pub fn rhd_graph_placed(
     }
     debug_assert_eq!(si, steps.len(), "rhd builder / shadow step count mismatch");
     g
+}
+
+/// The per-step XOR masks of a power-of-two halving-doubling world:
+/// `p/2, p/4, …, 1` (reduce-scatter) then reversed (allgather) — the
+/// exact order the serial builder iterates.
+fn rhd_mask_sequence(p: usize) -> Vec<usize> {
+    debug_assert!(p.is_power_of_two());
+    let mut masks = Vec::new();
+    let mut m = p >> 1;
+    while m > 0 {
+        masks.push(m);
+        m >>= 1;
+    }
+    let down: Vec<usize> = masks.iter().rev().copied().collect();
+    masks.extend(down);
+    masks
+}
+
+/// Power-of-two RHD nodes for flat indices `lo..hi` (node `(s, r)` is
+/// `s * p + r`; no fold steps, so the layout matches the serial builder
+/// exactly).  Deps mirror `dep2(prev[r], prev[r ^ masks[s]])`.
+fn rhd_nodes_range(
+    p: usize,
+    steps: &[StepCost],
+    place: &Placement,
+    local: f64,
+    masks: &[usize],
+    lo: usize,
+    hi: usize,
+) -> Vec<GraphNode> {
+    let mut out = Vec::with_capacity(hi - lo);
+    for id in lo..hi {
+        let (s, r) = (id / p, id % p);
+        let q = r ^ masks[s];
+        let ops = step_ops(&steps[s], place, local, r, q);
+        let deps = if s == 0 {
+            Vec::new()
+        } else {
+            vec![NodeId((s - 1) * p + r), NodeId((s - 1) * p + q)]
+        };
+        out.push(GraphNode { rank: r, step: s as u32, ops, deps });
+    }
+    out
 }
 
 /// Binomial tree: reduce up (receivers reduce), broadcast down.  Each
@@ -411,6 +535,341 @@ pub fn ps_fanin_graph(
 /// without storing them alongside (cross-call PS templating).
 pub fn ps_fanin_pulls(workers: usize) -> Vec<NodeId> {
     (0..workers).map(|w| NodeId(workers + 1 + w)).collect()
+}
+
+/// How rank `r`'s exchange partner at one symmetric step derives from
+/// `r` alone (§Scale): `Shift(k)` receives from `(r + k) % world` (the
+/// ring uses `k = world − 1`), `Xor(m)` pairs with `r ^ m` (the
+/// halving-doubling masks).  Both are bijections of the rank set, so the
+/// *successor* rule — which ranks' next-step nodes depend on `r` — is
+/// the inverse permutation ([`PeerRule::inv`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerRule {
+    Shift(usize),
+    Xor(usize),
+}
+
+impl PeerRule {
+    /// The rank whose *next-step* node depends on rank `r` — the inverse
+    /// of the peer map (`Shift(k)⁻¹ = Shift(world − k)`, XOR is its own
+    /// inverse).
+    fn inv(self, world: usize, r: usize) -> usize {
+        match self {
+            PeerRule::Shift(k) => (r + world - k) % world,
+            PeerRule::Xor(m) => r ^ m,
+        }
+    }
+}
+
+/// One step of a rank-symmetric collective: the op list *every* rank
+/// runs this step (identical across ranks at a trivial placement — no
+/// hop ever re-kinds) plus the peer rule its cross-rank edge follows.
+#[derive(Debug, Clone)]
+pub struct SymStep {
+    pub ops: Vec<CommOp>,
+    pub peer: PeerRule,
+}
+
+/// A rank-relative shared plan (§Scale): ONE step template for all
+/// `world` ranks instead of `world × steps` materialized nodes.  Node
+/// `(step s, rank r)` of the equivalent full graph is flat index
+/// `s * world + r`; its dependencies are `(s−1, r)` and
+/// `(s−1, peer_s(r))` — exactly the full builders' edges — so executing
+/// the plan is bit-identical *in virtual time* to executing the full
+/// [`GraphTemplate`] (pinned by
+/// `prop_sym_plan_replays_full_template_bitwise`; event interleaving may
+/// differ, times never do, because every rank's programs occupy only
+/// that rank's private resources at a trivial placement).  Memory is
+/// O(steps), not O(world × steps) — the fleet-scale win.
+#[derive(Debug, Clone)]
+pub struct SymTemplate {
+    world: usize,
+    steps: Vec<SymStep>,
+}
+
+/// Derive the shared symmetric plan of an allreduce, or `None` when the
+/// collective is not rank-symmetric: dense placements re-kind intra-node
+/// hops per rank, non-power-of-two RHD folds remainder ranks
+/// asymmetrically, and the binomial tree puts each pair's work on one
+/// rank.  Callers fall back to the full per-rank builder on `None`.
+pub fn sym_allreduce_plan(
+    algo: Algo,
+    p: usize,
+    steps: &[StepCost],
+    place: Placement,
+) -> Option<SymTemplate> {
+    if !place.is_trivial() || p < 2 || steps.is_empty() {
+        return None;
+    }
+    let sym_steps: Vec<SymStep> = match algo {
+        Algo::Ring => steps
+            .iter()
+            .map(|st| SymStep { ops: st.ops(), peer: PeerRule::Shift(p - 1) })
+            .collect(),
+        Algo::Rhd => {
+            if !p.is_power_of_two() {
+                return None;
+            }
+            let masks = rhd_mask_sequence(p);
+            if masks.len() != steps.len() {
+                return None;
+            }
+            steps
+                .iter()
+                .zip(masks)
+                .map(|(st, mask)| SymStep { ops: st.ops(), peer: PeerRule::Xor(mask) })
+                .collect()
+        }
+        Algo::Tree => return None,
+    };
+    debug_assert!(
+        sym_steps.iter().all(|s| s.ops.iter().all(|o| o.on.is_none() && o.rel.is_none())),
+        "symmetric step ops must be unpinned"
+    );
+    Some(SymTemplate { world: p, steps: sym_steps })
+}
+
+impl SymTemplate {
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Node count of the equivalent full graph (what the plan *replaces*).
+    pub fn node_count(&self) -> usize {
+        self.world * self.steps.len()
+    }
+
+    /// Resident size of the plan itself — O(steps), the figure the scale
+    /// bench reports as peak template memory (vs the full template's
+    /// [`GraphTemplate::approx_bytes`]).
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        size_of::<SymTemplate>()
+            + self.steps.len() * size_of::<SymStep>()
+            + self.steps.iter().map(|s| s.ops.len() * size_of::<CommOp>()).sum::<usize>()
+    }
+
+    /// Execute now (sources release at the current virtual time).
+    pub fn execute(
+        &self,
+        e: &mut Engine,
+        res: &GraphResources,
+        ov: &GraphOverlay,
+        record: bool,
+        done: Action,
+    ) -> Option<Rc<RefCell<GraphRun>>> {
+        let at = e.now();
+        self.execute_at(e, res, ov, at, record, done)
+    }
+
+    /// Execute the shared plan with sources released at `at`.  Every
+    /// node's program is resolved against **rank 0's** resource pins and
+    /// launched through the engine's rank-offset view
+    /// ([`Engine::run_program_shifted`]) with `offset = rank` — valid
+    /// because [`GraphResources`] installs each kind as one contiguous
+    /// per-rank run (asserted here).  Completions route through ONE
+    /// registered [`EngineHook`], which counts the two arrivals of each
+    /// successor node and launches it at its max arrival time — the same
+    /// instant the full path's join would fire.  With `record` the
+    /// per-node [`GraphRun`] is returned (O(nodes) memory — leave it off
+    /// at fleet scale).
+    pub fn execute_at(
+        &self,
+        e: &mut Engine,
+        res: &GraphResources,
+        ov: &GraphOverlay,
+        at: SimTime,
+        record: bool,
+        done: Action,
+    ) -> Option<Rc<RefCell<GraphRun>>> {
+        let world = self.world;
+        assert!(res.placement().is_trivial(), "shared plans need a trivial placement");
+        assert!(res.ranks() >= world, "resource bundle smaller than the plan's world");
+        for kind in ResKind::ALL {
+            let base = res.get(0, kind).index();
+            for r in 1..world {
+                assert_eq!(
+                    res.get(r, kind).index(),
+                    base + r,
+                    "rank-offset view needs contiguous per-kind resources ({})",
+                    kind.name()
+                );
+            }
+        }
+        // per-rank overlay terms force per-rank resolution; a uniform
+        // overlay (identity or global-only) shares one program per step
+        let uniform = ov.rank_all.is_empty() && ov.rank_gpu.is_empty() && ov.lead.is_none();
+        let progs = if uniform {
+            SymProgs::Shared(
+                self.steps.iter().map(|st| resolve_sym_rank(st, 0, res, ov, 0)).collect(),
+            )
+        } else {
+            SymProgs::PerRank(
+                self.steps
+                    .iter()
+                    .enumerate()
+                    .map(|(s, st)| {
+                        (0..world).map(|r| resolve_sym_rank(st, s as u32, res, ov, r)).collect()
+                    })
+                    .collect(),
+            )
+        };
+        let run = record.then(|| {
+            let n = self.node_count();
+            Rc::new(RefCell::new(GraphRun {
+                start: vec![SimTime::ZERO; n],
+                finish: vec![SimTime::ZERO; n],
+            }))
+        });
+        let exec = Rc::new(SymExec {
+            world,
+            peers: self.steps.iter().map(|s| s.peer).collect(),
+            progs,
+            hook: Cell::new(None),
+            run: run.clone(),
+            state: RefCell::new(SymExecState {
+                arrivals: vec![0; self.node_count()],
+                remaining: world,
+                done: Some(done),
+            }),
+        });
+        let id = e.hook(exec.clone());
+        exec.hook.set(Some(id));
+        let sources = exec.clone();
+        e.at(at, move |e| {
+            // step-0 nodes are flat indices 0..world: release in rank
+            // order, like the full executor's sorted source release
+            for r in 0..world {
+                sources.launch(e, r as u32);
+            }
+        });
+        run
+    }
+}
+
+/// Resolve one symmetric step for `rank` against **rank 0's** pins —
+/// the overlay application order (lead, then global → rank → rank-GPU
+/// factors) replicates [`resolve_node`] bit-for-bit, and the rank-0 pins
+/// are shifted to `rank`'s resources at launch time.
+fn resolve_sym_rank(
+    st: &SymStep,
+    step: u32,
+    res: &GraphResources,
+    ov: &GraphOverlay,
+    rank: usize,
+) -> Rc<[ProgStep]> {
+    let lead = ov.lead_us(rank, step);
+    let mut steps = Vec::with_capacity(st.ops.len() + usize::from(lead > 0.0));
+    if lead > 0.0 {
+        steps.push(ProgStep { us: lead, on: Some(res.get(0, ResKind::Sw)) });
+    }
+    let all = ov.all_factor(rank);
+    let gpu = ov.gpu_factor(rank);
+    for op in &st.ops {
+        let mut us = op.us;
+        us *= ov.global;
+        us *= all;
+        if matches!(op.kind, ResKind::GpuReduce | ResKind::Launch | ResKind::Pcie) {
+            us *= gpu;
+        }
+        steps.push(ProgStep { us, on: Some(res.get(0, op.kind)) });
+    }
+    steps.into()
+}
+
+/// Resolved programs of a running shared plan: one per step when the
+/// overlay is rank-uniform, one per (step, rank) otherwise.
+enum SymProgs {
+    Shared(Vec<Rc<[ProgStep]>>),
+    PerRank(Vec<Vec<Rc<[ProgStep]>>>),
+}
+
+struct SymExecState {
+    /// Per-node arrival counters (flat `step * world + rank`); a node
+    /// launches on its 2nd arrival (every non-source has exactly two
+    /// predecessors — `peer ≠ self` for any world ≥ 2).
+    arrivals: Vec<u8>,
+    /// Last-step nodes still running; 0 fires `done`.
+    remaining: usize,
+    done: Option<Action>,
+}
+
+/// The shared-plan executor: one [`EngineHook`] registration serves every
+/// node completion of the run, so steady-state execution allocates
+/// nothing per node beyond its arrival counter.
+struct SymExec {
+    world: usize,
+    peers: Vec<PeerRule>,
+    progs: SymProgs,
+    hook: Cell<Option<HookId>>,
+    run: Option<Rc<RefCell<GraphRun>>>,
+    state: RefCell<SymExecState>,
+}
+
+impl SymExec {
+    fn prog(&self, s: usize, r: usize) -> Rc<[ProgStep]> {
+        match &self.progs {
+            SymProgs::Shared(v) => v[s].clone(),
+            SymProgs::PerRank(v) => v[s][r].clone(),
+        }
+    }
+
+    fn launch(&self, e: &mut Engine, node: u32) {
+        let (s, r) = (node as usize / self.world, node as usize % self.world);
+        if let Some(run) = &self.run {
+            run.borrow_mut().start[node as usize] = e.now();
+        }
+        let hook = self.hook.get().expect("sym executor not registered");
+        e.run_program_shifted(self.prog(s, r), r as u32, OnDone::Hook(hook, node));
+    }
+}
+
+impl EngineHook for SymExec {
+    fn done(&self, e: &mut Engine, node: u32) {
+        if let Some(run) = &self.run {
+            run.borrow_mut().finish[node as usize] = e.now();
+        }
+        let world = self.world;
+        let (s, r) = (node as usize / world, node as usize % world);
+        if s + 1 == self.peers.len() {
+            let finished = {
+                let mut st = self.state.borrow_mut();
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    st.done.take()
+                } else {
+                    None
+                }
+            };
+            if let Some(a) = finished {
+                a(e);
+            }
+            return;
+        }
+        // this node feeds (s+1, r) and (s+1, inv(r)); whichever sees its
+        // second arrival launches now — the join's max-arrival instant
+        let succ = [r, self.peers[s + 1].inv(world, r)];
+        let mut ready = [None, None];
+        {
+            let mut st = self.state.borrow_mut();
+            for (slot, &q) in succ.iter().enumerate() {
+                let idx = (s + 1) * world + q;
+                st.arrivals[idx] += 1;
+                if st.arrivals[idx] == 2 {
+                    ready[slot] = Some(idx as u32);
+                }
+            }
+        }
+        // borrow dropped before launching: a zero-duration program can
+        // complete synchronously and re-enter this hook
+        for n in ready.into_iter().flatten() {
+            self.launch(e, n);
+        }
+    }
 }
 
 /// Resolves an op to the engine resource backing it: by `(rank, kind)`
@@ -601,6 +1060,23 @@ impl GraphTemplate {
         &self.graph
     }
 
+    /// Resident size of the materialized graph + plan — O(world × steps);
+    /// the scale bench reports it against [`SymTemplate::approx_bytes`]
+    /// to show the shared plan's O(1)-in-world footprint.
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut bytes = self.graph.nodes.len() * size_of::<GraphNode>();
+        for n in &self.graph.nodes {
+            bytes += n.ops.len() * size_of::<CommOp>() + n.deps.len() * size_of::<NodeId>();
+        }
+        bytes += self.plan.indeg.len() * size_of::<usize>();
+        bytes += self.plan.succ.len() * size_of::<Vec<usize>>();
+        for s in &self.plan.succ {
+            bytes += s.len() * size_of::<usize>();
+        }
+        bytes
+    }
+
     /// Execute the template now (source nodes release at the current
     /// virtual time).  See [`GraphTemplate::execute_at`].
     pub fn execute(
@@ -656,6 +1132,9 @@ impl GraphTemplate {
 #[derive(Debug, Clone, Default)]
 pub struct TemplateCache {
     inner: Arc<Mutex<HashMap<TemplateKey, Arc<GraphTemplate>>>>,
+    /// Shared symmetric plans (§Scale), keyed disjointly from the full
+    /// templates ([`TemplateKey::sym`] sets the high algo bit).
+    sym: Arc<Mutex<HashMap<TemplateKey, Arc<SymTemplate>>>>,
 }
 
 /// Cache key of one built collective graph: algorithm tag, world size,
@@ -702,6 +1181,14 @@ impl TemplateKey {
     pub fn ps_fanin(world: usize, place: Placement, sig: Vec<u64>) -> TemplateKey {
         TemplateKey { algo: 3, world, place: place.key(), sig }
     }
+
+    /// Tag this key as naming a *shared symmetric plan* (§Scale): the
+    /// high algo bit keeps sym keys disjoint from full-template keys even
+    /// though the cache stores the two in separate maps.
+    pub fn sym(mut self) -> TemplateKey {
+        self.algo |= 0x80;
+        self
+    }
 }
 
 impl TemplateCache {
@@ -724,9 +1211,28 @@ impl TemplateCache {
         m.entry(key).or_insert(built).clone()
     }
 
-    /// Number of distinct templates built so far.
+    /// [`TemplateCache::get_or_build`] for shared symmetric plans: same
+    /// first-insert-wins, build-outside-the-lock discipline, in a map of
+    /// its own so a sym plan and the full template of one collective can
+    /// coexist (the scale bench compares them head-to-head).
+    pub fn get_or_build_sym(
+        &self,
+        key: TemplateKey,
+        build: impl FnOnce() -> SymTemplate,
+    ) -> Arc<SymTemplate> {
+        let key = key.sym();
+        if let Some(hit) = self.sym.lock().expect("template cache poisoned").get(&key) {
+            return hit.clone();
+        }
+        let built = Arc::new(build());
+        let mut m = self.sym.lock().expect("template cache poisoned");
+        m.entry(key).or_insert(built).clone()
+    }
+
+    /// Number of distinct templates built so far (full + shared plans).
     pub fn len(&self) -> usize {
         self.inner.lock().expect("template cache poisoned").len()
+            + self.sym.lock().expect("template cache poisoned").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -923,6 +1429,9 @@ fn execute_planned(
             // lane executions always release at `at == now` (the job's
             // launch turn), so the empty graph completes on the spot
             OnDone::Lane(set, job) => e.lane_done(set, job),
+            // hook completions are a SymExec-only path, and symmetric
+            // plans refuse empty step lists before reaching here
+            OnDone::Hook(..) => unreachable!("graph templates never complete through hooks"),
         }
         return run;
     }
@@ -1534,5 +2043,150 @@ mod tests {
         );
         assert!(Arc::ptr_eq(&dense, &warm));
         assert_eq!(run(&warm, Placement::new(2, 1)), end_dense);
+    }
+
+    fn mixed_steps(count: usize) -> Vec<StepCost> {
+        (0..count)
+            .map(|i| StepCost {
+                cost: CostBreakdown {
+                    wire_us: 6.0 + i as f64 * 0.5,
+                    reduce_us: 1.25,
+                    launch_us: 0.5,
+                    sw_us: 0.75,
+                    ..Default::default()
+                },
+                gpu_reduce: true,
+            })
+            .collect()
+    }
+
+    fn run_sym(t: &SymTemplate, ranks: usize, ov: &GraphOverlay) -> (SimTime, GraphRun) {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ranks);
+        let run = t.execute(&mut e, &res, ov, true, Box::new(|_| {})).expect("recording run");
+        let end = e.run();
+        let out = run.borrow().clone();
+        (end, out)
+    }
+
+    #[test]
+    fn sym_ring_plan_replays_full_template_times() {
+        // the §Scale pin at unit level: a shared rank-relative ring plan
+        // executes bit-identically (per-node start/finish and end) to the
+        // materialized per-rank template, neutral and perturbed alike
+        let p = 5;
+        let steps = mixed_steps(2 * (p - 1));
+        let full = GraphTemplate::new(ring_graph(p, &steps));
+        let plan = sym_allreduce_plan(Algo::Ring, p, &steps, Placement::one_per_node())
+            .expect("trivial ring is symmetric");
+        assert_eq!(plan.world(), p);
+        assert_eq!(plan.node_count(), full.graph().len());
+        assert!(plan.approx_bytes() < full.approx_bytes());
+
+        let (end_f, run_f) = run_template(&full, p, &GraphOverlay::neutral());
+        let (end_s, run_s) = run_sym(&plan, p, &GraphOverlay::neutral());
+        assert_eq!(end_f, end_s);
+        assert_eq!(run_f.start, run_s.start);
+        assert_eq!(run_f.finish, run_s.finish);
+
+        let mut ov = GraphOverlay::neutral();
+        ov.scale_global(1.25);
+        ov.scale_rank(p, 1, 1.7);
+        ov.scale_rank_gpu(p, 3, 2.5);
+        ov.set_lead(|rank, step| if (rank + step as usize) % 3 == 0 { 1.5 } else { 0.0 });
+        let (end_f, run_f) = run_template(&full, p, &ov);
+        let (end_s, run_s) = run_sym(&plan, p, &ov);
+        assert_eq!(end_f, end_s, "perturbed sym replay diverged");
+        assert_eq!(run_f.start, run_s.start);
+        assert_eq!(run_f.finish, run_s.finish);
+    }
+
+    #[test]
+    fn sym_rhd_plan_replays_full_template_times() {
+        for p in [2usize, 4, 8, 16] {
+            let steps = mixed_steps(2 * p.trailing_zeros() as usize);
+            let full = GraphTemplate::new(rhd_graph(p, &steps));
+            let plan = sym_allreduce_plan(Algo::Rhd, p, &steps, Placement::one_per_node())
+                .expect("pow2 rhd is symmetric");
+            let (end_f, run_f) = run_template(&full, p, &GraphOverlay::neutral());
+            let (end_s, run_s) = run_sym(&plan, p, &GraphOverlay::neutral());
+            assert_eq!(end_f, end_s, "rhd p={p}");
+            assert_eq!(run_f.finish, run_s.finish, "rhd p={p}");
+        }
+    }
+
+    #[test]
+    fn sym_plan_refuses_asymmetric_shapes() {
+        let steps = mixed_steps(6);
+        // dense placements re-kind hops per rank
+        assert!(sym_allreduce_plan(Algo::Ring, 4, &steps, Placement::new(2, 1)).is_none());
+        // non-power-of-two rhd folds remainder ranks
+        assert!(sym_allreduce_plan(Algo::Rhd, 6, &steps, Placement::one_per_node()).is_none());
+        // the tree's pair work is one-sided
+        assert!(sym_allreduce_plan(Algo::Tree, 4, &steps, Placement::one_per_node()).is_none());
+        // degenerate worlds
+        assert!(sym_allreduce_plan(Algo::Ring, 1, &steps, Placement::one_per_node()).is_none());
+    }
+
+    #[test]
+    fn parallel_ring_build_matches_serial() {
+        // the closed-form range builder (what the scoped threads run) must
+        // reproduce the sequential scan node-for-node, and the threaded
+        // merge must keep index order
+        let p = 8;
+        let steps = mixed_steps(2 * (p - 1));
+        let place = Placement::one_per_node();
+        let serial = ring_graph_placed(p, &steps, place, 1.0);
+        let ranged = ring_nodes_range(p, &steps, &place, 1.0, 0, p * steps.len());
+        let merged = par_build_nodes(p * steps.len(), |lo, hi| {
+            ring_nodes_range(p, &steps, &place, 1.0, lo, hi)
+        });
+        for nodes in [&ranged, &merged] {
+            assert_eq!(nodes.len(), serial.nodes.len());
+            for (a, b) in serial.nodes.iter().zip(nodes.iter()) {
+                assert_eq!(a.rank, b.rank);
+                assert_eq!(a.step, b.step);
+                assert_eq!(a.deps, b.deps);
+                assert_eq!(a.ops.len(), b.ops.len());
+                for (x, y) in a.ops.iter().zip(&b.ops) {
+                    assert_eq!(x.kind, y.kind);
+                    assert_eq!(x.us.to_bits(), y.us.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_rhd_build_matches_serial() {
+        let p = 16;
+        let steps = mixed_steps(2 * p.trailing_zeros() as usize);
+        let place = Placement::one_per_node();
+        let serial = rhd_graph_placed(p, &steps, place, 1.0);
+        let masks = rhd_mask_sequence(p);
+        assert_eq!(masks.len(), steps.len());
+        let ranged = rhd_nodes_range(p, &steps, &place, 1.0, &masks, 0, p * steps.len());
+        assert_eq!(ranged.len(), serial.nodes.len());
+        for (a, b) in serial.nodes.iter().zip(&ranged) {
+            assert_eq!((a.rank, a.step, &a.deps), (b.rank, b.step, &b.deps));
+            for (x, y) in a.ops.iter().zip(&b.ops) {
+                assert_eq!(x.us.to_bits(), y.us.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sym_cache_is_disjoint_from_full_templates() {
+        let cache = TemplateCache::default();
+        let steps = mixed_steps(6);
+        let sig = crate::comm::commop::steps_sig(&steps);
+        let key = TemplateKey::allreduce(Algo::Ring, 4, sig);
+        let full = cache.get_or_build(key.clone(), || ring_graph(4, &steps));
+        let plan = cache.get_or_build_sym(key.clone(), || {
+            sym_allreduce_plan(Algo::Ring, 4, &steps, Placement::one_per_node()).unwrap()
+        });
+        assert_eq!(cache.len(), 2, "full and sym entries of one key coexist");
+        let warm = cache.get_or_build_sym(key, || panic!("sym key must hit"));
+        assert!(Arc::ptr_eq(&plan, &warm));
+        assert!(plan.approx_bytes() < full.approx_bytes());
     }
 }

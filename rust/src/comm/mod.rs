@@ -23,8 +23,9 @@ pub use commop::{
     ResourceUse, StepCost,
 };
 pub use graph::{
-    allreduce_graph, ps_fanin_graph, ps_fanin_pulls, CommGraph, GraphOverlay, GraphResources,
-    GraphTemplate, NodeId, TemplateCache, TemplateKey,
+    allreduce_graph, ps_fanin_graph, ps_fanin_pulls, sym_allreduce_plan, CommGraph, GraphOverlay,
+    GraphResources, GraphTemplate, NodeId, PeerRule, SymStep, SymTemplate, TemplateCache,
+    TemplateKey,
 };
 pub use mpi::{MpiFlavor, MpiWorld};
 pub use ptrcache::{BufKind, CacheMode, CudaDriverSim, PointerCache};

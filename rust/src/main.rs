@@ -13,7 +13,8 @@
 //! mpi-dnn-train scenario overlap --cluster pizdaint --world 64 --model mobilenet --streams 8
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
-//! mpi-dnn-train perf [--quick] [--out BENCH_engine.json]   # §Perf harness
+//! mpi-dnn-train perf [--quick] [--out BENCH_engine.json] [--check BASE --band 0.25]
+//! mpi-dnn-train perf scale-sweep [--quick]   # §Scale 256→16k-rank fleet sweep
 //! mpi-dnn-train validate               # artifacts + numerics smoke
 //! mpi-dnn-train list
 //! ```
@@ -612,27 +613,44 @@ fn cmd_graph(args: &Args) -> Result<()> {
 }
 
 /// §Perf harness: time representative simulator workloads and write
-/// `BENCH_engine.json` (events/s + wall-ms per workload) — the repo's
-/// engine-throughput trajectory.  `--check BASELINE` diffs the run's
-/// deterministic event counts against a committed baseline (the CI
-/// perf-smoke job checks against the repo's `BENCH_engine.json`);
-/// refresh the baseline by re-running `perf --quick` and committing.
+/// `BENCH_engine.json` (events/s + wall-ms + §Scale peak-memory per
+/// workload) — the repo's engine-throughput trajectory.  The positional
+/// `scale-sweep` runs the 256 → 16k-rank fleet sweep instead of the
+/// standard workload set.  The v2 document keeps one section per
+/// (workload set × sizing) mode and `--out` merges into an existing
+/// file, so a quick smoke run never clobbers a full or scale baseline.
+/// `--check BASELINE` reports deterministic event-count drift and gates
+/// on events/s regression *bands* (`--band`, default 0.25 × baseline);
+/// refresh a baseline by re-running in the same mode and committing.
 fn cmd_perf(args: &Args) -> Result<()> {
     let quick = args.get_bool("quick");
     let json = args.get_bool("json");
     let out = args.get_or("out", "BENCH_engine.json");
     let check = args.get("check").map(String::from);
+    let band = args.get_f64("band", bench::perf::DEFAULT_BAND).map_err(Error::msg)?;
+    let which = args.positional.first().map(String::as_str).unwrap_or("standard");
     args.reject_unknown().map_err(Error::msg)?;
 
-    let workloads = bench::perf::run_perf(quick)?;
+    let (workloads, scale) = match which {
+        "standard" => (bench::perf::run_perf(quick)?, false),
+        "scale-sweep" => (bench::perf::run_scale_sweep(quick)?, true),
+        other => {
+            mpi_dnn_train::bail!("unknown perf workload set `{other}` (standard|scale-sweep)")
+        }
+    };
+    let mode = bench::perf::bench_mode(scale, quick);
     let table = bench::perf::perf_table(&workloads, quick);
     emit(&table, json);
-    let payload = bench::perf::perf_json(&workloads, quick).to_string() + "\n";
+    let existing = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|t| mpi_dnn_train::util::json::Json::parse(&t).ok());
+    let payload =
+        bench::perf::merge_bench(existing.as_ref(), &workloads, mode).to_string() + "\n";
     std::fs::write(&out, payload).context(format!("writing {out}"))?;
-    println!("wrote {out}");
+    println!("wrote {out} ({mode} section)");
     if let Some(baseline) = check {
         let report =
-            bench::perf::check_against(&workloads, quick, std::path::Path::new(&baseline))?;
+            bench::perf::check_against(&workloads, mode, std::path::Path::new(&baseline), band)?;
         println!("{report}");
     }
     Ok(())
@@ -714,7 +732,10 @@ fn cmd_list(args: &Args) -> Result<()> {
          share a NIC/PCIe bundle; rails split the node NIC; intra-node hops ride PCIe)"
     );
     println!("graph: per-rank CommGraph timelines (--algo auto|ring|rhd|tree, --straggler, --jitter-us)");
-    println!("perf: engine/graph-replay/sweep throughput harness (--quick; writes BENCH_engine.json)");
+    println!(
+        "perf: engine/graph-replay/sweep throughput harness (--quick; writes BENCH_engine.json; \
+         `perf scale-sweep` runs the §Scale 256→16k-rank fleet sweep)"
+    );
     Ok(())
 }
 

@@ -1,0 +1,430 @@
+//! Calendar (radix-bucket) event queue — the fleet-scale replacement for
+//! the `BinaryHeap` event heap (§Scale).
+//!
+//! A DES over a cluster produces *dense, near-monotone* timestamps: the
+//! clock only moves forward, and at any instant the outstanding events
+//! cluster within a few link/kernel service times of `now`.  A binary
+//! heap pays O(log n) per event with n ~ world × ops; this queue pays
+//! O(1) amortized by hashing each event into a bucket of its time *tick*
+//! (`at >> shift`) on a power-of-two ring, and only ever sorting the one
+//! bucket that is currently draining.
+//!
+//! ## Ordering contract
+//!
+//! Pops come out in strictly ascending `(at, seq)` order — the exact
+//! total order of the old heap.  `seq` is globally unique (the engine's
+//! scheduling counter), so *any* correct min-queue over `(at, seq)`
+//! yields the same pop sequence; this is what keeps every Figure-pin and
+//! placement/overlap regression bit-for-bit across the swap.  The
+//! property test `prop_calendar_queue_matches_heap_oracle` pins this
+//! against a `BinaryHeap` oracle over randomized streams.
+//!
+//! ## Structure and invariants
+//!
+//! - `active` holds the entries of the *front* tick run, sorted
+//!   descending by `(at, seq)` so `pop` is a `Vec::pop` from the end.
+//!   Every entry in `active` orders before every bucketed/overflow entry.
+//! - `buckets[tick & mask]` holds entries with
+//!   `active_tick < tick < active_tick + buckets.len()` — inside the
+//!   window each in-use slot holds exactly one tick's entries, so a
+//!   refill takes a whole slot without splitting.
+//! - `overflow` holds everything beyond the window; when the window
+//!   drains, the queue *rebases* at the overflow's minimum tick.
+//!
+//! ## Resize policy (hysteresis, never on the pop fast path)
+//!
+//! Tuning only runs at refill boundaries, and only after `STRIKES`
+//! consecutive bad refills, so a single odd burst never thrashes:
+//! - refills that scan more than `SCAN_HI` empty slots → *coarsen*
+//!   (`shift += 2`, fewer finer-grained empty slots to walk);
+//! - refilled runs larger than `DENSE_HI` entries → *refine*
+//!   (`shift -= 2`, cheaper per-run sorts);
+//! - a rebase that bounces most of the overflow back → *grow* the
+//!   window (double the bucket count, up to `MAX_BUCKETS`).
+//!
+//! Every resize is a full rebuild to a consistent state, so the ordering
+//! contract is unconditional — resizes change speed, never results.
+
+use super::time::SimTime;
+
+/// One queued event: the `(at, seq)` sort key plus an opaque payload.
+struct Entry<T> {
+    at: u64,
+    seq: u64,
+    item: T,
+}
+
+const INIT_SHIFT: u32 = 10; // 1.024us ticks — a PCIe/NVLink service quantum
+const MAX_SHIFT: u32 = 40; // ~1100s ticks; beyond this everything is one tick
+const INIT_BUCKETS: usize = 1 << 10;
+const MAX_BUCKETS: usize = 1 << 16;
+const SCAN_HI: u32 = 64; // refill scan longer than this is "too sparse"
+const DENSE_HI: usize = 4096; // active run larger than this is "too dense"
+const STRIKES: u32 = 8; // consecutive bad refills before a resize
+
+/// Monotone priority queue over `(SimTime, seq)` with O(1) amortized
+/// push/pop for the dense near-monotone streams a cluster DES emits.
+/// See the module docs for the ordering contract and invariants.
+pub struct CalendarQueue<T> {
+    /// Bucket granularity: events map to tick `at >> shift`.
+    shift: u32,
+    /// `buckets.len() - 1`; bucket count is always a power of two.
+    mask: u64,
+    buckets: Vec<Vec<Entry<T>>>,
+    /// Entries currently held across `buckets` (not `active`/`overflow`).
+    in_buckets: usize,
+    /// Front run: tick `active_tick`, sorted descending, popped from the end.
+    active: Vec<Entry<T>>,
+    active_tick: u64,
+    /// Entries at ticks beyond the bucket window.
+    overflow: Vec<Entry<T>>,
+    len: usize,
+    peak_len: usize,
+    sparse_strikes: u32,
+    dense_strikes: u32,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            shift: INIT_SHIFT,
+            mask: (INIT_BUCKETS - 1) as u64,
+            buckets: (0..INIT_BUCKETS).map(|_| Vec::new()).collect(),
+            in_buckets: 0,
+            active: Vec::new(),
+            active_tick: 0,
+            overflow: Vec::new(),
+            len: 0,
+            peak_len: 0,
+            sparse_strikes: 0,
+            dense_strikes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// High-water mark of queued entries over the queue's lifetime.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Approximate peak memory footprint: the peak entry population plus
+    /// the bucket ring itself.  A reporting figure (§Scale bench), not an
+    /// allocator measurement.
+    pub fn approx_peak_bytes(&self) -> usize {
+        self.peak_len * std::mem::size_of::<Entry<T>>()
+            + self.buckets.len() * std::mem::size_of::<Vec<Entry<T>>>()
+    }
+
+    /// Insert an entry.  `seq` must be unique across all live entries
+    /// (the engine's global scheduling counter guarantees this); ties on
+    /// `at` resolve by `seq`, i.e. scheduling order.
+    pub fn push(&mut self, at: SimTime, seq: u64, item: T) {
+        let e = Entry { at: at.0, seq, item };
+        let tick = e.at >> self.shift;
+        if self.len == 0 {
+            // empty queue: re-anchor the window at this entry's tick so a
+            // long idle jump never lands in overflow
+            self.active_tick = tick;
+            self.active.push(e);
+        } else if tick <= self.active_tick {
+            // joins the front run: sorted insert keeps `active` a
+            // descending run (all bucketed entries have strictly larger
+            // ticks, so ordering against them is already correct)
+            let key = (e.at, e.seq);
+            let pos = self.active.partition_point(|x| (x.at, x.seq) > key);
+            self.active.insert(pos, e);
+        } else if tick - self.active_tick < self.buckets.len() as u64 {
+            self.buckets[(tick & self.mask) as usize].push(e);
+            self.in_buckets += 1;
+        } else {
+            self.overflow.push(e);
+        }
+        self.len += 1;
+        self.peak_len = self.peak_len.max(self.len);
+    }
+
+    /// Remove and return the minimum entry by `(at, seq)`.
+    pub fn pop(&mut self) -> Option<(SimTime, u64, T)> {
+        if self.active.is_empty() && !self.refill() {
+            return None;
+        }
+        let e = self.active.pop().expect("refill left active empty");
+        self.len -= 1;
+        Some((SimTime(e.at), e.seq, e.item))
+    }
+
+    /// Advance to the next non-empty tick run.  Returns false iff the
+    /// queue is empty.
+    fn refill(&mut self) -> bool {
+        if self.in_buckets > 0 {
+            // invariant: some bucketed entry lies within the window, so
+            // this scan terminates within buckets.len() - 1 probes
+            let mut t = self.active_tick + 1;
+            let mut scanned = 0u32;
+            loop {
+                let slot = (t & self.mask) as usize;
+                if !self.buckets[slot].is_empty() {
+                    self.active = std::mem::take(&mut self.buckets[slot]);
+                    self.in_buckets -= self.active.len();
+                    self.active_tick = t;
+                    self.active.sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+                    break;
+                }
+                t += 1;
+                scanned += 1;
+                debug_assert!(
+                    (scanned as u64) < self.buckets.len() as u64,
+                    "bucket window lost an entry"
+                );
+            }
+            self.tune(scanned);
+            true
+        } else if !self.overflow.is_empty() {
+            self.rebase();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Window drained: restart it at the overflow's minimum tick, pulling
+    /// newly in-window entries into the buckets.  If most of the spill
+    /// bounces straight back to overflow the window is too narrow for the
+    /// current event spread — grow it.
+    fn rebase(&mut self) {
+        let min_tick = self
+            .overflow
+            .iter()
+            .map(|e| e.at >> self.shift)
+            .min()
+            .expect("rebase on empty overflow");
+        self.active_tick = min_tick;
+        let spill = std::mem::take(&mut self.overflow);
+        let total = spill.len();
+        let window = self.buckets.len() as u64;
+        let mut bounced = 0usize;
+        for e in spill {
+            let tick = e.at >> self.shift;
+            if tick == min_tick {
+                self.active.push(e);
+            } else if tick - min_tick < window {
+                self.buckets[(tick & self.mask) as usize].push(e);
+                self.in_buckets += 1;
+            } else {
+                self.overflow.push(e);
+                bounced += 1;
+            }
+        }
+        self.active.sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+        if bounced * 2 > total && self.buckets.len() < MAX_BUCKETS {
+            self.rebuild(self.shift, self.buckets.len() * 2);
+        }
+    }
+
+    /// Strike-counted tuning, run once per refill: coarsen after
+    /// consistently sparse scans, refine after consistently dense runs.
+    fn tune(&mut self, scanned: u32) {
+        if scanned > SCAN_HI {
+            self.sparse_strikes += 1;
+        } else {
+            self.sparse_strikes = 0;
+        }
+        if self.active.len() > DENSE_HI {
+            self.dense_strikes += 1;
+        } else {
+            self.dense_strikes = 0;
+        }
+        if self.sparse_strikes >= STRIKES && self.shift < MAX_SHIFT {
+            self.rebuild((self.shift + 2).min(MAX_SHIFT), self.buckets.len());
+        } else if self.dense_strikes >= STRIKES && self.shift >= 2 {
+            self.rebuild(self.shift - 2, self.buckets.len());
+        }
+    }
+
+    /// Redistribute every entry under a new (shift, bucket count):
+    /// re-anchor the window at the minimum tick, refill `active` with the
+    /// minimum run.  Restores all invariants from scratch, so it is safe
+    /// at any refill boundary.
+    fn rebuild(&mut self, shift: u32, nbuckets: usize) {
+        debug_assert!(nbuckets.is_power_of_two());
+        let mut all: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        all.append(&mut self.active);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        self.shift = shift;
+        if nbuckets != self.buckets.len() {
+            self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        }
+        self.mask = (nbuckets - 1) as u64;
+        self.in_buckets = 0;
+        self.sparse_strikes = 0;
+        self.dense_strikes = 0;
+        let Some(min_tick) = all.iter().map(|e| e.at >> shift).min() else {
+            return;
+        };
+        self.active_tick = min_tick;
+        let window = nbuckets as u64;
+        for e in all {
+            let tick = e.at >> shift;
+            if tick == min_tick {
+                self.active.push(e);
+            } else if tick - min_tick < window {
+                self.buckets[(tick & self.mask) as usize].push(e);
+                self.in_buckets += 1;
+            } else {
+                self.overflow.push(e);
+            }
+        }
+        self.active.sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut CalendarQueue<u32>) -> Vec<(u64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some((at, seq, item)) = q.pop() {
+            out.push((at.0, seq, item));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime(3000), 0, 0);
+        q.push(SimTime(1000), 1, 1);
+        q.push(SimTime(2000), 2, 2);
+        q.push(SimTime(1000), 3, 3); // tie with seq 1: seq breaks it
+        let order: Vec<u32> = drain(&mut q).into_iter().map(|(_, _, i)| i).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+        assert!(q.is_empty());
+        assert_eq!(q.peak_len(), 4);
+    }
+
+    #[test]
+    fn same_tick_ties_resolve_by_seq() {
+        // all within one 1.024us tick
+        let mut q = CalendarQueue::new();
+        for seq in [5u64, 2, 9, 0] {
+            q.push(SimTime(100), seq, seq as u32);
+        }
+        let order: Vec<u64> = drain(&mut q).into_iter().map(|(_, s, _)| s).collect();
+        assert_eq!(order, vec![0, 2, 5, 9]);
+    }
+
+    #[test]
+    fn far_future_entries_route_through_overflow_and_rebase() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime(0), 0, 0);
+        // way beyond the initial window of 1024 ticks × 1.024us
+        let far = 10u64 << (INIT_SHIFT + 14);
+        q.push(SimTime(far), 1, 1);
+        q.push(SimTime(far + 1), 2, 2);
+        assert_eq!(drain(&mut q), vec![(0, 0, 0), (far, 1, 1), (far + 1, 2, 2)]);
+    }
+
+    #[test]
+    fn push_at_or_before_active_tick_joins_front_run() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime(5000), 0, 0);
+        q.push(SimTime(9000), 1, 1);
+        assert_eq!(q.pop().map(|(t, ..)| t.0), Some(5000));
+        // now active_tick is 9000's tick; an equal-time later-seq entry
+        // must still order after it, an earlier-time entry before it
+        q.push(SimTime(9000), 2, 2);
+        q.push(SimTime(8000), 3, 3);
+        let rest: Vec<u64> = drain(&mut q).into_iter().map(|(t, _, _)| t).collect();
+        assert_eq!(rest, vec![8000, 9000, 9000]);
+    }
+
+    #[test]
+    fn matches_heap_oracle_on_lcg_stream() {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut q = CalendarQueue::new();
+        let mut oracle: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut x: u64 = 0x2545F4914F6CDD1D;
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        for round in 0..5000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // mixed deltas: ties, dense near-future, occasional far jumps
+            let delta = match x % 10 {
+                0 => 0,
+                1..=6 => x % 2_000,
+                7 | 8 => x % 2_000_000,
+                _ => x % 40_000_000_000,
+            };
+            let at = now + delta;
+            q.push(SimTime(at), seq, seq as u32);
+            oracle.push(Reverse((at, seq)));
+            seq += 1;
+            if round % 3 == 0 {
+                let got = q.pop().map(|(t, s, _)| (t.0, s));
+                let want = oracle.pop().map(|Reverse(k)| k);
+                assert_eq!(got, want);
+                if let Some((t, _)) = got {
+                    now = t; // engine-style: never schedule into the past
+                }
+            }
+        }
+        loop {
+            let got = q.pop().map(|(t, s, _)| (t.0, s));
+            let want = oracle.pop().map(|Reverse(k)| k);
+            assert_eq!(got, want);
+            if got.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bursts_trigger_refine_without_reordering() {
+        let mut q = CalendarQueue::new();
+        let mut seq = 0u64;
+        // many refills whose runs exceed DENSE_HI: forces the refine path
+        for burst in 0..(STRIKES + 4) as u64 {
+            let base = burst << (INIT_SHIFT + 1);
+            for i in 0..(DENSE_HI + 64) as u64 {
+                q.push(SimTime(base + (i % 7)), seq, seq as u32);
+                seq += 1;
+            }
+        }
+        let out = drain(&mut q);
+        assert_eq!(out.len(), seq as usize);
+        assert!(out.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)));
+    }
+
+    #[test]
+    fn sparse_streams_trigger_coarsen_without_reordering() {
+        let mut q = CalendarQueue::new();
+        // entries ~SCAN_HI*4 ticks apart: every refill over-scans, the
+        // queue coarsens after STRIKES, order is unchanged
+        let stride = (SCAN_HI as u64 * 4) << INIT_SHIFT;
+        let n = (STRIKES + 6) as u64;
+        for i in 0..n {
+            q.push(SimTime(i * stride), i, i as u32);
+        }
+        let out = drain(&mut q);
+        let times: Vec<u64> = out.iter().map(|e| e.0).collect();
+        assert_eq!(times, (0..n).map(|i| i * stride).collect::<Vec<_>>());
+    }
+}

@@ -1,9 +1,11 @@
-//! Event heap + FIFO resources — the core of the cluster simulator.
+//! Event queue + FIFO resources — the core of the cluster simulator.
 //!
-//! Events are *typed* (§Perf): the heap entry carries an [`EventKind`]
+//! Events are *typed* (§Perf): the queue entry carries an [`EventKind`]
 //! ordered by (time, sequence) — the sequence number makes simultaneous
 //! events fire in scheduling order, which is what makes whole-cluster
-//! runs bit-reproducible.
+//! runs bit-reproducible.  The queue itself is a calendar bucket queue
+//! ([`CalendarQueue`], §Scale): O(1) amortized per event instead of the
+//! old `BinaryHeap`'s O(log n), with the identical (time, seq) pop order.
 //!
 //! A **stream-lane set** ([`Engine::lane_set`]) is the typed overlap
 //! scheduler (§Overlap): jobs release at known times, round-robin across
@@ -26,10 +28,10 @@
 //! fan-in congestion and the single-threaded gRPC+MPI bottleneck (paper
 //! §VI-D) arise in the model.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 use std::rc::Rc;
 
+use super::calq::CalendarQueue;
 use super::time::SimTime;
 
 /// A boxed engine callback — the *fallback* event payload (and the
@@ -66,38 +68,19 @@ enum EventKind {
     LaneLaunch { set: u32, job: u32 },
 }
 
-/// Heap entry.  §Perf: the original design boxed a closure per event;
-/// typed payloads keep the entry `Copy`-sized on the hot path and the
-/// order comparison never looks at the payload.
-struct Event {
-    at: SimTime,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        (self.at, self.seq) == (other.at, other.seq)
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
-}
-
 /// Handle to a FIFO-serialized resource.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ResourceId(usize);
+
+impl ResourceId {
+    /// Slab index of this resource — stable for the engine's lifetime.
+    /// Resources created consecutively have consecutive indices, which is
+    /// the contiguity the graph layer's rank-offset program views
+    /// ([`Engine::run_program_shifted`]) rely on (§Scale).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
 
 struct ResourceState {
     /// Bytes per microsecond (i.e. MB/s / 1e... we keep it as bytes/us).
@@ -141,6 +124,11 @@ struct JoinState {
 pub enum OnDone {
     Call(Action),
     Lane(LaneSetId, u32),
+    /// A registered [`EngineHook`] invoked with an argument — the
+    /// shared-plan executors (§Scale) complete thousands of node
+    /// programs through one hook registration instead of one boxed
+    /// closure per node.
+    Hook(HookId, u32),
 }
 
 impl OnDone {
@@ -148,8 +136,24 @@ impl OnDone {
         match self {
             OnDone::Call(a) => a(e),
             OnDone::Lane(set, job) => e.lane_done(set, job),
+            OnDone::Hook(h, arg) => {
+                let hook = e.hooks[h.0].clone();
+                hook.done(e, arg);
+            }
         }
     }
+}
+
+/// Handle to a registered completion hook (see [`Engine::hook`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HookId(usize);
+
+/// A reusable typed completion target: `done` is called with the `u32`
+/// argument carried by the [`OnDone::Hook`] that completed.  One
+/// registration serves any number of completions, so graph executors can
+/// route every node finish through a single shared-state object.
+pub trait EngineHook {
+    fn done(&self, e: &mut Engine, arg: u32);
 }
 
 /// Handle to a stream-lane set (see [`Engine::lane_set`]).
@@ -233,6 +237,9 @@ struct GateState {
 struct ProgState {
     gen: u32,
     next: u32,
+    /// Added to every pinned step's resource index (§Scale): rank-relative
+    /// shared plans store rank-0 pins and shift per rank at launch.
+    offset: u32,
     steps: Rc<[ProgStep]>,
     done: Option<OnDone>,
 }
@@ -242,7 +249,7 @@ struct ProgState {
 pub struct Engine {
     now: SimTime,
     seq: u64,
-    heap: BinaryHeap<Reverse<Event>>,
+    queue: CalendarQueue<EventKind>,
     resources: Vec<ResourceState>,
     gates: Vec<GateState>,
     joins: Vec<JoinState>,
@@ -250,6 +257,7 @@ pub struct Engine {
     progs: Vec<ProgState>,
     prog_free: Vec<u32>,
     lanes: Vec<LaneSetState>,
+    hooks: Vec<Rc<dyn EngineHook>>,
     executed: u64,
 }
 
@@ -268,12 +276,37 @@ impl Engine {
         self.executed
     }
 
+    /// Register a reusable completion hook; the returned handle is valid
+    /// for the engine's lifetime and can back any number of
+    /// [`OnDone::Hook`] completions.
+    pub fn hook(&mut self, hook: Rc<dyn EngineHook>) -> HookId {
+        self.hooks.push(hook);
+        HookId(self.hooks.len() - 1)
+    }
+
+    /// High-water mark of outstanding events in the calendar queue.
+    pub fn queue_peak(&self) -> usize {
+        self.queue.peak_len()
+    }
+
+    /// Approximate peak engine memory (§Scale bench reporting): the
+    /// calendar queue at its high-water mark plus the live state slabs.
+    pub fn approx_slab_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.queue.approx_peak_bytes()
+            + self.resources.capacity() * size_of::<ResourceState>()
+            + self.joins.capacity() * size_of::<JoinState>()
+            + self.progs.capacity() * size_of::<ProgState>()
+            + self.gates.capacity() * size_of::<GateState>()
+            + self.lanes.capacity() * size_of::<LaneSetState>()
+    }
+
     /// The allocation-free scheduling primitive every typed path uses.
     fn push_event(&mut self, at: SimTime, kind: EventKind) {
         debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Event { at, seq, kind }));
+        self.queue.push(at, seq, kind);
     }
 
     /// Schedule `action` at absolute time `at` (>= now).
@@ -288,10 +321,10 @@ impl Engine {
 
     /// Run until the event queue drains; returns the final clock.
     pub fn run(&mut self) -> SimTime {
-        while let Some(Reverse(ev)) = self.heap.pop() {
-            self.now = ev.at;
+        while let Some((at, _seq, kind)) = self.queue.pop() {
+            self.now = at;
             self.executed += 1;
-            match ev.kind {
+            match kind {
                 EventKind::Call(action) => action(self),
                 EventKind::FireJoin(j) => self.fire_join(j),
                 EventKind::Grant(g) => self.fire_grant(g),
@@ -393,16 +426,28 @@ impl Engine {
 
     /// Run an op program with an arbitrary typed completion.
     pub fn run_program_with(&mut self, steps: Rc<[ProgStep]>, done: OnDone) {
+        self.run_program_shifted(steps, 0, done);
+    }
+
+    /// [`Engine::run_program_with`] through a *rank-offset view* (§Scale):
+    /// every pinned step occupies the resource at index
+    /// `step.on.index() + offset` instead of `step.on` itself.  A shared
+    /// rank-relative plan resolves its programs once against rank 0's
+    /// resources and replays them for rank `r` with `offset = r` — valid
+    /// because [`GraphResources`](crate::comm::GraphResources) installs
+    /// each resource kind as one contiguous per-rank run.
+    pub fn run_program_shifted(&mut self, steps: Rc<[ProgStep]>, offset: u32, done: OnDone) {
         let slot = match self.prog_free.pop() {
             Some(s) => {
                 let st = &mut self.progs[s as usize];
                 st.steps = steps;
                 st.next = 0;
+                st.offset = offset;
                 st.done = Some(done);
                 s
             }
             None => {
-                self.progs.push(ProgState { gen: 0, next: 0, steps, done: Some(done) });
+                self.progs.push(ProgState { gen: 0, next: 0, offset, steps, done: Some(done) });
                 (self.progs.len() - 1) as u32
             }
         };
@@ -415,16 +460,19 @@ impl Engine {
             let i = st.next as usize;
             if i < st.steps.len() {
                 st.next += 1;
-                Some((st.steps[i], st.gen))
+                Some((st.steps[i], st.gen, st.offset))
             } else {
                 None
             }
         };
         match next {
-            Some((step, gen)) => {
+            Some((step, gen, offset)) => {
                 let kind = EventKind::Prog { slot, gen };
                 match step.on {
-                    Some(r) => self.occupy(r, SimTime::from_us(step.us), kind),
+                    Some(r) => {
+                        let r = ResourceId(r.0 + offset as usize);
+                        self.occupy(r, SimTime::from_us(step.us), kind)
+                    }
                     None => self.push_event(self.now + SimTime::from_us(step.us), kind),
                 }
             }
@@ -1166,6 +1214,49 @@ mod tests {
         assert_eq!(end, SimTime::from_us(7.0));
         let (served, busy) = e.resource_stats(r);
         assert_eq!((served, busy), (2, SimTime::from_us(7.0)));
+    }
+
+    #[test]
+    fn hook_completions_route_through_registration() {
+        struct Sink(Rc<RefCell<Vec<(u32, f64)>>>);
+        impl EngineHook for Sink {
+            fn done(&self, e: &mut Engine, arg: u32) {
+                self.0.borrow_mut().push((arg, e.now().as_us()));
+            }
+        }
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let h = e.hook(Rc::new(Sink(log.clone())));
+        let steps: Rc<[ProgStep]> = vec![ProgStep { us: 4.0, on: None }].into();
+        e.run_program_with(steps.clone(), OnDone::Hook(h, 7));
+        e.run_program_with(steps, OnDone::Hook(h, 9));
+        e.run();
+        // simultaneous completions fire in scheduling order
+        assert_eq!(*log.borrow(), vec![(7, 4.0), (9, 4.0)]);
+    }
+
+    #[test]
+    fn shifted_program_occupies_offset_resource() {
+        let mut e = Engine::new();
+        let r0 = e.unit_resource();
+        let r1 = e.unit_resource();
+        assert_eq!(r1.index(), r0.index() + 1, "consecutive ids are contiguous");
+        let steps: Rc<[ProgStep]> = vec![ProgStep { us: 5.0, on: Some(r0) }].into();
+        e.run_program_shifted(steps, 1, OnDone::Call(Box::new(|_| {})));
+        e.run();
+        assert_eq!(e.resource_stats(r0), (0, SimTime::ZERO));
+        assert_eq!(e.resource_stats(r1), (1, SimTime::from_us(5.0)));
+    }
+
+    #[test]
+    fn queue_peak_tracks_outstanding_events() {
+        let mut e = Engine::new();
+        for i in 0..5 {
+            e.at(SimTime::from_us(i as f64), |_| {});
+        }
+        e.run();
+        assert_eq!(e.queue_peak(), 5);
+        assert!(e.approx_slab_bytes() > 0);
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //! plot.  Runs are bit-deterministic: ties break on sequence number, no
 //! wall-clock anywhere.
 
+pub mod calq;
 pub mod engine;
 pub mod time;
 
+pub use calq::CalendarQueue;
 pub use engine::{
-    Action, Engine, GateId, JoinId, LaneDriver, LaneSetId, OnDone, ProgStep, ProgramLanes,
-    ResourceId,
+    Action, Engine, EngineHook, GateId, HookId, JoinId, LaneDriver, LaneSetId, OnDone, ProgStep,
+    ProgramLanes, ResourceId,
 };
 pub use time::SimTime;

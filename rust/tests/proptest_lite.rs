@@ -797,3 +797,140 @@ fn prop_prng_bounds() {
         }
     }
 }
+
+/// prop: the calendar bucket queue pops in exactly the (time, seq)
+/// order of a binary-heap oracle, across interleaved pushes and pops
+/// with ties, dense bursts, and far-future jumps that route through the
+/// overflow list (§Scale tie-break contract).
+#[test]
+fn prop_calendar_queue_matches_heap_oracle() {
+    use mpi_dnn_train::sim::CalendarQueue;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xE101 + case);
+        let mut cq: CalendarQueue<u64> = CalendarQueue::new();
+        let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut now = 0u64; // pops are monotone, like the engine clock
+        let mut seq = 0u64;
+        let rounds = 100 + rng.next_below(300);
+        for _ in 0..rounds {
+            let burst = 1 + rng.next_below(8);
+            for _ in 0..burst {
+                let at = match rng.next_below(10) {
+                    0 => now,                               // tie at the active tick
+                    1..=6 => now + rng.next_below(512),     // dense in-window
+                    7 | 8 => now + rng.next_below(1 << 14), // mid-range
+                    _ => now + rng.next_below(1 << 28),     // far future → overflow
+                };
+                cq.push(SimTime(at), seq, seq);
+                heap.push(Reverse((at, seq)));
+                seq += 1;
+            }
+            for _ in 0..rng.next_below(burst + 2) {
+                match (cq.pop(), heap.pop()) {
+                    (Some((at, s, item)), Some(Reverse((hat, hs)))) => {
+                        assert_eq!((at.0, s, item), (hat, hs, hs), "case {case}: pop order");
+                        now = at.0;
+                    }
+                    (None, None) => {}
+                    (a, b) => panic!("case {case}: emptiness disagrees: {a:?} vs {b:?}"),
+                }
+            }
+        }
+        while let Some(Reverse((hat, hs))) = heap.pop() {
+            let got = cq.pop().unwrap_or_else(|| panic!("case {case}: queue dry early"));
+            assert_eq!(got, (SimTime(hat), hs, hs), "case {case}: drain order");
+        }
+        assert!(cq.pop().is_none(), "case {case}: queue has extra entries");
+        assert!(cq.is_empty(), "case {case}: non-empty after drain");
+    }
+}
+
+/// prop: the shared symmetric-rank plan replays bit-identical per-node
+/// start/finish times to a freshly built per-rank template, for random
+/// worlds (ring: any p; RHD: powers of two), random step costs, and
+/// random overlays including per-rank skews and deterministic jitter
+/// leads (§Scale rank-offset contract).
+#[test]
+fn prop_sym_plan_replays_full_template_bitwise() {
+    use mpi_dnn_train::cluster::Placement;
+    use mpi_dnn_train::comm::allreduce::Algo;
+    use mpi_dnn_train::comm::graph::GraphRun;
+    use mpi_dnn_train::comm::{
+        allreduce_graph, sym_allreduce_plan, CostBreakdown, GraphOverlay, GraphResources,
+        GraphTemplate, StepCost,
+    };
+
+    fn run_full(t: &GraphTemplate, ranks: usize, ov: &GraphOverlay) -> (SimTime, GraphRun) {
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, ranks);
+        let run = t.execute(&mut e, res.mapper(), ov, Box::new(|_| {}));
+        let end = e.run();
+        let out = run.borrow().clone();
+        (end, out)
+    }
+
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xE201 + case);
+        let (algo, p) = if rng.next_below(2) == 0 {
+            (Algo::Ring, 2 + rng.next_below(30) as usize)
+        } else {
+            (Algo::Rhd, 1usize << (1 + rng.next_below(5)))
+        };
+        let count = match algo {
+            Algo::Ring => 2 * (p - 1),
+            _ => 2 * p.trailing_zeros() as usize,
+        };
+        let mut steps = Vec::with_capacity(count);
+        for _ in 0..count {
+            steps.push(StepCost {
+                cost: CostBreakdown {
+                    wire_us: 0.5 + rng.next_f64() * 8.0,
+                    staging_us: rng.next_f64() * 2.0,
+                    reduce_us: rng.next_f64() * 3.0,
+                    driver_us: rng.next_f64(),
+                    launch_us: rng.next_f64() * 0.5,
+                    sw_us: rng.next_f64() * 0.5,
+                },
+                gpu_reduce: rng.next_below(2) == 0,
+            });
+        }
+        let mut ov = GraphOverlay::neutral();
+        if rng.next_below(2) == 0 {
+            ov.scale_global(1.0 + rng.next_f64());
+        }
+        if rng.next_below(2) == 0 {
+            ov.scale_rank(p, rng.next_below(p as u64) as usize, 1.0 + rng.next_f64() * 2.0);
+        }
+        if rng.next_below(2) == 0 {
+            ov.scale_rank_gpu(p, rng.next_below(p as u64) as usize, 1.0 + rng.next_f64());
+        }
+        if rng.next_below(2) == 0 {
+            let salt = rng.next_below(1000);
+            ov.set_lead(move |rank, step| {
+                ((rank as u64 * 31 + step as u64 * 7 + salt) % 5) as f64 * 0.25
+            });
+        }
+
+        let plan = sym_allreduce_plan(algo, p, &steps, Placement::one_per_node())
+            .unwrap_or_else(|| panic!("case {case}: plan refused ({algo:?}, p={p})"));
+        let full = GraphTemplate::new(allreduce_graph(algo, p, &steps));
+        assert_eq!(plan.node_count(), full.graph().len(), "case {case}: node count");
+        let (full_end, full_run) = run_full(&full, p, &ov);
+
+        let mut e = Engine::new();
+        let res = GraphResources::install(&mut e, p);
+        let run = plan.execute(&mut e, &res, &ov, true, Box::new(|_| {})).expect("recording");
+        let sym_end = e.run();
+        let sym_run = run.borrow().clone();
+        assert_eq!(sym_end, full_end, "case {case}: end time ({algo:?}, p={p})");
+        assert_eq!(sym_run.start, full_run.start, "case {case}: node starts ({algo:?}, p={p})");
+        assert_eq!(sym_run.finish, full_run.finish, "case {case}: node finishes");
+
+        // shapes the shared plan must refuse: dense placements and
+        // non-power-of-two RHD worlds
+        assert!(sym_allreduce_plan(algo, p, &steps, Placement::new(2, 1)).is_none());
+        assert!(sym_allreduce_plan(Algo::Rhd, 6, &steps, Placement::one_per_node()).is_none());
+    }
+}
