@@ -9,6 +9,9 @@
 //! Workloads:
 //!  * `engine-churn` — pure event-core throughput: schedule-and-serve
 //!    churn through the calendar bucket queue, no strategy logic.
+//!  * `tracer-off` — gated serve churn with the span tracer detached:
+//!    times the disabled branch at every traced chokepoint, gating the
+//!    §Observability zero-overhead-when-off contract via `perf --check`.
 //!  * `graph-replay` — one cached ring [`GraphTemplate`] replayed many
 //!    times under the neutral overlay: the build-once/replay-many path
 //!    every per-rank-skew iteration rides.
@@ -140,6 +143,35 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
                 for i in 0..n {
                     e.at(SimTime(i * 10), move |e| {
                         e.serve(r, 64.0, |_| {});
+                    });
+                }
+                e.run();
+                events += e.executed();
+            }
+            events
+        },
+    ));
+
+    // --- 1b. tracer-off overhead guard ---------------------------------
+    // Gated FIFO serves drive every traced chokepoint (serve, gate
+    // acquire/release, event push) with the tracer DETACHED — the
+    // disabled branch the §Observability overhead contract bounds.
+    // `perf --check` gates its events/s band like any other workload.
+    out.push(timed(
+        "tracer-off",
+        format!("{n} gated FIFO serves per run, tracer detached (overhead contract)"),
+        reps,
+        || {
+            let mut events = 0u64;
+            for _ in 0..reps {
+                let mut e = Engine::new();
+                let r = e.resource(10.0, SimTime::ZERO);
+                let g = e.gate();
+                for i in 0..n {
+                    e.at(SimTime(i * 10), move |e| {
+                        e.acquire(g, move |e| {
+                            e.serve(r, 64.0, move |e| e.release(g));
+                        });
                     });
                 }
                 e.run();
@@ -661,7 +693,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 7);
+        assert_eq!(ws.len(), 8);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -695,8 +727,10 @@ mod tests {
         );
         // the third strategy family is on the board
         assert!(ws.iter().any(|w| w.name == "ps-fanin"));
+        // the overhead-contract guard is on the board
+        assert!(ws.iter().any(|w| w.name == "tracer-off"));
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 7);
+        assert_eq!(t.rows.len(), 8);
         let j = perf_json(&ws, "quick");
         assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(BENCH_SCHEMA));
         let quick_rows = j
@@ -705,7 +739,7 @@ mod tests {
             .and_then(|m| m.get("workloads"))
             .and_then(|w| w.as_arr())
             .map(|a| a.len());
-        assert_eq!(quick_rows, Some(7));
+        assert_eq!(quick_rows, Some(8));
     }
 
     #[test]

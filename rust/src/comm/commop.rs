@@ -62,6 +62,22 @@ impl ResKind {
             ResKind::Sw => "sw",
         }
     }
+
+    /// The trace-span bucket of this resource class (§Observability) —
+    /// the first seven [`SpanKind`](crate::sim::SpanKind)s mirror
+    /// `ResKind` one-to-one.
+    pub fn span_kind(self) -> crate::sim::SpanKind {
+        use crate::sim::SpanKind;
+        match self {
+            ResKind::Wire => SpanKind::Wire,
+            ResKind::Pcie => SpanKind::Pcie,
+            ResKind::GpuReduce => SpanKind::GpuReduce,
+            ResKind::CpuReduce => SpanKind::CpuReduce,
+            ResKind::Driver => SpanKind::Driver,
+            ResKind::Launch => SpanKind::Launch,
+            ResKind::Sw => SpanKind::Sw,
+        }
+    }
 }
 
 /// A template-relative resource pin: *names* the resource an op needs
@@ -247,7 +263,7 @@ pub struct CommResources {
 
 impl CommResources {
     pub fn install(e: &mut Engine) -> CommResources {
-        CommResources {
+        let res = CommResources {
             wire: e.unit_resource(),
             pcie: e.unit_resource(),
             gpu: e.unit_resource(),
@@ -255,7 +271,19 @@ impl CommResources {
             driver: e.unit_resource(),
             launch: e.unit_resource(),
             sw: e.unit_resource(),
+        };
+        if e.tracing() {
+            for k in ResKind::ALL {
+                e.trace_resource(
+                    res.get(k),
+                    k.span_kind(),
+                    crate::sim::trace::PID_ENGINE,
+                    0,
+                    k.name(),
+                );
+            }
         }
+        res
     }
 
     /// A second job's bundle that contends on an existing wire resource
@@ -285,8 +313,8 @@ impl CommResources {
         ResKind::ALL
             .iter()
             .map(|&k| {
-                let (served, busy) = e.resource_stats(self.get(k));
-                ResourceUse { name: k.name().to_string(), served, busy }
+                let s = e.resource_stats(self.get(k));
+                ResourceUse { name: k.name().to_string(), served: s.served, busy: s.busy }
             })
             .filter(|u| u.served > 0)
             .collect()
@@ -310,9 +338,9 @@ impl ResourceUse {
     {
         let (mut served, mut busy) = (0u64, SimTime::ZERO);
         for r in ids {
-            let (s, b) = e.resource_stats(r);
-            served += s;
-            busy += b;
+            let s = e.resource_stats(r);
+            served += s.served;
+            busy += s.busy;
         }
         ResourceUse { name: name.to_string(), served, busy }
     }
@@ -412,8 +440,7 @@ mod tests {
         }
         e.run();
         assert_eq!(*ends.borrow(), vec![15.0, 25.0]);
-        let (_, wire_busy) = e.resource_stats(a.wire);
-        assert_eq!(wire_busy, SimTime::from_us(20.0));
+        assert_eq!(e.resource_stats(a.wire).busy, SimTime::from_us(20.0));
     }
 
     #[test]
@@ -447,8 +474,8 @@ mod tests {
         }
         let end = e.run();
         assert_eq!(end, SimTime::from_us(14.0));
-        let (served, busy) = e.resource_stats(nic);
-        assert_eq!((served, busy), (2, SimTime::from_us(14.0)));
+        let s = e.resource_stats(nic);
+        assert_eq!((s.served, s.busy), (2, SimTime::from_us(14.0)));
     }
 
     #[test]

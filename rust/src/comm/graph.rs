@@ -56,7 +56,7 @@ use crate::cluster::Placement;
 use crate::comm::allreduce::Algo;
 use crate::comm::commop::{CommOp, RelPin, ResKind, ResourceUse, StepCost};
 use crate::sim::{
-    Action, Engine, EngineHook, HookId, LaneSetId, OnDone, ProgStep, ResourceId, SimTime,
+    Action, Engine, EngineHook, HookId, LaneSetId, OnDone, ProgStep, ResourceId, SimTime, SpanKind,
 };
 
 /// Builders whose node count reaches this materialize their node vectors
@@ -1281,7 +1281,7 @@ impl GraphResources {
         let per_rank = |e: &mut Engine| -> Vec<ResourceId> {
             (0..ranks).map(|_| e.unit_resource()).collect()
         };
-        GraphResources {
+        let res = GraphResources {
             wire,
             pcie,
             gpu: per_rank(e),
@@ -1291,7 +1291,36 @@ impl GraphResources {
             sw: per_rank(e),
             place,
             ranks,
+        };
+        // Naming happens after every id is handed out, so the creation
+        // order above — and with it FIFO tie-breaking — is identical
+        // whether or not a tracer is attached.
+        if e.tracing() {
+            use crate::sim::trace::{pid_node, pid_rank};
+            for (i, &r) in res.wire.iter().enumerate() {
+                let (node, rail) = (i / res.place.rails, i % res.place.rails);
+                let name = format!("{} n{node} rail{rail}", ResKind::Wire.name());
+                e.trace_resource(r, SpanKind::Wire, pid_node(node), node as u32, &name);
+            }
+            for (node, &r) in res.pcie.iter().enumerate() {
+                let name = format!("{} n{node}", ResKind::Pcie.name());
+                e.trace_resource(r, SpanKind::Pcie, pid_node(node), node as u32, &name);
+            }
+            let per_rank_rows: [(&Vec<ResourceId>, ResKind); 5] = [
+                (&res.gpu, ResKind::GpuReduce),
+                (&res.cpu, ResKind::CpuReduce),
+                (&res.driver, ResKind::Driver),
+                (&res.launch, ResKind::Launch),
+                (&res.sw, ResKind::Sw),
+            ];
+            for (ids, k) in per_rank_rows {
+                for (rank, &r) in ids.iter().enumerate() {
+                    let name = format!("{} r{rank}", k.name());
+                    e.trace_resource(r, k.span_kind(), pid_rank(rank), rank as u32, &name);
+                }
+            }
         }
+        res
     }
 
     /// A co-tenant job's bundle sharing another job's physical NIC ports
@@ -1775,8 +1804,8 @@ mod tests {
         }
         let end = e.run();
         assert_eq!(end, SimTime::from_us(20.0));
-        let (served, busy) = e.resource_stats(nic);
-        assert_eq!((served, busy), (2, SimTime::from_us(20.0)));
+        let s = e.resource_stats(nic);
+        assert_eq!((s.served, s.busy), (2, SimTime::from_us(20.0)));
         // under a map that does not name it, the op elapses per-rank
         let mut e2 = Engine::new();
         execute(&mut e2, &g, unmapped(), Box::new(|_| {}));
@@ -1810,9 +1839,9 @@ mod tests {
         let serial = CommSchedule::from_steps(&steps).total_us();
         assert!((end.as_us() - 2.0 * serial).abs() < 1e-9);
         assert_eq!(e.lane_completed(set), 2);
-        let (launches, busy) = e.lane_stats(set);
-        assert_eq!(launches, 2);
-        assert_eq!(busy, end);
+        let s = e.lane_stats(set);
+        assert_eq!(s.served, 2);
+        assert_eq!(s.busy, end);
     }
 
     #[test]
@@ -1877,8 +1906,7 @@ mod tests {
         e.run();
         assert_eq!(*ends[0].borrow(), 15.0);
         assert_eq!(*ends[1].borrow(), 25.0);
-        let (_, busy) = e.resource_stats(a.wire[0]);
-        assert_eq!(busy, SimTime::from_us(20.0));
+        assert_eq!(e.resource_stats(a.wire[0]).busy, SimTime::from_us(20.0));
     }
 
     #[test]

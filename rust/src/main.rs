@@ -13,6 +13,8 @@
 //! mpi-dnn-train scenario overlap --cluster pizdaint --world 64 --model mobilenet --streams 8
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
+//! mpi-dnn-train trace --strategy horovod-mpi-opt --world 8 --streams 2 --out trace.json
+//! mpi-dnn-train trace validate trace.json
 //! mpi-dnn-train perf [--quick] [--out BENCH_engine.json] [--check BASE --band 0.25]
 //! mpi-dnn-train perf scale-sweep [--quick]   # §Scale 256→16k-rank fleet sweep
 //! mpi-dnn-train validate               # artifacts + numerics smoke
@@ -65,13 +67,14 @@ fn run(args: Args) -> Result<()> {
         Some("ablation") => cmd_ablation(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("graph") => cmd_graph(&args),
+        Some("trace") => cmd_trace(&args),
         Some("perf") => cmd_perf(&args),
         Some("validate") => cmd_validate(&args),
         Some("list") => cmd_list(&args),
         Some(other) => mpi_dnn_train::bail!("unknown subcommand `{other}` (see README)"),
         None => {
             println!(
-                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|graph|perf|validate|list> [flags]"
+                "usage: mpi-dnn-train <figure|microbench|train|experiment|ablation|scenario|graph|trace|perf|validate|list> [flags]"
             );
             Ok(())
         }
@@ -167,6 +170,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.get_usize("log-every", 10).map_err(Error::msg)?,
         checkpoint_every: args.get_usize("checkpoint-every", 0).map_err(Error::msg)?,
         checkpoint_path: args.get("checkpoint").map(std::path::PathBuf::from),
+        trace_path: args.get("trace").map(std::path::PathBuf::from),
     };
     args.reject_unknown().map_err(Error::msg)?;
 
@@ -308,7 +312,18 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         Some(_) => Some(args.get_usize("rails", 1).map_err(Error::msg)?),
         None => None,
     };
+    // §Observability: after the comparison table, re-run the scenario's
+    // horovod-mpi-opt point with the span tracer attached and write the
+    // Chrome timeline here (the table itself runs untraced, as always).
+    let trace_flag = args.get("trace").map(String::from);
     args.reject_unknown().map_err(Error::msg)?;
+    if trace_flag.is_some() {
+        mpi_dnn_train::ensure!(
+            !matches!(kind, "two-jobs" | "placement"),
+            "--trace works with straggler | hetero | jitter | link-load | overlap (the \
+             {kind} comparison has no single traced iteration)"
+        );
+    }
     for (name, v) in [("--gpus-per-node", gpn_flag), ("--rails", rails_flag)] {
         if let Some(v) = v {
             mpi_dnn_train::ensure!(v >= 1, "{name} must be >= 1, got {v}");
@@ -372,6 +387,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             "--factor must be > 1.0 for a {kind} scenario, got {factor}"
         );
     }
+    // cloned only when a traced re-run follows the table (the bench
+    // calls consume `cluster`/`model`); the Scenario each arm records is
+    // exactly the one its table ran
+    let trace_env = trace_flag.as_ref().map(|_| (cluster.clone(), model.clone()));
+    let mut traced_sc: Option<Scenario> = None;
     let table = match kind {
         "overlap" => {
             // sweep the stream-count knob itself (--streams = ceiling)
@@ -380,6 +400,9 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 "--depth is not a sweep axis of `scenario overlap` (each point runs depth = \
                  streams)"
             );
+            // trace the sweep's widest point — the one the table's last
+            // row reports
+            traced_sc = Some(Scenario { streams: streams.max(4), ..Scenario::default() });
             bench::overlap_sweep(cluster, model, world, streams.max(4))?
         }
         "straggler" => {
@@ -390,6 +413,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::straggler(ranks, factor)
             };
+            traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
                     "Scenario: {ranks} straggler rank(s) × {factor}x ({}, {}@{world})",
@@ -409,6 +433,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::hetero(ranks, factor)
             };
+            traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
                     "Scenario: {ranks} rank(s) on a {factor}x-slower GPU ({}, {}@{world})",
@@ -429,6 +454,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::default()
             };
+            traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
                     "Scenario: per-rank sync jitter ≤ {:.0}us ({}, {}@{world})",
@@ -448,6 +474,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 "--load must be in [0, {MAX_LINK_LOAD}], got {load}"
             );
             let sc = Scenario { streams, depth, ..Scenario::link_loaded(load) };
+            traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
                     "Scenario: {:.0}% of the fabric taken by background traffic ({}, {}@{world})",
@@ -466,6 +493,21 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         ),
     };
     emit(&table, json);
+    if let Some(path) = trace_flag {
+        let (tc, tm) = trace_env.expect("trace env cloned alongside --trace");
+        let sc = traced_sc.expect("every traceable kind records its scenario");
+        let ws = WorldSpec::new(tc, tm, world);
+        let strat = strategies::by_name("horovod-mpi-opt")?;
+        let report = {
+            let _t = mpi_dnn_train::sim::TraceGuard::new();
+            strat.iteration_in(&ws, &sc)?
+        };
+        let trace =
+            report.trace.context("traced iteration attached no trace (tracer detached?)")?;
+        std::fs::write(&path, &trace.chrome_json).context(format!("writing {path}"))?;
+        println!("{}", trace.render());
+        println!("wrote {path} (horovod-mpi-opt, the traced point of this scenario)");
+    }
     Ok(())
 }
 
@@ -496,6 +538,7 @@ fn cmd_graph(args: &Args) -> Result<()> {
         args.get_usize("gpus-per-node", cluster.gpus_per_node).map_err(Error::msg)?;
     let rails = args.get_usize("rails", cluster.nic_rails).map_err(Error::msg)?;
     let json = args.get_bool("json");
+    let trace_path = args.get("trace").map(String::from);
     args.reject_unknown().map_err(Error::msg)?;
     mpi_dnn_train::ensure!(ranks >= 2, "--ranks must be at least 2");
     mpi_dnn_train::ensure!(gpus_per_node >= 1, "--gpus-per-node must be >= 1");
@@ -541,6 +584,9 @@ fn cmd_graph(args: &Args) -> Result<()> {
     };
     let overlay = sc.overlay(ranks, 0);
 
+    // enabling must precede `Engine::new` — that is where the tracer
+    // attaches; the guard stays alive for the whole (single-engine) run
+    let _trace_guard = trace_path.as_ref().map(|_| mpi_dnn_train::sim::TraceGuard::new());
     let mut e = Engine::new();
     let res = GraphResources::install_placed(&mut e, ranks, place);
     let run = template.execute(&mut e, res.mapper(), &overlay, Box::new(|_| {}));
@@ -609,6 +655,96 @@ fn cmd_graph(args: &Args) -> Result<()> {
         ));
     }
     emit(&table, json);
+    if let Some(path) = &trace_path {
+        use mpi_dnn_train::sim::IterationParts;
+        let t = e.take_trace().context("tracer detached despite --trace")?;
+        let report = t.into_report(&e, IterationParts::comm_only(end));
+        std::fs::write(path, &report.chrome_json).context(format!("writing {path}"))?;
+        println!("{}", report.render());
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// §Observability driver: run ONE traced iteration of a strategy —
+/// span tracer attached, everything else identical to the untraced run —
+/// and print the attribution report (per-resource busy/queue-wait,
+/// critical-path buckets, exposed-vs-overlapped comm); `--out FILE`
+/// additionally writes the Chrome trace-event JSON.  `trace validate
+/// FILE` re-reads an exported file and checks it against the schema the
+/// importers rely on (sorted timestamps, non-overlapping serialized
+/// spans, well-formed events).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use mpi_dnn_train::sim::{trace::validate_chrome_json, TraceGuard};
+    use mpi_dnn_train::strategies::Scenario;
+
+    if args.positional.first().map(String::as_str) == Some("validate") {
+        let path = args.positional.get(1).context("usage: trace validate <FILE>")?.clone();
+        args.reject_unknown().map_err(Error::msg)?;
+        let text = std::fs::read_to_string(&path).context(format!("reading {path}"))?;
+        let events = validate_chrome_json(&text)?;
+        println!(
+            "{path}: valid {} trace, {events} events",
+            mpi_dnn_train::sim::trace::TRACE_SCHEMA
+        );
+        return Ok(());
+    }
+
+    let strat_name = args.get_or("strategy", "horovod-mpi-opt");
+    let mut cluster = presets::by_name(&args.get_or("cluster", "ri2"))?;
+    let world = args.get_usize("world", 8).map_err(Error::msg)?;
+    let model = mpi_dnn_train::models::by_name(&args.get_or("model", "resnet50"))?;
+    let streams = args.get_usize("streams", 2).map_err(Error::msg)?;
+    let depth = args.get_usize("depth", 0).map_err(Error::msg)?;
+    let gpus_per_node =
+        args.get_usize("gpus-per-node", cluster.gpus_per_node).map_err(Error::msg)?;
+    let rails = args.get_usize("rails", cluster.nic_rails).map_err(Error::msg)?;
+    let straggler = args.get_usize("straggler", 0).map_err(Error::msg)?;
+    let factor = args.get_f64("factor", 1.5).map_err(Error::msg)?;
+    let jitter = args.get_f64("jitter-us", 0.0).map_err(Error::msg)?;
+    let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
+    let out = args.get("out").map(String::from);
+    args.reject_unknown().map_err(Error::msg)?;
+    mpi_dnn_train::ensure!(world >= 2, "--world must be at least 2");
+    mpi_dnn_train::ensure!(streams >= 1, "--streams must be >= 1, got {streams}");
+    mpi_dnn_train::ensure!(gpus_per_node >= 1, "--gpus-per-node must be >= 1");
+    mpi_dnn_train::ensure!(
+        rails >= 1 && rails <= gpus_per_node,
+        "--rails must be in 1..=--gpus-per-node, got {rails}"
+    );
+    mpi_dnn_train::ensure!(
+        straggler == 0 || (factor.is_finite() && factor > 1.0),
+        "--factor must be > 1.0 when --straggler is set, got {factor}"
+    );
+    if depth > 0 {
+        mpi_dnn_train::ensure!(
+            streams > 1 && depth <= streams,
+            "--depth requires --streams > 1 and depth <= streams"
+        );
+    }
+    cluster.gpus_per_node = gpus_per_node;
+    cluster.nic_rails = rails;
+    let sc = Scenario {
+        straggler_ranks: straggler,
+        straggler_factor: factor,
+        jitter_us: jitter,
+        seed,
+        streams,
+        depth,
+        ..Scenario::default()
+    };
+    let ws = WorldSpec::new(cluster, model, world);
+    let strat = strategies::by_name(&strat_name)?;
+    let report = {
+        let _t = TraceGuard::new();
+        strat.iteration_in(&ws, &sc)?
+    };
+    let trace = report.trace.context(format!("strategy `{strat_name}` attached no trace"))?;
+    println!("{}", trace.render());
+    if let Some(out) = out {
+        std::fs::write(&out, &trace.chrome_json).context(format!("writing {out}"))?;
+        println!("wrote {out} (load in chrome://tracing or ui.perfetto.dev)");
+    }
     Ok(())
 }
 
@@ -732,6 +868,11 @@ fn cmd_list(args: &Args) -> Result<()> {
          share a NIC/PCIe bundle; rails split the node NIC; intra-node hops ride PCIe)"
     );
     println!("graph: per-rank CommGraph timelines (--algo auto|ring|rhd|tree, --straggler, --jitter-us)");
+    println!(
+        "trace: deterministic span tracing — `trace [--strategy S] [--out FILE]` runs one \
+         traced iteration (attribution report + Chrome JSON); `trace validate FILE` checks an \
+         export; scenario/graph/train accept --trace FILE"
+    );
     println!(
         "perf: engine/graph-replay/sweep throughput harness (--quick; writes BENCH_engine.json; \
          `perf scale-sweep` runs the §Scale 256→16k-rank fleet sweep)"

@@ -120,6 +120,14 @@ impl<T> CalendarQueue<T> {
         self.peak_len
     }
 
+    /// Is the queue currently *at* its high-water mark?  The tracer's
+    /// depth counter (§Observability) samples exactly when this turns
+    /// true after a push — monotone samples, so a traced run records a
+    /// bounded, deterministic depth series off the pop path.
+    pub fn at_peak(&self) -> bool {
+        self.len > 0 && self.len == self.peak_len
+    }
+
     /// Approximate peak memory footprint: the peak entry population plus
     /// the bucket ring itself.  A reporting figure (§Scale bench), not an
     /// allocator measurement.

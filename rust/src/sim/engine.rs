@@ -33,6 +33,7 @@ use std::rc::Rc;
 
 use super::calq::CalendarQueue;
 use super::time::SimTime;
+use super::trace::{SpanKind, Tracer};
 
 /// A boxed engine callback — the *fallback* event payload (and the
 /// storage form of gate waiters, join actions and program completions,
@@ -80,6 +81,23 @@ impl ResourceId {
     pub fn index(self) -> usize {
         self.0
     }
+
+    /// The inverse of [`ResourceId::index`], for the trace report builder
+    /// walking the engine's service ledgers by slab index.
+    pub(crate) fn from_index(i: usize) -> ResourceId {
+        ResourceId(i)
+    }
+}
+
+/// The unified service ledger of a FIFO resource, gate, or lane set
+/// (§Observability): one struct consumed by both the utilization rows in
+/// `IterationReport` and the trace attribution report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests served (resource), grants (gate), or launches (lane set).
+    pub served: u64,
+    /// Cumulative busy / held time.
+    pub busy: SimTime,
 }
 
 struct ResourceState {
@@ -259,11 +277,52 @@ pub struct Engine {
     lanes: Vec<LaneSetState>,
     hooks: Vec<Rc<dyn EngineHook>>,
     executed: u64,
+    /// The optional span recorder (§Observability).  `None` in normal
+    /// runs: every instrumentation point is one branch on this option,
+    /// records pure observations only (no events, no sequence numbers),
+    /// and therefore cannot perturb a pin.
+    tracer: Option<Box<Tracer>>,
 }
 
 impl Engine {
     pub fn new() -> Self {
-        Engine::default()
+        let mut e = Engine::default();
+        if super::trace::enabled() {
+            e.tracer = Some(Box::new(Tracer::new()));
+        }
+        e
+    }
+
+    /// Is this engine recording trace spans?
+    pub fn tracing(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Register a resource's trace identity (track name, span kind,
+    /// Chrome pid, owning rank/node).  No-op when tracing is off, so
+    /// installers call it behind `if e.tracing()` purely to skip the
+    /// name formatting.
+    pub fn trace_resource(
+        &mut self,
+        r: ResourceId,
+        kind: SpanKind,
+        pid: u32,
+        rank: u32,
+        name: &str,
+    ) {
+        if let Some(t) = self.tracer.as_deref_mut() {
+            crate::log_trace!("trace: resource {} is `{name}` ({})", r.0, kind.name());
+            t.name_resource(r.0, kind, pid, rank, name);
+        }
+    }
+
+    /// Detach the tracer (for report building after a run).
+    pub fn take_trace(&mut self) -> Option<Box<Tracer>> {
+        let t = self.tracer.take();
+        if let Some(t) = &t {
+            crate::log_trace!("trace: detached recorder with {} spans", t.spans().len());
+        }
+        t
     }
 
     pub fn now(&self) -> SimTime {
@@ -307,6 +366,22 @@ impl Engine {
         let seq = self.seq;
         self.seq += 1;
         self.queue.push(at, seq, kind);
+        if self.tracer.is_some() {
+            self.trace_depth();
+        }
+    }
+
+    /// Out-of-line tracer hookup for [`Engine::push_event`]: sample the
+    /// calendar queue when it reaches a new high-water mark.
+    #[cold]
+    fn trace_depth(&mut self) {
+        let (len, grew) = (self.queue.len(), self.queue.at_peak());
+        let now = self.now;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            if grew {
+                t.sample_depth(now, len);
+            }
+        }
     }
 
     /// Schedule `action` at absolute time `at` (>= now).
@@ -371,8 +446,8 @@ impl Engine {
     /// `serve_for`, program steps): start at max(busy_until, now), occupy
     /// for `dur` plus the resource's fixed overhead, schedule `kind` at
     /// completion.
-    fn occupy(&mut self, r: ResourceId, dur: SimTime, kind: EventKind) {
-        let end = {
+    fn occupy(&mut self, r: ResourceId, dur: SimTime, bytes: f64, kind: EventKind) {
+        let (start, end) = {
             let state = &mut self.resources[r.0];
             let service = dur + state.overhead;
             let start = state.busy_until.max(self.now);
@@ -380,16 +455,30 @@ impl Engine {
             state.busy_until = end;
             state.served += 1;
             state.busy_time += service;
-            end
+            (start, end)
         };
+        if self.tracer.is_some() {
+            self.trace_serve(r, start, end, bytes);
+        }
         self.push_event(end, kind);
+    }
+
+    /// Out-of-line tracer hookup for [`Engine::occupy`]: the request
+    /// arrived *now* and is served `[start, end]` — `start - now` is the
+    /// queue wait, the split the attribution report is built on.
+    #[cold]
+    fn trace_serve(&mut self, r: ResourceId, start: SimTime, end: SimTime, bytes: f64) {
+        let arrival = self.now;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_serve(r.0, arrival, start, end, bytes);
+        }
     }
 
     /// Enqueue a `bytes`-sized request on resource `r`; `done` fires when
     /// the request finishes service (FIFO order, serialized).
     pub fn serve(&mut self, r: ResourceId, bytes: f64, done: impl FnOnce(&mut Engine) + 'static) {
         let dur = self.transfer_time(r, bytes);
-        self.occupy(r, dur, EventKind::Call(Box::new(done)));
+        self.occupy(r, dur, bytes, EventKind::Call(Box::new(done)));
     }
 
     /// A serialized resource with no rate semantics: requests occupy it
@@ -404,7 +493,7 @@ impl Engine {
     /// the resource's fixed overhead); `done` fires at completion.  FIFO
     /// with respect to `serve` requests on the same resource.
     pub fn serve_for(&mut self, r: ResourceId, dur: SimTime, done: impl FnOnce(&mut Engine) + 'static) {
-        self.occupy(r, dur, EventKind::Call(Box::new(done)));
+        self.occupy(r, dur, 0.0, EventKind::Call(Box::new(done)));
     }
 
     /// Run an op program: step *i+1* starts when step *i* finishes
@@ -471,9 +560,15 @@ impl Engine {
                 match step.on {
                     Some(r) => {
                         let r = ResourceId(r.0 + offset as usize);
-                        self.occupy(r, SimTime::from_us(step.us), kind)
+                        self.occupy(r, SimTime::from_us(step.us), 0.0, kind)
                     }
-                    None => self.push_event(self.now + SimTime::from_us(step.us), kind),
+                    None => {
+                        let at = self.now + SimTime::from_us(step.us);
+                        if self.tracer.is_some() {
+                            self.trace_delay(slot, at);
+                        }
+                        self.push_event(at, kind)
+                    }
                 }
             }
             None => {
@@ -486,6 +581,16 @@ impl Engine {
                 self.prog_free.push(slot);
                 done.run(self);
             }
+        }
+    }
+
+    /// Out-of-line tracer hookup for unpinned program steps: the delay
+    /// elapses `[now, until]` on program slot `slot`'s track.
+    #[cold]
+    fn trace_delay(&mut self, slot: u32, until: SimTime) {
+        let now = self.now;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_delay(slot, now, until);
         }
     }
 
@@ -527,19 +632,24 @@ impl Engine {
     /// virtual time.
     pub fn release(&mut self, g: GateId) {
         let now = self.now;
-        let grant = {
+        let (grant, acquired_at) = {
             let st = &mut self.gates[g.0];
             debug_assert!(st.busy, "release of a free gate");
-            st.busy_time += now.saturating_sub(st.acquired_at);
-            if st.waiters.is_empty() {
+            let acquired_at = st.acquired_at;
+            st.busy_time += now.saturating_sub(acquired_at);
+            let grant = if st.waiters.is_empty() {
                 st.busy = false;
                 false
             } else {
                 st.acquired_at = now;
                 st.grants += 1;
                 true
-            }
+            };
+            (grant, acquired_at)
         };
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_gate(g.0 as u32, acquired_at, now);
+        }
         if grant {
             self.push_event(now, EventKind::Grant(g));
         }
@@ -553,10 +663,10 @@ impl Engine {
         action(self);
     }
 
-    /// (grants so far, cumulative held time) — gate utilization.
-    pub fn gate_stats(&self, g: GateId) -> (u64, SimTime) {
+    /// Gate utilization: grants so far + cumulative held time.
+    pub fn gate_stats(&self, g: GateId) -> ServiceStats {
         let st = &self.gates[g.0];
-        (st.grants, st.busy_time)
+        ServiceStats { served: st.grants, busy: st.busy_time }
     }
 
     /// Create a stream-lane set: `streams` logical lanes, at most `depth`
@@ -601,6 +711,10 @@ impl Engine {
     }
 
     fn lane_arrive(&mut self, set: usize, job: u32) {
+        let now = self.now;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.lane_arrived(set as u32, job, now);
+        }
         let lane = job as usize % self.lanes[set].width;
         self.lanes[set].pending[lane].push_back(job);
         self.lane_try_launch(set);
@@ -647,24 +761,29 @@ impl Engine {
     /// eligible.  Typed completions ([`OnDone::Lane`]) land here.
     pub fn lane_done(&mut self, set: LaneSetId, job: u32) {
         let now = self.now;
-        {
+        let (lane, acquired) = {
             let st = &mut self.lanes[set.0];
             let lane = job as usize % st.width;
             assert!(st.lane_busy[lane], "lane_done on a free lane");
             st.lane_busy[lane] = false;
-            st.busy_time += now.saturating_sub(st.lane_acquired[lane]);
+            let acquired = st.lane_acquired[lane];
+            st.busy_time += now.saturating_sub(acquired);
             st.in_flight -= 1;
             st.completed += 1;
             st.last_done = now;
+            (lane, acquired)
+        };
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_lane(set.0 as u32, lane as u32, job, acquired, now);
         }
         self.lane_try_launch(set.0);
     }
 
-    /// (launches so far, cumulative lane-held time) — the comm-thread
-    /// utilization ledger of a lane set (grants/busy of the old gate).
-    pub fn lane_stats(&self, set: LaneSetId) -> (u64, SimTime) {
+    /// The comm-thread utilization ledger of a lane set: launches so far
+    /// + cumulative lane-held time (grants/busy of the old gate).
+    pub fn lane_stats(&self, set: LaneSetId) -> ServiceStats {
         let st = &self.lanes[set.0];
-        (st.launches, st.busy_time)
+        ServiceStats { served: st.launches, busy: st.busy_time }
     }
 
     /// How many jobs of `set` have completed.
@@ -731,6 +850,10 @@ impl Engine {
             action
         };
         self.join_free.push(j.slot);
+        let now = self.now;
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_join(now);
+        }
         action.run(self);
     }
 
@@ -744,10 +867,10 @@ impl Engine {
         start + self.transfer_time(r, bytes) + state.overhead
     }
 
-    /// (requests served, cumulative busy time) — utilization metrics.
-    pub fn resource_stats(&self, r: ResourceId) -> (u64, SimTime) {
+    /// Utilization metrics: requests served + cumulative busy time.
+    pub fn resource_stats(&self, r: ResourceId) -> ServiceStats {
         let s = &self.resources[r.0];
-        (s.served, s.busy_time)
+        ServiceStats { served: s.served, busy: s.busy_time }
     }
 }
 
@@ -811,7 +934,7 @@ mod tests {
         }
         e.run();
         assert_eq!(*done.borrow(), vec![10.0, 20.0]);
-        let (served, busy) = e.resource_stats(r);
+        let ServiceStats { served, busy } = e.resource_stats(r);
         assert_eq!(served, 2);
         assert_eq!(busy, SimTime::from_us(20.0));
     }
@@ -837,8 +960,7 @@ mod tests {
         });
         let end = e.run();
         assert_eq!(end, SimTime::from_us(105.0));
-        let (_, busy) = e.resource_stats(r);
-        assert_eq!(busy, SimTime::from_us(10.0));
+        assert_eq!(e.resource_stats(r).busy, SimTime::from_us(10.0));
     }
 
     #[test]
@@ -878,7 +1000,7 @@ mod tests {
         }
         e.run();
         assert_eq!(*done.borrow(), vec![4.0, 10.0]);
-        let (served, busy) = e.resource_stats(r);
+        let ServiceStats { served, busy } = e.resource_stats(r);
         assert_eq!(served, 2);
         assert_eq!(busy, SimTime::from_us(10.0));
     }
@@ -901,7 +1023,7 @@ mod tests {
         e.run_program(steps, Box::new(move |e| *e2.borrow_mut() = e.now().as_us()));
         e.run();
         assert!((*end.borrow() - 11.0).abs() < 1e-9);
-        let (served, busy) = e.resource_stats(r);
+        let ServiceStats { served, busy } = e.resource_stats(r);
         assert_eq!(served, 3);
         assert_eq!(busy, SimTime::from_us(9.0));
     }
@@ -968,7 +1090,7 @@ mod tests {
         let end = e.run();
         assert_eq!(end, SimTime::from_us(30.0));
         assert_eq!(*log.borrow(), vec![("a", 0.0), ("b", 10.0), ("c", 20.0)]);
-        let (grants, busy) = e.gate_stats(g);
+        let ServiceStats { served: grants, busy } = e.gate_stats(g);
         assert_eq!(grants, 3);
         assert_eq!(busy, SimTime::from_us(30.0));
     }
@@ -982,8 +1104,7 @@ mod tests {
             e.acquire(g, move |e| e.after(SimTime::from_us(5.0), move |e| e.release(g)));
         });
         e.run();
-        let (_, busy) = e.gate_stats(g);
-        assert_eq!(busy, SimTime::from_us(10.0));
+        assert_eq!(e.gate_stats(g).busy, SimTime::from_us(10.0));
     }
 
     #[test]
@@ -1092,7 +1213,7 @@ mod tests {
         e.lane_submit(set, SimTime::from_us(5.0), 2);
         let end = e.run();
         assert_eq!(end, SimTime::from_us(30.0));
-        let (launches, busy) = e.lane_stats(set);
+        let ServiceStats { served: launches, busy } = e.lane_stats(set);
         assert_eq!(launches, 3);
         assert_eq!(busy, SimTime::from_us(30.0));
         assert_eq!(e.lane_completed(set), 3);
@@ -1124,10 +1245,9 @@ mod tests {
         e.lane_submit(set, SimTime::ZERO, 1);
         let end = e.run();
         assert_eq!(end, SimTime::from_us(14.0));
-        let (_, busy) = e.resource_stats(r);
-        assert_eq!(busy, SimTime::from_us(14.0));
+        assert_eq!(e.resource_stats(r).busy, SimTime::from_us(14.0));
         // both lanes were held until their job's occupancy drained
-        let (launches, lane_busy) = e.lane_stats(set);
+        let ServiceStats { served: launches, busy: lane_busy } = e.lane_stats(set);
         assert_eq!(launches, 2);
         assert_eq!(lane_busy, SimTime::from_us(24.0));
     }
@@ -1212,8 +1332,7 @@ mod tests {
         e.lane_submit(set, SimTime::ZERO, 1);
         let end = e.run();
         assert_eq!(end, SimTime::from_us(7.0));
-        let (served, busy) = e.resource_stats(r);
-        assert_eq!((served, busy), (2, SimTime::from_us(7.0)));
+        assert_eq!(e.resource_stats(r), ServiceStats { served: 2, busy: SimTime::from_us(7.0) });
     }
 
     #[test]
@@ -1244,8 +1363,8 @@ mod tests {
         let steps: Rc<[ProgStep]> = vec![ProgStep { us: 5.0, on: Some(r0) }].into();
         e.run_program_shifted(steps, 1, OnDone::Call(Box::new(|_| {})));
         e.run();
-        assert_eq!(e.resource_stats(r0), (0, SimTime::ZERO));
-        assert_eq!(e.resource_stats(r1), (1, SimTime::from_us(5.0)));
+        assert_eq!(e.resource_stats(r0), ServiceStats { served: 0, busy: SimTime::ZERO });
+        assert_eq!(e.resource_stats(r1), ServiceStats { served: 1, busy: SimTime::from_us(5.0) });
     }
 
     #[test]

@@ -12,10 +12,14 @@
 pub mod calq;
 pub mod engine;
 pub mod time;
+pub mod trace;
 
 pub use calq::CalendarQueue;
 pub use engine::{
     Action, Engine, EngineHook, GateId, HookId, JoinId, LaneDriver, LaneSetId, OnDone, ProgStep,
-    ProgramLanes, ResourceId,
+    ProgramLanes, ResourceId, ServiceStats,
 };
 pub use time::SimTime;
+pub use trace::{
+    IterationParts, PathBucket, SpanKind, TraceGuard, TraceReport, TraceSpan, Tracer,
+};

@@ -41,6 +41,10 @@ impl SimTime {
         SimTime(self.0.max(other.0))
     }
 
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+
     pub fn saturating_sub(self, other: SimTime) -> SimTime {
         SimTime(self.0.saturating_sub(other.0))
     }

@@ -1,0 +1,973 @@
+//! Deterministic span tracing (§Observability).
+//!
+//! A [`Tracer`] is an optional observer attached to an [`Engine`] at
+//! construction when tracing is enabled for the current thread
+//! ([`set_enabled`] / [`TraceGuard`]).  It records one [`TraceSpan`] per
+//! unit of engine activity — FIFO service intervals (with the queue-wait
+//! / service-time split), pure program delays, stream-lane holds, gate
+//! holds, join firings — plus calendar-queue peak-depth samples, all
+//! from the engine's existing chokepoints.  **No strategy contains
+//! tracing code**: every path (graph or serialized, any family) runs
+//! through `occupy`/programs/lanes/joins, so instrumenting those five
+//! points covers the whole simulator.
+//!
+//! The observer is pure: it never schedules events, never touches the
+//! sequence counter, and the disabled path is a single `Option` branch —
+//! tracing off is bit-identical to the tracer never having existed
+//! (pinned by `prop_tracing_is_observationally_free`).
+//!
+//! Two artifacts come out of a traced run:
+//! - **Chrome trace-event JSON** ([`TraceReport::chrome_json`], schema
+//!   [`TRACE_SCHEMA`]): `ph:"X"` complete events on (pid, tid) tracks —
+//!   pid groups by rank / node / engine, tid is one resource, lane, or
+//!   program slot — loadable in Perfetto / `chrome://tracing`.  Fully
+//!   deterministic: interned names, stable sort, integer-derived
+//!   timestamp formatting (no float printing).
+//! - **An attribution report** ([`TraceReport`]): per-resource
+//!   busy/idle/queue-wait totals with log2 wait histograms,
+//!   exposed-vs-overlapped wire time, and the **critical path** — a
+//!   retro-walk from the communication end backwards through the span
+//!   that produced each arrival, bucketed by span kind so the report
+//!   answers "where did the iteration go".
+//!
+//! ## The retro-walk contract
+//!
+//! A span's *arrival* (`t0 - queue_wait`) is the engine clock at enqueue
+//! time, which is exactly the finish time of its causal predecessor (the
+//! previous program step, the join that released the node, the lane
+//! launch).  So the critical path needs no recorded edges: starting at
+//! the last completion, repeatedly pick the latest-recorded span ending
+//! at the current time that advances (nonzero service or wait), charge
+//! its service to its kind bucket and its wait to the `queue` bucket,
+//! and jump to its arrival.  When no span ends at the current time, the
+//! chain starts at a release (tensor readiness) — the remaining prefix
+//! is charged to `compute`.  The walk buckets sum to the walk end
+//! *exactly* (integer [`SimTime`] arithmetic), and the iteration-level
+//! path adds the closing formula's remainder (`skew`, or the
+//! compute/staging split when compute-bound) so the full path sums to
+//! the iteration time.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+
+use super::engine::Engine;
+use super::time::SimTime;
+
+/// Schema tag embedded in every exported trace document.
+pub const TRACE_SCHEMA: &str = "mpi-dnn-train/trace/v1";
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Enable/disable tracing for engines subsequently created **on this
+/// thread** (sweep workers spawned elsewhere stay untraced).
+pub fn set_enabled(on: bool) {
+    ENABLED.with(|f| f.set(on));
+}
+
+/// Is tracing enabled for engines created on this thread?
+pub fn enabled() -> bool {
+    ENABLED.with(|f| f.get())
+}
+
+/// RAII scope: tracing on while the guard lives, off when dropped.
+pub struct TraceGuard(());
+
+impl TraceGuard {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> TraceGuard {
+        set_enabled(true);
+        TraceGuard(())
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        set_enabled(false);
+    }
+}
+
+/// Span category — the critical-path attribution buckets.  The first
+/// seven mirror [`ResKind`](crate::comm::ResKind); the rest are engine
+/// activities with no backing resource kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    Wire,
+    Pcie,
+    GpuReduce,
+    CpuReduce,
+    Driver,
+    Launch,
+    Sw,
+    /// Unpinned program step: elapses without contention.
+    Delay,
+    /// A stream-lane hold (launch → done) — encloses the member spans.
+    Lane,
+    /// A gate hold (acquire → release).
+    Gate,
+    /// A join firing (instant).
+    Join,
+    /// Service on a resource nobody registered a name/kind for.
+    Other,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Wire => "wire",
+            SpanKind::Pcie => "pcie",
+            SpanKind::GpuReduce => "gpu-reduce",
+            SpanKind::CpuReduce => "cpu-reduce",
+            SpanKind::Driver => "driver",
+            SpanKind::Launch => "launch",
+            SpanKind::Sw => "sw",
+            SpanKind::Delay => "delay",
+            SpanKind::Lane => "lane",
+            SpanKind::Gate => "gate",
+            SpanKind::Join => "join",
+            SpanKind::Other => "other",
+        }
+    }
+
+    /// Does the retro-walk step through this span?  Lane/gate holds
+    /// *enclose* the serve/delay spans that actually advance time (the
+    /// walk would skip over the detail), and joins are instants.
+    fn walkable(self) -> bool {
+        !matches!(self, SpanKind::Lane | SpanKind::Gate | SpanKind::Join)
+    }
+}
+
+/// Interned string handle (index into the tracer's string table).
+pub type Istr = u32;
+
+/// One recorded activity interval.  `t0` is service start; the span's
+/// *arrival* (enqueue time) is `t0 - queue_wait` — the queue-wait /
+/// service-time split of the FIFO `occupy` rule.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpan {
+    /// Track (Chrome tid) the span renders on.
+    pub track: u32,
+    /// Interned slice name.
+    pub name: Istr,
+    pub t0: SimTime,
+    pub t1: SimTime,
+    pub kind: SpanKind,
+    pub bytes: u64,
+    /// Owning rank (per-rank resources) or node (shared node resources).
+    pub rank: u32,
+    pub queue_wait: SimTime,
+}
+
+/// A Chrome (pid, tid) lane.
+struct Track {
+    name: Istr,
+    pid: u32,
+}
+
+/// pid of engine-global tracks (lanes, program delays, counters).
+pub const PID_ENGINE: u32 = 0;
+
+/// pid grouping a rank's private resources.
+pub fn pid_rank(rank: usize) -> u32 {
+    1 + rank as u32
+}
+
+/// pid grouping a node's shared resources (NIC ports, PCIe).
+pub fn pid_node(node: usize) -> u32 {
+    100_000 + node as u32
+}
+
+const HIST_BUCKETS: usize = 16;
+
+/// log2 histogram bucket of a queue wait: bucket 0 is `< 1us`, bucket k
+/// covers `[2^(k-1), 2^k) us`, the last bucket absorbs the tail.
+fn hist_bucket(wait: SimTime) -> usize {
+    let us = wait.0 / 1_000;
+    if us == 0 {
+        0
+    } else {
+        ((us.ilog2() + 1) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Per-resource registration + accumulators (see
+/// [`Engine::trace_resource`]).
+struct ResMeta {
+    track: u32,
+    label: Istr,
+    kind: SpanKind,
+    rank: u32,
+    wait: SimTime,
+    hist: [u64; HIST_BUCKETS],
+}
+
+/// The span recorder an enabled engine carries.  All methods are called
+/// from inside a `tracer.is_some()` branch in the engine — the recorder
+/// observes, it never schedules.
+#[derive(Default)]
+pub struct Tracer {
+    strings: Vec<String>,
+    lookup: HashMap<String, Istr>,
+    tracks: Vec<Track>,
+    spans: Vec<TraceSpan>,
+    /// Resource-index → registration (lazy default for unnamed ones).
+    res: Vec<Option<ResMeta>>,
+    lane_tracks: HashMap<(u32, u32), u32>,
+    gate_tracks: HashMap<u32, u32>,
+    slot_tracks: Vec<Option<u32>>,
+    join_track: Option<u32>,
+    /// Stream-lane job arrival times, for the lane-hold queue-wait split.
+    lane_arrivals: HashMap<(u32, u32), SimTime>,
+    /// Calendar-queue peak-depth samples (time, new peak).
+    depth: Vec<(SimTime, usize)>,
+    depth_peak: usize,
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    pub fn spans(&self) -> &[TraceSpan] {
+        &self.spans
+    }
+
+    pub fn string(&self, i: Istr) -> &str {
+        &self.strings[i as usize]
+    }
+
+    fn intern(&mut self, s: &str) -> Istr {
+        if let Some(&i) = self.lookup.get(s) {
+            return i;
+        }
+        let i = self.strings.len() as Istr;
+        self.strings.push(s.to_string());
+        self.lookup.insert(s.to_string(), i);
+        i
+    }
+
+    fn track(&mut self, name: &str, pid: u32) -> u32 {
+        let name = self.intern(name);
+        self.tracks.push(Track { name, pid });
+        (self.tracks.len() - 1) as u32
+    }
+
+    /// Register a resource's identity: track name, span kind, Chrome
+    /// pid, owning rank/node.  Unregistered resources fall back to an
+    /// anonymous `res{i}` track of kind `Other`.
+    pub(crate) fn name_resource(
+        &mut self,
+        idx: usize,
+        kind: SpanKind,
+        pid: u32,
+        rank: u32,
+        name: &str,
+    ) {
+        if self.res.len() <= idx {
+            self.res.resize_with(idx + 1, || None);
+        }
+        let track = self.track(name, pid);
+        let label = self.intern(kind.name());
+        self.res[idx] = Some(ResMeta {
+            track,
+            label,
+            kind,
+            rank,
+            wait: SimTime::ZERO,
+            hist: [0; HIST_BUCKETS],
+        });
+    }
+
+    fn ensure_res(&mut self, idx: usize) {
+        if self.res.len() <= idx {
+            self.res.resize_with(idx + 1, || None);
+        }
+        if self.res[idx].is_none() {
+            let track = self.track(&format!("res{idx}"), PID_ENGINE);
+            let label = self.intern(SpanKind::Other.name());
+            self.res[idx] = Some(ResMeta {
+                track,
+                label,
+                kind: SpanKind::Other,
+                rank: 0,
+                wait: SimTime::ZERO,
+                hist: [0; HIST_BUCKETS],
+            });
+        }
+    }
+
+    /// One FIFO service interval on resource `idx`: arrived at
+    /// `arrival`, served `[t0, t1]` (the queue-wait split point).
+    pub(crate) fn record_serve(
+        &mut self,
+        idx: usize,
+        arrival: SimTime,
+        t0: SimTime,
+        t1: SimTime,
+        bytes: f64,
+    ) {
+        self.ensure_res(idx);
+        let wait = t0.saturating_sub(arrival);
+        let (track, name, kind, rank) = {
+            let m = self.res[idx].as_mut().expect("ensure_res populated the slot");
+            m.wait += wait;
+            m.hist[hist_bucket(wait)] += 1;
+            (m.track, m.label, m.kind, m.rank)
+        };
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0,
+            t1,
+            kind,
+            bytes: bytes as u64,
+            rank,
+            queue_wait: wait,
+        });
+    }
+
+    /// An unpinned program step elapsing `[t0, t1]` on slot `slot`
+    /// (slots are exclusive, so per-slot tracks never self-overlap).
+    pub(crate) fn record_delay(&mut self, slot: u32, t0: SimTime, t1: SimTime) {
+        let s = slot as usize;
+        if self.slot_tracks.len() <= s {
+            self.slot_tracks.resize(s + 1, None);
+        }
+        let track = match self.slot_tracks[s] {
+            Some(t) => t,
+            None => {
+                let t = self.track(&format!("prog p{slot}"), PID_ENGINE);
+                self.slot_tracks[s] = Some(t);
+                t
+            }
+        };
+        let name = self.intern(SpanKind::Delay.name());
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0,
+            t1,
+            kind: SpanKind::Delay,
+            bytes: 0,
+            rank: 0,
+            queue_wait: SimTime::ZERO,
+        });
+    }
+
+    /// A lane job joined its queue (arrival side of the lane-hold wait).
+    pub(crate) fn lane_arrived(&mut self, set: u32, job: u32, at: SimTime) {
+        self.lane_arrivals.insert((set, job), at);
+    }
+
+    /// A lane job finished: held `(set, lane)` over `[t0, t1]`.
+    pub(crate) fn record_lane(&mut self, set: u32, lane: u32, job: u32, t0: SimTime, t1: SimTime) {
+        let track = match self.lane_tracks.get(&(set, lane)) {
+            Some(&t) => t,
+            None => {
+                let t = self.track(&format!("lanes s{set} l{lane}"), PID_ENGINE);
+                self.lane_tracks.insert((set, lane), t);
+                t
+            }
+        };
+        let arrival = self.lane_arrivals.remove(&(set, job)).unwrap_or(t0);
+        let name = self.intern(&format!("job{job}"));
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0,
+            t1,
+            kind: SpanKind::Lane,
+            bytes: 0,
+            rank: 0,
+            queue_wait: t0.saturating_sub(arrival),
+        });
+    }
+
+    /// A gate hold `[t0, t1]` (acquire → release).
+    pub(crate) fn record_gate(&mut self, gate: u32, t0: SimTime, t1: SimTime) {
+        let track = match self.gate_tracks.get(&gate) {
+            Some(&t) => t,
+            None => {
+                let t = self.track(&format!("gate g{gate}"), PID_ENGINE);
+                self.gate_tracks.insert(gate, t);
+                t
+            }
+        };
+        let name = self.intern(SpanKind::Gate.name());
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0,
+            t1,
+            kind: SpanKind::Gate,
+            bytes: 0,
+            rank: 0,
+            queue_wait: SimTime::ZERO,
+        });
+    }
+
+    /// A join fired (instant event).
+    pub(crate) fn record_join(&mut self, at: SimTime) {
+        let track = match self.join_track {
+            Some(t) => t,
+            None => {
+                let t = self.track("joins", PID_ENGINE);
+                self.join_track = Some(t);
+                t
+            }
+        };
+        let name = self.intern(SpanKind::Join.name());
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0: at,
+            t1: at,
+            kind: SpanKind::Join,
+            bytes: 0,
+            rank: 0,
+            queue_wait: SimTime::ZERO,
+        });
+    }
+
+    /// Sample the calendar queue when its depth reaches a new high-water
+    /// mark (monotone samples ⇒ bounded, deterministic counter track).
+    pub(crate) fn sample_depth(&mut self, at: SimTime, len: usize) {
+        if len > self.depth_peak {
+            self.depth_peak = len;
+            self.depth.push((at, len));
+        }
+    }
+
+    /// Fold the recorded spans plus the engine's service ledgers into
+    /// the attribution report + Chrome JSON.  `parts` carries the
+    /// iteration closing formula's terms so the critical path can be
+    /// composed to sum to the full iteration time.
+    pub fn into_report(self, e: &Engine, parts: IterationParts) -> TraceReport {
+        let chrome_json = self.chrome_json(&parts);
+        let (walk_end, comm_path) = self.retro_walk();
+
+        // iteration-level composition (exact by remainder construction)
+        let comm_bound = parts.comm.as_us() >= parts.compute_us + parts.staging_us;
+        let mut critical_path = Vec::new();
+        if comm_bound {
+            critical_path.clone_from(&comm_path);
+            let skew = parts.iter.saturating_sub(walk_end);
+            if skew > SimTime::ZERO {
+                critical_path.push(PathBucket { label: "skew", time: skew });
+            }
+        } else {
+            let staging = SimTime::from_us(parts.staging_us).min(parts.iter);
+            let skew = SimTime::from_us(parts.skew_us).min(parts.iter.saturating_sub(staging));
+            let compute = parts.iter.saturating_sub(staging).saturating_sub(skew);
+            for (label, time) in
+                [("compute", compute), ("staging", staging), ("skew", skew)]
+            {
+                if time > SimTime::ZERO {
+                    critical_path.push(PathBucket { label, time });
+                }
+            }
+        }
+
+        // exposed vs overlapped wire time against the compute window
+        let window = SimTime::from_us(parts.compute_us);
+        let (mut overlapped, mut exposed) = (SimTime::ZERO, SimTime::ZERO);
+        for s in &self.spans {
+            if s.kind != SpanKind::Wire {
+                continue;
+            }
+            let inside = s.t1.min(window).saturating_sub(s.t0.min(window));
+            overlapped += inside;
+            exposed += (s.t1 - s.t0).saturating_sub(inside);
+        }
+
+        let mut resources = Vec::new();
+        for (idx, meta) in self.res.iter().enumerate() {
+            let Some(m) = meta else { continue };
+            let stats = e.resource_stats(super::engine::ResourceId::from_index(idx));
+            if stats.served == 0 {
+                continue;
+            }
+            resources.push(ResourceRow {
+                name: self.strings[self.tracks[m.track as usize].name as usize].clone(),
+                kind: m.kind,
+                served: stats.served,
+                busy: stats.busy,
+                idle: parts.iter.saturating_sub(stats.busy),
+                queue_wait: m.wait,
+                wait_hist: m.hist,
+            });
+        }
+
+        TraceReport {
+            iter: parts.iter,
+            comm_end: walk_end,
+            spans: self.spans.len(),
+            engine_events: e.executed(),
+            queue_peak: e.queue_peak(),
+            critical_path,
+            comm_path,
+            exposed_wire: exposed,
+            overlapped_wire: overlapped,
+            resources,
+            chrome_json,
+        }
+    }
+
+    /// The critical-path retro-walk (module docs): returns the walk end
+    /// (last walkable completion) and the kind buckets, which sum to the
+    /// walk end exactly.
+    fn retro_walk(&self) -> (SimTime, Vec<PathBucket>) {
+        let mut by_end: Vec<(u64, u32)> = self
+            .spans
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.kind.walkable())
+            .map(|(i, s)| (s.t1.0, i as u32))
+            .collect();
+        by_end.sort_unstable();
+        let end = by_end.last().map(|&(t, _)| SimTime(t)).unwrap_or(SimTime::ZERO);
+
+        let mut buckets: Vec<PathBucket> = Vec::new();
+        let mut add = |label: &'static str, dt: SimTime| {
+            if dt == SimTime::ZERO {
+                return;
+            }
+            match buckets.iter_mut().find(|b| b.label == label) {
+                Some(b) => b.time += dt,
+                None => buckets.push(PathBucket { label, time: dt }),
+            }
+        };
+
+        let mut t = end;
+        while t > SimTime::ZERO {
+            let hi = by_end.partition_point(|&(at, _)| at <= t.0);
+            let lo = by_end.partition_point(|&(at, _)| at < t.0);
+            // latest-recorded span ending exactly at `t` that advances
+            let step = by_end[lo..hi]
+                .iter()
+                .rev()
+                .map(|&(_, i)| &self.spans[i as usize])
+                .find(|s| s.t1 > s.t0 || s.queue_wait > SimTime::ZERO);
+            match step {
+                Some(s) => {
+                    add(s.kind.name(), s.t1 - s.t0);
+                    add("queue", s.queue_wait);
+                    t = s.t0.saturating_sub(s.queue_wait);
+                }
+                None => {
+                    // chain start: a timed release (tensor readiness) —
+                    // the prefix is the producing compute
+                    add("compute", t);
+                    break;
+                }
+            }
+        }
+        (end, buckets)
+    }
+
+    /// Serialize to Chrome trace-event JSON (deterministic: stable span
+    /// sort, interned names, integer-derived timestamps).
+    fn chrome_json(&self, parts: &IterationParts) -> String {
+        use std::fmt::Write as _;
+
+        // ts/dur in microseconds with ns precision, no float formatting
+        fn us(t: SimTime) -> String {
+            format!("{}.{:03}", t.0 / 1_000, t.0 % 1_000)
+        }
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn pid_name(pid: u32) -> String {
+            if pid == PID_ENGINE {
+                "engine".to_string()
+            } else if pid < 100_000 {
+                format!("rank {}", pid - 1)
+            } else {
+                format!("node {}", pid - 100_000)
+            }
+        }
+
+        let mut out = String::with_capacity(128 + self.spans.len() * 96);
+        let _ = write!(out, "{{\"schema\":\"{TRACE_SCHEMA}\",\"displayTimeUnit\":\"ms\",");
+        out.push_str("\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, ev: String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&ev);
+        };
+
+        // process names, first-seen order over the track table
+        let mut seen_pids: Vec<u32> = Vec::new();
+        for t in &self.tracks {
+            if !seen_pids.contains(&t.pid) {
+                seen_pids.push(t.pid);
+            }
+        }
+        for &pid in &seen_pids {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    esc(&pid_name(pid))
+                ),
+            );
+        }
+        for (tid, t) in self.tracks.iter().enumerate() {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{tid},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    t.pid,
+                    esc(&self.strings[t.name as usize])
+                ),
+            );
+        }
+
+        // synthetic compute span so the overlap is visible next to comm
+        let compute = SimTime::from_us(parts.compute_us);
+        if compute > SimTime::ZERO {
+            let tid = self.tracks.len();
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID_ENGINE},\"tid\":{tid},\
+                     \"args\":{{\"name\":\"iteration\"}}}}"
+                ),
+            );
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"compute\",\"ph\":\"X\",\"pid\":{PID_ENGINE},\"tid\":{tid},\
+                     \"ts\":0.000,\"dur\":{},\"args\":{{\"kind\":\"compute\"}}}}",
+                    us(compute)
+                ),
+            );
+        }
+
+        // spans, stable-sorted by (pid, tid, t0, recording order)
+        let mut order: Vec<u32> = (0..self.spans.len() as u32).collect();
+        order.sort_by_key(|&i| {
+            let s = &self.spans[i as usize];
+            (self.tracks[s.track as usize].pid, s.track, s.t0.0, i)
+        });
+        for &i in &order {
+            let s = &self.spans[i as usize];
+            let pid = self.tracks[s.track as usize].pid;
+            let name = esc(&self.strings[s.name as usize]);
+            if s.kind == SpanKind::Join {
+                push(
+                    &mut out,
+                    format!(
+                        "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\
+                         \"tid\":{},\"ts\":{}}}",
+                        s.track,
+                        us(s.t0)
+                    ),
+                );
+                continue;
+            }
+            let mut args = format!("\"kind\":\"{}\",\"rank\":{}", s.kind.name(), s.rank);
+            if s.bytes > 0 {
+                let _ = write!(args, ",\"bytes\":{}", s.bytes);
+            }
+            if s.queue_wait > SimTime::ZERO {
+                let _ = write!(args, ",\"queue_wait_us\":{}", us(s.queue_wait));
+            }
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{},\
+                     \"ts\":{},\"dur\":{},\"args\":{{{args}}}}}",
+                    s.track,
+                    us(s.t0),
+                    us(s.t1.saturating_sub(s.t0))
+                ),
+            );
+        }
+
+        // calendar-queue peak-depth counter samples
+        for &(at, len) in &self.depth {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"event-queue-depth\",\"ph\":\"C\",\"pid\":{PID_ENGINE},\
+                     \"tid\":0,\"ts\":{},\"args\":{{\"depth\":{len}}}}}",
+                    us(at)
+                ),
+            );
+        }
+
+        out.push_str("]}");
+        out
+    }
+}
+
+/// The iteration closing formula's terms, handed to the report builder
+/// so the critical path composes to the full iteration time (see
+/// `strategies::close_iteration`).
+#[derive(Debug, Clone, Copy)]
+pub struct IterationParts {
+    pub iter: SimTime,
+    /// Communication completion relative to the job's offset.
+    pub comm: SimTime,
+    /// Dilated compute (stretch + runtime tax applied), µs.
+    pub compute_us: f64,
+    /// Critical host-staging share charged to the compute path, µs.
+    pub staging_us: f64,
+    /// Synchronization skew + jitter, µs.
+    pub skew_us: f64,
+}
+
+impl IterationParts {
+    /// A bare engine run with no closing formula (e.g. the `graph`
+    /// subcommand): the "iteration" is the communication itself.
+    pub fn comm_only(end: SimTime) -> IterationParts {
+        IterationParts { iter: end, comm: end, compute_us: 0.0, staging_us: 0.0, skew_us: 0.0 }
+    }
+}
+
+/// One critical-path bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PathBucket {
+    pub label: &'static str,
+    pub time: SimTime,
+}
+
+/// Per-resource attribution row: service ledger ([`ServiceStats`]
+/// (super::engine::ServiceStats) via the engine) + span-derived waits.
+#[derive(Debug, Clone)]
+pub struct ResourceRow {
+    pub name: String,
+    pub kind: SpanKind,
+    pub served: u64,
+    pub busy: SimTime,
+    pub idle: SimTime,
+    pub queue_wait: SimTime,
+    pub wait_hist: [u64; HIST_BUCKETS],
+}
+
+/// The attribution report of one traced run (attached to
+/// `IterationReport::trace`).
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub iter: SimTime,
+    /// Last walkable span completion (the communication end).
+    pub comm_end: SimTime,
+    pub spans: usize,
+    pub engine_events: u64,
+    pub queue_peak: usize,
+    /// Buckets summing to `iter` exactly.
+    pub critical_path: Vec<PathBucket>,
+    /// The raw retro-walk buckets, summing to `comm_end` exactly.
+    pub comm_path: Vec<PathBucket>,
+    pub exposed_wire: SimTime,
+    pub overlapped_wire: SimTime,
+    pub resources: Vec<ResourceRow>,
+    /// Chrome trace-event document ([`TRACE_SCHEMA`]).
+    pub chrome_json: String,
+}
+
+impl TraceReport {
+    /// Human-readable attribution tables.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} spans, {} engine events, queue peak {} (iter {}, comm end {})",
+            self.spans, self.engine_events, self.queue_peak, self.iter, self.comm_end
+        );
+        let _ = writeln!(out, "critical path (sums to iteration):");
+        for b in &self.critical_path {
+            let pct = 100.0 * b.time.as_us() / self.iter.as_us().max(1e-9);
+            let _ = writeln!(out, "  {:<12} {:>12}  {pct:5.1}%", b.label, b.time.to_string());
+        }
+        let _ = writeln!(
+            out,
+            "wire time: {} exposed past compute, {} overlapped",
+            self.exposed_wire, self.overlapped_wire
+        );
+        let _ = writeln!(
+            out,
+            "{:<20} {:>8} {:>12} {:>12} {:>12}  wait histogram (log2 us)",
+            "resource", "served", "busy", "idle", "queue-wait"
+        );
+        for r in &self.resources {
+            let hist: Vec<String> = r
+                .wait_hist
+                .iter()
+                .enumerate()
+                .filter(|&(_, &n)| n > 0)
+                .map(|(k, &n)| format!("<{}us:{n}", 1u64 << k))
+                .collect();
+            let _ = writeln!(
+                out,
+                "{:<20} {:>8} {:>12} {:>12} {:>12}  {}",
+                r.name,
+                r.served,
+                r.busy.to_string(),
+                r.idle.to_string(),
+                r.queue_wait.to_string(),
+                hist.join(" ")
+            );
+        }
+        out
+    }
+}
+
+/// Validate a Chrome trace document produced by this module: it parses,
+/// carries the schema tag, every complete event has sane fields, tracks
+/// are time-sorted, and resource-kind tracks never self-overlap.
+/// Returns the event count.
+pub fn validate_chrome_json(text: &str) -> crate::util::error::Result<usize> {
+    use crate::util::json::Json;
+    let doc = Json::parse(text).map_err(|e| crate::anyhow!("trace JSON: {e}"))?;
+    crate::ensure!(
+        doc.get("schema").and_then(Json::as_str) == Some(TRACE_SCHEMA),
+        "missing/unknown schema tag (want {TRACE_SCHEMA})"
+    );
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::anyhow!("traceEvents missing"))?;
+    // per-(pid, tid): last seen ts, and last end of a non-overlapping
+    // resource-kind span
+    let mut last_ts: HashMap<(u64, u64), f64> = HashMap::new();
+    let mut last_end: HashMap<(u64, u64), f64> = HashMap::new();
+    let serialized_kinds =
+        ["wire", "pcie", "gpu-reduce", "cpu-reduce", "driver", "launch", "sw", "other"];
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+        crate::ensure!(
+            matches!(ph, "X" | "M" | "C" | "i"),
+            "event {i}: unexpected ph `{ph}`"
+        );
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev.req_usize("pid")? as u64;
+        let tid = ev.req_usize("tid").unwrap_or(0) as u64;
+        let ts = ev.req_f64("ts")?;
+        crate::ensure!(ts >= 0.0, "event {i}: negative ts");
+        let prev = last_ts.insert((pid, tid), ts).unwrap_or(0.0);
+        crate::ensure!(
+            ts >= prev || ph == "C" || ph == "i",
+            "event {i}: track (pid {pid}, tid {tid}) not time-sorted ({ts} < {prev})"
+        );
+        if ph != "X" {
+            continue;
+        }
+        let dur = ev.req_f64("dur")?;
+        crate::ensure!(dur >= 0.0, "event {i}: negative dur");
+        let kind = ev
+            .get("args")
+            .and_then(|a| a.get("kind"))
+            .and_then(Json::as_str)
+            .unwrap_or("");
+        if serialized_kinds.contains(&kind) {
+            let end = last_end.get(&(pid, tid)).copied().unwrap_or(0.0);
+            // FIFO resources serialize: spans on one track never overlap
+            // (1ns slack for the µs decimal formatting)
+            crate::ensure!(
+                ts >= end - 0.001,
+                "event {i}: `{kind}` spans overlap on (pid {pid}, tid {tid}): {ts} < {end}"
+            );
+            last_end.insert((pid, tid), ts + dur);
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_are_log2_us() {
+        assert_eq!(hist_bucket(SimTime::ZERO), 0);
+        assert_eq!(hist_bucket(SimTime::from_us(0.5)), 0);
+        assert_eq!(hist_bucket(SimTime::from_us(1.0)), 1);
+        assert_eq!(hist_bucket(SimTime::from_us(1.9)), 1);
+        assert_eq!(hist_bucket(SimTime::from_us(2.0)), 2);
+        assert_eq!(hist_bucket(SimTime::from_us(1e9)), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn guard_scopes_enablement() {
+        assert!(!enabled());
+        {
+            let _g = TraceGuard::new();
+            assert!(enabled());
+        }
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn retro_walk_sums_to_end_and_splits_queue() {
+        // two serves back-to-back on one FIFO: [0,10] then wait 5 +
+        // serve [10,18] (arrived at 5), ending at 18
+        let mut t = Tracer::new();
+        t.name_resource(0, SpanKind::Wire, PID_ENGINE, 0, "wire");
+        t.record_serve(0, SimTime::ZERO, SimTime::ZERO, SimTime::from_us(10.0), 0.0);
+        let us = SimTime::from_us;
+        t.record_serve(0, us(5.0), us(10.0), us(18.0), 0.0);
+        let (end, buckets) = t.retro_walk();
+        assert_eq!(end, SimTime::from_us(18.0));
+        let total: u64 = buckets.iter().map(|b| b.time.0).sum();
+        assert_eq!(SimTime(total), end);
+        let wire = buckets.iter().find(|b| b.label == "wire").unwrap().time;
+        let queue = buckets.iter().find(|b| b.label == "queue").unwrap().time;
+        // walk: [10,18] wire 8 + wait 5 → arrival 5 → compute [0,5]
+        assert_eq!(wire, SimTime::from_us(8.0));
+        assert_eq!(queue, SimTime::from_us(5.0));
+        assert_eq!(
+            buckets.iter().find(|b| b.label == "compute").unwrap().time,
+            SimTime::from_us(5.0)
+        );
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_deterministic() {
+        let build = || {
+            let mut t = Tracer::new();
+            t.name_resource(0, SpanKind::Wire, pid_node(0), 0, "wire n0");
+            t.name_resource(1, SpanKind::GpuReduce, pid_rank(1), 1, "gpu-reduce r1");
+            t.record_serve(0, SimTime::ZERO, SimTime::ZERO, SimTime::from_us(3.5), 1024.0);
+            t.record_serve(
+                1,
+                SimTime::from_us(1.0),
+                SimTime::from_us(3.5),
+                SimTime::from_us(4.0),
+                0.0,
+            );
+            t.record_join(SimTime::from_us(4.0));
+            t.record_delay(0, SimTime::from_us(4.0), SimTime::from_us(6.0));
+            t.sample_depth(SimTime::ZERO, 3);
+            t.chrome_json(&IterationParts::comm_only(SimTime::from_us(6.0)))
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b, "same recording must serialize byte-identically");
+        let n = validate_chrome_json(&a).expect("valid trace");
+        assert!(n >= 6, "expected metadata + spans, got {n} events");
+    }
+
+    #[test]
+    fn validator_rejects_garbage_and_overlaps() {
+        assert!(validate_chrome_json("{").is_err());
+        assert!(validate_chrome_json("{\"traceEvents\":[]}").is_err(), "schema tag required");
+        let overlap = format!(
+            "{{\"schema\":\"{TRACE_SCHEMA}\",\"traceEvents\":[\
+             {{\"name\":\"a\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":0.0,\"dur\":10.0,\
+              \"args\":{{\"kind\":\"wire\"}}}},\
+             {{\"name\":\"b\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":5.0,\"dur\":10.0,\
+              \"args\":{{\"kind\":\"wire\"}}}}]}}"
+        );
+        assert!(validate_chrome_json(&overlap).is_err(), "overlapping wire spans must fail");
+    }
+}

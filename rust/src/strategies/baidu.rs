@@ -153,7 +153,7 @@ impl Baidu {
         let items = self.graph_items(ws, sc)?;
         let job = LaneJob::graphs(&mut e, &res, sc.lanes(), items, SimTime::ZERO);
         e.run();
-        let iter = super::close_iteration(
+        let parts = super::close_iteration_parts(
             ws,
             sc,
             &job.trace(&e)?,
@@ -161,14 +161,8 @@ impl Baidu {
             self.runtime_tax,
             self.skew_us_per_rank,
         );
-        Ok(super::report_with_comm_thread(
-            self.name(),
-            ws,
-            iter,
-            res.utilization(&e),
-            &e,
-            job.set(),
-        ))
+        let util = res.utilization(&e);
+        Ok(super::report_with_comm_thread(self.name(), ws, parts, util, &mut e, job.set()))
     }
 
     /// Schedule one Baidu job's communication onto an engine: the
@@ -240,7 +234,7 @@ impl Strategy for Baidu {
         let res = CommResources::install(&mut e);
         let job = self.schedule_job(ws, sc, &mut e, res)?;
         e.run();
-        let iter = super::close_iteration(
+        let parts = super::close_iteration_parts(
             ws,
             sc,
             &job.trace(&e)?,
@@ -248,14 +242,8 @@ impl Strategy for Baidu {
             self.runtime_tax,
             self.skew_us_per_rank,
         );
-        Ok(super::report_with_comm_thread(
-            self.name(),
-            ws,
-            iter,
-            res.utilization(&e),
-            &e,
-            job.set(),
-        ))
+        let util = res.utilization(&e);
+        Ok(super::report_with_comm_thread(self.name(), ws, parts, util, &mut e, job.set()))
     }
 }
 

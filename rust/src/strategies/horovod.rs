@@ -251,7 +251,19 @@ impl Horovod {
         trace: &JobTrace,
         offset: SimTime,
     ) -> SimTime {
-        super::close_iteration(ws, sc, trace, offset, self.runtime_tax, self.skew_us_per_rank)
+        self.close_parts(ws, sc, trace, offset).iter
+    }
+
+    /// [`Horovod::close_job`] keeping the closing formula's terms for
+    /// the trace attribution report (§Observability).
+    pub(crate) fn close_parts(
+        &self,
+        ws: &WorldSpec,
+        sc: &Scenario,
+        trace: &JobTrace,
+        offset: SimTime,
+    ) -> crate::sim::IterationParts {
+        super::close_iteration_parts(ws, sc, trace, offset, self.runtime_tax, self.skew_us_per_rank)
     }
 
     /// The iteration's fused buffers as cached graph templates plus
@@ -332,15 +344,9 @@ impl Horovod {
         let items = self.graph_items(ws, sc)?;
         let job = LaneJob::graphs(&mut e, &res, sc.lanes(), items, SimTime::ZERO);
         e.run();
-        let iter = self.close_job(ws, sc, &job.trace(&e)?, SimTime::ZERO);
-        Ok(super::report_with_comm_thread(
-            self.name(),
-            ws,
-            iter,
-            res.utilization(&e),
-            &e,
-            job.set(),
-        ))
+        let parts = self.close_parts(ws, sc, &job.trace(&e)?, SimTime::ZERO);
+        let util = res.utilization(&e);
+        Ok(super::report_with_comm_thread(self.name(), ws, parts, util, &mut e, job.set()))
     }
 }
 
@@ -381,15 +387,9 @@ impl Strategy for Horovod {
         let res = CommResources::install(&mut e);
         let job = self.schedule_job(ws, sc, &mut e, res)?;
         e.run();
-        let iter = self.close_job(ws, sc, &job.trace(&e)?, SimTime::ZERO);
-        Ok(super::report_with_comm_thread(
-            self.name(),
-            ws,
-            iter,
-            res.utilization(&e),
-            &e,
-            job.set(),
-        ))
+        let parts = self.close_parts(ws, sc, &job.trace(&e)?, SimTime::ZERO);
+        let util = res.utilization(&e);
+        Ok(super::report_with_comm_thread(self.name(), ws, parts, util, &mut e, job.set()))
     }
 }
 

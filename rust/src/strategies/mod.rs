@@ -40,7 +40,9 @@ use crate::cluster::ClusterSpec;
 use crate::comm::graph::{GraphOverlay, GraphResMap, GraphResources, GraphTemplate};
 use crate::comm::ResourceUse;
 use crate::models::ModelProfile;
-use crate::sim::{Engine, LaneDriver, LaneSetId, ProgStep, ProgramLanes, SimTime};
+use crate::sim::{
+    Engine, IterationParts, LaneDriver, LaneSetId, ProgStep, ProgramLanes, SimTime, TraceReport,
+};
 use crate::util::error::Result;
 
 /// One experiment point.
@@ -107,6 +109,10 @@ pub struct IterationReport {
     /// Events the engine executed to produce `iter` (0 for analytic
     /// shortcuts like world=1) — the §Perf events/s numerator.
     pub engine_events: u64,
+    /// The attribution report of a traced run (§Observability) — `None`
+    /// unless tracing was enabled around the engine run.  `Arc` keeps the
+    /// report `Clone`/`Send` for the threaded sweep drivers.
+    pub trace: Option<Arc<TraceReport>>,
 }
 
 impl IterationReport {
@@ -123,6 +129,15 @@ impl IterationReport {
             scaling_efficiency: imgs / ideal,
             resource_util: Vec::new(),
             engine_events: 0,
+            trace: None,
+        }
+    }
+
+    /// Detach a traced engine's recorder and fold it into the report.
+    /// No-op (and allocation-free) when the engine was not tracing.
+    pub(crate) fn attach_trace(&mut self, e: &mut Engine, parts: IterationParts) {
+        if let Some(t) = e.take_trace() {
+            self.trace = Some(Arc::new(t.into_report(e, parts)));
         }
     }
 }
@@ -265,20 +280,21 @@ impl LaneJob {
 pub(crate) fn report_with_comm_thread(
     name: String,
     ws: &WorldSpec,
-    iter: SimTime,
+    parts: IterationParts,
     util: Vec<ResourceUse>,
-    e: &Engine,
+    e: &mut Engine,
     set: LaneSetId,
 ) -> IterationReport {
-    let mut report = IterationReport::from_times(name, ws, iter);
+    let mut report = IterationReport::from_times(name, ws, parts.iter);
     report.resource_util = util;
     report.engine_events = e.executed();
-    let (launches, busy) = e.lane_stats(set);
+    let stats = e.lane_stats(set);
     report.resource_util.push(ResourceUse {
         name: "comm-thread".to_string(),
-        served: launches,
-        busy,
+        served: stats.served,
+        busy: stats.busy,
     });
+    report.attach_trace(e, parts);
     report
 }
 
@@ -294,13 +310,35 @@ pub(crate) fn close_iteration(
     runtime_tax: f64,
     skew_us_per_rank: f64,
 ) -> SimTime {
+    close_iteration_parts(ws, sc, trace, offset, runtime_tax, skew_us_per_rank).iter
+}
+
+/// [`close_iteration`], keeping the formula's terms: the trace
+/// attribution report (§Observability) composes the critical path from
+/// exactly the quantities the closing formula combined, so the path
+/// buckets sum to the iteration time instead of to an approximation.
+pub(crate) fn close_iteration_parts(
+    ws: &WorldSpec,
+    sc: &Scenario,
+    trace: &JobTrace,
+    offset: SimTime,
+    runtime_tax: f64,
+    skew_us_per_rank: f64,
+) -> IterationParts {
     let p = ws.world as f64;
     let dilated = ws.compute_time().as_us()
         * sc.compute_stretch()
         * (1.0 + runtime_tax * (1.0 - 1.0 / p));
     let skew = skew_us_per_rank * p + sc.sync_jitter_us(ws.world);
-    let comm = trace.comm_end.saturating_sub(offset).as_us();
-    SimTime::from_us(comm.max(dilated + trace.staging_us) + skew)
+    let comm = trace.comm_end.saturating_sub(offset);
+    let iter = SimTime::from_us(comm.as_us().max(dilated + trace.staging_us) + skew);
+    IterationParts {
+        iter,
+        comm,
+        compute_us: dilated,
+        staging_us: trace.staging_us,
+        skew_us: skew,
+    }
 }
 
 /// Object-safe strategy interface — what the bench harness iterates over.

@@ -215,6 +215,15 @@ impl PsStrategy {
         let single = self.single_thread_worker;
         let worker_tx: Option<Vec<ResourceId>> =
             single.then(|| (0..w_count).map(|_| e.unit_resource()).collect());
+        if e.tracing() {
+            if let Some(tx) = &worker_tx {
+                use crate::sim::trace::pid_rank;
+                for (w, &r) in tx.iter().enumerate() {
+                    let name = format!("worker-tx r{w}");
+                    e.trace_resource(r, crate::sim::SpanKind::Sw, pid_rank(w), w as u32, &name);
+                }
+            }
+        }
         // µs it takes a PS CPU to aggregate W gradients and apply the
         // update (TF variable ops run single-threaded per variable, but
         // vectorized — ~8 GB/s of aggregated gradient data).
@@ -355,6 +364,17 @@ impl PsFabric {
             (0..nodes * place.rails).map(|_| e.unit_resource()).collect();
         let out_ports: Vec<ResourceId> =
             (0..nodes * place.rails).map(|_| e.unit_resource()).collect();
+        if e.tracing() {
+            use crate::sim::trace::pid_node;
+            use crate::sim::SpanKind;
+            for (dir, ports) in [("ps-in", &in_ports), ("ps-out", &out_ports)] {
+                for (i, &r) in ports.iter().enumerate() {
+                    let (node, rail) = (i / place.rails, i % place.rails);
+                    let name = format!("{dir} n{node} rail{rail}");
+                    e.trace_resource(r, SpanKind::Wire, pid_node(node), node as u32, &name);
+                }
+            }
+        }
         let port = |s: usize| place.node_of(s) * place.rails + place.rail_of(s);
         PsFabric {
             ingress: (0..ps_count).map(|s| in_ports[port(s)]).collect(),
@@ -435,7 +455,7 @@ impl Strategy for PsStrategy {
         let job = self.schedule_job(ws, sc, &mut engine, &fabric, SimTime::ZERO)?;
         engine.run();
         let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
-        let iter = super::close_iteration(
+        let parts = super::close_iteration_parts(
             ws,
             sc,
             &trace,
@@ -443,13 +463,14 @@ impl Strategy for PsStrategy {
             self.runtime_tax,
             self.skew_us_per_rank,
         );
-        let mut report = IterationReport::from_times(self.name(), ws, iter);
+        let mut report = IterationReport::from_times(self.name(), ws, parts.iter);
         report.engine_events = engine.executed();
         report.resource_util.push(agg_util(&engine, fabric.in_ports(), "ps-nic-in"));
         report.resource_util.push(agg_util(&engine, fabric.out_ports(), "ps-nic-out"));
         if let Some(tx) = &job.worker_tx {
             report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
         }
+        report.attach_trace(&mut engine, parts);
         Ok(report)
     }
 }

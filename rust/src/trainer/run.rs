@@ -46,6 +46,9 @@ pub struct TrainConfig {
     /// fault-tolerance story).
     pub checkpoint_every: usize,
     pub checkpoint_path: Option<PathBuf>,
+    /// Write a Chrome trace of one simulated comm iteration here after
+    /// training (§Observability); `None` keeps the tracer detached.
+    pub trace_path: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -61,6 +64,7 @@ impl Default for TrainConfig {
             log_every: 10,
             checkpoint_every: 0,
             checkpoint_path: None,
+            trace_path: None,
         }
     }
 }
@@ -218,6 +222,29 @@ impl Trainer {
                     .save(path)?;
                 }
             }
+        }
+
+        // §Observability: re-run one simulated iteration of the comm
+        // strategy this run modeled, tracer attached, and export the
+        // Chrome timeline.  The traced engine is a fresh observer run —
+        // it never touches the training state or the virtual clock above.
+        if let Some(path) = &self.cfg.trace_path {
+            crate::ensure!(
+                self.cfg.world >= 2,
+                "--trace needs --world >= 2 (a single rank runs no collective)"
+            );
+            use crate::strategies::Strategy as _;
+            let strat = crate::strategies::Horovod::mpi(self.cfg.flavor);
+            let report = {
+                let _t = crate::sim::TraceGuard::new();
+                strat.iteration_in(&ws, &crate::strategies::Scenario::default())?
+            };
+            let trace = report
+                .trace
+                .context("traced iteration attached no trace (tracer disabled?)")?;
+            std::fs::write(path, &trace.chrome_json)
+                .context(format!("writing trace to {}", path.display()))?;
+            crate::log_info!("wrote comm-iteration trace to {}", path.display());
         }
 
         Ok(TrainResult {

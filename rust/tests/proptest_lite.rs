@@ -655,9 +655,9 @@ fn prop_single_stream_equals_gated_path() {
             let end = e.run();
             let stats: Vec<_> =
                 all_resources(&res).into_iter().map(|r| e.resource_stats(r)).collect();
-            let (grants, busy) = e.gate_stats(gate);
-            assert_eq!(grants as usize, items.len(), "case {case}: oracle grants");
-            (end, (*comm_end.borrow(), busy), stats)
+            let gs = e.gate_stats(gate);
+            assert_eq!(gs.served as usize, items.len(), "case {case}: oracle grants");
+            (end, (*comm_end.borrow(), gs.busy), stats)
         };
 
         // (b) the stream-lane path at streams = 1
@@ -674,9 +674,9 @@ fn prop_single_stream_equals_gated_path() {
             assert_eq!(e.lane_completed(set), items.len(), "case {case}: lane completions");
             let stats: Vec<_> =
                 all_resources(&res).into_iter().map(|r| e.resource_stats(r)).collect();
-            let (launches, busy) = e.lane_stats(set);
-            assert_eq!(launches as usize, items.len(), "case {case}: lane launches");
-            (end, (e.lane_last_done(set), busy), stats)
+            let ls = e.lane_stats(set);
+            assert_eq!(ls.served as usize, items.len(), "case {case}: lane launches");
+            (end, (e.lane_last_done(set), ls.busy), stats)
         };
 
         assert_eq!(end_g, end_l, "case {case} (p={p}, gpn={gpn}): end diverged");
@@ -932,5 +932,46 @@ fn prop_sym_plan_replays_full_template_bitwise() {
         // non-power-of-two RHD worlds
         assert!(sym_allreduce_plan(algo, p, &steps, Placement::new(2, 1)).is_none());
         assert!(sym_allreduce_plan(Algo::Rhd, 6, &steps, Placement::one_per_node()).is_none());
+    }
+}
+
+/// prop: attaching the span tracer is observationally free — the traced
+/// run's iteration report (times, event counts, per-resource ledger) is
+/// bit-identical to the untraced run across random worlds, scenarios,
+/// placements and stream counts (§Observability overhead contract; the
+/// tracer is thread-local, so the guard scopes this test's thread only).
+#[test]
+fn prop_tracing_is_observationally_free() {
+    use mpi_dnn_train::comm::MpiFlavor;
+    use mpi_dnn_train::models::{mobilenet, resnet};
+    use mpi_dnn_train::sim::TraceGuard;
+    use mpi_dnn_train::strategies::{Horovod, Scenario, Strategy, WorldSpec};
+    for case in 0u64..20 {
+        let mut rng = Rng::new(0x0B5E + case);
+        let world = 2 + rng.next_below(15) as usize;
+        let mut cluster = presets::ri2();
+        cluster.gpus_per_node = 1 + rng.next_below(2) as usize;
+        cluster.nic_rails = 1;
+        let model = if case % 2 == 0 { resnet::resnet50() } else { mobilenet::mobilenet_v1() };
+        let sc = Scenario {
+            straggler_ranks: rng.next_below(2) as usize,
+            straggler_factor: 1.25 + rng.next_f64(),
+            jitter_us: 50.0 * rng.next_below(2) as f64,
+            seed: case,
+            streams: 1 + rng.next_below(3) as usize,
+            ..Scenario::default()
+        };
+        let ws = WorldSpec::new(cluster, model, world);
+        let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let plain = h.iteration_in(&ws, &sc).unwrap();
+        let traced = {
+            let _t = TraceGuard::new();
+            h.iteration_in(&ws, &sc).unwrap()
+        };
+        assert_eq!(plain.iter, traced.iter, "case {case}: iteration time diverged");
+        assert_eq!(plain.engine_events, traced.engine_events, "case {case}: events diverged");
+        assert_eq!(plain.resource_util, traced.resource_util, "case {case}: ledger diverged");
+        assert!(plain.trace.is_none(), "case {case}: untraced run attached a trace");
+        assert!(traced.trace.is_some(), "case {case}: traced run attached none");
     }
 }

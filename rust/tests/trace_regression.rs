@@ -1,0 +1,159 @@
+//! §Observability regression pins: the span tracer is a pure observer
+//! (tracing on ≡ tracing off, bit for bit), its Chrome export is
+//! deterministic and schema-valid, and the critical-path attribution
+//! buckets account for the iteration time exactly.
+//!
+//! The headline configuration mirrors the acceptance scenario: traced
+//! ResNet-50 Horovod-MPI-Opt at a non-trivial placement (2 GPUs/node)
+//! with 2 comm streams under a straggler perturbation — the per-rank
+//! graph path, stream lanes, shared node NIC/PCIe bundles and gates all
+//! active at once.
+
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::MpiFlavor;
+use mpi_dnn_train::models::resnet;
+use mpi_dnn_train::sim::trace::validate_chrome_json;
+use mpi_dnn_train::sim::{SimTime, SpanKind, TraceGuard, TraceReport};
+use mpi_dnn_train::strategies::{
+    Horovod, IterationReport, PsStrategy, Scenario, Strategy, WorldSpec,
+};
+
+fn headline_ws() -> WorldSpec {
+    let mut cluster = presets::ri2();
+    cluster.gpus_per_node = 2;
+    cluster.nic_rails = 1;
+    WorldSpec::new(cluster, resnet::resnet50(), 8)
+}
+
+fn headline_sc() -> Scenario {
+    Scenario { streams: 2, ..Scenario::straggler(1, 1.5) }
+}
+
+fn traced_headline() -> IterationReport {
+    let _t = TraceGuard::new();
+    Horovod::mpi(MpiFlavor::Mvapich2GdrOpt).iteration_in(&headline_ws(), &headline_sc()).unwrap()
+}
+
+fn trace_of(r: &IterationReport) -> &TraceReport {
+    r.trace.as_deref().expect("traced run must attach a TraceReport")
+}
+
+fn path_sum(buckets: &[mpi_dnn_train::sim::PathBucket]) -> SimTime {
+    SimTime(buckets.iter().map(|b| b.time.0).sum())
+}
+
+#[test]
+fn tracing_off_is_bit_identical_to_tracing_on() {
+    let ws = headline_ws();
+    let sc = headline_sc();
+    let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+    let plain = h.iteration_in(&ws, &sc).unwrap();
+    let traced = traced_headline();
+    assert!(plain.trace.is_none(), "untraced run must not attach a trace");
+    assert_eq!(plain.iter, traced.iter, "iteration time diverged under tracing");
+    assert_eq!(plain.exposed_comm, traced.exposed_comm);
+    assert_eq!(plain.engine_events, traced.engine_events, "event count diverged");
+    assert_eq!(plain.resource_util, traced.resource_util, "resource ledger diverged");
+}
+
+#[test]
+fn traced_runs_export_byte_identical_valid_chrome_json() {
+    let a = traced_headline();
+    let b = traced_headline();
+    let (ta, tb) = (trace_of(&a), trace_of(&b));
+    assert!(ta.spans > 0, "headline run must record spans");
+    assert_eq!(ta.chrome_json, tb.chrome_json, "trace export must be deterministic");
+    let events = validate_chrome_json(&ta.chrome_json).expect("export must validate");
+    assert!(events > ta.spans, "metadata + spans expected, got {events} events");
+}
+
+#[test]
+fn critical_path_buckets_sum_to_iteration_exactly() {
+    let r = traced_headline();
+    let t = trace_of(&r);
+    assert_eq!(path_sum(&t.critical_path), t.iter, "critical path must account for iter");
+    assert_eq!(t.iter, r.iter, "report and trace disagree on the iteration time");
+    assert_eq!(path_sum(&t.comm_path), t.comm_end, "raw walk must account for comm end");
+    // the straggled graph path's critical chain crosses wire transfers
+    assert!(
+        t.comm_path.iter().any(|b| b.label == "wire" && b.time > SimTime::ZERO),
+        "expected a nonzero `wire` bucket, got {:?}",
+        t.comm_path
+    );
+}
+
+#[test]
+fn wire_split_is_consistent_with_the_ledger_and_report() {
+    let r = traced_headline();
+    let t = trace_of(&r);
+    // exposed + overlapped partitions total wire busy time (per span,
+    // against the compute window) — cross-checked against the engine's
+    // own service ledger for the wire rows
+    let wire_busy: u64 = t
+        .resources
+        .iter()
+        .filter(|row| row.kind == SpanKind::Wire)
+        .map(|row| row.busy.0)
+        .sum();
+    assert_eq!(
+        t.exposed_wire + t.overlapped_wire,
+        SimTime(wire_busy),
+        "wire split must partition the wire rows' busy time"
+    );
+    assert!(t.overlapped_wire > SimTime::ZERO, "streams=2 should overlap some wire time");
+    // wire time exposed past the compute window implies the iteration
+    // report exposes communication too
+    if t.exposed_wire > SimTime::ZERO {
+        assert!(r.exposed_comm > SimTime::ZERO, "exposed wire but no exposed comm");
+    }
+}
+
+#[test]
+fn resource_rows_carry_waits_and_histograms() {
+    let r = traced_headline();
+    let t = trace_of(&r);
+    assert!(!t.resources.is_empty());
+    for row in &t.resources {
+        assert!(row.served > 0, "{}: report filters idle rows", row.name);
+        let hist_total: u64 = row.wait_hist.iter().sum();
+        assert_eq!(
+            hist_total, row.served,
+            "{}: every serve lands in exactly one wait bucket",
+            row.name
+        );
+        assert_eq!(row.idle, t.iter.saturating_sub(row.busy), "{}: idle = iter - busy", row.name);
+    }
+    // shared node ports queue co-located ranks: some wait must show up
+    let total_wait: u64 = t.resources.iter().map(|row| row.queue_wait.0).sum();
+    assert!(total_wait > 0, "dense placement should produce queue waits");
+    let render = t.render();
+    assert!(render.contains("critical path"), "render mentions the path:\n{render}");
+}
+
+#[test]
+fn serialized_path_and_ps_family_attach_summing_traces() {
+    // neutral scenario at streams=1 rides the serialized CommOp replay;
+    // the PS fan-in family runs its own graph path — both must attach a
+    // trace whose buckets account for the iteration exactly
+    let ws = headline_ws();
+    for strat in [
+        Box::new(Horovod::mpi(MpiFlavor::Mvapich2GdrOpt)) as Box<dyn Strategy>,
+        Box::new(PsStrategy::grpc_mpi()),
+    ] {
+        let r = {
+            let _t = TraceGuard::new();
+            strat.iteration_in(&ws, &Scenario::default()).unwrap()
+        };
+        let t = trace_of(&r);
+        assert!(t.spans > 0, "{}: no spans recorded", r.strategy);
+        assert_eq!(
+            path_sum(&t.critical_path),
+            t.iter,
+            "{}: critical path must sum to iter",
+            r.strategy
+        );
+        assert_eq!(path_sum(&t.comm_path), t.comm_end, "{}: raw walk sum", r.strategy);
+        validate_chrome_json(&t.chrome_json)
+            .unwrap_or_else(|e| panic!("{}: invalid export: {e}", r.strategy));
+    }
+}
