@@ -403,6 +403,174 @@ pub fn scenario_two_jobs(
     Ok(t)
 }
 
+/// §Robustness comparison: every strategy running one fault-injected
+/// iteration (crash, link flap, rail failure, straggler-death — whatever
+/// the scenario's `FaultPlan` schedules) next to its fault-free baseline
+/// — the table behind `mpi-dnn-train scenario fault`.  Goodput charges
+/// the recovery gap *and* the lost work to the surviving world's step.
+pub fn fault_compare(
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    world: usize,
+    sc: &crate::strategies::Scenario,
+) -> Result<Table> {
+    let cluster_name = cluster.name;
+    let title = format!(
+        "Scenario: injected faults ({}, {cluster_name}@{world})",
+        model.name
+    );
+    let ws = WorldSpec::new(cluster, model, world);
+    // fail loudly on an invalid plan instead of emitting an all-"n/a"
+    // table (each strategy would reject it row by row)
+    sc.fault.validate(ws.world, &ws.cluster.placement())?;
+    let strategies = crate::strategies::all_strategies();
+    let mut t = Table::new(
+        &title,
+        &[
+            "strategy",
+            "img/s",
+            "goodput",
+            "detect",
+            "recover",
+            "lost work",
+            "retries",
+            "world after",
+        ],
+    );
+    let rows = par_map_ordered(strategies.iter(), |s| {
+        // unavailable / failing strategies keep their row with "n/a"
+        // cells, same convention as the figure sweeps
+        match (s.iteration(&ws), s.iteration_in(&ws, sc)) {
+            (Ok(base), Ok(pert)) => {
+                let f = pert.fault.expect("non-empty fault plan attaches a FaultReport");
+                vec![
+                    s.name(),
+                    format!("{:.0}", base.imgs_per_sec),
+                    format!("{:.0}", f.goodput_imgs_per_sec),
+                    format!("{}", f.detect),
+                    format!("{}", f.recover),
+                    format!("{}", f.lost_work),
+                    f.retries.to_string(),
+                    f.surviving_world.to_string(),
+                ]
+            }
+            _ => {
+                let mut row = vec![s.name(), "n/a".into(), "n/a".into()];
+                row.extend(["-", "-", "-", "-", "-"].map(String::from));
+                row
+            }
+        }
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(format!("plan: {:?}", sc.fault.events));
+    t.note(format!(
+        "knobs: detect {:.0}us, backoff {:.0}us x{:.1} over {} retries, rebuild {:.0}us, \
+         checkpoint {}",
+        sc.fault.detect_timeout_us,
+        sc.fault.backoff_base_us,
+        sc.fault.backoff_factor,
+        sc.fault.max_retries,
+        sc.fault.rebuild_us,
+        if sc.fault.checkpoint_period_us > 0.0 {
+            format!("every {:.0}us", sc.fault.checkpoint_period_us)
+        } else {
+            "off".into()
+        },
+    ));
+    Ok(t)
+}
+
+/// §Robustness sweep: seeded failure-rate × world grid on the cluster's
+/// default Horovod variant — the table behind `mpi-dnn-train scenario
+/// faults`.  Each grid point draws its own deterministic
+/// [`FaultPlan::seeded_crash`] with the crash window set to the point's
+/// fault-free iteration time, so the injected instant always lands
+/// mid-iteration; same `(world, rate, seed)` ⇒ same table, bit-for-bit.
+pub fn fault_sweep(
+    cluster: crate::cluster::ClusterSpec,
+    model: ModelProfile,
+    max_world: usize,
+    seed: u64,
+    knobs: &crate::sim::FaultPlan,
+) -> Result<Table> {
+    use crate::sim::FaultPlan;
+    use crate::strategies::Scenario;
+    let mut worlds = vec![4usize];
+    while *worlds.last().unwrap() * 2 <= max_world.max(4) {
+        let next = worlds.last().unwrap() * 2;
+        worlds.push(next);
+    }
+    let rates = [0.0f64, 0.25, 0.5, 1.0];
+    let grid: Vec<(usize, f64)> =
+        worlds.iter().flat_map(|&w| rates.iter().map(move |&r| (w, r))).collect();
+    let cluster_name = cluster.name;
+    let mut t = Table::new(
+        &format!(
+            "Fault sweep: seeded rank crashes, {} on {cluster_name} (failure rate × world)",
+            model.name
+        ),
+        &["world", "rate", "crash", "img/s", "goodput", "recover", "lost work"],
+    );
+    let rows = par_map_ordered(grid, |(world, rate)| {
+        let h = default_horovod(&cluster);
+        let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+        let base = match h.iteration(&ws) {
+            Ok(b) => b,
+            Err(_) => {
+                let mut row = vec![world.to_string(), format!("{rate:.2}")];
+                row.extend(["-", "n/a", "n/a", "-", "-"].map(String::from));
+                return row;
+            }
+        };
+        // the drawn events ride the sweep's shared recovery knobs
+        let drawn = FaultPlan::seeded_crash(world, rate, base.iter.as_us(), seed);
+        let plan = FaultPlan { events: drawn.events, ..knobs.clone() };
+        if plan.is_empty() {
+            return vec![
+                world.to_string(),
+                format!("{rate:.2}"),
+                "none".into(),
+                format!("{:.0}", base.imgs_per_sec),
+                format!("{:.0}", base.imgs_per_sec),
+                "-".into(),
+                "-".into(),
+            ];
+        }
+        let crash = plan.first_crash().expect("seeded plans only draw crashes");
+        match h.iteration_in(&ws, &Scenario::with_fault(plan)) {
+            Ok(r) => {
+                let f = r.fault.expect("non-empty fault plan attaches a FaultReport");
+                vec![
+                    world.to_string(),
+                    format!("{rate:.2}"),
+                    format!("r{}@{}", crash.1, crash.0),
+                    format!("{:.0}", base.imgs_per_sec),
+                    format!("{:.0}", f.goodput_imgs_per_sec),
+                    format!("{}", f.recover),
+                    format!("{}", f.lost_work),
+                ]
+            }
+            Err(_) => {
+                let mut row =
+                    vec![world.to_string(), format!("{rate:.2}"), format!("r{}", crash.1)];
+                row.extend(["n/a", "n/a", "-", "-"].map(String::from));
+                row
+            }
+        }
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t.note(format!(
+        "seed {seed}: each point draws one crash with probability = rate, uniformly in the \
+         middle 80% of its fault-free iteration; recovery = detect -> backoff -> elastic \
+         rebuild over world-1 (deterministic — same seed, same table)"
+    ));
+    Ok(t)
+}
+
 /// Placement sweep: one (cluster, model, world) point across node
 /// densities and NIC rail counts — the paper's 1-GPU-per-node layout vs
 /// dense nodes whose co-located ranks share a NIC/PCIe bundle vs dense
@@ -677,6 +845,46 @@ mod tests {
         // idle rails (rails > gpus/node) are a request mistake
         assert!(placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 2, 4).is_err());
         assert!(placement_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 4, 1, 2).is_err());
+    }
+
+    #[test]
+    fn fault_compare_reports_recovery_for_every_family() {
+        use crate::sim::FaultPlan;
+        use crate::strategies::Scenario;
+        let sc = Scenario::with_fault(FaultPlan::crash(1, 800.0));
+        let t = fault_compare(presets::ri2(), mobilenet::mobilenet_v1(), 4, &sc).unwrap();
+        assert_eq!(t.rows.len(), crate::strategies::all_strategies().len());
+        for row in &t.rows {
+            if row[1] == "n/a" {
+                continue; // family unavailable on this fabric
+            }
+            assert_eq!(row[7], "3", "{}: a 4-rank crash leaves 3 survivors", row[0]);
+            let base: f64 = row[1].parse().unwrap();
+            let goodput: f64 = row[2].parse().unwrap();
+            assert!(
+                goodput < base,
+                "{}: recovery + lost work must cost throughput ({goodput} vs {base})",
+                row[0]
+            );
+        }
+    }
+
+    #[test]
+    fn fault_sweep_is_deterministic_and_rate_gated() {
+        use crate::sim::FaultPlan;
+        let knobs = FaultPlan::default();
+        let t = fault_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 8, 42, &knobs).unwrap();
+        assert_eq!(t.rows.len(), 8, "worlds [4, 8] x 4 rates");
+        for row in &t.rows {
+            match row[1].as_str() {
+                "0.00" => assert_eq!(row[2], "none", "rate 0 never injects"),
+                "1.00" => assert_ne!(row[2], "none", "rate 1 always injects"),
+                _ => {}
+            }
+        }
+        let again =
+            fault_sweep(presets::ri2(), mobilenet::mobilenet_v1(), 8, 42, &knobs).unwrap();
+        assert_eq!(t.rows, again.rows, "same seed must reproduce the sweep bit-for-bit");
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //!    template path (cold build on the first pass, warm replays through
 //!    the strategy's [`TemplateCache`] after), so all three strategy
 //!    families appear in the bench file.
+//!  * `fault-sweep` — fault-injected Horovod iterations (§Robustness): a
+//!    mid-iteration rank crash per point drives abort, timeout/backoff
+//!    accounting and the elastic rebuild over world−1 — tracks the
+//!    recovery runner's cost across PRs.
 //!
 //! `run_scale_sweep` (the `perf scale-sweep` subcommand) pushes the
 //! event core to fleet worlds — 256 → 16k ranks over ring, RHD and PS
@@ -63,7 +67,7 @@ use crate::comm::graph::{
 };
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::models::mobilenet;
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, FaultPlan, SimTime};
 use crate::strategies::{Horovod, PsStrategy, Scenario, Strategy, WorldSpec};
 use crate::util::error::Result;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -358,6 +362,39 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
         ),
         ps_passes * ps_worlds.len(),
         || match ps_sweep() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
+    // --- 8. fault-injected recovery: abort + elastic rebuild ------------
+    let fault_worlds: &[usize] = if quick { &[8] } else { &[16, 32] };
+    let fault_sweep = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..passes {
+            for &world in fault_worlds {
+                let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+                // a mid-iteration crash: phase 1 runs to the abort, then
+                // detect -> backoff -> rebuild -> phase 2 over world−1
+                let sc = Scenario::with_fault(FaultPlan::crash(1, 500.0));
+                events += h.iteration_in(&ws, &sc)?.engine_events;
+            }
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "fault-sweep",
+        format!(
+            "Horovod-MPI MobileNet pizdaint@{fault_worlds:?} × {passes} passes, rank crash at \
+             500us (abort + elastic rebuild over world−1)"
+        ),
+        passes * fault_worlds.len(),
+        || match fault_sweep() {
             Ok(ev) => ev,
             Err(e) => {
                 failed = Err(e);
@@ -693,7 +730,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 8);
+        assert_eq!(ws.len(), 9);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -729,8 +766,11 @@ mod tests {
         assert!(ws.iter().any(|w| w.name == "ps-fanin"));
         // the overhead-contract guard is on the board
         assert!(ws.iter().any(|w| w.name == "tracer-off"));
+        // the recovery runner is on the board
+        let fault = ws.iter().find(|w| w.name == "fault-sweep").unwrap();
+        assert!(fault.events > 0, "fault sweep scheduled no events");
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 8);
+        assert_eq!(t.rows.len(), 9);
         let j = perf_json(&ws, "quick");
         assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(BENCH_SCHEMA));
         let quick_rows = j
@@ -739,7 +779,7 @@ mod tests {
             .and_then(|m| m.get("workloads"))
             .and_then(|w| w.as_arr())
             .map(|a| a.len());
-        assert_eq!(quick_rows, Some(8));
+        assert_eq!(quick_rows, Some(9));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::util::error::{Context, Result};
 use super::toml_lite::{parse_toml, TomlDoc};
 use crate::cluster::{presets, ClusterSpec};
 use crate::models::{self, ModelProfile};
+use crate::sim::FaultPlan;
 use crate::strategies::Scenario;
 
 /// One experiment: a cluster, a workload, a strategy set and a GPU sweep.
@@ -99,12 +100,11 @@ impl ExperimentConfig {
                 // 2^64-lane allocation
                 streams: 1,
                 depth: 0,
+                fault: FaultPlan::default(),
             };
-            // §Overlap knobs: streams opens the interleaved regime,
-            // depth caps in-flight collectives.  Same inert-knob policy
-            // as the factors below — a depth without streams > 1 (or
-            // deeper than the lanes it caps) would silently change
-            // nothing.
+            // §Overlap knobs — raw negative-int checks must run BEFORE
+            // the usize casts; every shared range/consistency rule runs
+            // once in `Scenario::validate` below
             let streams_raw = sc.get("streams").and_then(|v| v.as_int()).unwrap_or(1);
             crate::ensure!(
                 streams_raw >= 1,
@@ -114,65 +114,6 @@ impl ExperimentConfig {
             let depth_raw = sc.get("depth").and_then(|v| v.as_int()).unwrap_or(0);
             crate::ensure!(depth_raw >= 0, "[scenario] depth must be >= 0, got {depth_raw}");
             scenario.depth = depth_raw as usize;
-            if scenario.depth > 0 {
-                crate::ensure!(
-                    scenario.streams > 1,
-                    "[scenario] depth requires streams > 1 (one stream is always depth 1)"
-                );
-                crate::ensure!(
-                    scenario.depth <= scenario.streams,
-                    "[scenario] depth = {} exceeds streams = {}: each lane holds one \
-                     collective, the extra depth would be idle",
-                    scenario.depth,
-                    scenario.streams
-                );
-            }
-            // the two-job link-share tables run their own fixed
-            // comparison and do not consume the overlap knobs — same
-            // rejection the CLI's `scenario two-jobs` applies, so the
-            // co-tenant tables can never print serialized-baseline
-            // numbers under an overlap-configured experiment
-            crate::ensure!(
-                !(scenario.second_job && (scenario.streams > 1 || scenario.depth > 0)),
-                "[scenario] streams/depth are not consumed by the second_job link-share \
-                 tables — drop second_job or the overlap knobs"
-            );
-            crate::ensure!(
-                (0.0..=crate::strategies::scenario::MAX_LINK_LOAD)
-                    .contains(&scenario.link_load),
-                "[scenario] link_load must be in [0, {}], got {}",
-                crate::strategies::scenario::MAX_LINK_LOAD,
-                scenario.link_load
-            );
-            // an inert knob combination is a config mistake — reject it
-            // rather than reporting pristine numbers under a scenario
-            // label: factors need ranks, ranks need a factor that
-            // actually slows something (> 1.0; sub-1.0 "stragglers"
-            // cannot speed a synchronous job up and would silently no-op)
-            for (what, ranks, factor) in [
-                ("straggler", scenario.straggler_ranks, scenario.straggler_factor),
-                ("hetero", scenario.hetero_ranks, scenario.hetero_factor),
-            ] {
-                if ranks > 0 {
-                    crate::ensure!(
-                        factor.is_finite() && factor > 1.0,
-                        "[scenario] {what}_factor must be > 1.0 when {what}_ranks is set, got {factor}"
-                    );
-                } else {
-                    crate::ensure!(
-                        factor == 1.0,
-                        "[scenario] {what}_factor requires {what}_ranks"
-                    );
-                }
-            }
-            crate::ensure!(
-                scenario.second_job || scenario.second_job_offset_us == 0.0,
-                "[scenario] second_job_offset_us requires second_job = true"
-            );
-            crate::ensure!(
-                scenario.second_job_offset_us >= 0.0,
-                "[scenario] second_job_offset_us must be >= 0"
-            );
             // placement keys ride the [scenario] table: they reshape the
             // cluster the whole sweep runs on — dense nodes colocate
             // ranks on shared NIC/PCIe bundles, rails split the node NIC
@@ -195,6 +136,37 @@ impl ExperimentConfig {
                 cluster.gpus_per_node
             );
         }
+        // optional [scenario.fault] table (§Robustness): the injected
+        // failure schedule (CLI spec grammar) plus detection/recovery
+        // knobs — parse before the shared validation pass
+        if let Some(ft) = doc.get("scenario.fault") {
+            if let Some(events) = ft.get("events").and_then(|v| v.as_array()) {
+                let specs: Vec<&str> = events.iter().filter_map(|x| x.as_str()).collect();
+                crate::ensure!(
+                    specs.len() == events.len(),
+                    "[scenario.fault] events must be spec strings \
+                     (crash@T:rN | die@T:rNxF | flap@T:nN.lR+D | raildown@T:nN.lR)"
+                );
+                if !specs.is_empty() {
+                    scenario.fault = FaultPlan::parse_spec(&specs.join(";"))?;
+                }
+            }
+            let f = |key: &str, or: f64| ft.get(key).and_then(|v| v.as_float()).unwrap_or(or);
+            scenario.fault.detect_timeout_us =
+                f("detect_timeout_us", scenario.fault.detect_timeout_us);
+            scenario.fault.backoff_base_us = f("backoff_base_us", scenario.fault.backoff_base_us);
+            scenario.fault.backoff_factor = f("backoff_factor", scenario.fault.backoff_factor);
+            scenario.fault.rebuild_us = f("rebuild_us", scenario.fault.rebuild_us);
+            scenario.fault.checkpoint_period_us =
+                f("checkpoint_period_us", scenario.fault.checkpoint_period_us);
+            if let Some(r) = ft.get("max_retries").and_then(|v| v.as_int()) {
+                crate::ensure!(r >= 0, "[scenario.fault] max_retries must be >= 0, got {r}");
+                scenario.fault.max_retries = r as u32;
+            }
+        }
+        // one shared validation pass — the same `Scenario::validate` the
+        // CLI flags and the bench sweeps run (§Robustness satellite)
+        scenario.validate()?;
         // worlds validate against the (possibly densified) machine
         for &g in &gpus {
             cluster.check_world(g)?;
@@ -375,6 +347,42 @@ depth = 2
         );
         assert!(parse("[workload]\n[scenario]\nhetero_ranks = 1\nhetero_factor = 1.0").is_err());
         assert!(parse("[workload]\n[scenario]\nstraggler_factor = 1.5").is_err());
+    }
+
+    #[test]
+    fn scenario_fault_table_parses_and_validates() {
+        let c = parse(
+            r#"
+[workload]
+model = "resnet50"
+gpus = [8]
+
+[scenario.fault]
+events = ["crash@1500:r3", "flap@200:n0.l0+350"]
+detect_timeout_us = 500.0
+backoff_base_us = 100.0
+backoff_factor = 2.0
+max_retries = 4
+rebuild_us = 1000.0
+checkpoint_period_us = 2000.0
+"#,
+        )
+        .unwrap();
+        let fp = &c.scenario.fault;
+        assert_eq!(fp.events.len(), 2);
+        assert!((fp.detect_timeout_us - 500.0).abs() < 1e-12);
+        assert_eq!(fp.max_retries, 4);
+        assert!((fp.checkpoint_period_us - 2000.0).abs() < 1e-12);
+        // knobs without events leave the plan empty (inert knobs are
+        // allowed here — the sweep surfaces inject their own events)
+        let d = parse("[workload]\n[scenario.fault]\ndetect_timeout_us = 50.0").unwrap();
+        assert!(d.scenario.fault.is_empty());
+        assert!((d.scenario.fault.detect_timeout_us - 50.0).abs() < 1e-12);
+        // bad specs and degenerate knobs are config errors
+        assert!(parse("[workload]\n[scenario.fault]\nevents = [\"reboot@1:r0\"]").is_err());
+        assert!(parse("[workload]\n[scenario.fault]\nbackoff_factor = 0.5").is_err());
+        assert!(parse("[workload]\n[scenario.fault]\nmax_retries = -1").is_err());
+        assert!(parse("[workload]\n[scenario.fault]\nmax_retries = 99").is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! mpi-dnn-train scenario two-jobs --cluster pizdaint --world 64 --model mobilenet --family ps
 //! mpi-dnn-train scenario placement --cluster owens --world 16 --gpus-per-node 4 --rails 2
 //! mpi-dnn-train scenario overlap --cluster pizdaint --world 64 --model mobilenet --streams 8
+//! mpi-dnn-train scenario fault --world 8 --fault "crash@1500:r3" --trace recovery.json
+//! mpi-dnn-train scenario faults --cluster owens --world 16 --seed 7   # rate × world sweep
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
 //! mpi-dnn-train trace --strategy horovod-mpi-opt --world 8 --streams 2 --out trace.json
@@ -282,6 +284,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
+    use mpi_dnn_train::sim::FaultPlan;
     use mpi_dnn_train::strategies::Scenario;
     let kind = args.positional.first().map(String::as_str).unwrap_or("straggler");
     let mut cluster = presets::by_name(&args.get_or("cluster", "owens"))?;
@@ -312,6 +315,42 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         Some(_) => Some(args.get_usize("rails", 1).map_err(Error::msg)?),
         None => None,
     };
+    // §Robustness knobs: `--fault SPEC` schedules injected failures for
+    // the `fault` kind; the recovery-cost flags ride both fault kinds
+    // (`faults` seeds its own crash draws but honors the shared knobs).
+    let fault_spec = args.get("fault").map(String::from);
+    let fault_knob_given = [
+        "fault-timeout-us",
+        "fault-backoff-us",
+        "fault-backoff-factor",
+        "fault-retries",
+        "rebuild-us",
+        "checkpoint-us",
+    ]
+    .iter()
+    .any(|k| args.get(k).is_some());
+    let knobs = {
+        let d = FaultPlan::default();
+        FaultPlan {
+            events: Vec::new(),
+            detect_timeout_us: args
+                .get_f64("fault-timeout-us", d.detect_timeout_us)
+                .map_err(Error::msg)?,
+            backoff_base_us: args
+                .get_f64("fault-backoff-us", d.backoff_base_us)
+                .map_err(Error::msg)?,
+            backoff_factor: args
+                .get_f64("fault-backoff-factor", d.backoff_factor)
+                .map_err(Error::msg)?,
+            max_retries: args
+                .get_usize("fault-retries", d.max_retries as usize)
+                .map_err(Error::msg)? as u32,
+            rebuild_us: args.get_f64("rebuild-us", d.rebuild_us).map_err(Error::msg)?,
+            checkpoint_period_us: args
+                .get_f64("checkpoint-us", d.checkpoint_period_us)
+                .map_err(Error::msg)?,
+        }
+    };
     // §Observability: after the comparison table, re-run the scenario's
     // horovod-mpi-opt point with the span tracer attached and write the
     // Chrome timeline here (the table itself runs untraced, as always).
@@ -319,9 +358,25 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     args.reject_unknown().map_err(Error::msg)?;
     if trace_flag.is_some() {
         mpi_dnn_train::ensure!(
-            !matches!(kind, "two-jobs" | "placement"),
-            "--trace works with straggler | hetero | jitter | link-load | overlap (the \
+            !matches!(kind, "two-jobs" | "placement" | "faults"),
+            "--trace works with straggler | hetero | jitter | link-load | overlap | fault (the \
              {kind} comparison has no single traced iteration)"
+        );
+    }
+    // same inert-knob policy as --streams/--depth below: fault flags on a
+    // kind that never reads them would silently report fault-free numbers
+    if !matches!(kind, "fault" | "faults") {
+        mpi_dnn_train::ensure!(
+            fault_spec.is_none() && !fault_knob_given,
+            "--fault and the fault knobs are only consumed by `scenario fault` / \
+             `scenario faults`"
+        );
+    }
+    if kind == "faults" {
+        mpi_dnn_train::ensure!(
+            fault_spec.is_none(),
+            "`scenario faults` draws its own seeded crashes — use `scenario fault` to \
+             inject an explicit --fault schedule"
         );
     }
     for (name, v) in [("--gpus-per-node", gpn_flag), ("--rails", rails_flag)] {
@@ -329,28 +384,16 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             mpi_dnn_train::ensure!(v >= 1, "{name} must be >= 1, got {v}");
         }
     }
-    mpi_dnn_train::ensure!(streams >= 1, "--streams must be >= 1, got {streams}");
-    // the two-jobs and placement kinds run their own fixed comparisons
-    // and do not consume the overlap knobs — accepting them silently
-    // would report serialized-baseline numbers under an overlap label
-    // (the same inert-knob policy the `[scenario]` table enforces)
-    if matches!(kind, "two-jobs" | "placement") {
+    // the two-jobs / placement / faults kinds run their own fixed
+    // comparisons and do not consume the overlap knobs — accepting them
+    // silently would report serialized-baseline numbers under an overlap
+    // label (the same inert-knob policy the `[scenario]` table enforces)
+    if matches!(kind, "two-jobs" | "placement" | "faults") {
         mpi_dnn_train::ensure!(
             streams == 1 && depth == 0,
             "--streams/--depth are not consumed by `scenario {kind}` — use them with \
-             straggler | hetero | jitter | link-load, or sweep them via `scenario overlap`"
-        );
-    }
-    if depth > 0 && kind != "overlap" {
-        // same inert-knob policy as the `[scenario]` config table
-        mpi_dnn_train::ensure!(
-            streams > 1,
-            "--depth requires --streams > 1 (one stream is always depth 1)"
-        );
-        mpi_dnn_train::ensure!(
-            depth <= streams,
-            "--depth {depth} exceeds --streams {streams}: each lane holds one collective, \
-             the extra depth would be idle"
+             straggler | hetero | jitter | link-load | fault, or sweep them via \
+             `scenario overlap`"
         );
     }
     if kind == "placement" {
@@ -379,14 +422,6 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         cluster.gpus_per_node
     );
 
-    if matches!(kind, "straggler" | "hetero") {
-        // a sub-1.0 factor is inert (the unperturbed ranks still pace the
-        // job) — reject it rather than printing 1.00x "slowdowns"
-        mpi_dnn_train::ensure!(
-            factor.is_finite() && factor > 1.0,
-            "--factor must be > 1.0 for a {kind} scenario, got {factor}"
-        );
-    }
     // cloned only when a traced re-run follows the table (the bench
     // calls consume `cluster`/`model`); the Scenario each arm records is
     // exactly the one its table ran
@@ -413,6 +448,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::straggler(ranks, factor)
             };
+            sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
@@ -433,6 +469,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::hetero(ranks, factor)
             };
+            sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
@@ -454,6 +491,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 depth,
                 ..Scenario::default()
             };
+            sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
@@ -467,13 +505,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             )?
         }
         "link-load" => {
-            // same validity rule as the `[scenario]` config table
-            use mpi_dnn_train::strategies::scenario::MAX_LINK_LOAD;
-            mpi_dnn_train::ensure!(
-                (0.0..=MAX_LINK_LOAD).contains(&load),
-                "--load must be in [0, {MAX_LINK_LOAD}], got {load}"
-            );
             let sc = Scenario { streams, depth, ..Scenario::link_loaded(load) };
+            sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::scenario_compare(
                 &format!(
@@ -486,10 +519,21 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 &sc,
             )?
         }
+        "fault" => {
+            let spec = fault_spec.as_deref().context(
+                "scenario fault needs --fault \"crash@T:rN; flap@T:nN.lR+D; ...\" (see `list`)",
+            )?;
+            let fault = FaultPlan { events: FaultPlan::parse_spec(spec)?.events, ..knobs.clone() };
+            let sc = Scenario { streams, depth, fault, ..Scenario::default() };
+            sc.validate()?;
+            traced_sc = Some(sc.clone());
+            bench::fault_compare(cluster, model, world, &sc)?
+        }
+        "faults" => bench::fault_sweep(cluster, model, world, seed, &knobs)?,
         "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset, &family)?,
         other => mpi_dnn_train::bail!(
             "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs | \
-             placement | overlap)"
+             placement | overlap | fault | faults)"
         ),
     };
     emit(&table, json);
@@ -506,6 +550,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             report.trace.context("traced iteration attached no trace (tracer detached?)")?;
         std::fs::write(&path, &trace.chrome_json).context(format!("writing {path}"))?;
         println!("{}", trace.render());
+        if let Some(f) = report.fault {
+            println!(
+                "fault: failed at {}, detected +{}, recovered +{} ({} retries), lost work {}, \
+                 surviving world {}, goodput {:.0} img/s",
+                f.failed_at,
+                f.detect,
+                f.recover,
+                f.retries,
+                f.lost_work,
+                f.surviving_world,
+                f.goodput_imgs_per_sec
+            );
+        }
         println!("wrote {path} (horovod-mpi-opt, the traced point of this scenario)");
     }
     Ok(())
@@ -857,7 +914,14 @@ fn cmd_list(args: &Args) -> Result<()> {
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
         "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps], \
-         placement, overlap (see `scenario --help` flags)"
+         placement, overlap, fault, faults (see `scenario --help` flags)"
+    );
+    println!(
+        "faults: `scenario fault --fault SPEC` injects a schedule — SPEC is `;`-separated \
+         events: crash@T:rN (rank N dies at T us), die@T:rNxF (straggler ×F then dies), \
+         flap@T:nN.lR+D (port node N rail R dark D us), raildown@T:nN.lR (rail failover); \
+         knobs: --fault-timeout-us --fault-backoff-us --fault-backoff-factor --fault-retries \
+         --rebuild-us --checkpoint-us; `scenario faults` sweeps seeded crashes over rate × world"
     );
     println!(
         "overlap: every scenario accepts --streams N --depth D (N > 1 interleaves fusion \

@@ -164,6 +164,22 @@ impl<T> CalendarQueue<T> {
         self.peak_len = self.peak_len.max(self.len);
     }
 
+    /// Drop every queued entry (the fault-injection cut: abandoned
+    /// events of an aborted timeline).  The window, granularity and
+    /// peak-length ledger survive — only the entries go, so the queue
+    /// keeps its tuned shape for the recovery phase that follows.
+    pub fn clear(&mut self) {
+        self.active.clear();
+        if self.in_buckets > 0 {
+            for b in &mut self.buckets {
+                b.clear();
+            }
+            self.in_buckets = 0;
+        }
+        self.overflow.clear();
+        self.len = 0;
+    }
+
     /// Remove and return the minimum entry by `(at, seq)`.
     pub fn pop(&mut self) -> Option<(SimTime, u64, T)> {
         if self.active.is_empty() && !self.refill() {
@@ -336,6 +352,24 @@ mod tests {
         }
         let order: Vec<u64> = drain(&mut q).into_iter().map(|(_, s, _)| s).collect();
         assert_eq!(order, vec![0, 2, 5, 9]);
+    }
+
+    #[test]
+    fn clear_empties_queue_but_keeps_peak_and_stays_usable() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime(1000), 0, 0);
+        q.push(SimTime(5000), 1, 1);
+        // overflow population too
+        q.push(SimTime(10u64 << (INIT_SHIFT + 14)), 2, 2);
+        assert_eq!(q.pop().map(|(t, ..)| t.0), Some(1000));
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.pop().map(|(t, ..)| t.0), None);
+        assert_eq!(q.peak_len(), 3, "the high-water ledger survives a clear");
+        // the queue stays fully usable after the cut
+        q.push(SimTime(7000), 3, 3);
+        q.push(SimTime(6000), 4, 4);
+        assert_eq!(drain(&mut q), vec![(6000, 4, 4), (7000, 3, 3)]);
     }
 
     #[test]

@@ -67,6 +67,11 @@ enum EventKind {
     LaneArrive { set: u32, job: u32 },
     /// A stream-lane job's launch turn: dispatch into the set's driver.
     LaneLaunch { set: u32, job: u32 },
+    /// A cancellable timer firing.  Unlike `Prog`, a stale generation is
+    /// *not* a bug: it is the tombstone of an O(1) [`Engine::cancel_timer`]
+    /// (the calendar queue has no removal, so cancelled timers are
+    /// discarded at pop time instead).
+    Timer { slot: u32, gen: u32 },
 }
 
 /// Handle to a FIFO-serialized resource.
@@ -132,6 +137,33 @@ struct JoinState {
     gen: u32,
     remaining: usize,
     action: Option<OnDone>,
+}
+
+/// Handle to a cancellable timer (see [`Engine::timer_at`]).  Generational
+/// like [`JoinId`]: slots recycle after firing or cancellation, and a
+/// stale handle cancels nothing (returns `false`) instead of corrupting
+/// an unrelated timer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId {
+    slot: u32,
+    gen: u32,
+}
+
+/// A pending timer: the action to run at the deadline (or `None` for a
+/// pure occupancy completion, see [`Engine::hold`]).
+struct TimerState {
+    gen: u32,
+    action: Option<OnDone>,
+}
+
+/// Handle to an in-flight op program (see [`Engine::run_program_shifted`]).
+/// Generational: once the program completes (or its abort drains), the
+/// slot recycles and the handle goes stale — [`Engine::abort_program`] on
+/// a stale handle is a no-op returning `false`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProgId {
+    slot: u32,
+    gen: u32,
 }
 
 /// A typed completion: either a boxed callback (the general case) or a
@@ -260,6 +292,11 @@ struct ProgState {
     offset: u32,
     steps: Rc<[ProgStep]>,
     done: Option<OnDone>,
+    /// Abort tombstone ([`Engine::abort_program`]): the next program
+    /// event drains the slot without firing `done` or occupying anything
+    /// further.  The in-flight step finishes service first — occupancy
+    /// is non-preemptive FIFO.
+    cancelled: bool,
 }
 
 /// Discrete-event engine with a virtual clock.
@@ -276,6 +313,11 @@ pub struct Engine {
     prog_free: Vec<u32>,
     lanes: Vec<LaneSetState>,
     hooks: Vec<Rc<dyn EngineHook>>,
+    timers: Vec<TimerState>,
+    timer_free: Vec<u32>,
+    /// One event popped past a [`Engine::run_until`] deadline, replayed
+    /// by the next run call (the calendar queue has no peek).
+    stashed: Option<(SimTime, u64, EventKind)>,
     executed: u64,
     /// The optional span recorder (§Observability).  `None` in normal
     /// runs: every instrumentation point is one branch on this option,
@@ -358,6 +400,7 @@ impl Engine {
             + self.progs.capacity() * size_of::<ProgState>()
             + self.gates.capacity() * size_of::<GateState>()
             + self.lanes.capacity() * size_of::<LaneSetState>()
+            + self.timers.capacity() * size_of::<TimerState>()
     }
 
     /// The allocation-free scheduling primitive every typed path uses.
@@ -394,30 +437,82 @@ impl Engine {
         self.at(self.now + dt, action);
     }
 
-    /// Run until the event queue drains; returns the final clock.
-    pub fn run(&mut self) -> SimTime {
-        while let Some((at, _seq, kind)) = self.queue.pop() {
-            self.now = at;
-            self.executed += 1;
-            match kind {
-                EventKind::Call(action) => action(self),
-                EventKind::FireJoin(j) => self.fire_join(j),
-                EventKind::Grant(g) => self.fire_grant(g),
-                EventKind::Prog { slot, gen } => {
-                    // a real assert (one u32 compare): a stale handle must
-                    // be a detected bug in release builds too, never a
-                    // silently-advanced recycled program
-                    assert_eq!(self.progs[slot as usize].gen, gen, "stale program event");
-                    self.advance_program(slot);
-                }
-                EventKind::LaneArrive { set, job } => self.lane_arrive(set as usize, job),
-                EventKind::LaneLaunch { set, job } => {
-                    let driver = self.lanes[set as usize].driver.clone();
-                    driver.launch(self, LaneSetId(set as usize), job);
+    /// The next event to execute: the [`Engine::run_until`] stash first,
+    /// then the calendar queue.
+    fn next_event(&mut self) -> Option<(SimTime, u64, EventKind)> {
+        self.stashed.take().or_else(|| self.queue.pop())
+    }
+
+    fn dispatch(&mut self, kind: EventKind) {
+        match kind {
+            EventKind::Call(action) => action(self),
+            EventKind::FireJoin(j) => self.fire_join(j),
+            EventKind::Grant(g) => self.fire_grant(g),
+            EventKind::Prog { slot, gen } => {
+                // a real assert (one u32 compare): a stale handle must
+                // be a detected bug in release builds too, never a
+                // silently-advanced recycled program
+                assert_eq!(self.progs[slot as usize].gen, gen, "stale program event");
+                self.advance_program(slot);
+            }
+            EventKind::LaneArrive { set, job } => self.lane_arrive(set as usize, job),
+            EventKind::LaneLaunch { set, job } => {
+                let driver = self.lanes[set as usize].driver.clone();
+                driver.launch(self, LaneSetId(set as usize), job);
+            }
+            EventKind::Timer { slot, gen } => {
+                let st = &mut self.timers[slot as usize];
+                // stale generation = a cancelled timer's tombstone: skip
+                if st.gen == gen {
+                    let action = st.action.take();
+                    st.gen = st.gen.wrapping_add(1);
+                    self.timer_free.push(slot);
+                    if let Some(a) = action {
+                        a.run(self);
+                    }
                 }
             }
         }
+    }
+
+    /// Run until the event queue drains; returns the final clock.
+    pub fn run(&mut self) -> SimTime {
+        while let Some((at, _seq, kind)) = self.next_event() {
+            self.now = at;
+            self.executed += 1;
+            self.dispatch(kind);
+        }
         self.now
+    }
+
+    /// Run until the event queue drains *or* the next event lies past
+    /// `deadline` — that event is stashed and replayed by the next
+    /// run call, so pausing is exact and order-preserving.  The clock
+    /// advances to `deadline` (the fault-injection cut point) even when
+    /// the queue drains early.  Returns the clock.
+    pub fn run_until(&mut self, deadline: SimTime) -> SimTime {
+        while let Some((at, seq, kind)) = self.next_event() {
+            if at > deadline {
+                self.stashed = Some((at, seq, kind));
+                break;
+            }
+            self.now = at;
+            self.executed += 1;
+            self.dispatch(kind);
+        }
+        self.now = self.now.max(deadline);
+        self.now
+    }
+
+    /// Drop every pending event (including the [`Engine::run_until`]
+    /// stash).  This is the fault cut: in-flight programs, joins and
+    /// timers whose events are dropped simply never advance — their
+    /// slots are abandoned, which is fine for the remainder of one
+    /// iteration.  Ledgers (busy time, served counts) keep what already
+    /// happened.
+    pub fn clear_pending(&mut self) {
+        self.stashed = None;
+        self.queue.clear();
     }
 
     /// Define a FIFO resource with service rate `bytes_per_us` and fixed
@@ -502,20 +597,20 @@ impl Engine {
     /// exactly the old closure-chain `replay` semantics, with one typed
     /// `Copy` event per step instead of one boxed closure per step.  An
     /// empty program runs `done` immediately.
-    pub fn run_program(&mut self, steps: Rc<[ProgStep]>, done: Action) {
-        self.run_program_with(steps, OnDone::Call(done));
+    pub fn run_program(&mut self, steps: Rc<[ProgStep]>, done: Action) -> ProgId {
+        self.run_program_with(steps, OnDone::Call(done))
     }
 
     /// [`Engine::run_program`] with a typed lane completion: the program
     /// IS lane job `job` of `set`, and finishing it hands the lane back
     /// ([`Engine::lane_done`]) without a boxed closure.
-    pub fn run_program_lane(&mut self, steps: Rc<[ProgStep]>, set: LaneSetId, job: u32) {
-        self.run_program_with(steps, OnDone::Lane(set, job));
+    pub fn run_program_lane(&mut self, steps: Rc<[ProgStep]>, set: LaneSetId, job: u32) -> ProgId {
+        self.run_program_with(steps, OnDone::Lane(set, job))
     }
 
     /// Run an op program with an arbitrary typed completion.
-    pub fn run_program_with(&mut self, steps: Rc<[ProgStep]>, done: OnDone) {
-        self.run_program_shifted(steps, 0, done);
+    pub fn run_program_with(&mut self, steps: Rc<[ProgStep]>, done: OnDone) -> ProgId {
+        self.run_program_shifted(steps, 0, done)
     }
 
     /// [`Engine::run_program_with`] through a *rank-offset view* (§Scale):
@@ -525,7 +620,10 @@ impl Engine {
     /// resources and replays them for rank `r` with `offset = r` — valid
     /// because [`GraphResources`](crate::comm::GraphResources) installs
     /// each resource kind as one contiguous per-rank run.
-    pub fn run_program_shifted(&mut self, steps: Rc<[ProgStep]>, offset: u32, done: OnDone) {
+    /// Returns a [`ProgId`] usable with [`Engine::abort_program`]; for a
+    /// program that completes synchronously (empty step list) the handle
+    /// is already stale by the time it is returned.
+    pub fn run_program_shifted(&mut self, steps: Rc<[ProgStep]>, offset: u32, done: OnDone) -> ProgId {
         let slot = match self.prog_free.pop() {
             Some(s) => {
                 let st = &mut self.progs[s as usize];
@@ -533,17 +631,51 @@ impl Engine {
                 st.next = 0;
                 st.offset = offset;
                 st.done = Some(done);
+                st.cancelled = false;
                 s
             }
             None => {
-                self.progs.push(ProgState { gen: 0, next: 0, offset, steps, done: Some(done) });
+                self.progs.push(ProgState {
+                    gen: 0,
+                    next: 0,
+                    offset,
+                    steps,
+                    done: Some(done),
+                    cancelled: false,
+                });
                 (self.progs.len() - 1) as u32
             }
         };
+        let id = ProgId { slot, gen: self.progs[slot as usize].gen };
         self.advance_program(slot);
+        id
+    }
+
+    /// Abort an in-flight program: its current step finishes service
+    /// (occupancy is non-preemptive FIFO), then the slot drains and
+    /// recycles *without* firing `done` and without occupying anything
+    /// further — the refund of the not-yet-enqueued remainder.  Stale
+    /// handles (program already completed) return `false`.
+    pub fn abort_program(&mut self, p: ProgId) -> bool {
+        let st = &mut self.progs[p.slot as usize];
+        if st.gen != p.gen {
+            return false;
+        }
+        st.cancelled = true;
+        true
     }
 
     fn advance_program(&mut self, slot: u32) {
+        if self.progs[slot as usize].cancelled {
+            // abort drain: recycle the slot, never fire `done`
+            let st = &mut self.progs[slot as usize];
+            st.cancelled = false;
+            st.done = None;
+            st.steps = Vec::new().into();
+            st.gen = st.gen.wrapping_add(1);
+            self.prog_free.push(slot);
+            return;
+        }
         let next = {
             let st = &mut self.progs[slot as usize];
             let i = st.next as usize;
@@ -855,6 +987,103 @@ impl Engine {
             t.record_join(now);
         }
         action.run(self);
+    }
+
+    /// Arm a cancellable timer: `action` runs at absolute time `at`
+    /// unless [`Engine::cancel_timer`] is called first.  This is the
+    /// deadline-watchdog primitive: arm one next to a `serve`/join, run
+    /// the failure handler when it fires, cancel it from the completion
+    /// path when the guarded work finishes in time.
+    pub fn timer_at(&mut self, at: SimTime, action: OnDone) -> TimerId {
+        let id = self.timer_slot(Some(action));
+        self.push_event(at, EventKind::Timer { slot: id.slot, gen: id.gen });
+        id
+    }
+
+    /// [`Engine::timer_at`] with a plain closure.
+    pub fn watchdog(
+        &mut self,
+        at: SimTime,
+        action: impl FnOnce(&mut Engine) + 'static,
+    ) -> TimerId {
+        self.timer_at(at, OnDone::Call(Box::new(action)))
+    }
+
+    fn timer_slot(&mut self, action: Option<OnDone>) -> TimerId {
+        match self.timer_free.pop() {
+            Some(slot) => {
+                let st = &mut self.timers[slot as usize];
+                st.action = action;
+                TimerId { slot, gen: st.gen }
+            }
+            None => {
+                self.timers.push(TimerState { gen: 0, action });
+                TimerId { slot: (self.timers.len() - 1) as u32, gen: 0 }
+            }
+        }
+    }
+
+    /// Cancel a pending timer in O(1): the action is dropped now and the
+    /// already-queued event becomes a tombstone, discarded at pop time
+    /// (the calendar queue has no removal).  Returns `false` if the
+    /// timer already fired or was already cancelled.
+    pub fn cancel_timer(&mut self, t: TimerId) -> bool {
+        let st = &mut self.timers[t.slot as usize];
+        if st.gen != t.gen {
+            return false;
+        }
+        st.action = None;
+        st.gen = st.gen.wrapping_add(1);
+        self.timer_free.push(t.slot);
+        true
+    }
+
+    /// Occupy resource `r` for `dur` with no completion action — an
+    /// exogenous outage window (a link flap): the port is FIFO-busy for
+    /// the window, so in-flight and queued transfers stall behind it.
+    pub fn hold(&mut self, r: ResourceId, dur: SimTime) {
+        let id = self.timer_slot(None);
+        self.occupy(r, dur, 0.0, EventKind::Timer { slot: id.slot, gen: id.gen });
+    }
+
+    /// Abort a lane set: drop every released-but-unlaunched job, close
+    /// the busy ledger of lanes whose in-flight job is being abandoned,
+    /// and zero the in-flight count so a later submission wave (the
+    /// post-recovery restart) launches cleanly.  Completed counts keep
+    /// what actually finished — the restart-from-last-completed-buffer
+    /// cursor reads [`Engine::lane_completed`] after this.
+    pub fn lane_abort(&mut self, set: LaneSetId) {
+        let now = self.now;
+        let st = &mut self.lanes[set.0];
+        for q in &mut st.pending {
+            q.clear();
+        }
+        for lane in 0..st.width {
+            if st.lane_busy[lane] {
+                st.lane_busy[lane] = false;
+                st.busy_time += now.saturating_sub(st.lane_acquired[lane]);
+            }
+        }
+        st.in_flight = 0;
+    }
+
+    /// Drop recorded trace spans ending after `at` (no-op when tracing
+    /// is off).  The fault cut's trace counterpart: activity that the
+    /// aborted timeline would have completed after the failure instant
+    /// never happened.
+    pub fn trace_truncate(&mut self, at: SimTime) {
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.truncate(at);
+        }
+    }
+
+    /// Record a recovery interval `[t0, t1]` of `kind` (fault detection,
+    /// backoff wait, template rebuild) on the engine's recovery track.
+    /// No-op when tracing is off.
+    pub fn trace_mark(&mut self, kind: SpanKind, t0: SimTime, t1: SimTime) {
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.record_mark(kind, t0, t1);
+        }
     }
 
     /// When would a `bytes` request complete if enqueued now (without
@@ -1376,6 +1605,172 @@ mod tests {
         e.run();
         assert_eq!(e.queue_peak(), 5);
         assert!(e.approx_slab_bytes() > 0);
+    }
+
+    #[test]
+    fn timer_fires_at_deadline() {
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(Vec::new()));
+        let f = fired.clone();
+        e.watchdog(SimTime::from_us(7.0), move |e| f.borrow_mut().push(e.now().as_us()));
+        e.run();
+        assert_eq!(*fired.borrow(), vec![7.0]);
+    }
+
+    #[test]
+    fn cancelled_timer_never_fires() {
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(false));
+        let f = fired.clone();
+        let t = e.watchdog(SimTime::from_us(7.0), move |_| *f.borrow_mut() = true);
+        assert!(e.cancel_timer(t), "pending timer cancels");
+        assert!(!e.cancel_timer(t), "second cancel is a stale no-op");
+        let end = e.run();
+        assert!(!*fired.borrow(), "cancelled watchdog must not fire");
+        // the tombstone event still pops (the queue has no removal)
+        assert_eq!(end, SimTime::from_us(7.0));
+    }
+
+    #[test]
+    fn timer_slots_recycle_with_fresh_generation() {
+        let mut e = Engine::new();
+        let t1 = e.watchdog(SimTime::from_us(1.0), |_| {});
+        e.run();
+        assert!(!e.cancel_timer(t1), "fired timer is stale");
+        let t2 = e.watchdog(SimTime::from_us(2.0), |_| {});
+        assert_eq!(e.timers.len(), 1, "the fired slot must be reused");
+        assert_ne!(t1, t2);
+        e.run();
+    }
+
+    #[test]
+    fn watchdog_cancelled_by_guarded_completion() {
+        // the deadline-watchdog idiom: a serve that finishes before the
+        // deadline cancels the watchdog from its completion path
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        let timed_out = Rc::new(RefCell::new(false));
+        let to = timed_out.clone();
+        let wd = e.watchdog(SimTime::from_us(50.0), move |_| *to.borrow_mut() = true);
+        e.serve(r, 100.0, move |e| {
+            e.cancel_timer(wd);
+        });
+        e.run();
+        assert!(!*timed_out.borrow(), "completion at 10us beats the 50us deadline");
+    }
+
+    #[test]
+    fn hold_blocks_fifo_service() {
+        // a 20us outage window queued ahead of a 10us transfer: the
+        // transfer completes at 30us instead of 10us
+        let mut e = Engine::new();
+        let r = e.resource(10.0, SimTime::ZERO);
+        e.hold(r, SimTime::from_us(20.0));
+        let done = Rc::new(RefCell::new(0.0));
+        let d = done.clone();
+        e.serve(r, 100.0, move |e| *d.borrow_mut() = e.now().as_us());
+        e.run();
+        assert!((*done.borrow() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aborted_program_drains_without_done() {
+        let mut e = Engine::new();
+        let r = e.unit_resource();
+        let fired = Rc::new(RefCell::new(false));
+        let f = fired.clone();
+        let steps: Rc<[ProgStep]> = vec![
+            ProgStep { us: 5.0, on: Some(r) },
+            ProgStep { us: 50.0, on: Some(r) },
+        ]
+        .into();
+        let p = e.run_program(steps, Box::new(move |_| *f.borrow_mut() = true));
+        assert!(e.abort_program(p), "in-flight program aborts");
+        let end = e.run();
+        assert!(!*fired.borrow(), "aborted program must not fire done");
+        // the in-flight 5us step finishes service; the 50us remainder
+        // never occupies the resource (the refund)
+        assert_eq!(end, SimTime::from_us(5.0));
+        assert_eq!(e.resource_stats(r).busy, SimTime::from_us(5.0));
+        // the slot recycled: a fresh program reuses it, abort is stale
+        assert!(!e.abort_program(p));
+        let steps2: Rc<[ProgStep]> = vec![ProgStep { us: 1.0, on: None }].into();
+        e.run_program(steps2, Box::new(|_| {}));
+        e.run();
+        assert_eq!(e.progs.len(), 1, "aborted slot must be reusable");
+    }
+
+    #[test]
+    fn abort_after_completion_is_stale() {
+        let mut e = Engine::new();
+        let steps: Rc<[ProgStep]> = vec![ProgStep { us: 1.0, on: None }].into();
+        let p = e.run_program(steps, Box::new(|_| {}));
+        e.run();
+        assert!(!e.abort_program(p), "completed program is a stale handle");
+    }
+
+    #[test]
+    fn run_until_pauses_and_resumes_exactly() {
+        let mut e = Engine::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for t in [5.0, 10.0, 15.0] {
+            let log = log.clone();
+            e.at(SimTime::from_us(t), move |e| log.borrow_mut().push(e.now().as_us()));
+        }
+        // pause between events: the 15us event is stashed, not lost
+        let paused = e.run_until(SimTime::from_us(12.0));
+        assert_eq!(paused, SimTime::from_us(12.0));
+        assert_eq!(*log.borrow(), vec![5.0, 10.0]);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(15.0));
+        assert_eq!(*log.borrow(), vec![5.0, 10.0, 15.0]);
+        assert_eq!(e.executed(), 3);
+    }
+
+    #[test]
+    fn run_until_advances_clock_past_drained_queue() {
+        let mut e = Engine::new();
+        e.at(SimTime::from_us(3.0), |_| {});
+        assert_eq!(e.run_until(SimTime::from_us(20.0)), SimTime::from_us(20.0));
+    }
+
+    #[test]
+    fn clear_pending_drops_stash_and_queue() {
+        let mut e = Engine::new();
+        let fired = Rc::new(RefCell::new(0));
+        for t in [5.0, 10.0, 15.0] {
+            let f = fired.clone();
+            e.at(SimTime::from_us(t), move |_| *f.borrow_mut() += 1);
+        }
+        e.run_until(SimTime::from_us(7.0));
+        e.clear_pending();
+        let end = e.run();
+        assert_eq!(*fired.borrow(), 1, "only the pre-cut event ran");
+        assert_eq!(end, SimTime::from_us(7.0));
+        // the engine stays usable after the cut
+        let f = fired.clone();
+        e.at(SimTime::from_us(30.0), move |_| *f.borrow_mut() += 1);
+        assert_eq!(e.run(), SimTime::from_us(30.0));
+        assert_eq!(*fired.borrow(), 2);
+    }
+
+    #[test]
+    fn lane_abort_frees_lanes_and_allows_restart() {
+        let mut e = Engine::new();
+        let set = e.lane_set(2, 2, Rc::new(DelayLanes { durs: vec![10.0; 6] }));
+        for j in 0..4 {
+            e.lane_submit(set, SimTime::ZERO, j);
+        }
+        e.run_until(SimTime::from_us(5.0));
+        e.lane_abort(set);
+        e.clear_pending();
+        assert_eq!(e.lane_completed(set), 0);
+        // restart: the remaining jobs launch on the freed lanes
+        e.lane_submit(set, SimTime::from_us(5.0), 4);
+        e.lane_submit(set, SimTime::from_us(5.0), 5);
+        let end = e.run();
+        assert_eq!(end, SimTime::from_us(15.0));
+        assert_eq!(e.lane_completed(set), 2);
     }
 
     #[test]

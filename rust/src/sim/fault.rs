@@ -1,0 +1,480 @@
+//! Deterministic fault injection (§Robustness).
+//!
+//! A [`FaultPlan`] is a *seeded, validated schedule* of injected
+//! failures — rank crashes, transient link flaps on a `(node, rail)`
+//! port, whole-rail failures with failover onto the surviving rails,
+//! stragglers that escalate to dead — plus the detection/recovery cost
+//! knobs every family shares: the failure-detection timeout, the
+//! exponential retry backoff (base, factor, bounded attempts), the
+//! template-rebuild cost of an elastic shrink, and the checkpoint
+//! period of the lost-work model.
+//!
+//! The plan is *data*, not behavior: the per-family recovery models
+//! live in `strategies::recovery` (collectives) and `strategies::ps`
+//! (RPC retry).  What lives here is the schema, its CLI/`[scenario.fault]`
+//! spec grammar, validation against a world/placement, and the seeded
+//! generator backing the `scenario faults` sweep.
+//!
+//! **Empty-plan guarantee:** a plan with no events routes every strategy
+//! through the exact pre-fault code path — zero extra events, zero extra
+//! state — so an empty `FaultPlan` is bit-identical to the plan never
+//! existing (pinned by `prop_empty_fault_plan_is_bit_identical`).
+
+use crate::cluster::Placement;
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+use crate::{anyhow, ensure};
+
+use super::time::SimTime;
+
+/// One injected failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Rank `rank` dies: its in-flight work is aborted, the collective
+    /// detects the failure after the plan's timeout and rebuilds over
+    /// the surviving world (elastic shrink to p−1); the PS family treats
+    /// it as a dead parameter server and reassigns its shards.
+    RankCrash { rank: usize },
+    /// The `(node, rail)` NIC port goes dark for `for_us`: the port is
+    /// FIFO-held for the window, stalling queued and in-flight transfers
+    /// behind it (transient — no topology change).
+    LinkFlap { node: usize, rail: usize, for_us: f64 },
+    /// The `(node, rail)` NIC port fails for the iteration: the node's
+    /// ranks fail over onto the surviving rails at degraded bandwidth
+    /// (`rails / (rails − 1)` wire-time derate — the whole-iteration
+    /// conservative model).
+    RailDown { node: usize, rail: usize },
+    /// Rank `rank` first slows by `factor` (a straggler), then dies at
+    /// the event time — the straggler-escalates-to-dead scenario.
+    StragglerDeath { rank: usize, factor: f64 },
+}
+
+/// One scheduled fault: what happens and when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Injection time, µs of virtual iteration time.
+    pub at_us: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of injected faults plus the shared
+/// detection/recovery cost knobs.  See the module docs; the defaults
+/// are deliberately round numbers in the RPC-stack regime (1 ms
+/// detection timeout, 200 µs → ×2 exponential backoff over 3 retries,
+/// 2 ms template rebuild, checkpointing off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// Failure-detection window: time from the fault instant until the
+    /// runtime declares the peer suspect, µs.
+    pub detect_timeout_us: f64,
+    /// First retry backoff wait, µs.
+    pub backoff_base_us: f64,
+    /// Multiplier between consecutive backoff waits.
+    pub backoff_factor: f64,
+    /// Bounded retry attempts before the peer is declared dead.
+    pub max_retries: u32,
+    /// Cost of rebuilding the collective template over the surviving
+    /// world (or reassigning a dead server's shards), µs.
+    pub rebuild_us: f64,
+    /// Checkpoint period, µs; 0 disables checkpointing, making the
+    /// lost work on a crash the full time since iteration start.
+    pub checkpoint_period_us: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            detect_timeout_us: 1_000.0,
+            backoff_base_us: 200.0,
+            backoff_factor: 2.0,
+            max_retries: 3,
+            rebuild_us: 2_000.0,
+            checkpoint_period_us: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// No injected faults?  The strategies branch on this *before*
+    /// touching any fault machinery — the empty-plan bit-identity
+    /// guarantee rests on it.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A plan with a single rank crash at `at_us` (the canonical
+    /// documented scenario).
+    pub fn crash(rank: usize, at_us: f64) -> FaultPlan {
+        FaultPlan {
+            events: vec![FaultEvent { at_us, kind: FaultKind::RankCrash { rank } }],
+            ..FaultPlan::default()
+        }
+    }
+
+    /// The first crash-class event (rank crash or straggler death):
+    /// `(time, dead rank, straggler factor)`.  At most one exists in a
+    /// validated plan.
+    pub fn first_crash(&self) -> Option<(SimTime, usize, Option<f64>)> {
+        self.events.iter().find_map(|e| match e.kind {
+            FaultKind::RankCrash { rank } => {
+                Some((SimTime::from_us(e.at_us), rank, None))
+            }
+            FaultKind::StragglerDeath { rank, factor } => {
+                Some((SimTime::from_us(e.at_us), rank, Some(factor)))
+            }
+            _ => None,
+        })
+    }
+
+    /// All link-flap windows: `(start, node, rail, duration)`.
+    pub fn flaps(&self) -> Vec<(SimTime, usize, usize, SimTime)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::LinkFlap { node, rail, for_us } => {
+                    Some((SimTime::from_us(e.at_us), node, rail, SimTime::from_us(for_us)))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All failed rails: `(node, rail)` (the failure time only gates
+    /// detection accounting — the failover derate is modeled for the
+    /// whole iteration, see [`FaultKind::RailDown`]).
+    pub fn rail_downs(&self) -> Vec<(usize, usize)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::RailDown { node, rail } => Some((node, rail)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total backoff wait over the bounded retries:
+    /// `Σ base·factor^i, i ∈ [0, max_retries)`, µs.
+    pub fn backoff_total_us(&self) -> f64 {
+        (0..self.max_retries)
+            .map(|i| self.backoff_base_us * self.backoff_factor.powi(i as i32))
+            .sum()
+    }
+
+    /// Lost work at a crash under the checkpoint model: time since the
+    /// last completed checkpoint (the full elapsed time when the period
+    /// is 0, i.e. checkpointing off).
+    pub fn lost_work(&self, at: SimTime) -> SimTime {
+        if self.checkpoint_period_us > 0.0 {
+            let period = SimTime::from_us(self.checkpoint_period_us);
+            SimTime(at.0 % period.0.max(1))
+        } else {
+            at
+        }
+    }
+
+    /// Validate the recovery knobs alone (surface-independent; part of
+    /// `Scenario::validate`).
+    pub fn validate_knobs(&self) -> Result<()> {
+        ensure!(
+            self.detect_timeout_us.is_finite() && self.detect_timeout_us >= 0.0,
+            "fault detect timeout must be finite and >= 0 (got {})",
+            self.detect_timeout_us
+        );
+        ensure!(
+            self.backoff_base_us.is_finite() && self.backoff_base_us >= 0.0,
+            "fault backoff base must be finite and >= 0 (got {})",
+            self.backoff_base_us
+        );
+        ensure!(
+            self.backoff_factor.is_finite() && self.backoff_factor >= 1.0,
+            "fault backoff factor must be finite and >= 1 (got {})",
+            self.backoff_factor
+        );
+        ensure!(self.max_retries <= 16, "at most 16 fault retries (got {})", self.max_retries);
+        ensure!(
+            self.rebuild_us.is_finite() && self.rebuild_us >= 0.0,
+            "fault rebuild cost must be finite and >= 0 (got {})",
+            self.rebuild_us
+        );
+        ensure!(
+            self.checkpoint_period_us.is_finite() && self.checkpoint_period_us >= 0.0,
+            "checkpoint period must be finite and >= 0 (got {})",
+            self.checkpoint_period_us
+        );
+        for e in &self.events {
+            ensure!(
+                e.at_us.is_finite() && e.at_us >= 0.0,
+                "fault event time must be finite and >= 0 (got {})",
+                e.at_us
+            );
+            match e.kind {
+                FaultKind::LinkFlap { for_us, .. } => {
+                    ensure!(
+                        for_us.is_finite() && for_us > 0.0,
+                        "link flap duration must be finite and > 0 (got {for_us})"
+                    );
+                }
+                FaultKind::StragglerDeath { factor, .. } => {
+                    ensure!(
+                        factor.is_finite() && factor > 1.0,
+                        "straggler-death factor must be > 1 (got {factor})"
+                    );
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the plan against a concrete world and placement: ranks
+    /// and `(node, rail)` ports must exist, a crash needs at least two
+    /// survivors to rebuild a collective over, a rail failure needs a
+    /// surviving rail to fail over to, and at most one crash-class event
+    /// fits in one iteration.
+    pub fn validate(&self, world: usize, place: &Placement) -> Result<()> {
+        self.validate_knobs()?;
+        let nodes = place.nodes_for(world);
+        let mut crashes = 0usize;
+        for e in &self.events {
+            match e.kind {
+                FaultKind::RankCrash { rank } | FaultKind::StragglerDeath { rank, .. } => {
+                    ensure!(rank < world, "fault rank {rank} out of world {world}");
+                    ensure!(
+                        world >= 3,
+                        "a rank crash needs world >= 3 (elastic rebuild over {} survivors)",
+                        world.saturating_sub(1)
+                    );
+                    crashes += 1;
+                }
+                FaultKind::LinkFlap { node, rail, .. } => {
+                    ensure!(node < nodes, "fault node {node} out of {nodes} nodes");
+                    ensure!(rail < place.rails, "fault rail {rail} out of {} rails", place.rails);
+                }
+                FaultKind::RailDown { node, rail } => {
+                    ensure!(node < nodes, "fault node {node} out of {nodes} nodes");
+                    ensure!(rail < place.rails, "fault rail {rail} out of {} rails", place.rails);
+                    ensure!(
+                        place.rails >= 2,
+                        "a rail failure needs >= 2 rails to fail over (got {})",
+                        place.rails
+                    );
+                }
+            }
+        }
+        ensure!(crashes <= 1, "at most one rank crash per iteration (got {crashes})");
+        Ok(())
+    }
+
+    /// Seeded crash draw for the failure-rate × world sweep: with
+    /// probability `rate` the plan contains one rank crash, uniformly
+    /// placed in the middle 80% of `horizon_us` on a uniformly drawn
+    /// rank.  Same `(world, rate, seed)` ⇒ same plan, bit-for-bit.
+    pub fn seeded_crash(world: usize, rate: f64, horizon_us: f64, seed: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_0000 ^ (world as u64).wrapping_mul(0x9E37_79B9));
+        let mut plan = FaultPlan::default();
+        if world >= 3 && rng.next_f64() < rate {
+            let rank = rng.next_below(world as u64) as usize;
+            let at_us = horizon_us * (0.1 + 0.8 * rng.next_f64());
+            plan.events.push(FaultEvent { at_us, kind: FaultKind::RankCrash { rank } });
+        }
+        plan
+    }
+
+    /// Parse a `;`-separated CLI fault spec.  Grammar (times in µs):
+    ///
+    /// ```text
+    ///   crash@T:rN            rank N dies at T
+    ///   die@T:rNxF            straggler (×F) rank N dies at T
+    ///   flap@T:nN.lR+D        port (node N, rail R) dark for D from T
+    ///   raildown@T:nN.lR      port (node N, rail R) failed (failover)
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            plan.events.push(parse_event(part)?);
+        }
+        ensure!(!plan.is_empty(), "empty fault spec `{spec}`");
+        Ok(plan)
+    }
+}
+
+fn parse_event(part: &str) -> Result<FaultEvent> {
+    let (head, rest) = part
+        .split_once('@')
+        .ok_or_else(|| anyhow!("fault event `{part}`: expected kind@time:target"))?;
+    let (at, target) = rest
+        .split_once(':')
+        .ok_or_else(|| anyhow!("fault event `{part}`: expected kind@time:target"))?;
+    let at_us: f64 =
+        at.parse().map_err(|_| anyhow!("fault event `{part}`: bad time `{at}`"))?;
+    let kind = match head {
+        "crash" => FaultKind::RankCrash { rank: parse_rank(part, target)? },
+        "die" => {
+            let (r, f) = target
+                .split_once('x')
+                .ok_or_else(|| anyhow!("fault event `{part}`: expected rNxF"))?;
+            let factor: f64 =
+                f.parse().map_err(|_| anyhow!("fault event `{part}`: bad factor `{f}`"))?;
+            FaultKind::StragglerDeath { rank: parse_rank(part, r)?, factor }
+        }
+        "flap" => {
+            let (port, dur) = target
+                .split_once('+')
+                .ok_or_else(|| anyhow!("fault event `{part}`: expected nN.lR+D"))?;
+            let (node, rail) = parse_port(part, port)?;
+            let for_us: f64 =
+                dur.parse().map_err(|_| anyhow!("fault event `{part}`: bad duration `{dur}`"))?;
+            FaultKind::LinkFlap { node, rail, for_us }
+        }
+        "raildown" => {
+            let (node, rail) = parse_port(part, target)?;
+            FaultKind::RailDown { node, rail }
+        }
+        _ => {
+            return Err(anyhow!(
+                "fault event `{part}`: unknown kind `{head}` (want crash/die/flap/raildown)"
+            ))
+        }
+    };
+    Ok(FaultEvent { at_us, kind })
+}
+
+fn parse_rank(part: &str, s: &str) -> Result<usize> {
+    s.strip_prefix('r')
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| anyhow!("fault event `{part}`: expected rank `rN`, got `{s}`"))
+}
+
+fn parse_port(part: &str, s: &str) -> Result<(usize, usize)> {
+    let parse = || {
+        let (n, l) = s.split_once('.')?;
+        let node = n.strip_prefix('n')?.parse().ok()?;
+        let rail = l.strip_prefix('l')?.parse().ok()?;
+        Some((node, rail))
+    };
+    parse().ok_or_else(|| anyhow!("fault event `{part}`: expected port `nN.lR`, got `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_empty_and_valid() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        plan.validate(8, &Placement::new(2, 2)).expect("empty plan validates anywhere");
+    }
+
+    #[test]
+    fn spec_grammar_round_trips_all_kinds() {
+        let plan = FaultPlan::parse_spec(
+            "crash@1500:r3; flap@200:n0.l1+350.5; raildown@0:n1.l0; die@900:r2x1.8",
+        )
+        .expect("spec parses");
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { at_us: 1500.0, kind: FaultKind::RankCrash { rank: 3 } }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent {
+                at_us: 200.0,
+                kind: FaultKind::LinkFlap { node: 0, rail: 1, for_us: 350.5 }
+            }
+        );
+        assert_eq!(
+            plan.events[2],
+            FaultEvent { at_us: 0.0, kind: FaultKind::RailDown { node: 1, rail: 0 } }
+        );
+        assert_eq!(
+            plan.events[3],
+            FaultEvent { at_us: 900.0, kind: FaultKind::StragglerDeath { rank: 2, factor: 1.8 } }
+        );
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        for bad in [
+            "",
+            "crash",
+            "crash@x:r0",
+            "crash@100:3",
+            "die@100:r3",
+            "flap@100:n0.l1",
+            "reboot@100:r0",
+        ] {
+            assert!(FaultPlan::parse_spec(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn validation_enforces_world_and_placement_bounds() {
+        let place = Placement::new(2, 2);
+        // one flap per (node, rail) of a 4-rank / 2-node world is fine
+        FaultPlan::parse_spec("flap@10:n1.l1+5").unwrap().validate(4, &place).unwrap();
+        // out-of-range rank / node / rail
+        assert!(FaultPlan::crash(4, 10.0).validate(4, &place).is_err());
+        assert!(FaultPlan::parse_spec("flap@10:n2.l0+5").unwrap().validate(4, &place).is_err());
+        assert!(FaultPlan::parse_spec("flap@10:n0.l2+5").unwrap().validate(4, &place).is_err());
+        // crash needs >= 3 ranks; raildown needs >= 2 rails
+        assert!(FaultPlan::crash(0, 10.0).validate(2, &place).is_err());
+        assert!(FaultPlan::crash(0, 10.0).validate(4, &place).is_ok());
+        let one_rail = Placement::new(2, 1);
+        assert!(FaultPlan::parse_spec("raildown@0:n0.l0")
+            .unwrap()
+            .validate(4, &one_rail)
+            .is_err());
+        // at most one crash-class event
+        assert!(FaultPlan::parse_spec("crash@10:r0; die@20:r1x1.5")
+            .unwrap()
+            .validate(8, &place)
+            .is_err());
+    }
+
+    #[test]
+    fn knob_validation_rejects_degenerate_values() {
+        let mut p = FaultPlan::crash(0, 10.0);
+        p.backoff_factor = 0.5;
+        assert!(p.validate_knobs().is_err());
+        let mut p = FaultPlan::crash(0, 10.0);
+        p.detect_timeout_us = f64::NAN;
+        assert!(p.validate_knobs().is_err());
+        let mut p = FaultPlan::crash(0, 10.0);
+        p.max_retries = 99;
+        assert!(p.validate_knobs().is_err());
+        let mut p = FaultPlan::crash(0, 10.0);
+        p.events[0].at_us = -5.0;
+        assert!(p.validate_knobs().is_err());
+    }
+
+    #[test]
+    fn backoff_and_lost_work_models() {
+        let plan = FaultPlan {
+            backoff_base_us: 100.0,
+            backoff_factor: 2.0,
+            max_retries: 3,
+            ..FaultPlan::default()
+        };
+        assert!((plan.backoff_total_us() - 700.0).abs() < 1e-9); // 100+200+400
+        // checkpointing off: everything since start is lost
+        assert_eq!(plan.lost_work(SimTime::from_us(1234.0)), SimTime::from_us(1234.0));
+        let ck = FaultPlan { checkpoint_period_us: 500.0, ..plan };
+        assert_eq!(ck.lost_work(SimTime::from_us(1234.0)), SimTime::from_us(234.0));
+    }
+
+    #[test]
+    fn seeded_crash_is_deterministic_and_rate_gated() {
+        let a = FaultPlan::seeded_crash(16, 1.0, 50_000.0, 42);
+        let b = FaultPlan::seeded_crash(16, 1.0, 50_000.0, 42);
+        assert_eq!(a, b, "same (world, rate, seed) must yield the same plan");
+        assert_eq!(a.events.len(), 1, "rate 1.0 always injects");
+        assert!(FaultPlan::seeded_crash(16, 0.0, 50_000.0, 42).is_empty(), "rate 0 never does");
+        assert!(FaultPlan::seeded_crash(2, 1.0, 50_000.0, 42).is_empty(), "tiny worlds skip");
+        let c = FaultPlan::seeded_crash(16, 1.0, 50_000.0, 43);
+        assert!(a != c || a.events == c.events, "plans are seed-dependent");
+    }
+}

@@ -11,14 +11,16 @@
 
 pub mod calq;
 pub mod engine;
+pub mod fault;
 pub mod time;
 pub mod trace;
 
 pub use calq::CalendarQueue;
 pub use engine::{
-    Action, Engine, EngineHook, GateId, HookId, JoinId, LaneDriver, LaneSetId, OnDone, ProgStep,
-    ProgramLanes, ResourceId, ServiceStats,
+    Action, Engine, EngineHook, GateId, HookId, JoinId, LaneDriver, LaneSetId, OnDone, ProgId,
+    ProgStep, ProgramLanes, ResourceId, ServiceStats, TimerId,
 };
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use time::SimTime;
 pub use trace::{
     IterationParts, PathBucket, SpanKind, TraceGuard, TraceReport, TraceSpan, Tracer,

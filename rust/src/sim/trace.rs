@@ -108,6 +108,13 @@ pub enum SpanKind {
     Gate,
     /// A join firing (instant).
     Join,
+    /// A failure-detection window (fault instant → timeout expiry).
+    Fault,
+    /// A retry backoff wait (exponential, bounded attempts).
+    Backoff,
+    /// A recovery rebuild: re-templating the collective over the
+    /// surviving world, or reassigning a dead server's shards.
+    Rebuild,
     /// Service on a resource nobody registered a name/kind for.
     Other,
 }
@@ -126,6 +133,9 @@ impl SpanKind {
             SpanKind::Lane => "lane",
             SpanKind::Gate => "gate",
             SpanKind::Join => "join",
+            SpanKind::Fault => "fault-detect",
+            SpanKind::Backoff => "backoff",
+            SpanKind::Rebuild => "rebuild",
             SpanKind::Other => "other",
         }
     }
@@ -217,6 +227,7 @@ pub struct Tracer {
     gate_tracks: HashMap<u32, u32>,
     slot_tracks: Vec<Option<u32>>,
     join_track: Option<u32>,
+    recovery_track: Option<u32>,
     /// Stream-lane job arrival times, for the lane-hold queue-wait split.
     lane_arrivals: HashMap<(u32, u32), SimTime>,
     /// Calendar-queue peak-depth samples (time, new peak).
@@ -428,6 +439,44 @@ impl Tracer {
             rank: 0,
             queue_wait: SimTime::ZERO,
         });
+    }
+
+    /// A recovery interval `[t0, t1]` (fault detection, backoff wait,
+    /// rebuild) on the engine's recovery track.  Recovery intervals are
+    /// recorded back-to-back by the fault runners (`queue_wait` 0, each
+    /// `t0` the predecessor's `t1`), so the retro-walk chains straight
+    /// through them from the restarted communication to the failure
+    /// instant.
+    pub(crate) fn record_mark(&mut self, kind: SpanKind, t0: SimTime, t1: SimTime) {
+        let track = match self.recovery_track {
+            Some(t) => t,
+            None => {
+                let t = self.track("recovery", PID_ENGINE);
+                self.recovery_track = Some(t);
+                t
+            }
+        };
+        let name = self.intern(kind.name());
+        self.spans.push(TraceSpan {
+            track,
+            name,
+            t0,
+            t1,
+            kind,
+            bytes: 0,
+            rank: 0,
+            queue_wait: SimTime::ZERO,
+        });
+    }
+
+    /// Drop spans ending after `at` — the trace side of a fault cut:
+    /// whatever the aborted timeline would have finished after the
+    /// failure instant never happened.  (A span spanning the cut is
+    /// dropped whole rather than clipped; the truncated timeline stays
+    /// internally consistent because the engine also discards the
+    /// events that would have produced successors.)
+    pub(crate) fn truncate(&mut self, at: SimTime) {
+        self.spans.retain(|s| s.t1 <= at);
     }
 
     /// Sample the calendar queue when its depth reaches a new high-water
@@ -929,6 +978,47 @@ mod tests {
             buckets.iter().find(|b| b.label == "compute").unwrap().time,
             SimTime::from_us(5.0)
         );
+    }
+
+    #[test]
+    fn retro_walk_chains_through_recovery_marks() {
+        // pre-fault serve [0,10], cut at 12, recovery marks 12→15→19→25,
+        // restarted serve [25,30]: the walk must charge wire 5, rebuild 6,
+        // backoff 4, fault-detect 3, compute 12 — summing to 30 exactly.
+        let us = SimTime::from_us;
+        let mut t = Tracer::new();
+        t.name_resource(0, SpanKind::Wire, PID_ENGINE, 0, "wire");
+        t.record_serve(0, SimTime::ZERO, SimTime::ZERO, us(10.0), 0.0);
+        t.record_serve(0, us(12.5), us(12.5), us(40.0), 0.0); // post-cut span
+        t.truncate(us(12.0));
+        t.record_mark(SpanKind::Fault, us(12.0), us(15.0));
+        t.record_mark(SpanKind::Backoff, us(15.0), us(19.0));
+        t.record_mark(SpanKind::Rebuild, us(19.0), us(25.0));
+        t.record_serve(0, us(25.0), us(25.0), us(30.0), 0.0);
+        let (end, buckets) = t.retro_walk();
+        assert_eq!(end, us(30.0));
+        let total: u64 = buckets.iter().map(|b| b.time.0).sum();
+        assert_eq!(SimTime(total), end, "buckets must sum to the walk end");
+        let get = |label: &str| {
+            buckets.iter().find(|b| b.label == label).map(|b| b.time).unwrap_or(SimTime::ZERO)
+        };
+        assert_eq!(get("wire"), us(5.0), "the truncated 40us span must be gone");
+        assert_eq!(get("rebuild"), us(6.0));
+        assert_eq!(get("backoff"), us(4.0));
+        assert_eq!(get("fault-detect"), us(3.0));
+        assert_eq!(get("compute"), us(12.0));
+    }
+
+    #[test]
+    fn recovery_marks_export_valid_chrome_json() {
+        let us = SimTime::from_us;
+        let mut t = Tracer::new();
+        t.record_mark(SpanKind::Fault, SimTime::ZERO, us(3.0));
+        t.record_mark(SpanKind::Backoff, us(3.0), us(5.0));
+        t.record_mark(SpanKind::Rebuild, us(5.0), us(9.0));
+        let doc = t.chrome_json(&IterationParts::comm_only(us(9.0)));
+        validate_chrome_json(&doc).expect("recovery spans must validate");
+        assert!(doc.contains("fault-detect") && doc.contains("backoff") && doc.contains("rebuild"));
     }
 
     #[test]

@@ -220,6 +220,19 @@ impl Strategy for Baidu {
     }
 
     fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if !sc.fault.is_empty() {
+            // fault injection routes through the shared recovery runner
+            // (§Robustness); an empty plan never reaches this branch, so
+            // the fault-free paths below stay bit-identical
+            return super::recovery::run_faulted_collective(
+                self.name(),
+                ws,
+                sc,
+                self.runtime_tax,
+                self.skew_us_per_rank,
+                &|ws, sc| self.graph_items(ws, sc),
+            );
+        }
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));

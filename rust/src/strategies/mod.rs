@@ -26,6 +26,7 @@
 pub mod baidu;
 pub mod horovod;
 pub mod ps;
+pub(crate) mod recovery;
 pub mod scenario;
 
 pub use baidu::Baidu;
@@ -113,6 +114,32 @@ pub struct IterationReport {
     /// unless tracing was enabled around the engine run.  `Arc` keeps the
     /// report `Clone`/`Send` for the threaded sweep drivers.
     pub trace: Option<Arc<TraceReport>>,
+    /// Failure-recovery ledger (§Faults) — `None` for fault-free runs.
+    pub fault: Option<FaultReport>,
+}
+
+/// What a fault-injected iteration cost beyond its fault-free twin: the
+/// detection/recovery latencies on the virtual clock, the work thrown
+/// away, and the goodput that remains once lost work is amortized in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultReport {
+    /// Virtual time of the first injected failure.
+    pub failed_at: SimTime,
+    /// Failure onset → detection (the watchdog timeout that fired).
+    pub detect: SimTime,
+    /// Failure onset → training resumed (detect + backoff + rebuild, or
+    /// the flap window for transient faults).
+    pub recover: SimTime,
+    /// Progress discarded by abort-and-restart (time since the last
+    /// checkpoint, or since iteration start without checkpointing).
+    pub lost_work: SimTime,
+    /// Retry attempts spent before the failure was declared permanent.
+    pub retries: u32,
+    /// World size after recovery (`world - 1` after an elastic shrink).
+    pub surviving_world: usize,
+    /// Throughput counting only surviving, non-discarded samples —
+    /// `imgs_per_sec` is raw pipe speed, this is useful training speed.
+    pub goodput_imgs_per_sec: f64,
 }
 
 impl IterationReport {
@@ -130,6 +157,7 @@ impl IterationReport {
             resource_util: Vec::new(),
             engine_events: 0,
             trace: None,
+            fault: None,
         }
     }
 

@@ -29,7 +29,7 @@ use std::rc::Rc;
 use crate::util::error::Result;
 
 use super::scenario::Scenario;
-use super::{IterationReport, JobTrace, Strategy, WorldSpec};
+use super::{FaultReport, IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::commop::{replay, CommOp, RelPin, ResKind, ResMap, ResourceUse};
 use crate::comm::graph::{
@@ -38,7 +38,7 @@ use crate::comm::graph::{
 use crate::comm::grpc::GrpcTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::{Engine, ResourceId, SimTime};
+use crate::sim::{Engine, FaultKind, FaultPlan, ResourceId, SimTime, SpanKind};
 
 /// Which library carries the tensor payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -444,6 +444,12 @@ impl Strategy for PsStrategy {
     }
 
     fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        if !sc.fault.is_empty() {
+            // fault injection routes through the RPC retry / shard
+            // reassignment model (§Robustness); an empty plan never
+            // reaches this branch, so the path below stays bit-identical
+            return self.iteration_faulted(ws, sc);
+        }
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
@@ -472,6 +478,169 @@ impl Strategy for PsStrategy {
         }
         report.attach_trace(&mut engine, parts);
         Ok(report)
+    }
+}
+
+impl PsStrategy {
+    /// One fault-injected PS iteration (§Robustness).  The RPC view of
+    /// the shared fault model: a transient link flap FIFO-holds the
+    /// port's NIC queues for the window, so in-flight pushes/pulls look
+    /// like timed-out RPCs whose bounded-backoff retries drain when the
+    /// port recovers; a rail failure holds its port for one detection
+    /// window (the failover hand-off).  A crashed rank kills its
+    /// colocated worker *and* parameter server: after detect → backoff
+    /// (the retry budget is exhausted against a dead peer) → shard
+    /// reassignment (the rebuild cost), the synchronous step restarts
+    /// over the surviving world with the dead server's shards LPT-spread
+    /// across the p−1 survivors — each now more loaded, the degraded
+    /// regime.  Only entered with a non-empty plan.
+    fn iteration_faulted(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        let plan = sc.fault.clone();
+        let place = ws.cluster.placement();
+        plan.validate(ws.world, &place)?;
+        crate::ensure!(
+            ws.world >= 2,
+            "fault injection needs a distributed run (world {} < 2)",
+            ws.world
+        );
+        let mut sc_run = sc.clone();
+        sc_run.fault = FaultPlan::default();
+
+        let mut engine = Engine::new();
+        let fabric = PsFabric::install_placed(&mut engine, ws.world, place);
+        let job = self.schedule_job(ws, &sc_run, &mut engine, &fabric, SimTime::ZERO)?;
+        let detect = SimTime::from_us(plan.detect_timeout_us);
+        for ev in &plan.events {
+            let at = SimTime::from_us(ev.at_us);
+            let hold_port = |node: usize, rail: usize, dur: SimTime, e: &mut Engine| {
+                let i = node * place.rails + rail;
+                let (inp, outp) = (fabric.in_ports()[i], fabric.out_ports()[i]);
+                e.at(at, move |e| {
+                    e.hold(inp, dur);
+                    e.hold(outp, dur);
+                });
+            };
+            match ev.kind {
+                FaultKind::LinkFlap { node, rail, for_us } => {
+                    hold_port(node, rail, SimTime::from_us(for_us), &mut engine);
+                }
+                // the port is dark until the failover completes
+                FaultKind::RailDown { node, rail } => hold_port(node, rail, detect, &mut engine),
+                _ => {}
+            }
+        }
+
+        if let Some((t_fail, _dead, _)) = plan.first_crash() {
+            // --- the dead rank takes its worker and server with it ---
+            engine.run_until(t_fail);
+            engine.clear_pending();
+            engine.trace_truncate(t_fail);
+            let detect_end = t_fail + detect;
+            let backoff_end = detect_end + SimTime::from_us(plan.backoff_total_us());
+            let rebuild_end = backoff_end + SimTime::from_us(plan.rebuild_us);
+            engine.trace_mark(SpanKind::Fault, t_fail, detect_end);
+            engine.trace_mark(SpanKind::Backoff, detect_end, backoff_end);
+            engine.trace_mark(SpanKind::Rebuild, backoff_end, rebuild_end);
+
+            // --- restart the synchronous step over the survivors ---
+            let mut ws2 = ws.clone();
+            ws2.world = ws.world - 1;
+            let place2 = ws2.cluster.placement();
+            let fabric2 = PsFabric::install_placed(&mut engine, ws2.world, place2);
+            let job2 = self.schedule_job(&ws2, &sc_run, &mut engine, &fabric2, rebuild_end)?;
+            engine.run();
+            let comm_end = job2.comm_end()?.max(rebuild_end);
+            let trace = JobTrace { comm_end, staging_us: 0.0 };
+            let parts = super::close_iteration_parts(
+                &ws2,
+                &sc_run,
+                &trace,
+                SimTime::ZERO,
+                self.runtime_tax,
+                self.skew_us_per_rank,
+            );
+            let mut report = IterationReport::from_times(self.name(), &ws2, parts.iter);
+            report.engine_events = engine.executed();
+            report.resource_util.push(agg_util(&engine, fabric2.in_ports(), "ps-nic-in"));
+            report.resource_util.push(agg_util(&engine, fabric2.out_ports(), "ps-nic-out"));
+            if let Some(tx) = &job2.worker_tx {
+                report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
+            }
+            report.attach_trace(&mut engine, parts);
+            let lost = plan.lost_work(t_fail);
+            report.fault = Some(FaultReport {
+                failed_at: t_fail,
+                detect,
+                recover: rebuild_end.saturating_sub(t_fail),
+                lost_work: lost,
+                retries: plan.max_retries,
+                surviving_world: ws2.world,
+                goodput_imgs_per_sec: ws2.world as f64 * ws2.batch_per_gpu as f64
+                    / (parts.iter.as_secs() + lost.as_secs()),
+            });
+            Ok(report)
+        } else {
+            // --- transient faults only: retries bridge the outage ---
+            engine.run();
+            for ev in &plan.events {
+                let t0 = SimTime::from_us(ev.at_us);
+                match ev.kind {
+                    FaultKind::LinkFlap { for_us, .. } => {
+                        engine.trace_mark(SpanKind::Fault, t0, t0 + SimTime::from_us(for_us));
+                    }
+                    FaultKind::RailDown { .. } => {
+                        engine.trace_mark(SpanKind::Fault, t0, t0 + detect);
+                    }
+                    _ => {}
+                }
+            }
+            let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+            let parts = super::close_iteration_parts(
+                ws,
+                &sc_run,
+                &trace,
+                SimTime::ZERO,
+                self.runtime_tax,
+                self.skew_us_per_rank,
+            );
+            let mut report = IterationReport::from_times(self.name(), ws, parts.iter);
+            report.engine_events = engine.executed();
+            report.resource_util.push(agg_util(&engine, fabric.in_ports(), "ps-nic-in"));
+            report.resource_util.push(agg_util(&engine, fabric.out_ports(), "ps-nic-out"));
+            if let Some(tx) = &job.worker_tx {
+                report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
+            }
+            report.attach_trace(&mut engine, parts);
+            let failed_at = plan
+                .events
+                .iter()
+                .map(|ev| SimTime::from_us(ev.at_us))
+                .min()
+                .unwrap_or(SimTime::ZERO);
+            let flap_end = plan
+                .flaps()
+                .iter()
+                .map(|&(at, _, _, dur)| at + dur)
+                .max()
+                .unwrap_or(failed_at);
+            let longest_flap = plan
+                .flaps()
+                .iter()
+                .map(|&(_, _, _, dur)| dur)
+                .max()
+                .unwrap_or(SimTime::ZERO);
+            report.fault = Some(FaultReport {
+                failed_at,
+                detect,
+                recover: (flap_end.max(failed_at + detect)).saturating_sub(failed_at),
+                lost_work: SimTime::ZERO,
+                retries: super::recovery::retries_to_bridge(&plan, longest_flap.as_us()),
+                surviving_world: ws.world,
+                goodput_imgs_per_sec: ws.world as f64 * ws.batch_per_gpu as f64
+                    / parts.iter.as_secs(),
+            });
+            Ok(report)
+        }
     }
 }
 

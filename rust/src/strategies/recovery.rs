@@ -1,0 +1,285 @@
+//! Failure recovery for the allreduce families (§Robustness).
+//!
+//! One runner serves both Horovod and Baidu — they differ only in how
+//! the iteration's collectives are built (`items_for`), not in how they
+//! fail.  The recovery model is abort-and-restart with elastic shrink:
+//!
+//! ```text
+//! phase 1 (world p)      run until the crash instant, count the k
+//!                        collectives that completed, abort the rest
+//! detect                 the runtime declares the peer suspect after
+//!                        the plan's detection timeout
+//! backoff                bounded exponential retries (all exhausted —
+//!                        the peer is dead, not slow)
+//! rebuild                collective templates re-formed over the
+//!                        surviving world (elastic shrink to p−1)
+//! phase 2 (world p−1)    the remaining collectives replay from the
+//!                        last completed fusion buffer — valid because
+//!                        the fusion schedule depends on model/cluster/
+//!                        batch, not world size, so phase 2 has the
+//!                        same buffer list
+//! ```
+//!
+//! Transient faults (link flaps, rail failures) never shrink the world:
+//! a flap FIFO-holds its NIC port for the window (in-flight retries
+//! queue behind it and drain when it lifts) and a rail failure derates
+//! the node's ranks for the whole iteration (failover onto the
+//! surviving rails).
+//!
+//! The detect/backoff/rebuild intervals are recorded as trace marks on
+//! the recovery track, chained back-to-back so the critical-path
+//! retro-walk attributes the recovery gap instead of charging it to
+//! compute (§Observability).
+//!
+//! This module is only entered when `!sc.fault.is_empty()` — the
+//! empty-plan bit-identity guarantee lives in the callers' routing.
+
+use super::scenario::Scenario;
+use super::{FaultReport, GraphWork, IterationReport, JobTrace, LaneJob, WorldSpec};
+use crate::comm::graph::GraphResources;
+use crate::sim::{Engine, FaultKind, FaultPlan, SimTime, SpanKind};
+use crate::util::error::Result;
+
+/// Build-the-items callback: the strategy's `graph_items` under a given
+/// (possibly shrunk) world.
+pub(crate) type ItemsFor<'a> = &'a dyn Fn(&WorldSpec, &Scenario) -> Result<Vec<GraphWork>>;
+
+/// Run one fault-injected iteration of an allreduce-family strategy.
+pub(crate) fn run_faulted_collective(
+    name: String,
+    ws: &WorldSpec,
+    sc: &Scenario,
+    runtime_tax: f64,
+    skew_us_per_rank: f64,
+    items_for: ItemsFor,
+) -> Result<IterationReport> {
+    let plan = sc.fault.clone();
+    let place = ws.cluster.placement();
+    plan.validate(ws.world, &place)?;
+    crate::ensure!(
+        ws.world >= 2,
+        "fault injection needs a distributed run (world {} < 2)",
+        ws.world
+    );
+
+    // The runner is the only consumer of the plan: everything below the
+    // items callback runs under a fault-free scenario so no inner path
+    // re-enters the fault machinery.
+    let mut sc_run = sc.clone();
+    sc_run.fault = FaultPlan::default();
+
+    let mut e = Engine::new();
+    let rails = place.rails;
+    let res = GraphResources::install_placed(&mut e, ws.world, place);
+    let mut items = items_for(ws, &sc_run)?;
+    let n_items = items.len();
+
+    let crash = plan.first_crash();
+    if let Some((_, rank, Some(factor))) = crash {
+        // straggler-escalates-to-dead: the dying rank limps until the
+        // crash instant
+        for it in &mut items {
+            it.overlay.scale_rank(ws.world, rank, factor);
+        }
+    }
+    apply_rail_failover(&plan, ws.world, &place, &mut items);
+
+    let job = LaneJob::graphs(&mut e, &res, sc_run.lanes(), items, SimTime::ZERO);
+    for (at, node, rail, dur) in plan.flaps() {
+        // the port goes dark: FIFO-hold it for the window, stalling
+        // queued and in-flight transfers behind the outage
+        let port = res.wire[node * rails + rail];
+        e.at(at, move |e| e.hold(port, dur));
+    }
+
+    if let Some((t_fail, _dead, _)) = crash {
+        // --- abort: freeze the world at the crash instant ---
+        e.run_until(t_fail);
+        let done = e.lane_completed(job.set());
+        e.lane_abort(job.set());
+        e.clear_pending();
+        e.trace_truncate(t_fail);
+
+        // --- detect -> backoff -> rebuild, back-to-back on the clock ---
+        let detect = SimTime::from_us(plan.detect_timeout_us);
+        let detect_end = t_fail + detect;
+        let backoff_end = detect_end + SimTime::from_us(plan.backoff_total_us());
+        let rebuild_end = backoff_end + SimTime::from_us(plan.rebuild_us);
+        e.trace_mark(SpanKind::Fault, t_fail, detect_end);
+        e.trace_mark(SpanKind::Backoff, detect_end, backoff_end);
+        e.trace_mark(SpanKind::Rebuild, backoff_end, rebuild_end);
+
+        // --- elastic shrink: restart over the surviving world ---
+        let mut ws2 = ws.clone();
+        ws2.world = ws.world - 1;
+        let place2 = ws2.cluster.placement();
+        let res2 = GraphResources::install_placed(&mut e, ws2.world, place2);
+        let mut items2 = items_for(&ws2, &sc_run)?;
+        crate::ensure!(
+            items2.len() == n_items,
+            "fusion schedule changed across the elastic shrink: {} vs {} collectives",
+            items2.len(),
+            n_items
+        );
+        apply_rail_failover(&plan, ws2.world, &place2, &mut items2);
+        let tail: Vec<GraphWork> = items2
+            .drain(done.min(n_items)..)
+            .map(|mut w| {
+                // gradients were already produced — every surviving
+                // collective is ready the moment the rebuild lands
+                w.ready = SimTime::ZERO;
+                w
+            })
+            .collect();
+        let job2 = LaneJob::graphs(&mut e, &res2, sc_run.lanes(), tail, rebuild_end);
+        e.run();
+
+        // recovery extends the timeline even when no collective was
+        // left to replay (crash after the comm phase finished)
+        let comm_end = job2.trace(&e)?.comm_end.max(rebuild_end);
+        let trace = JobTrace { comm_end, staging_us: job.staging_us };
+        let parts = super::close_iteration_parts(
+            &ws2,
+            &sc_run,
+            &trace,
+            SimTime::ZERO,
+            runtime_tax,
+            skew_us_per_rank,
+        );
+        let iter = parts.iter;
+        let util = res2.utilization(&e);
+        let mut report =
+            super::report_with_comm_thread(name, &ws2, parts, util, &mut e, job2.set());
+        let lost = plan.lost_work(t_fail);
+        report.fault = Some(FaultReport {
+            failed_at: t_fail,
+            detect,
+            recover: rebuild_end.saturating_sub(t_fail),
+            lost_work: lost,
+            // a dead peer exhausts the retry budget before the runtime
+            // gives up on it
+            retries: plan.max_retries,
+            surviving_world: ws2.world,
+            goodput_imgs_per_sec: ws2.world as f64 * ws2.batch_per_gpu as f64
+                / (iter.as_secs() + lost.as_secs()),
+        });
+        Ok(report)
+    } else {
+        // --- transient faults only: the full world survives ---
+        e.run();
+        let detect = SimTime::from_us(plan.detect_timeout_us);
+        for ev in &plan.events {
+            let t0 = SimTime::from_us(ev.at_us);
+            match ev.kind {
+                FaultKind::LinkFlap { for_us, .. } => {
+                    e.trace_mark(SpanKind::Fault, t0, t0 + SimTime::from_us(for_us));
+                }
+                FaultKind::RailDown { .. } => {
+                    e.trace_mark(SpanKind::Fault, t0, t0 + detect);
+                }
+                _ => {}
+            }
+        }
+        let parts = super::close_iteration_parts(
+            ws,
+            &sc_run,
+            &job.trace(&e)?,
+            SimTime::ZERO,
+            runtime_tax,
+            skew_us_per_rank,
+        );
+        let iter = parts.iter;
+        let util = res.utilization(&e);
+        let mut report =
+            super::report_with_comm_thread(name, ws, parts, util, &mut e, job.set());
+        let failed_at = plan
+            .events
+            .iter()
+            .map(|ev| SimTime::from_us(ev.at_us))
+            .min()
+            .unwrap_or(SimTime::ZERO);
+        let flap_end = plan
+            .flaps()
+            .iter()
+            .map(|&(at, _, _, dur)| at + dur)
+            .max()
+            .unwrap_or(failed_at);
+        let longest_flap = plan
+            .flaps()
+            .iter()
+            .map(|&(_, _, _, dur)| dur)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        report.fault = Some(FaultReport {
+            failed_at,
+            detect,
+            // healthy again when the last flap lifts, never before one
+            // detection window has passed
+            recover: (flap_end.max(failed_at + detect)).saturating_sub(failed_at),
+            lost_work: SimTime::ZERO,
+            retries: retries_to_bridge(&plan, longest_flap.as_us()),
+            surviving_world: ws.world,
+            goodput_imgs_per_sec: ws.world as f64 * ws.batch_per_gpu as f64 / iter.as_secs(),
+        });
+        Ok(report)
+    }
+}
+
+/// A failed rail's traffic fails over onto the node's surviving rails:
+/// every rank on the node drives its collective `rails/(rails−1)` slower
+/// for the whole iteration (the conservative whole-rank derate — the
+/// engine has no per-kind overlay, and wire time dominates the derated
+/// ranks' steps).
+fn apply_rail_failover(
+    plan: &FaultPlan,
+    world: usize,
+    place: &crate::cluster::Placement,
+    items: &mut [GraphWork],
+) {
+    for (node, _rail) in plan.rail_downs() {
+        let f = place.rails as f64 / (place.rails - 1) as f64;
+        for r in 0..world {
+            if place.node_of(r) == node {
+                for it in items.iter_mut() {
+                    it.overlay.scale_rank(world, r, f);
+                }
+            }
+        }
+    }
+}
+
+/// How many bounded retries it takes until the cumulative backoff wait
+/// covers a transient outage of `dur_us` (all of them if it never does).
+pub(crate) fn retries_to_bridge(plan: &FaultPlan, dur_us: f64) -> u32 {
+    if dur_us <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0;
+    for i in 0..plan.max_retries {
+        acc += plan.backoff_base_us * plan.backoff_factor.powi(i as i32);
+        if acc >= dur_us {
+            return i + 1;
+        }
+    }
+    plan.max_retries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retries_to_bridge_walks_the_backoff_ladder() {
+        let plan = FaultPlan {
+            backoff_base_us: 100.0,
+            backoff_factor: 2.0,
+            max_retries: 3,
+            ..FaultPlan::default()
+        };
+        assert_eq!(retries_to_bridge(&plan, 0.0), 0);
+        assert_eq!(retries_to_bridge(&plan, 50.0), 1); // 100 covers it
+        assert_eq!(retries_to_bridge(&plan, 250.0), 2); // 100+200
+        assert_eq!(retries_to_bridge(&plan, 699.0), 3);
+        assert_eq!(retries_to_bridge(&plan, 10_000.0), 3, "budget exhausted");
+    }
+}

@@ -24,7 +24,8 @@ use super::ps::{PsFabric, PsJob, PsStrategy};
 use super::{GraphWork, JobTrace, LaneJob, Strategy, WorldSpec};
 use crate::comm::commop::ResourceUse;
 use crate::comm::graph::{GraphOverlay, GraphResources};
-use crate::sim::{Engine, SimTime};
+use crate::ensure;
+use crate::sim::{Engine, FaultPlan, SimTime};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
 
@@ -68,6 +69,10 @@ pub struct Scenario {
     /// Queue-depth cap: at most this many collectives in flight across
     /// the lanes (`0` = the stream count, i.e. uncapped).
     pub depth: usize,
+    /// Injected failures + detection/recovery knobs (§Robustness).  An
+    /// empty plan routes every strategy through the exact pre-fault code
+    /// path — bit-identical to the plan not existing.
+    pub fault: FaultPlan,
 }
 
 impl Default for Scenario {
@@ -84,6 +89,7 @@ impl Default for Scenario {
             second_job_offset_us: 0.0,
             streams: 1,
             depth: 0,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -105,8 +111,83 @@ impl Scenario {
         Scenario { streams, ..Scenario::default() }
     }
 
+    pub fn with_fault(fault: FaultPlan) -> Scenario {
+        Scenario { fault, ..Scenario::default() }
+    }
+
     pub fn is_neutral(&self) -> bool {
         self == &Scenario::default()
+    }
+
+    /// The single range/consistency check every surface (CLI flags,
+    /// `[scenario]` config table, bench sweeps) funnels through, so the
+    /// accepted knob space cannot drift between surfaces.  Surface-
+    /// specific concerns (flag spelling, raw negative integers before
+    /// the usize cast, placement reshaping) stay at the surface.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.streams >= 1, "streams must be >= 1 (got {})", self.streams);
+        if self.depth > 0 {
+            ensure!(
+                self.streams > 1,
+                "a queue-depth cap needs streams > 1 (got streams {})",
+                self.streams
+            );
+            ensure!(
+                self.depth <= self.streams,
+                "depth {} exceeds the stream count {} (each lane holds one collective)",
+                self.depth,
+                self.streams
+            );
+        }
+        ensure!(
+            self.link_load.is_finite() && (0.0..=MAX_LINK_LOAD).contains(&self.link_load),
+            "link load must be in [0, {MAX_LINK_LOAD}] (got {})",
+            self.link_load
+        );
+        for (what, ranks, factor) in [
+            ("straggler", self.straggler_ranks, self.straggler_factor),
+            ("hetero", self.hetero_ranks, self.hetero_factor),
+        ] {
+            ensure!(
+                factor.is_finite() && factor > 0.0,
+                "{what} factor must be finite and > 0 (got {factor})"
+            );
+            if ranks > 0 {
+                ensure!(
+                    factor > 1.0,
+                    "{what} factor must be > 1.0 to slow ranks down (got {factor})"
+                );
+            } else {
+                ensure!(
+                    factor == 1.0,
+                    "{what} factor {factor} without {what} ranks is inert — set ranks too"
+                );
+            }
+        }
+        ensure!(
+            self.jitter_us.is_finite() && self.jitter_us >= 0.0,
+            "jitter must be finite and >= 0 us (got {})",
+            self.jitter_us
+        );
+        if self.second_job {
+            ensure!(
+                self.streams == 1 && self.depth == 0,
+                "second_job and streams/depth overlap cannot combine (streams {}, depth {})",
+                self.streams,
+                self.depth
+            );
+            ensure!(
+                self.second_job_offset_us.is_finite() && self.second_job_offset_us >= 0.0,
+                "second job offset must be finite and >= 0 us (got {})",
+                self.second_job_offset_us
+            );
+        } else {
+            ensure!(
+                self.second_job_offset_us == 0.0,
+                "second_job_offset_us without second_job is inert — enable second_job too"
+            );
+        }
+        self.fault.validate_knobs()
     }
 
     /// Slowest-rank compute multiplier.  Synchronous data parallelism is
@@ -543,6 +624,43 @@ mod tests {
         assert!(a >= 1.0 && b >= 1.0, "sharing cannot speed anyone up: {a} {b}");
         assert!(a > 1.0 || b > 1.0, "shared PS NICs must contend: {a} {b}");
         assert!(r.wire_busy > SimTime::ZERO && r.wire_served > 0);
+    }
+
+    #[test]
+    fn validate_accepts_real_scenarios_and_rejects_degenerate_knobs() {
+        Scenario::default().validate().unwrap();
+        Scenario::straggler(1, 1.5).validate().unwrap();
+        Scenario::overlap(4).validate().unwrap();
+        Scenario { streams: 4, depth: 2, ..Scenario::default() }.validate().unwrap();
+        Scenario { second_job: true, second_job_offset_us: 250.0, ..Scenario::default() }
+            .validate()
+            .unwrap();
+        Scenario::with_fault(crate::sim::FaultPlan::crash(1, 500.0)).validate().unwrap();
+
+        let bad: Vec<Scenario> = vec![
+            Scenario { streams: 0, ..Scenario::default() },
+            Scenario { depth: 2, ..Scenario::default() },
+            Scenario { streams: 2, depth: 3, ..Scenario::default() },
+            Scenario { link_load: 0.99, ..Scenario::default() },
+            Scenario { link_load: -0.1, ..Scenario::default() },
+            Scenario::straggler(1, 1.0),
+            Scenario::straggler(0, 1.5),
+            Scenario::hetero(2, 0.0),
+            Scenario { jitter_us: -1.0, ..Scenario::default() },
+            Scenario { second_job: true, streams: 2, ..Scenario::default() },
+            Scenario { second_job: true, second_job_offset_us: -5.0, ..Scenario::default() },
+            Scenario { second_job_offset_us: 10.0, ..Scenario::default() },
+            Scenario {
+                fault: crate::sim::FaultPlan {
+                    backoff_factor: 0.0,
+                    ..crate::sim::FaultPlan::default()
+                },
+                ..Scenario::default()
+            },
+        ];
+        for (i, sc) in bad.iter().enumerate() {
+            assert!(sc.validate().is_err(), "degenerate scenario #{i} must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! §Robustness regression pins: the documented rank-crash scenario
+//! recovers along detection → backoff → elastic rebuild with the
+//! recovery intervals attributed on the traced critical path, the
+//! whole faulted timeline (including the Chrome export) is
+//! deterministic for a fixed plan, and transient faults never shrink
+//! the world.
+//!
+//! The headline configuration mirrors the acceptance scenario and the
+//! CI smoke step: MobileNet Horovod-MPI-Opt on ri2 at world 8 with
+//! rank 3 crashing 1.5 ms into the iteration.
+
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::comm::MpiFlavor;
+use mpi_dnn_train::models::mobilenet;
+use mpi_dnn_train::sim::trace::validate_chrome_json;
+use mpi_dnn_train::sim::{FaultPlan, SimTime, TraceGuard};
+use mpi_dnn_train::strategies::{Horovod, IterationReport, Scenario, Strategy, WorldSpec};
+
+fn crash_ws() -> WorldSpec {
+    WorldSpec::new(presets::ri2(), mobilenet::mobilenet_v1(), 8)
+}
+
+fn crash_sc() -> Scenario {
+    Scenario::with_fault(FaultPlan::crash(3, 1_500.0))
+}
+
+fn traced_crash() -> IterationReport {
+    let _t = TraceGuard::new();
+    Horovod::mpi(MpiFlavor::Mvapich2GdrOpt).iteration_in(&crash_ws(), &crash_sc()).unwrap()
+}
+
+fn path_time(buckets: &[mpi_dnn_train::sim::PathBucket], label: &str) -> SimTime {
+    buckets.iter().find(|b| b.label == label).map(|b| b.time).unwrap_or(SimTime::ZERO)
+}
+
+fn path_sum(buckets: &[mpi_dnn_train::sim::PathBucket]) -> SimTime {
+    SimTime(buckets.iter().map(|b| b.time.0).sum())
+}
+
+/// The documented acceptance scenario: an injected rank crash is
+/// detected after the timeout, retried through the full backoff
+/// budget, and recovered by an elastic rebuild over world − 1 — with
+/// every interval pinned to the plan's knobs and the lost work and
+/// goodput accounted in the report.
+#[test]
+fn rank_crash_recovers_elastically_with_pinned_intervals() {
+    let ws = crash_ws();
+    let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+    let base = h.iteration_in(&ws, &Scenario::default()).unwrap();
+    let r = traced_crash();
+    let f = r.fault.expect("a crash plan must attach a FaultReport");
+    let d = FaultPlan::default();
+    assert_eq!(f.failed_at, SimTime::from_us(1_500.0));
+    assert_eq!(f.detect, SimTime::from_us(d.detect_timeout_us));
+    assert_eq!(
+        f.recover,
+        SimTime::from_us(d.detect_timeout_us + d.backoff_total_us() + d.rebuild_us),
+        "recover = detect + exhausted backoff + rebuild"
+    );
+    assert_eq!(f.lost_work, SimTime::from_us(1_500.0), "no checkpoint: all progress lost");
+    assert_eq!(f.retries, d.max_retries, "a dead peer exhausts the retry budget");
+    assert_eq!(f.surviving_world, 7, "elastic shrink to world - 1");
+    assert!(
+        f.goodput_imgs_per_sec < base.imgs_per_sec,
+        "goodput {} must trail the fault-free {} img/s",
+        f.goodput_imgs_per_sec,
+        base.imgs_per_sec
+    );
+    assert!(r.iter > SimTime::ZERO && r.iter >= f.recover, "recovery rides the iteration");
+}
+
+/// The traced crash run attributes the recovery on the critical path:
+/// the retro-walk chains through the fault-detect / backoff / rebuild
+/// marks with exactly the plan's durations, and the exact-sum
+/// contracts of §Observability survive the fault cut.
+#[test]
+fn rank_crash_walks_recovery_marks_on_the_critical_path() {
+    let r = traced_crash();
+    let t = r.trace.as_deref().expect("traced run must attach a TraceReport");
+    assert_eq!(path_sum(&t.critical_path), t.iter, "critical path must still sum to iter");
+    assert_eq!(path_sum(&t.comm_path), t.comm_end, "raw walk must still sum to comm end");
+    let d = FaultPlan::default();
+    assert_eq!(
+        path_time(&t.comm_path, "fault-detect"),
+        SimTime::from_us(d.detect_timeout_us),
+        "walk must cross the detection window: {:?}",
+        t.comm_path
+    );
+    assert_eq!(path_time(&t.comm_path, "backoff"), SimTime::from_us(d.backoff_total_us()));
+    assert_eq!(path_time(&t.comm_path, "rebuild"), SimTime::from_us(d.rebuild_us));
+    let events = validate_chrome_json(&t.chrome_json).expect("faulted export must validate");
+    assert!(events > 0);
+    for mark in ["fault-detect", "backoff", "rebuild"] {
+        assert!(t.chrome_json.contains(mark), "export must carry the `{mark}` recovery span");
+    }
+}
+
+/// A fixed fault plan yields a fixed recovery: two traced runs agree on
+/// the report, the fault ledger, and the Chrome export byte for byte.
+#[test]
+fn same_fault_plan_is_deterministic_including_trace_bytes() {
+    let a = traced_crash();
+    let b = traced_crash();
+    assert_eq!(a.iter, b.iter, "faulted iteration time diverged");
+    assert_eq!(a.engine_events, b.engine_events, "faulted event count diverged");
+    assert_eq!(a.resource_util, b.resource_util, "faulted resource ledger diverged");
+    assert_eq!(a.fault, b.fault, "fault ledger diverged");
+    let (ta, tb) = (a.trace.as_deref().unwrap(), b.trace.as_deref().unwrap());
+    assert_eq!(ta.chrome_json, tb.chrome_json, "faulted trace export must be deterministic");
+}
+
+/// Transient faults (a link flap) hold the port for the window but
+/// never shrink the world or discard progress; the retry ladder stops
+/// as soon as the cumulative backoff bridges the outage.
+#[test]
+fn link_flap_holds_the_port_without_shrinking_the_world() {
+    let ws = crash_ws();
+    let h = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+    let base = h.iteration_in(&ws, &Scenario::default()).unwrap();
+    let plan = FaultPlan::parse_spec("flap@200:n0.l0+300").unwrap();
+    let r = h.iteration_in(&ws, &Scenario::with_fault(plan)).unwrap();
+    let f = r.fault.expect("a flap plan must attach a FaultReport");
+    assert_eq!(f.surviving_world, 8, "transient faults keep the full world");
+    assert_eq!(f.lost_work, SimTime::ZERO, "no work is discarded on a flap");
+    assert_eq!(f.failed_at, SimTime::from_us(200.0));
+    // healthy no earlier than one detection window after onset
+    assert_eq!(f.recover, SimTime::from_us(FaultPlan::default().detect_timeout_us));
+    assert_eq!(f.retries, 2, "200 + 400 us of backoff bridges a 300 us outage");
+    assert!(r.iter >= base.iter, "a held port can only delay the iteration");
+}

@@ -975,3 +975,72 @@ fn prop_tracing_is_observationally_free() {
         assert!(traced.trace.is_some(), "case {case}: traced run attached none");
     }
 }
+
+/// prop (§Robustness): an *empty* fault plan is observationally free —
+/// even with every recovery knob set to a non-default value, a plan
+/// with no events takes the exact pre-fault code path in all three
+/// strategy families, bit for bit, across random worlds, placements,
+/// scenarios and stream counts (ARCHITECTURE.md §Faults empty-plan
+/// guarantee).
+#[test]
+fn prop_empty_fault_plan_is_bit_identical() {
+    use mpi_dnn_train::comm::MpiFlavor;
+    use mpi_dnn_train::models::{mobilenet, resnet};
+    use mpi_dnn_train::sim::FaultPlan;
+    use mpi_dnn_train::strategies::{Baidu, Horovod, PsStrategy, Scenario, Strategy, WorldSpec};
+    for case in 0u64..10 {
+        let mut rng = Rng::new(0xFA17 + case);
+        let world = 3 + rng.next_below(10) as usize;
+        let mut cluster = presets::ri2();
+        cluster.gpus_per_node = 1 + rng.next_below(2) as usize;
+        cluster.nic_rails = 1;
+        let model = if case % 2 == 0 { mobilenet::mobilenet_v1() } else { resnet::resnet50() };
+        let sc = Scenario {
+            straggler_ranks: rng.next_below(2) as usize,
+            straggler_factor: 1.25 + rng.next_f64(),
+            jitter_us: 40.0 * rng.next_below(2) as f64,
+            seed: case,
+            streams: 1 + rng.next_below(3) as usize,
+            ..Scenario::default()
+        };
+        let knobbed = Scenario {
+            fault: FaultPlan {
+                events: Vec::new(),
+                detect_timeout_us: 1.0 + rng.next_f64() * 5_000.0,
+                backoff_base_us: 1.0 + rng.next_f64() * 500.0,
+                backoff_factor: 1.0 + rng.next_f64(),
+                max_retries: rng.next_below(16) as u32,
+                rebuild_us: rng.next_f64() * 10_000.0,
+                checkpoint_period_us: rng.next_f64() * 1_000.0,
+            },
+            ..sc.clone()
+        };
+        let ws = WorldSpec::new(cluster, model, world);
+        let strategies: Vec<Box<dyn Strategy>> = vec![
+            Box::new(Horovod::mpi(MpiFlavor::Mvapich2GdrOpt)),
+            Box::new(Baidu::new()),
+            Box::new(PsStrategy::grpc_mpi()),
+        ];
+        for s in strategies {
+            let plain = s.iteration_in(&ws, &sc).unwrap();
+            let inert = s.iteration_in(&ws, &knobbed).unwrap();
+            let name = &plain.strategy;
+            assert_eq!(plain.iter, inert.iter, "case {case} {name}: iter diverged");
+            assert_eq!(plain.exposed_comm, inert.exposed_comm, "case {case} {name}: comm");
+            assert_eq!(
+                plain.imgs_per_sec.to_bits(),
+                inert.imgs_per_sec.to_bits(),
+                "case {case} {name}: throughput bits diverged"
+            );
+            assert_eq!(
+                plain.engine_events, inert.engine_events,
+                "case {case} {name}: event count diverged"
+            );
+            assert_eq!(
+                plain.resource_util, inert.resource_util,
+                "case {case} {name}: resource ledger diverged"
+            );
+            assert!(plain.fault.is_none() && inert.fault.is_none(), "case {case} {name}: fault");
+        }
+    }
+}
