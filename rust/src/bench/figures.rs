@@ -174,11 +174,13 @@ pub fn fig9(model_name: &str) -> Result<Table> {
         vec![
             Box::new(PsStrategy::grpc()),
             Box::new(PsStrategy::grpc_mpi()),
+            Box::new(PsStrategy::rdma()),
             Box::new(Baidu::with_flavor(MpiFlavor::CrayMpich)),
             Box::new(Horovod::mpi(MpiFlavor::CrayMpich)),
         ],
         "paper efficiencies @128 (Horovod-MPI): NASNet 92%, ResNet-50 71%, MobileNet 16%; \
-         gRPC+MPI worst (single-threaded); Horovod 1.8x/3.2x over gRPC for ResNet/MobileNet (H4)",
+         gRPC+MPI worst (single-threaded); Horovod 1.8x/3.2x over gRPC for ResNet/MobileNet (H4); \
+         RDMA is the zero-copy PS upper bound (one-sided writes, no encode)",
     )
 }
 
@@ -382,9 +384,13 @@ pub fn scenario_two_jobs(
             let ps = PsStrategy::grpc_verbs();
             (ps.name(), link_share_ps(&ps, &ws, offset)?)
         }
+        "rdma" | "grpc+rdma" | "grpc-rdma" => {
+            let ps = PsStrategy::rdma();
+            (ps.name(), link_share_ps(&ps, &ws, offset)?)
+        }
         other => crate::bail!(
             "two-jobs family must be horovod[-mpi|-mpi-opt|-cray|-nccl], baidu[-mpi|-cray], or \
-             ps (grpc | grpc+mpi | grpc+verbs), got `{other}`"
+             ps (grpc | grpc+mpi | grpc+verbs | rdma), got `{other}`"
         ),
     };
     let title = format!(
@@ -807,7 +813,8 @@ mod tests {
     #[test]
     fn two_jobs_families_and_cycle_grid_build() {
         use crate::models::mobilenet;
-        for family in ["horovod", "ps", "grpc+verbs", "horovod-mpi", "baidu", "baidu-mpi"] {
+        for family in ["horovod", "ps", "grpc+verbs", "rdma", "horovod-mpi", "baidu", "baidu-mpi"]
+        {
             let t = scenario_two_jobs(
                 presets::ri2(),
                 mobilenet::mobilenet_v1(),

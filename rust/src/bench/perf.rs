@@ -32,6 +32,10 @@
 //!    template path (cold build on the first pass, warm replays through
 //!    the strategy's [`TemplateCache`] after), so all three strategy
 //!    families appear in the bench file.
+//!  * `ps-rpc-window` — gRPC PS iterations over a window × world grid
+//!    (§Transports): shard exchanges launch through a bounded stream-lane
+//!    RPC window instead of firing at readiness — tracks the windowed
+//!    fan-in path (lane arrive/launch/done churn) across PRs.
 //!  * `fault-sweep` — fault-injected Horovod iterations (§Robustness): a
 //!    mid-iteration rank crash per point drives abort, timeout/backoff
 //!    accounting and the elastic rebuild over world−1 — tracks the
@@ -371,6 +375,41 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
     ));
     failed?;
 
+    // --- 7b. bounded RPC window: lane-scheduled PS shard exchanges ------
+    let win_worlds: &[usize] = if quick { &[8] } else { &[8, 16, 32] };
+    let windows: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let ps_grpc = PsStrategy::grpc();
+    let win_sweep = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..ps_passes {
+            for &world in win_worlds {
+                for &window in windows {
+                    let ws = WorldSpec::new(cluster.clone(), model.clone(), world);
+                    events +=
+                        ps_grpc.iteration_in(&ws, &Scenario::windowed(window))?.engine_events;
+                }
+            }
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "ps-rpc-window",
+        format!(
+            "gRPC PS MobileNet pizdaint@{win_worlds:?} × windows {windows:?} × {ps_passes} \
+             passes (shard exchanges on a bounded stream-lane RPC window)"
+        ),
+        ps_passes * win_worlds.len() * windows.len(),
+        || match win_sweep() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
     // --- 8. fault-injected recovery: abort + elastic rebuild ------------
     let fault_worlds: &[usize] = if quick { &[8] } else { &[16, 32] };
     let fault_sweep = || -> Result<u64> {
@@ -594,7 +633,12 @@ pub fn merge_bench(existing: Option<&Json>, workloads: &[PerfWorkload], mode: &s
 /// *banded*: a fresh rate below `band × baseline` is a regression and
 /// fails the check (wall clocks vary across hosts; the band absorbs
 /// that).  A missing baseline, a pre-v2 schema, or an empty mode
-/// section seeds the trajectory instead of failing.
+/// section seeds the trajectory instead of failing.  A baseline row
+/// carrying `"seed": true` is an *inventory* entry — the workload name
+/// is pinned (so coverage drift shows up in the diff) but its numbers
+/// start with the first real run; commit `perf --out` / `perf
+/// scale-sweep --out` output over the seed rows to upgrade them to a
+/// numeric baseline.
 pub fn check_against(
     fresh: &[PerfWorkload],
     mode: &str,
@@ -641,6 +685,16 @@ pub fn check_against(
             let _ = writeln!(out, "  {:<20} NEW workload ({} events)", w.name, w.events);
             continue;
         };
+        if b.get("seed").and_then(|v| v.as_bool()).unwrap_or(false) {
+            let _ = writeln!(
+                out,
+                "  {:<20} inventory seed — {} events, {:.0} events/s start the trajectory",
+                w.name,
+                w.events,
+                w.events_per_sec()
+            );
+            continue;
+        }
         let b_events = b.get("events").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
         let b_eps = b.get("events_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let f_eps = w.events_per_sec();
@@ -730,7 +784,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 9);
+        assert_eq!(ws.len(), 10);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -764,13 +818,16 @@ mod tests {
         );
         // the third strategy family is on the board
         assert!(ws.iter().any(|w| w.name == "ps-fanin"));
+        // the bounded-RPC-window grid is on the board, and the window=1
+        // points drive the lane machinery (extra arrive/launch events)
+        assert!(ws.iter().any(|w| w.name == "ps-rpc-window"));
         // the overhead-contract guard is on the board
         assert!(ws.iter().any(|w| w.name == "tracer-off"));
         // the recovery runner is on the board
         let fault = ws.iter().find(|w| w.name == "fault-sweep").unwrap();
         assert!(fault.events > 0, "fault sweep scheduled no events");
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 9);
+        assert_eq!(t.rows.len(), 10);
         let j = perf_json(&ws, "quick");
         assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(BENCH_SCHEMA));
         let quick_rows = j
@@ -779,7 +836,7 @@ mod tests {
             .and_then(|m| m.get("workloads"))
             .and_then(|w| w.as_arr())
             .map(|a| a.len());
-        assert_eq!(quick_rows, Some(9));
+        assert_eq!(quick_rows, Some(10));
     }
 
     #[test]
@@ -922,6 +979,21 @@ mod tests {
         // mode names from the CLI axes
         assert_eq!(bench_mode(false, true), "quick");
         assert_eq!(bench_mode(true, false), "scale-full");
+
+        // an inventory seed row pins the name without gating numbers:
+        // neither drift nor band applies, and coverage still diffs
+        let seeded = dir.join("seeded.json");
+        let seed_row = |name: &str| obj(vec![("name", s(name)), ("seed", Json::Bool(true))]);
+        let rows = arr([seed_row("same"), seed_row("gone")]);
+        let quick = obj(vec![("workloads", rows)]);
+        let doc = obj(vec![
+            ("schema", s(BENCH_SCHEMA)),
+            ("modes", obj(vec![("quick", quick)])),
+        ]);
+        std::fs::write(&seeded, doc.to_string()).unwrap();
+        let r = check_against(&[mk("same", 100, 100.0)], "quick", &seeded, 0.99).unwrap();
+        assert!(r.contains("inventory seed"), "{r}");
+        assert!(r.contains("REMOVED"), "{r}");
     }
 
     #[test]

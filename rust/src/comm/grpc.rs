@@ -85,6 +85,12 @@ pub struct TensorTable {
 pub enum TableEvent {
     /// Tensor parked; nobody asked yet.
     Parked,
+    /// Tensor parked OVER an unconsumed tensor for the same key, whose
+    /// payload is dropped — a producer re-publishing before any consumer
+    /// pulled (a missed step or a duplicate send).  The old payload is
+    /// gone either way; this event makes the loss observable instead of
+    /// silent.
+    Replaced,
     /// Request matched instantly; payload returned to these consumers.
     Served(Vec<usize>),
     /// Request queued; producer hasn't computed the tensor yet.
@@ -98,13 +104,17 @@ impl TensorTable {
 
     /// Producer publishes a tensor.  If requests are pending they are all
     /// served immediately and the tensor is removed (TF step 3); otherwise
-    /// it parks (TF steps 1–2).
+    /// it parks (TF steps 1–2).  Re-publishing a key whose tensor is
+    /// still parked replaces the unconsumed payload and says so
+    /// ([`TableEvent::Replaced`]) — the first payload used to vanish
+    /// silently.
     pub fn publish(&mut self, key: TensorKey, data: Vec<f32>) -> TableEvent {
         if let Some(waiters) = self.pending.remove(&key) {
             self.served += waiters.len() as u64;
             TableEvent::Served(waiters)
+        } else if self.ready.insert(key, data).is_some() {
+            TableEvent::Replaced
         } else {
-            self.ready.insert(key, data);
             TableEvent::Parked
         }
     }
@@ -190,6 +200,23 @@ mod tests {
         }
         assert_eq!(tab.waiting(), 0);
         assert_eq!(tab.served, 2);
+    }
+
+    #[test]
+    fn double_publish_surfaces_the_replacement() {
+        let mut tab = TensorTable::new();
+        let k = TensorKey { step: 3, producer: 2, tensor: 1 };
+        assert_eq!(tab.publish(k, vec![1.0]), TableEvent::Parked);
+        // same key again before any consumer pulled: the first payload
+        // is dropped, and the table now says so instead of parking again
+        assert_eq!(tab.publish(k, vec![2.0]), TableEvent::Replaced);
+        assert_eq!(tab.parked(), 1, "still exactly one parked tensor for the key");
+        // the consumer gets the LATEST payload
+        let (ev, data) = tab.request(k, 4);
+        assert_eq!(ev, TableEvent::Served(vec![4]));
+        assert_eq!(data.unwrap(), vec![2.0]);
+        // once consumed, the next publish parks cleanly again
+        assert_eq!(tab.publish(k, vec![3.0]), TableEvent::Parked);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod grpc;
 pub mod mpi;
 pub mod nccl;
 pub mod ptrcache;
+pub mod rdma;
 pub mod verbs;
 
 pub use commop::{

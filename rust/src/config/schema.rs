@@ -100,6 +100,7 @@ impl ExperimentConfig {
                 // 2^64-lane allocation
                 streams: 1,
                 depth: 0,
+                rpc_window: 0,
                 fault: FaultPlan::default(),
             };
             // §Overlap knobs — raw negative-int checks must run BEFORE
@@ -114,6 +115,14 @@ impl ExperimentConfig {
             let depth_raw = sc.get("depth").and_then(|v| v.as_int()).unwrap_or(0);
             crate::ensure!(depth_raw >= 0, "[scenario] depth must be >= 0, got {depth_raw}");
             scenario.depth = depth_raw as usize;
+            // §Transports knob: the PS family's per-worker RPC window
+            // (0 = unbounded — the serialized reference schedule)
+            let window_raw = sc.get("rpc_window").and_then(|v| v.as_int()).unwrap_or(0);
+            crate::ensure!(
+                window_raw >= 0,
+                "[scenario] rpc_window must be >= 0, got {window_raw}"
+            );
+            scenario.rpc_window = window_raw as usize;
             // placement keys ride the [scenario] table: they reshape the
             // cluster the whole sweep runs on — dense nodes colocate
             // ranks on shared NIC/PCIe bundles, rails split the node NIC
@@ -336,6 +345,31 @@ depth = 2
         // the two-job runners don't consume the overlap knobs — the
         // combination would silently print serialized numbers
         assert!(parse("[workload]\n[scenario]\nsecond_job = true\nstreams = 2").is_err());
+    }
+
+    #[test]
+    fn scenario_rpc_window_parses_and_validates() {
+        let c = parse(
+            r#"
+[workload]
+model = "mobilenet"
+
+[scenario]
+rpc_window = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.scenario.rpc_window, 4);
+        assert!(!c.scenario.is_neutral());
+        // default: unbounded (the serialized reference schedule)
+        let d = parse("[workload]\nmodel = \"resnet50\"\n[scenario]\nseed = 1").unwrap();
+        assert_eq!(d.scenario.rpc_window, 0);
+        // negative ints must be friendly errors, not usize wraps
+        assert!(parse("[workload]\n[scenario]\nrpc_window = -2").is_err());
+        // the two-job runners don't consume the PS window knob
+        assert!(
+            parse("[workload]\n[scenario]\nsecond_job = true\nrpc_window = 2").is_err()
+        );
     }
 
     #[test]

@@ -247,6 +247,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             let lower = name.to_ascii_lowercase();
             if !(lower.starts_with("horovod")
                 || lower.starts_with("grpc")
+                || lower.starts_with("rdma")
                 || lower.starts_with("baidu"))
             {
                 println!("(two-jobs: no link-share runner for `{name}`, skipped)");
@@ -304,6 +305,9 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // the stream count instead (--streams then sets the sweep ceiling).
     let streams = args.get_usize("streams", 1).map_err(Error::msg)?;
     let depth = args.get_usize("depth", 0).map_err(Error::msg)?;
+    // §Transports knob: cap the PS family's in-flight shard RPCs per
+    // worker (0 = unbounded — the serialized reference schedule)
+    let rpc_window = args.get_usize("rpc-window", 0).map_err(Error::msg)?;
     // placement overrides: dense nodes / multi-rail NICs reshape the
     // cluster every scenario runs on (the `placement` kind sweeps them
     // instead, defaulting to a 2-GPU / 2-rail comparison)
@@ -390,10 +394,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // label (the same inert-knob policy the `[scenario]` table enforces)
     if matches!(kind, "two-jobs" | "placement" | "faults") {
         mpi_dnn_train::ensure!(
-            streams == 1 && depth == 0,
-            "--streams/--depth are not consumed by `scenario {kind}` — use them with \
-             straggler | hetero | jitter | link-load | fault, or sweep them via \
-             `scenario overlap`"
+            streams == 1 && depth == 0 && rpc_window == 0,
+            "--streams/--depth/--rpc-window are not consumed by `scenario {kind}` — use \
+             them with straggler | hetero | jitter | link-load | fault, or sweep streams \
+             via `scenario overlap`"
+        );
+    }
+    // `overlap` sweeps the allreduce stream count; the PS window knob
+    // would ride along inert (the overlap table runs the Horovod family)
+    if kind == "overlap" {
+        mpi_dnn_train::ensure!(
+            rpc_window == 0,
+            "--rpc-window is not consumed by `scenario overlap` — the PS RPC window rides \
+             straggler | hetero | jitter | link-load | fault"
         );
     }
     if kind == "placement" {
@@ -446,6 +459,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 seed,
                 streams,
                 depth,
+                rpc_window,
                 ..Scenario::straggler(ranks, factor)
             };
             sc.validate()?;
@@ -467,6 +481,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 seed,
                 streams,
                 depth,
+                rpc_window,
                 ..Scenario::hetero(ranks, factor)
             };
             sc.validate()?;
@@ -489,6 +504,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 seed,
                 streams,
                 depth,
+                rpc_window,
                 ..Scenario::default()
             };
             sc.validate()?;
@@ -505,7 +521,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             )?
         }
         "link-load" => {
-            let sc = Scenario { streams, depth, ..Scenario::link_loaded(load) };
+            let sc = Scenario { streams, depth, rpc_window, ..Scenario::link_loaded(load) };
             sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::scenario_compare(
@@ -524,7 +540,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 "scenario fault needs --fault \"crash@T:rN; flap@T:nN.lR+D; ...\" (see `list`)",
             )?;
             let fault = FaultPlan { events: FaultPlan::parse_spec(spec)?.events, ..knobs.clone() };
-            let sc = Scenario { streams, depth, fault, ..Scenario::default() };
+            let sc = Scenario { streams, depth, rpc_window, fault, ..Scenario::default() };
             sc.validate()?;
             traced_sc = Some(sc.clone());
             bench::fault_compare(cluster, model, world, &sc)?
@@ -760,6 +776,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let factor = args.get_f64("factor", 1.5).map_err(Error::msg)?;
     let jitter = args.get_f64("jitter-us", 0.0).map_err(Error::msg)?;
     let seed = args.get_usize("seed", 0).map_err(Error::msg)? as u64;
+    let rpc_window = args.get_usize("rpc-window", 0).map_err(Error::msg)?;
     let out = args.get("out").map(String::from);
     args.reject_unknown().map_err(Error::msg)?;
     mpi_dnn_train::ensure!(world >= 2, "--world must be at least 2");
@@ -788,6 +805,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         seed,
         streams,
         depth,
+        rpc_window,
         ..Scenario::default()
     };
     let ws = WorldSpec::new(cluster, model, world);
@@ -909,7 +927,8 @@ fn cmd_list(args: &Args) -> Result<()> {
     }
     println!("models: resnet50, mobilenet, nasnet (+ transformer via train --config)");
     println!(
-        "strategies: grpc, grpc+mpi, grpc+verbs, baidu, horovod-mpi, horovod-nccl, horovod-mpi-opt, horovod-cray"
+        "strategies: grpc, grpc+mpi, grpc+verbs, rdma, baidu, horovod-mpi, horovod-nccl, \
+         horovod-mpi-opt, horovod-cray"
     );
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
@@ -926,6 +945,11 @@ fn cmd_list(args: &Args) -> Result<()> {
     println!(
         "overlap: every scenario accepts --streams N --depth D (N > 1 interleaves fusion \
          buffers across comm streams, NCCL-stream semantics; `scenario overlap` sweeps N)"
+    );
+    println!(
+        "transports: the PS family (grpc, grpc+mpi, grpc+verbs, rdma) accepts --rpc-window W \
+         on scenario straggler|hetero|jitter|link-load|fault and on trace — cap in-flight \
+         shard RPCs per worker (0 = unbounded, the serialized reference)"
     );
     println!(
         "placement: every scenario/graph accepts --gpus-per-node N --rails R (dense nodes \

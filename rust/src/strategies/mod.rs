@@ -194,10 +194,18 @@ pub(crate) struct GraphWork {
 /// executes template `i` under its overlay with a typed lane
 /// completion.  One allocation per job set (per iteration) — the buffer
 /// loop itself schedules only typed lane events, never an `Engine::at`
-/// closure or boxed gate waiter per buffer.
-struct GraphLaneDriver {
+/// closure or boxed gate waiter per buffer.  Also the substrate of the
+/// PS family's bounded RPC window (ps.rs): there each item is one shard
+/// fan-in DAG and the lane width is the per-worker window.
+pub(crate) struct GraphLaneDriver {
     map: GraphResMap,
     items: Vec<(Arc<GraphTemplate>, GraphOverlay)>,
+}
+
+impl GraphLaneDriver {
+    pub(crate) fn new(map: GraphResMap, items: Vec<(Arc<GraphTemplate>, GraphOverlay)>) -> Self {
+        GraphLaneDriver { map, items }
+    }
 }
 
 impl LaneDriver for GraphLaneDriver {
@@ -242,7 +250,7 @@ impl LaneJob {
             release.push(w.ready);
             payload.push((w.template, w.overlay));
         }
-        let driver = GraphLaneDriver { map: res.mapper(), items: payload };
+        let driver = GraphLaneDriver::new(res.mapper(), payload);
         LaneJob::submit(e, lanes, Rc::new(driver), release, staging_us, offset)
     }
 
@@ -388,12 +396,16 @@ pub trait Strategy: Send + Sync {
     fn iteration_in(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport>;
 }
 
-/// All approaches the paper compares, in Figure-3 order.
+/// All approaches the paper compares, in Figure-3 order (the RDMA
+/// zero-copy transport extends the PS family past gRPC+Verbs — the
+/// "RPC considered harmful" competitor — so the gRPC-vs-No-gRPC
+/// contrast brackets the whole design space).
 pub fn all_strategies() -> Vec<Box<dyn Strategy>> {
     vec![
         Box::new(PsStrategy::grpc()),
         Box::new(PsStrategy::grpc_mpi()),
         Box::new(PsStrategy::grpc_verbs()),
+        Box::new(PsStrategy::rdma()),
         Box::new(Baidu::new()),
         Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2)),
         Box::new(Horovod::nccl()),
@@ -407,13 +419,14 @@ pub fn by_name(name: &str) -> Result<Box<dyn Strategy>> {
         "grpc" => Box::new(PsStrategy::grpc()),
         "grpc+mpi" | "grpc-mpi" => Box::new(PsStrategy::grpc_mpi()),
         "grpc+verbs" | "grpc-verbs" => Box::new(PsStrategy::grpc_verbs()),
+        "rdma" | "grpc+rdma" | "grpc-rdma" => Box::new(PsStrategy::rdma()),
         "baidu" | "baidu-mpi" => Box::new(Baidu::new()),
         "horovod-mpi" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2)),
         "horovod-nccl" => Box::new(Horovod::nccl()),
         "horovod-mpi-opt" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::Mvapich2GdrOpt)),
         "horovod-cray" => Box::new(Horovod::mpi(crate::comm::MpiFlavor::CrayMpich)),
         other => crate::bail!(
-            "unknown strategy `{other}` (grpc | grpc+mpi | grpc+verbs | baidu | \
+            "unknown strategy `{other}` (grpc | grpc+mpi | grpc+verbs | rdma | baidu | \
              horovod-mpi | horovod-nccl | horovod-mpi-opt | horovod-cray)"
         ),
     })
@@ -450,8 +463,10 @@ mod tests {
 
     #[test]
     fn lookup_and_inventory() {
-        assert_eq!(all_strategies().len(), 7);
+        assert_eq!(all_strategies().len(), 8);
         assert!(by_name("horovod-mpi-opt").is_ok());
+        assert!(by_name("rdma").is_ok());
+        assert!(by_name("grpc+rdma").is_ok());
         assert!(by_name("gloo").is_err());
     }
 

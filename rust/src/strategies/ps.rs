@@ -25,20 +25,23 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::util::error::Result;
 
 use super::scenario::Scenario;
-use super::{FaultReport, IterationReport, JobTrace, Strategy, WorldSpec};
+use super::{FaultReport, GraphLaneDriver, IterationReport, JobTrace, Strategy, WorldSpec};
 use crate::cluster::ClusterSpec;
 use crate::comm::commop::{replay, CommOp, RelPin, ResKind, ResMap, ResourceUse};
 use crate::comm::graph::{
-    ps_fanin_graph, ps_fanin_pulls, GraphResMap, GraphRun, NodeId, TemplateCache, TemplateKey,
+    ps_fanin_graph, ps_fanin_pulls, GraphOverlay, GraphResMap, GraphRun, GraphTemplate, NodeId,
+    TemplateCache, TemplateKey,
 };
 use crate::comm::grpc::GrpcTransport;
+use crate::comm::rdma::RdmaTransport;
 use crate::comm::verbs::VerbsTransport;
 use crate::comm::{MpiFlavor, MpiWorld};
-use crate::sim::{Engine, FaultKind, FaultPlan, ResourceId, SimTime, SpanKind};
+use crate::sim::{Engine, FaultKind, FaultPlan, LaneSetId, ResourceId, SimTime, SpanKind};
 
 /// Which library carries the tensor payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +49,10 @@ pub enum PsTransport {
     Grpc,
     Mpi,
     Verbs,
+    /// One-sided RDMA writes, zero-copy: no protobuf encode, no request
+    /// RPC leg, no host staging when the fabric has GDR
+    /// ([`RdmaTransport`]).
+    Rdma,
 }
 
 #[derive(Debug, Clone)]
@@ -105,6 +112,21 @@ impl PsStrategy {
         }
     }
 
+    /// The RDMA zero-copy variant: same PS machinery (runtime tax, skew,
+    /// fan-in topology) as the rest of the family, so the figure sweeps
+    /// isolate the transport — one-sided writes with no encode and no
+    /// staging under GDR.
+    pub fn rdma() -> PsStrategy {
+        PsStrategy {
+            transport: PsTransport::Rdma,
+            single_thread_worker: false,
+            thread_dispatch_us: 0.0,
+            runtime_tax: 0.10,
+            skew_us_per_rank: 470.0,
+            cache: TemplateCache::default(),
+        }
+    }
+
     /// (fixed per-transfer overhead µs, payload link bandwidth GB/s) for
     /// one tensor of `bytes` — the β part is modeled by the NIC resources.
     fn transfer_params(&self, cluster: &ClusterSpec, bytes: usize, pull: bool) -> (f64, f64) {
@@ -116,6 +138,13 @@ impl PsStrategy {
             }
             PsTransport::Verbs => {
                 let t = VerbsTransport::new(&cluster.fabric);
+                let c = t.tensor_cost(bytes);
+                (c.total_us() - t.link.wire_us(bytes), t.link.beta_gbs)
+            }
+            // one-sided transfers: pushes and pulls cost the same (no
+            // request leg either way), so `pull` does not matter here
+            PsTransport::Rdma => {
+                let t = RdmaTransport::new(&cluster.fabric);
                 let c = t.tensor_cost(bytes);
                 (c.total_us() - t.link.wire_us(bytes), t.link.beta_gbs)
             }
@@ -147,11 +176,20 @@ impl PsStrategy {
             let bytes = ws.model.tensors[t].bytes();
             let pieces = bytes.div_ceil(MIN_SLICE).max(1);
             let piece = bytes / pieces;
+            // the remainder folds into the last piece — the split must
+            // conserve the variable's bytes exactly (padding pieces, as
+            // the old `.max(4)` floor did, silently inflated the plan)
             for i in 0..pieces {
-                let b = if i + 1 == pieces { bytes - piece * (pieces - 1) } else { piece };
-                shards.push((b.max(4), ready));
+                let b = if i + 1 == pieces { piece + bytes % pieces } else { piece };
+                shards.push((b, ready));
             }
         }
+        let model_total: usize = ws.model.tensors.iter().map(|t| t.bytes()).sum();
+        let shard_total: usize = shards.iter().map(|&(b, _)| b).sum();
+        assert_eq!(
+            shard_total, model_total,
+            "shard plan lost bytes: shards carry {shard_total}, model holds {model_total}"
+        );
         // greedy least-loaded assignment, largest shards first (the
         // standard LPT heuristic TF's GreedyLoadBalancingStrategy applies)
         let mut order: Vec<usize> = (0..shards.len()).collect();
@@ -255,7 +293,10 @@ impl PsStrategy {
 
         let done = Rc::new(RefCell::new(0usize));
         let pulls = ps_fanin_pulls(w_count);
-        let mut runs = Vec::with_capacity(per_shard.len());
+        let window = sc.rpc_window;
+        let mut runs = Vec::with_capacity(if window == 0 { per_shard.len() } else { 0 });
+        let mut lane_items: Vec<(Arc<GraphTemplate>, GraphOverlay)> = Vec::new();
+        let mut lane_release: Vec<SimTime> = Vec::new();
         for (si, &(bytes, push_fixed, pull_fixed, ps, ready)) in per_shard.iter().enumerate() {
             // everything the shard's op durations and routing depend on,
             // bit-exact (world and placement live in the key proper)
@@ -315,17 +356,41 @@ impl PsStrategy {
                 },
             );
             let overlay = sc.overlay(w_count, si as u64);
-            let shard_done = done.clone();
-            let run = template.execute_at(
-                e,
-                map.clone(),
-                &overlay,
-                offset + ready,
-                Box::new(move |_| *shard_done.borrow_mut() += 1),
-            );
-            runs.push(run);
+            if window > 0 {
+                // bounded RPC window: the shard exchange launches on a
+                // stream lane instead of firing at its readiness
+                lane_items.push((template, overlay));
+                lane_release.push(offset + ready);
+            } else {
+                let shard_done = done.clone();
+                let run = template.execute_at(
+                    e,
+                    map.clone(),
+                    &overlay,
+                    offset + ready,
+                    Box::new(move |_| *shard_done.borrow_mut() += 1),
+                );
+                runs.push(run);
+            }
         }
-        Ok(PsJob { runs, pulls, done, worker_tx })
+        // The per-worker window IS the set-level in-flight cap: every
+        // worker takes part in every shard's fan-in/fan-out, so "at most
+        // `window` push/pull exchanges in flight per worker" and "at most
+        // `window` shard DAGs live on the engine" are the same
+        // constraint.  Each shard gets its own lane (no artificial
+        // serialization between fixed shard pairs) and `depth = window`
+        // is the sliding cap — shards issue smallest-released-index
+        // first, the FIFO RPC issue order of a real windowed stub.
+        let lane = (window > 0).then(|| {
+            let scheduled = lane_items.len();
+            let driver = GraphLaneDriver::new(map.clone(), std::mem::take(&mut lane_items));
+            let set = e.lane_set(scheduled.max(1), window, Rc::new(driver));
+            for (job, &at) in lane_release.iter().enumerate() {
+                e.lane_submit(set, at, job as u32);
+            }
+            (set, scheduled)
+        });
+        Ok(PsJob { runs, pulls, done, worker_tx, lane })
     }
 }
 
@@ -412,11 +477,31 @@ pub struct PsJob {
     pulls: Vec<NodeId>,
     done: Rc<RefCell<usize>>,
     worker_tx: Option<Vec<ResourceId>>,
+    /// The bounded-RPC-window lane set and the number of shards it was
+    /// handed (`rpc_window > 0` schedules through lanes; `None` is the
+    /// historical release-at-readiness path, kept bit-identical).
+    lane: Option<(LaneSetId, usize)>,
 }
 
 impl PsJob {
+    /// The lane set carrying this job's windowed shard exchanges, if
+    /// the scenario bounded the RPC window.
+    pub(crate) fn lane_set(&self) -> Option<LaneSetId> {
+        self.lane.map(|(set, _)| set)
+    }
+
     /// When the job's last worker received its last shard.
-    pub(crate) fn comm_end(&self) -> Result<SimTime> {
+    pub(crate) fn comm_end(&self, e: &Engine) -> Result<SimTime> {
+        if let Some((set, scheduled)) = self.lane {
+            crate::ensure!(
+                e.lane_completed(set) == scheduled,
+                "PS simulation did not converge: {} of {scheduled} windowed shards",
+                e.lane_completed(set)
+            );
+            // the pull deliveries are the fan-in DAG's terminal ops, so
+            // the set's last lane completion is the last pull delivery
+            return Ok(e.lane_last_done(set));
+        }
         crate::ensure!(
             *self.done.borrow() == self.runs.len(),
             "PS simulation did not converge: {} of {} shards",
@@ -440,6 +525,7 @@ impl Strategy for PsStrategy {
             PsTransport::Grpc => "gRPC".into(),
             PsTransport::Mpi => "gRPC+MPI".into(),
             PsTransport::Verbs => "gRPC+Verbs".into(),
+            PsTransport::Rdma => "RDMA".into(),
         }
     }
 
@@ -460,7 +546,7 @@ impl Strategy for PsStrategy {
         let fabric = PsFabric::install_placed(&mut engine, ws.world, ws.cluster.placement());
         let job = self.schedule_job(ws, sc, &mut engine, &fabric, SimTime::ZERO)?;
         engine.run();
-        let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+        let trace = JobTrace { comm_end: job.comm_end(&engine)?, staging_us: 0.0 };
         let parts = super::close_iteration_parts(
             ws,
             sc,
@@ -533,6 +619,11 @@ impl PsStrategy {
         if let Some((t_fail, _dead, _)) = plan.first_crash() {
             // --- the dead rank takes its worker and server with it ---
             engine.run_until(t_fail);
+            if let Some(set) = job.lane_set() {
+                // windowed shards queued behind the crash never launch
+                // (same discipline as recovery.rs: abort, then clear)
+                engine.lane_abort(set);
+            }
             engine.clear_pending();
             engine.trace_truncate(t_fail);
             let detect_end = t_fail + detect;
@@ -549,7 +640,7 @@ impl PsStrategy {
             let fabric2 = PsFabric::install_placed(&mut engine, ws2.world, place2);
             let job2 = self.schedule_job(&ws2, &sc_run, &mut engine, &fabric2, rebuild_end)?;
             engine.run();
-            let comm_end = job2.comm_end()?.max(rebuild_end);
+            let comm_end = job2.comm_end(&engine)?.max(rebuild_end);
             let trace = JobTrace { comm_end, staging_us: 0.0 };
             let parts = super::close_iteration_parts(
                 &ws2,
@@ -594,7 +685,7 @@ impl PsStrategy {
                     _ => {}
                 }
             }
-            let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+            let trace = JobTrace { comm_end: job.comm_end(&engine)?, staging_us: 0.0 };
             let parts = super::close_iteration_parts(
                 ws,
                 &sc_run,
@@ -953,5 +1044,84 @@ mod tests {
         let base = s.iteration(&ws).unwrap().iter;
         let skewed = s.iteration_in(&ws, &Scenario::straggler(1, 2.0)).unwrap().iter;
         assert!(skewed > base, "straggler must slow PS: {skewed} vs {base}");
+    }
+
+    #[test]
+    fn shard_plan_conserves_every_byte() {
+        // the byte-loss bugfix: partitioning variables into ~4MB pieces
+        // must conserve the model size exactly (the old plan floored the
+        // per-piece size and padded tiny pieces, so totals drifted)
+        for model in [resnet::resnet50(), mobilenet::mobilenet_v1(), nasnet::nasnet_large()] {
+            let model_bytes: usize = model.tensors.iter().map(|t| t.bytes()).sum();
+            for world in [2usize, 4, 7] {
+                let ws = WorldSpec::new(presets::ri2(), model.clone(), world);
+                let plan = PsStrategy::grpc().shard_plan(&ws, &Scenario::default());
+                let total: usize = plan.iter().map(|&(b, _, _, _, _)| b).sum();
+                assert_eq!(total, model_bytes, "world {world}: shard plan lost bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn rdma_fastest_of_the_ps_family() {
+        // the Figure-3 ordering extended end-to-end: the zero-copy
+        // one-sided transport beats verbs, which beats plain gRPC
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 16);
+        let g = PsStrategy::grpc().iteration(&ws).unwrap();
+        let v = PsStrategy::grpc_verbs().iteration(&ws).unwrap();
+        let r = PsStrategy::rdma().iteration(&ws).unwrap();
+        assert!(r.imgs_per_sec >= v.imgs_per_sec, "rdma {} < verbs {}", r.imgs_per_sec, v.imgs_per_sec);
+        assert!(v.imgs_per_sec >= g.imgs_per_sec, "verbs {} < grpc {}", v.imgs_per_sec, g.imgs_per_sec);
+    }
+
+    #[test]
+    fn unbounded_window_on_lanes_matches_release_at_readiness() {
+        // window=∞ at zero skew is the regression pin for the lane port:
+        // a window wider than the shard count never blocks a launch, so
+        // the lane path must reproduce the historical release-at-readiness
+        // path exactly — same launch times, same FIFO claim order on the
+        // NIC queues, same iteration time
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        for s in [
+            PsStrategy::grpc(),
+            PsStrategy::grpc_mpi(),
+            PsStrategy::grpc_verbs(),
+            PsStrategy::rdma(),
+        ] {
+            let base = s.iteration(&ws).unwrap().iter;
+            let lane = s.iteration_in(&ws, &Scenario::windowed(1 << 20)).unwrap().iter;
+            assert_eq!(lane, base, "{}: infinite-window lane path diverged", s.name());
+        }
+    }
+
+    #[test]
+    fn tighter_windows_never_speed_up_the_exchange() {
+        // closing the window can only delay launches: iteration time is
+        // non-increasing in the window, and window=1 (fully serialized
+        // shard exchanges) is strictly slower than unbounded
+        let ws = WorldSpec::new(presets::ri2(), mobilenet::mobilenet_v1(), 4);
+        let s = PsStrategy::grpc();
+        let unbounded = s.iteration(&ws).unwrap().iter;
+        let mut prev = unbounded;
+        for w in [8usize, 2, 1] {
+            let t = s.iteration_in(&ws, &Scenario::windowed(w)).unwrap().iter;
+            assert!(t >= prev, "window {w}: {t} beat the looser window {prev}");
+            prev = t;
+        }
+        assert!(prev > unbounded, "window=1 must open the contended regime");
+    }
+
+    #[test]
+    fn windowed_fan_in_survives_a_crash() {
+        // a crash mid-iteration aborts the windowed lane set cleanly and
+        // the restarted job (fresh set) converges over the survivors
+        use crate::sim::FaultPlan;
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), 4);
+        let mut sc = Scenario::windowed(2);
+        sc.fault = FaultPlan::crash(1, 5_000.0);
+        let r = PsStrategy::rdma().iteration_in(&ws, &sc).unwrap();
+        let f = r.fault.expect("fault report");
+        assert_eq!(f.surviving_world, 3);
+        assert!(r.iter > SimTime::ZERO);
     }
 }

@@ -69,6 +69,13 @@ pub struct Scenario {
     /// Queue-depth cap: at most this many collectives in flight across
     /// the lanes (`0` = the stream count, i.e. uncapped).
     pub depth: usize,
+    /// Per-worker RPC window of the PS family (§Transports): at most
+    /// this many push/pull shard exchanges in flight per worker.  `0` =
+    /// unbounded (the historical behaviour — every shard's RPCs issue at
+    /// tensor readiness), `n >= 1` bounds in-flight RPCs on an engine
+    /// lane set, opening the contended fan-in regime the gRPC
+    /// micro-benchmarks show.  Inert for the allreduce family.
+    pub rpc_window: usize,
     /// Injected failures + detection/recovery knobs (§Robustness).  An
     /// empty plan routes every strategy through the exact pre-fault code
     /// path — bit-identical to the plan not existing.
@@ -89,6 +96,7 @@ impl Default for Scenario {
             second_job_offset_us: 0.0,
             streams: 1,
             depth: 0,
+            rpc_window: 0,
             fault: FaultPlan::default(),
         }
     }
@@ -109,6 +117,10 @@ impl Scenario {
 
     pub fn overlap(streams: usize) -> Scenario {
         Scenario { streams, ..Scenario::default() }
+    }
+
+    pub fn windowed(rpc_window: usize) -> Scenario {
+        Scenario { rpc_window, ..Scenario::default() }
     }
 
     pub fn with_fault(fault: FaultPlan) -> Scenario {
@@ -175,6 +187,14 @@ impl Scenario {
                 "second_job and streams/depth overlap cannot combine (streams {}, depth {})",
                 self.streams,
                 self.depth
+            );
+            // the two-job runner schedules both jobs unbounded — a window
+            // it never reads would silently report unwindowed numbers
+            ensure!(
+                self.rpc_window == 0,
+                "second_job does not consume rpc_window ({}) — the link-share runner \
+                 schedules both jobs unbounded",
+                self.rpc_window
             );
             ensure!(
                 self.second_job_offset_us.is_finite() && self.second_job_offset_us >= 0.0,
@@ -426,7 +446,7 @@ pub fn link_share_ps(ps: &PsStrategy, ws: &WorldSpec, offset: SimTime) -> Result
     e.run();
 
     let close = |job: &PsJob, off: SimTime| -> Result<SimTime> {
-        let trace = JobTrace { comm_end: job.comm_end()?, staging_us: 0.0 };
+        let trace = JobTrace { comm_end: job.comm_end(&e)?, staging_us: 0.0 };
         Ok(super::close_iteration(ws, &sc, &trace, off, ps.runtime_tax, ps.skew_us_per_rank))
     };
     let iter_a = close(&job_a, SimTime::ZERO)?;
@@ -632,6 +652,8 @@ mod tests {
         Scenario::straggler(1, 1.5).validate().unwrap();
         Scenario::overlap(4).validate().unwrap();
         Scenario { streams: 4, depth: 2, ..Scenario::default() }.validate().unwrap();
+        Scenario::windowed(2).validate().unwrap();
+        Scenario { rpc_window: 4, ..Scenario::straggler(1, 1.5) }.validate().unwrap();
         Scenario { second_job: true, second_job_offset_us: 250.0, ..Scenario::default() }
             .validate()
             .unwrap();
@@ -648,6 +670,7 @@ mod tests {
             Scenario::hetero(2, 0.0),
             Scenario { jitter_us: -1.0, ..Scenario::default() },
             Scenario { second_job: true, streams: 2, ..Scenario::default() },
+            Scenario { second_job: true, rpc_window: 2, ..Scenario::default() },
             Scenario { second_job: true, second_job_offset_us: -5.0, ..Scenario::default() },
             Scenario { second_job_offset_us: 10.0, ..Scenario::default() },
             Scenario {

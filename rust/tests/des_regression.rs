@@ -227,10 +227,43 @@ fn ps_graph_port_matches_pr1_reference() {
     let neutral = Scenario::default();
     for world in [4usize, 16] {
         let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), world);
-        for s in [PsStrategy::grpc(), PsStrategy::grpc_mpi(), PsStrategy::grpc_verbs()] {
+        for s in [
+            PsStrategy::grpc(),
+            PsStrategy::grpc_mpi(),
+            PsStrategy::grpc_verbs(),
+            PsStrategy::rdma(),
+        ] {
             let graph = s.iteration(&ws).unwrap().iter.as_us();
             let reference = s.iteration_reference(&ws, &neutral).unwrap().iter.as_us();
             assert_close(graph, reference, &format!("{} ri2@{world}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn infinite_rpc_window_is_bit_identical_to_the_unbounded_path() {
+    // §Transports: a window wider than any shard count must route the
+    // PS family through the stream-lane machinery yet reproduce the
+    // unbounded graph path's schedule exactly — SimTime equality, not
+    // tolerance, for every transport on the paper configs.
+    let wide = Scenario::windowed(1 << 20);
+    for world in [4usize, 16] {
+        let ws = WorldSpec::new(presets::ri2(), resnet::resnet50(), world);
+        for s in [
+            PsStrategy::grpc(),
+            PsStrategy::grpc_mpi(),
+            PsStrategy::grpc_verbs(),
+            PsStrategy::rdma(),
+        ] {
+            let base = s.iteration(&ws).unwrap().iter;
+            let lane = s.iteration_in(&ws, &wide).unwrap().iter;
+            assert_eq!(
+                lane,
+                base,
+                "{} ri2@{world}: the infinite-window lane path diverged from the \
+                 unbounded reference",
+                s.name()
+            );
         }
     }
 }

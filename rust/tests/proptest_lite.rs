@@ -976,6 +976,45 @@ fn prop_tracing_is_observationally_free() {
     }
 }
 
+/// prop (§Transports): the PS RPC window is monotone — a tighter
+/// per-worker window never speeds the exchange up, and any finite
+/// window is no faster than the unbounded reference — across random
+/// worlds, models and all four transports.  (Shard releases are
+/// readiness-ordered and the lane launcher issues in index order, so a
+/// tighter cap can only delay every launch; this pins that argument.)
+#[test]
+fn prop_rpc_window_monotone() {
+    use mpi_dnn_train::models::{mobilenet, resnet};
+    use mpi_dnn_train::strategies::{PsStrategy, Scenario, Strategy, WorldSpec};
+    for case in 0u64..12 {
+        let mut rng = Rng::new(0x41D0 + case);
+        let world = 3 + rng.next_below(10) as usize;
+        let model = if case % 2 == 0 { mobilenet::mobilenet_v1() } else { resnet::resnet50() };
+        let ps = match rng.next_below(4) {
+            0 => PsStrategy::grpc(),
+            1 => PsStrategy::grpc_mpi(),
+            2 => PsStrategy::grpc_verbs(),
+            _ => PsStrategy::rdma(),
+        };
+        let ws = WorldSpec::new(presets::ri2(), model, world);
+        let base = ps.iteration(&ws).unwrap().iter;
+        let lo = 1 + rng.next_below(4) as usize;
+        let hi = lo + 1 + rng.next_below(8) as usize;
+        let at = |w: usize| ps.iteration_in(&ws, &Scenario::windowed(w)).unwrap().iter;
+        let (tight, loose) = (at(lo), at(hi));
+        assert!(
+            tight >= loose,
+            "case {case} {} @{world}: window {lo} beat window {hi} ({tight} < {loose})",
+            ps.name()
+        );
+        assert!(
+            loose >= base,
+            "case {case} {} @{world}: finite window {hi} beat unbounded ({loose} < {base})",
+            ps.name()
+        );
+    }
+}
+
 /// prop (§Robustness): an *empty* fault plan is observationally free —
 /// even with every recovery knob set to a non-default value, a plan
 /// with no events takes the exact pre-fault code path in all three
