@@ -40,6 +40,11 @@
 //!    mid-iteration rank crash per point drives abort, timeout/backoff
 //!    accounting and the elastic rebuild over world−1 — tracks the
 //!    recovery runner's cost across PRs.
+//!  * `campaign` — a sustained-failure Horovod training campaign
+//!    (§Robustness): a seeded Poisson crash stream over many iterations
+//!    with Young–Daly checkpointing, rollback-and-replay and elastic
+//!    rejoin — tracks the campaign layer (crashed iterations, rejoin
+//!    collectives, world-cache churn) across PRs.
 //!
 //! `run_scale_sweep` (the `perf scale-sweep` subcommand) pushes the
 //! event core to fleet worlds — 256 → 16k ranks over ring, RHD and PS
@@ -71,7 +76,7 @@ use crate::comm::graph::{
 };
 use crate::comm::{MpiFlavor, MpiWorld};
 use crate::models::mobilenet;
-use crate::sim::{Engine, FaultPlan, SimTime};
+use crate::sim::{run_campaign, CampaignSpec, CheckpointPolicy, Engine, FaultPlan, SimTime};
 use crate::strategies::{Horovod, PsStrategy, Scenario, Strategy, WorldSpec};
 use crate::util::error::Result;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -443,6 +448,45 @@ pub fn run_perf(quick: bool) -> Result<Vec<PerfWorkload>> {
     ));
     failed?;
 
+    // --- 9. sustained-failure campaign: ckpt + rollback + rejoin --------
+    let campaign_iters = if quick { 24 } else { 60 };
+    let campaign = || -> Result<u64> {
+        let mut events = 0u64;
+        for _ in 0..passes {
+            let ws = WorldSpec::new(cluster.clone(), model.clone(), 8);
+            let sc = Scenario {
+                campaign: CampaignSpec {
+                    iters: campaign_iters,
+                    mtbf_us: 60_000.0,
+                    seed: 7,
+                    policy: CheckpointPolicy::YoungDaly,
+                    ckpt_cost_us: 500.0,
+                    repair_us: 10_000.0,
+                },
+                ..Scenario::default()
+            };
+            events += run_campaign(&h, &ws, &sc)?.engine_events;
+        }
+        Ok(events)
+    };
+    let mut failed: Result<()> = Ok(());
+    out.push(timed(
+        "campaign",
+        format!(
+            "Horovod-MPI MobileNet pizdaint@8, {campaign_iters}-iter campaign × {passes} \
+             passes: Poisson crashes (MTBF 60ms/rank), Young-Daly checkpoints, elastic rejoin"
+        ),
+        passes,
+        || match campaign() {
+            Ok(ev) => ev,
+            Err(e) => {
+                failed = Err(e);
+                0
+            }
+        },
+    ));
+    failed?;
+
     Ok(out)
 }
 
@@ -576,7 +620,36 @@ pub fn run_scale_sweep(quick: bool) -> Result<Vec<PerfWorkload>> {
     Ok(out)
 }
 
+/// FNV-1a 64-bit — the provenance checksum hash.  Self-contained (no
+/// deps) and stable across platforms; collision resistance is not a
+/// goal here, only detecting hand-edits and truncation.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Short git revision for the provenance block; "unknown" outside a
+/// work tree (or when git itself is unavailable).
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 fn workloads_json(workloads: &[PerfWorkload]) -> Json {
+    // sorted by name: the committed artifact's diff stays stable when a
+    // workload moves within the harness
+    let mut workloads: Vec<&PerfWorkload> = workloads.iter().collect();
+    workloads.sort_by(|a, b| a.name.cmp(&b.name));
     arr(workloads.iter().map(|w| {
         obj(vec![
             ("name", s(&w.name)),
@@ -612,6 +685,14 @@ pub fn perf_json(workloads: &[PerfWorkload], mode: &str) -> Json {
 /// preserving every *other* mode from `existing` (a quick smoke run
 /// must not clobber a committed full or scale baseline, and vice
 /// versa).  A missing, invalid, or pre-v2 `existing` starts fresh.
+///
+/// Every payload carries a `provenance` block: the config hash (sorted
+/// workload names of this run), the git revision the artifact was
+/// produced at, and an FNV-1a checksum over the serialized `modes`
+/// subtree.  [`check_against`] recomputes the checksum before diffing —
+/// serialization is a fixed point under parse (compact form, BTreeMap
+/// key order, shortest-round-trip numbers), so a hand-edited or
+/// truncated baseline is rejected instead of silently diffed against.
 pub fn merge_bench(existing: Option<&Json>, workloads: &[PerfWorkload], mode: &str) -> Json {
     use std::collections::BTreeMap;
     let mut modes: BTreeMap<String, Json> = match existing {
@@ -624,7 +705,19 @@ pub fn merge_bench(existing: Option<&Json>, workloads: &[PerfWorkload], mode: &s
         _ => BTreeMap::new(),
     };
     modes.insert(mode.to_string(), obj(vec![("workloads", workloads_json(workloads))]));
-    obj(vec![("schema", s(BENCH_SCHEMA)), ("modes", Json::Obj(modes))])
+    let modes_json = Json::Obj(modes);
+    let mut names: Vec<&str> = workloads.iter().map(|w| w.name.as_str()).collect();
+    names.sort_unstable();
+    let provenance = obj(vec![
+        ("config", s(&format!("fnv64:{:016x}", fnv64(names.join(",").as_bytes())))),
+        ("git_rev", s(&git_rev())),
+        ("checksum", s(&format!("fnv64:{:016x}", fnv64(modes_json.to_string().as_bytes())))),
+    ]);
+    obj(vec![
+        ("schema", s(BENCH_SCHEMA)),
+        ("modes", modes_json),
+        ("provenance", provenance),
+    ])
 }
 
 /// Diff a fresh run against a committed baseline file (schema v2).
@@ -663,6 +756,32 @@ pub fn check_against(
             path.display()
         ));
     }
+    // provenance: recompute the checksum over the parsed `modes` subtree
+    // (serialization is a parse fixed point) and refuse to diff against a
+    // hand-edited or truncated baseline; a pre-provenance v2 file is
+    // tolerated with a note
+    let provenance_note = match json
+        .get("provenance")
+        .and_then(|p| p.get("checksum"))
+        .and_then(|c| c.as_str())
+    {
+        Some(want) => {
+            let got = match json.get("modes") {
+                Some(m) => format!("fnv64:{:016x}", fnv64(m.to_string().as_bytes())),
+                None => "fnv64:<no modes section>".to_string(),
+            };
+            crate::ensure!(
+                got == want,
+                "perf-check: baseline {} fails its provenance checksum (file says {want}, \
+                 modes hash to {got}) — the artifact was edited or truncated after `perf \
+                 --out` wrote it; regenerate it with `perf --out` / `perf scale-sweep --out`",
+                path.display()
+            );
+            format!("  provenance checksum verified ({want})\n")
+        }
+        None => "  (no provenance block — pre-provenance baseline, checksum not verified)\n"
+            .to_string(),
+    };
     let base: &[Json] = json
         .get("modes")
         .and_then(|m| m.get(mode))
@@ -679,6 +798,7 @@ pub fn check_against(
     let base_of =
         |name: &str| base.iter().find(|w| w.get("name").and_then(|n| n.as_str()) == Some(name));
     let mut out = format!("perf-check vs {} ({mode} mode, band {band:.2}):\n", path.display());
+    out.push_str(&provenance_note);
     let mut regressions: Vec<String> = Vec::new();
     for w in fresh {
         let Some(b) = base_of(&w.name) else {
@@ -784,7 +904,7 @@ mod tests {
     #[test]
     fn quick_perf_produces_all_workloads_with_events() {
         let ws = run_perf(true).unwrap();
-        assert_eq!(ws.len(), 10);
+        assert_eq!(ws.len(), 11);
         for w in &ws {
             assert!(w.events > 0, "{}: no events", w.name);
             assert!(w.events_per_sec() > 0.0, "{}: zero rate", w.name);
@@ -826,8 +946,12 @@ mod tests {
         // the recovery runner is on the board
         let fault = ws.iter().find(|w| w.name == "fault-sweep").unwrap();
         assert!(fault.events > 0, "fault sweep scheduled no events");
+        // the sustained-failure campaign layer is on the board, and its
+        // crashed/rejoin iterations run real engine events
+        let campaign = ws.iter().find(|w| w.name == "campaign").unwrap();
+        assert!(campaign.events > 0, "campaign scheduled no events");
         let t = perf_table(&ws, true);
-        assert_eq!(t.rows.len(), 10);
+        assert_eq!(t.rows.len(), 11);
         let j = perf_json(&ws, "quick");
         assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(BENCH_SCHEMA));
         let quick_rows = j
@@ -836,7 +960,7 @@ mod tests {
             .and_then(|m| m.get("workloads"))
             .and_then(|w| w.as_arr())
             .map(|a| a.len());
-        assert_eq!(quick_rows, Some(10));
+        assert_eq!(quick_rows, Some(11));
     }
 
     #[test]
@@ -994,6 +1118,79 @@ mod tests {
         let r = check_against(&[mk("same", 100, 100.0)], "quick", &seeded, 0.99).unwrap();
         assert!(r.contains("inventory seed"), "{r}");
         assert!(r.contains("REMOVED"), "{r}");
+    }
+
+    #[test]
+    fn provenance_checksum_round_trips_and_rejects_tampering() {
+        let mk = |name: &str, events: u64| PerfWorkload {
+            name: name.into(),
+            detail: "d".into(),
+            runs: 1,
+            events,
+            wall_ms: 1.5,
+            template_bytes: 3,
+            slab_bytes: 4,
+        };
+        let dir = std::env::temp_dir().join("mpi-dnn-train-perf-provenance-test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // every payload carries the block, and serialize -> parse ->
+        // re-serialize reproduces the checksummed bytes exactly
+        let doc = merge_bench(None, &[mk("b", 100), mk("a", 50)], "quick");
+        let prov = doc.get("provenance").expect("provenance block");
+        let want = prov.get("checksum").and_then(|c| c.as_str()).unwrap().to_string();
+        assert!(want.starts_with("fnv64:") && want.len() == "fnv64:".len() + 16, "{want}");
+        assert!(prov.get("git_rev").and_then(|g| g.as_str()).is_some());
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        let modes = reparsed.get("modes").unwrap();
+        assert_eq!(format!("fnv64:{:016x}", fnv64(modes.to_string().as_bytes())), want);
+
+        // workloads serialize name-sorted regardless of run order
+        let names: Vec<String> = reparsed
+            .get("modes")
+            .and_then(|m| m.get("quick"))
+            .and_then(|m| m.get("workloads"))
+            .and_then(|w| w.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|w| w.get("name").and_then(|n| n.as_str()).map(String::from))
+            .collect();
+        assert_eq!(names, ["a", "b"]);
+
+        // an intact artifact passes the check (numbers match themselves)
+        let path = dir.join("intact.json");
+        std::fs::write(&path, doc.to_string()).unwrap();
+        let r = check_against(&[mk("b", 100), mk("a", 50)], "quick", &path, DEFAULT_BAND)
+            .unwrap();
+        assert!(r.contains("provenance checksum verified"), "{r}");
+
+        // hand-editing a number invalidates the checksum and fails loudly
+        let tampered = doc.to_string().replace("\"events\":100", "\"events\":101");
+        assert_ne!(tampered, doc.to_string(), "tamper target must exist");
+        std::fs::write(&path, tampered).unwrap();
+        let err = check_against(&[mk("b", 100), mk("a", 50)], "quick", &path, DEFAULT_BAND);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("provenance checksum"), "{msg}");
+
+        // a provenance-free v2 baseline (the committed seed document) is
+        // tolerated with a note, not rejected
+        let bare = obj(vec![
+            ("schema", s(BENCH_SCHEMA)),
+            (
+                "modes",
+                obj(vec![(
+                    "quick",
+                    obj(vec![("workloads", arr([obj(vec![("name", s("b")), ("seed", Json::Bool(true))])]))]),
+                )]),
+            ),
+        ]);
+        std::fs::write(&path, bare.to_string()).unwrap();
+        let r = check_against(&[mk("b", 100)], "quick", &path, DEFAULT_BAND).unwrap();
+        assert!(r.contains("checksum not verified"), "{r}");
+
+        // fnv64 is the standard FNV-1a 64 vector set
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
     }
 
     #[test]

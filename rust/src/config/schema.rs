@@ -8,7 +8,7 @@ use crate::util::error::{Context, Result};
 use super::toml_lite::{parse_toml, TomlDoc};
 use crate::cluster::{presets, ClusterSpec};
 use crate::models::{self, ModelProfile};
-use crate::sim::FaultPlan;
+use crate::sim::{CampaignSpec, CheckpointPolicy, FaultPlan};
 use crate::strategies::Scenario;
 
 /// One experiment: a cluster, a workload, a strategy set and a GPU sweep.
@@ -102,6 +102,8 @@ impl ExperimentConfig {
                 depth: 0,
                 rpc_window: 0,
                 fault: FaultPlan::default(),
+                campaign: CampaignSpec::default(),
+                rejoin_rebuild_us: 0.0,
             };
             // §Overlap knobs — raw negative-int checks must run BEFORE
             // the usize casts; every shared range/consistency rule runs
@@ -172,6 +174,29 @@ impl ExperimentConfig {
                 crate::ensure!(r >= 0, "[scenario.fault] max_retries must be >= 0, got {r}");
                 scenario.fault.max_retries = r as u32;
             }
+        }
+        // optional [scenario.campaign] table (§Robustness campaign): a
+        // sustained-failure training campaign — N iterations under a
+        // seeded MTBF crash stream with a checkpoint policy and elastic
+        // rejoin.  Raw negative-int checks run before the casts; the
+        // shared range/consistency rules run in `Scenario::validate`.
+        if let Some(ct) = doc.get("scenario.campaign") {
+            let f = |key: &str, or: f64| ct.get(key).and_then(|v| v.as_float()).unwrap_or(or);
+            let iters_raw = ct.get("iters").and_then(|v| v.as_int()).unwrap_or(0);
+            crate::ensure!(
+                iters_raw >= 0,
+                "[scenario.campaign] iters must be >= 0, got {iters_raw}"
+            );
+            scenario.campaign.iters = iters_raw as usize;
+            scenario.campaign.mtbf_us = f("mtbf_us", 0.0);
+            scenario.campaign.seed =
+                ct.get("seed").and_then(|v| v.as_int()).unwrap_or(0) as u64;
+            scenario.campaign.ckpt_cost_us = f("ckpt_cost_us", 0.0);
+            scenario.campaign.repair_us = f("repair_us", 0.0);
+            let policy =
+                ct.get("ckpt").and_then(|v| v.as_str()).unwrap_or("off").to_string();
+            scenario.campaign.policy =
+                CheckpointPolicy::parse(&policy, f("ckpt_period_us", 0.0))?;
         }
         // one shared validation pass — the same `Scenario::validate` the
         // CLI flags and the bench sweeps run (§Robustness satellite)

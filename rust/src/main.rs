@@ -13,6 +13,10 @@
 //! mpi-dnn-train scenario overlap --cluster pizdaint --world 64 --model mobilenet --streams 8
 //! mpi-dnn-train scenario fault --world 8 --fault "crash@1500:r3" --trace recovery.json
 //! mpi-dnn-train scenario faults --cluster owens --world 16 --seed 7   # rate × world sweep
+//! mpi-dnn-train scenario campaign --world 8 --campaign-iters 50 --campaign-mtbf-us 60000 \
+//!     --campaign-ckpt young-daly --campaign-ckpt-cost-us 500 --campaign-repair-us 8000 \
+//!     [--strategy horovod-mpi-opt --trace c.json --report c-report.json]
+//! mpi-dnn-train scenario campaigns --cluster ri2 --world 8 --seed 7   # policy × rate sweep
 //! mpi-dnn-train graph --algo ring --ranks 8 --size 4MB --straggler 1 --factor 2
 //! mpi-dnn-train graph --ranks 8 --gpus-per-node 2 --rails 2   # dense-node timeline
 //! mpi-dnn-train trace --strategy horovod-mpi-opt --world 8 --streams 2 --out trace.json
@@ -174,7 +178,83 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_path: args.get("checkpoint").map(std::path::PathBuf::from),
         trace_path: args.get("trace").map(std::path::PathBuf::from),
     };
+    // §Robustness rehearsal: any --campaign-* flag reroutes `train` into
+    // an engine-level sustained-failure campaign over the configured
+    // cluster/world/flavor — same seeds, crash stream and checkpoint
+    // policy the real run would face, no PJRT artifacts needed
+    let campaign_given = [
+        "campaign-iters",
+        "campaign-mtbf-us",
+        "campaign-ckpt",
+        "campaign-ckpt-period-us",
+        "campaign-ckpt-cost-us",
+        "campaign-repair-us",
+        "campaign-model",
+    ]
+    .iter()
+    .any(|k| args.get(k).is_some());
+    let campaign_iters = args.get_usize("campaign-iters", cfg.steps).map_err(Error::msg)?;
+    let campaign_mtbf = args.get_f64("campaign-mtbf-us", 0.0).map_err(Error::msg)?;
+    let campaign_ckpt = args.get_or("campaign-ckpt", "off");
+    let campaign_ckpt_period =
+        args.get_f64("campaign-ckpt-period-us", 0.0).map_err(Error::msg)?;
+    let campaign_ckpt_cost = args.get_f64("campaign-ckpt-cost-us", 0.0).map_err(Error::msg)?;
+    let campaign_repair = args.get_f64("campaign-repair-us", 0.0).map_err(Error::msg)?;
+    let campaign_model = args.get_or("campaign-model", "resnet50");
     args.reject_unknown().map_err(Error::msg)?;
+    if campaign_given {
+        use mpi_dnn_train::sim::{run_campaign, CampaignSpec, CheckpointPolicy, TraceGuard};
+        let model = mpi_dnn_train::models::by_name(&campaign_model)?;
+        let model_name = model.name.clone();
+        let ws = WorldSpec::new(cfg.cluster.clone(), model, cfg.world);
+        let sc = mpi_dnn_train::strategies::Scenario {
+            campaign: CampaignSpec {
+                iters: campaign_iters,
+                mtbf_us: campaign_mtbf,
+                seed: cfg.seed,
+                policy: CheckpointPolicy::parse(&campaign_ckpt, campaign_ckpt_period)?,
+                ckpt_cost_us: campaign_ckpt_cost,
+                repair_us: campaign_repair,
+            },
+            ..mpi_dnn_train::strategies::Scenario::default()
+        };
+        sc.validate()?;
+        let strat = mpi_dnn_train::strategies::Horovod::mpi(cfg.flavor);
+        println!(
+            "campaign rehearsal: {} × {} iters on simulated {} ({model_name}, world {})",
+            strat.name(),
+            campaign_iters,
+            cfg.cluster.name,
+            cfg.world
+        );
+        let report = {
+            let _t = cfg.trace_path.as_ref().map(|_| TraceGuard::new());
+            run_campaign(&strat, &ws, &sc)?
+        };
+        println!(
+            "done: {} committed ({} attempted, {} discarded), {} crashes / {} rejoins / {} \
+             checkpoints, makespan {}, goodput {:.0} img/s (fault-free {:.0})",
+            report.committed,
+            report.attempted,
+            report.discarded,
+            report.crashes,
+            report.rejoins,
+            report.checkpoints,
+            report.makespan,
+            report.goodput_imgs_per_sec,
+            report.fault_free_imgs_per_sec
+        );
+        if let Some(path) = &cfg.trace_path {
+            let trace = report
+                .trace
+                .as_ref()
+                .context("traced campaign attached no trace (tracer detached?)")?;
+            std::fs::write(path, &trace.chrome_json)
+                .context(format!("writing {}", path.display()))?;
+            println!("wrote {} (representative campaign iteration)", path.display());
+        }
+        return Ok(());
+    }
 
     let client = mpi_dnn_train::runtime::client::shared()?;
     println!(
@@ -266,6 +346,48 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
         }
     }
+    // `[scenario.campaign]`: the main sweep rows above are fault-free
+    // iterations; the campaign runs on the sweep's largest point, one
+    // row per configured strategy under the same seeded crash stream
+    if !cfg.scenario.campaign.is_off() {
+        let world = *cfg.gpus.iter().max().unwrap();
+        let spec = &cfg.scenario.campaign;
+        let mut ct = Table::new(
+            &format!(
+                "experiment `{}`: {}-iter campaign @ {world} gpus (MTBF {:.0}us/rank, \
+                 ckpt {})",
+                cfg.name,
+                spec.iters,
+                spec.mtbf_us,
+                spec.policy.name()
+            ),
+            &["strategy", "goodput", "iters/s", "crashes", "rejoins", "ckpts", "makespan"],
+        );
+        let rows = par_map_ordered(strats.iter(), |s| {
+            let mut ws = WorldSpec::new(cfg.cluster.clone(), cfg.model.clone(), world);
+            ws.batch_per_gpu = cfg.batch_per_gpu;
+            match mpi_dnn_train::sim::run_campaign(s.as_ref(), &ws, &cfg.scenario) {
+                Ok(r) => vec![
+                    s.name(),
+                    format!("{:.0}", r.goodput_imgs_per_sec),
+                    format!("{:.2}", r.effective_iters_per_sec),
+                    r.crashes.to_string(),
+                    r.rejoins.to_string(),
+                    r.checkpoints.to_string(),
+                    format!("{}", r.makespan),
+                ],
+                Err(_) => {
+                    let mut row = vec![s.name(), "n/a".into(), "n/a".into()];
+                    row.extend(["-", "-", "-", "-"].map(String::from));
+                    row
+                }
+            }
+        });
+        for row in rows {
+            ct.row(row);
+        }
+        emit(&ct, cfg.json_output);
+    }
     Ok(())
 }
 
@@ -355,6 +477,28 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 .map_err(Error::msg)?,
         }
     };
+    // §Robustness campaign knobs (the `campaign` kind): a sustained
+    // seeded crash stream over many iterations with checkpoint rollback
+    // and elastic rejoin; `campaigns` sweeps policy × rate instead.
+    let campaign_knob_given = [
+        "campaign-iters",
+        "campaign-mtbf-us",
+        "campaign-ckpt",
+        "campaign-ckpt-period-us",
+        "campaign-ckpt-cost-us",
+        "campaign-repair-us",
+    ]
+    .iter()
+    .any(|k| args.get(k).is_some());
+    let campaign_iters = args.get_usize("campaign-iters", 50).map_err(Error::msg)?;
+    let campaign_mtbf = args.get_f64("campaign-mtbf-us", 0.0).map_err(Error::msg)?;
+    let campaign_ckpt = args.get_or("campaign-ckpt", "off");
+    let campaign_ckpt_period =
+        args.get_f64("campaign-ckpt-period-us", 0.0).map_err(Error::msg)?;
+    let campaign_ckpt_cost = args.get_f64("campaign-ckpt-cost-us", 0.0).map_err(Error::msg)?;
+    let campaign_repair = args.get_f64("campaign-repair-us", 0.0).map_err(Error::msg)?;
+    let strategy_flag = args.get("strategy").map(String::from);
+    let report_flag = args.get("report").map(String::from);
     // §Observability: after the comparison table, re-run the scenario's
     // horovod-mpi-opt point with the span tracer attached and write the
     // Chrome timeline here (the table itself runs untraced, as always).
@@ -362,25 +506,33 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     args.reject_unknown().map_err(Error::msg)?;
     if trace_flag.is_some() {
         mpi_dnn_train::ensure!(
-            !matches!(kind, "two-jobs" | "placement" | "faults"),
-            "--trace works with straggler | hetero | jitter | link-load | overlap | fault (the \
-             {kind} comparison has no single traced iteration)"
+            !matches!(kind, "two-jobs" | "placement" | "faults" | "campaigns"),
+            "--trace works with straggler | hetero | jitter | link-load | overlap | fault | \
+             campaign (the {kind} comparison has no single traced run)"
         );
     }
     // same inert-knob policy as --streams/--depth below: fault flags on a
     // kind that never reads them would silently report fault-free numbers
-    if !matches!(kind, "fault" | "faults") {
+    // (`campaign` honors the shared recovery knobs on its crash draws)
+    if !matches!(kind, "fault" | "faults" | "campaign") {
         mpi_dnn_train::ensure!(
             fault_spec.is_none() && !fault_knob_given,
             "--fault and the fault knobs are only consumed by `scenario fault` / \
-             `scenario faults`"
+             `scenario faults` / `scenario campaign`"
         );
     }
-    if kind == "faults" {
+    if matches!(kind, "faults" | "campaign") {
         mpi_dnn_train::ensure!(
             fault_spec.is_none(),
-            "`scenario faults` draws its own seeded crashes — use `scenario fault` to \
+            "`scenario {kind}` draws its own seeded crashes — use `scenario fault` to \
              inject an explicit --fault schedule"
+        );
+    }
+    if kind != "campaign" {
+        mpi_dnn_train::ensure!(
+            !campaign_knob_given && strategy_flag.is_none() && report_flag.is_none(),
+            "--campaign-* / --strategy / --report are only consumed by `scenario campaign` \
+             (`scenario campaigns` derives its grid from the measured iteration and --seed)"
         );
     }
     for (name, v) in [("--gpus-per-node", gpn_flag), ("--rails", rails_flag)] {
@@ -392,12 +544,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // comparisons and do not consume the overlap knobs — accepting them
     // silently would report serialized-baseline numbers under an overlap
     // label (the same inert-knob policy the `[scenario]` table enforces)
-    if matches!(kind, "two-jobs" | "placement" | "faults") {
+    if matches!(kind, "two-jobs" | "placement" | "faults" | "campaigns") {
         mpi_dnn_train::ensure!(
             streams == 1 && depth == 0 && rpc_window == 0,
             "--streams/--depth/--rpc-window are not consumed by `scenario {kind}` — use \
-             them with straggler | hetero | jitter | link-load | fault, or sweep streams \
-             via `scenario overlap`"
+             them with straggler | hetero | jitter | link-load | fault | campaign, or sweep \
+             streams via `scenario overlap`"
         );
     }
     // `overlap` sweeps the allreduce stream count; the PS window knob
@@ -434,6 +586,107 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         cluster.nic_rails,
         cluster.gpus_per_node
     );
+
+    // the campaign kinds run whole training campaigns, not single
+    // iterations, and own their --trace/--report handling — they return
+    // before the generic single-iteration trace trailer below
+    if kind == "campaigns" {
+        let table = bench::campaign_sweep(cluster, model, world, seed)?;
+        emit(&table, json);
+        return Ok(());
+    }
+    if kind == "campaign" {
+        use mpi_dnn_train::sim::{run_campaign, CampaignSpec, CheckpointPolicy, TraceGuard};
+        let cluster_name = cluster.name;
+        let model_name = model.name.clone();
+        let spec = CampaignSpec {
+            iters: campaign_iters,
+            mtbf_us: campaign_mtbf,
+            seed,
+            policy: CheckpointPolicy::parse(&campaign_ckpt, campaign_ckpt_period)?,
+            ckpt_cost_us: campaign_ckpt_cost,
+            repair_us: campaign_repair,
+        };
+        let sc = Scenario {
+            streams,
+            depth,
+            rpc_window,
+            fault: knobs.clone(),
+            campaign: spec.clone(),
+            ..Scenario::default()
+        };
+        sc.validate()?;
+        let Some(name) = strategy_flag else {
+            // no strategy picked: the all-strategies comparison table
+            mpi_dnn_train::ensure!(
+                trace_flag.is_none() && report_flag.is_none(),
+                "--trace/--report need --strategy NAME (the campaign comparison table has \
+                 no single run to export)"
+            );
+            let table = bench::campaign_compare(cluster, model, world, &sc)?;
+            emit(&table, json);
+            return Ok(());
+        };
+        let strat = strategies::by_name(&name)?;
+        let ws = WorldSpec::new(cluster, model, world);
+        let report = {
+            let _t = trace_flag.as_ref().map(|_| TraceGuard::new());
+            run_campaign(strat.as_ref(), &ws, &sc)?
+        };
+        let mut t = Table::new(
+            &format!(
+                "Campaign: {name} × {} iters ({model_name}, {cluster_name}@{world})",
+                report.committed
+            ),
+            &["metric", "value"],
+        );
+        t.row(["iters committed / attempted / discarded".into(), format!(
+            "{} / {} / {}",
+            report.committed, report.attempted, report.discarded
+        )]);
+        t.row(["crashes / rejoins / suppressed".into(), format!(
+            "{} / {} / {}",
+            report.crashes, report.rejoins, report.suppressed
+        )]);
+        t.row(["checkpoints".into(), format!(
+            "{} ({})",
+            report.checkpoints,
+            if report.checkpoint_interval_us > 0.0 {
+                format!("every {:.0}us, {}", report.checkpoint_interval_us, spec.policy.name())
+            } else {
+                "off".to_string()
+            }
+        )]);
+        t.row(["makespan".into(), format!("{}", report.makespan)]);
+        t.row(["productive".into(), format!("{}", report.productive)]);
+        t.row(["rollback lost".into(), format!("{}", report.rollback_lost)]);
+        t.row(["recovery".into(), format!("{}", report.recovery)]);
+        t.row(["rejoin rebuild".into(), format!("{}", report.rejoin_rebuild)]);
+        t.row(["checkpoint overhead".into(), format!("{}", report.checkpoint_overhead)]);
+        t.row(["goodput".into(), format!("{:.0} img/s", report.goodput_imgs_per_sec)]);
+        t.row(["effective iters/s".into(), format!("{:.2}", report.effective_iters_per_sec)]);
+        t.row(["fault-free".into(), format!("{:.0} img/s", report.fault_free_imgs_per_sec)]);
+        t.row(["world min / changes".into(), format!(
+            "{} / {}",
+            report.min_world,
+            report.world_timeline.len().saturating_sub(1)
+        )]);
+        emit(&t, json);
+        if let Some(path) = trace_flag {
+            let trace = report
+                .trace
+                .as_ref()
+                .context("traced campaign attached no trace (tracer detached?)")?;
+            std::fs::write(&path, &trace.chrome_json).context(format!("writing {path}"))?;
+            println!("wrote {path} (representative campaign iteration)");
+        }
+        if let Some(path) = report_flag {
+            let text = report.to_json().to_string() + "\n";
+            std::fs::write(&path, text).context(format!("writing {path}"))?;
+            println!("wrote {path} (CampaignReport JSON)");
+        }
+        return Ok(());
+    }
 
     // cloned only when a traced re-run follows the table (the bench
     // calls consume `cluster`/`model`); the Scenario each arm records is
@@ -549,7 +802,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         "two-jobs" => bench::scenario_two_jobs(cluster, model, world, offset, &family)?,
         other => mpi_dnn_train::bail!(
             "unknown scenario `{other}` (straggler | hetero | jitter | link-load | two-jobs | \
-             placement | overlap | fault | faults)"
+             placement | overlap | fault | faults | campaign | campaigns)"
         ),
     };
     emit(&table, json);
@@ -933,7 +1186,7 @@ fn cmd_list(args: &Args) -> Result<()> {
     println!("mpi flavors: mvapich2, mvapich2-gdr-opt, cray-mpich, mpich");
     println!(
         "scenarios: straggler, hetero, jitter, link-load, two-jobs [--family horovod|baidu|ps], \
-         placement, overlap, fault, faults (see `scenario --help` flags)"
+         placement, overlap, fault, faults, campaign, campaigns (see `scenario --help` flags)"
     );
     println!(
         "faults: `scenario fault --fault SPEC` injects a schedule — SPEC is `;`-separated \
@@ -941,6 +1194,15 @@ fn cmd_list(args: &Args) -> Result<()> {
          flap@T:nN.lR+D (port node N rail R dark D us), raildown@T:nN.lR (rail failover); \
          knobs: --fault-timeout-us --fault-backoff-us --fault-backoff-factor --fault-retries \
          --rebuild-us --checkpoint-us; `scenario faults` sweeps seeded crashes over rate × world"
+    );
+    println!(
+        "campaigns: `scenario campaign` runs a sustained-failure training campaign — knobs: \
+         --campaign-iters N --campaign-mtbf-us M (per-rank MTBF, Poisson crash stream) \
+         --campaign-ckpt off|fixed|young-daly --campaign-ckpt-period-us P (fixed) \
+         --campaign-ckpt-cost-us C --campaign-repair-us R; add --strategy S for one run \
+         (--trace/--report export it), omit for the all-strategies table; `scenario \
+         campaigns` sweeps policy × failure rate from --seed; `train --campaign-*` rehearses \
+         the campaign on the training cluster; experiment tomls take [scenario.campaign]"
     );
     println!(
         "overlap: every scenario accepts --streams N --depth D (N > 1 interleaves fusion \

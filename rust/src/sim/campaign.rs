@@ -1,0 +1,706 @@
+//! Training campaigns under sustained failures (§Robustness campaign).
+//!
+//! PR 8's fault subsystem models *one* injected fault inside *one*
+//! iteration, always shrinking the world.  A campaign is the steady
+//! state the fleet-scale north star actually lives in: N committed
+//! iterations of any strategy under a sustained, seeded, rate-driven
+//! crash stream ([`crate::sim::fault::FaultStream`] — per-rank MTBF,
+//! Poisson arrivals on the campaign clock), with
+//!
+//! - **checkpoint policies** ([`CheckpointPolicy`]): `off`, fixed
+//!   period, or the Young–Daly optimal interval τ\* = √(2·C·M) computed
+//!   from the measured per-iteration cost and the *system* MTBF
+//!   (M = mtbf_per_rank / world), driving rollback-and-replay of the
+//!   iterations committed since the last checkpoint;
+//! - **elastic rejoin**: a crashed rank is repaired after a seeded
+//!   repair-time draw and rejoins at the next iteration boundary,
+//!   triggering a grow-back template rebuild to the full world (the
+//!   shrink path's twin — `strategies::recovery::run_rejoin_collective`
+//!   and the PS family's `iteration_rejoin`);
+//! - a [`CampaignReport`] whose time buckets *conserve the clock
+//!   exactly*: productive + rollback + recovery + rejoin-rebuild +
+//!   checkpoint overhead == makespan on the integer-nanosecond clock.
+//!
+//! Campaign semantics, iteration by iteration:
+//!
+//! ```text
+//! while committed < N:
+//!   if a repaired rank is waiting        rejoin iteration at the full
+//!                                        world, rebuild offset on comm
+//!   else if a drawn crash lands here     rollback to the last checkpoint
+//!                                        (uncheckpointed commits move to
+//!                                        the rollback bucket), then the
+//!                                        crashed iteration runs the PR 8
+//!                                        shrink recovery and commits as
+//!                                        the first recomputed step
+//!   else                                 a plain iteration at the
+//!                                        current world (cached — steady
+//!                                        state is world-determined)
+//!   then: every `interval` commits, pay the checkpoint cost
+//! ```
+//!
+//! At most one rank is down at a time: arrivals drawn while degraded
+//! (or during a rejoin barrier) are *suppressed* and counted — a second
+//! concurrent failure would shrink past the recovery model's floor.
+//! Crashes therefore always fire from the full world, and the world
+//! timeline oscillates between `world` and `world − 1`.
+//!
+//! **Empty-campaign guarantee:** with `mtbf_us = 0` and checkpointing
+//! off, every iteration takes the exact plain `iteration_in` path, so
+//! the campaign makespan is bit-identical to N plain iterations on the
+//! integer clock (`makespan.0 == N × iter.0`) — the campaign-level twin
+//! of the empty-fault-plan guarantee, pinned by the chaos harness.
+//!
+//! **Goodput bound:** every committed step at world w contributes
+//! w×batch images and costs at least the fault-free iteration at w, so
+//! goodput ≤ max over visited worlds of the fault-free rate.  (The
+//! bound is the *max* over {world, world−1}, not the full-world rate
+//! alone: PS fan-in congestion makes throughput non-monotone in world,
+//! so the shrunken world can be the faster one.)
+
+use std::sync::Arc;
+
+use super::fault::{FaultPlan, FaultStream};
+use super::time::SimTime;
+use super::trace::TraceReport;
+use crate::strategies::{IterationReport, Scenario, Strategy, WorldSpec};
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+use crate::{anyhow, ensure};
+
+/// When (and how often) the campaign pays the checkpoint cost.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CheckpointPolicy {
+    /// Never checkpoint: a crash rolls back to campaign start.
+    #[default]
+    Off,
+    /// Checkpoint every `period_us` of productive time (resolved to a
+    /// whole number of iterations against the measured iteration cost).
+    Fixed { period_us: f64 },
+    /// Young–Daly optimal interval τ\* = √(2 · cost · MTBF_system),
+    /// MTBF_system = mtbf_per_rank / world — computed from the measured
+    /// per-iteration cost at campaign start.
+    YoungDaly,
+}
+
+impl CheckpointPolicy {
+    /// Parse the CLI/config spelling.  `period_us` feeds `fixed`.
+    pub fn parse(name: &str, period_us: f64) -> Result<CheckpointPolicy> {
+        match name {
+            "off" => Ok(CheckpointPolicy::Off),
+            "fixed" => Ok(CheckpointPolicy::Fixed { period_us }),
+            "young-daly" | "yd" => Ok(CheckpointPolicy::YoungDaly),
+            other => Err(anyhow!(
+                "unknown checkpoint policy `{other}` (expected off | fixed | young-daly)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CheckpointPolicy::Off => "off",
+            CheckpointPolicy::Fixed { .. } => "fixed",
+            CheckpointPolicy::YoungDaly => "young-daly",
+        }
+    }
+}
+
+/// The campaign knobs a [`Scenario`] carries (`iters = 0` = no
+/// campaign — the default is inert, keeping `Scenario::default()`
+/// neutral).  Validation follows the repo's inert-combination policy:
+/// knobs that nothing would read are rejected, not ignored.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CampaignSpec {
+    /// Committed iterations the campaign must reach (0 = campaign off).
+    pub iters: usize,
+    /// Per-rank mean time between failures, µs (0 = fault-free).
+    pub mtbf_us: f64,
+    /// Seed of the crash stream and the repair-time draws.
+    pub seed: u64,
+    pub policy: CheckpointPolicy,
+    /// Cost of writing one checkpoint, µs.
+    pub ckpt_cost_us: f64,
+    /// Mean repair time of a crashed rank, µs (the actual draw is
+    /// uniform in [0.5, 1.5) × mean, seeded).
+    pub repair_us: f64,
+}
+
+impl CampaignSpec {
+    pub fn is_off(&self) -> bool {
+        self.iters == 0
+    }
+
+    /// Surface-independent range/consistency checks (part of
+    /// `Scenario::validate`, same funnel as the fault knobs).
+    pub fn validate(&self) -> Result<()> {
+        if self.iters == 0 {
+            ensure!(
+                self == &CampaignSpec::default(),
+                "campaign knobs without campaign iterations are inert — set iters too"
+            );
+            return Ok(());
+        }
+        ensure!(
+            self.mtbf_us.is_finite() && self.mtbf_us >= 0.0,
+            "campaign mtbf must be finite and >= 0 us (got {})",
+            self.mtbf_us
+        );
+        ensure!(
+            self.ckpt_cost_us.is_finite() && self.ckpt_cost_us >= 0.0,
+            "checkpoint cost must be finite and >= 0 us (got {})",
+            self.ckpt_cost_us
+        );
+        ensure!(
+            self.repair_us.is_finite() && self.repair_us >= 0.0,
+            "repair time must be finite and >= 0 us (got {})",
+            self.repair_us
+        );
+        if self.mtbf_us > 0.0 {
+            ensure!(
+                self.repair_us > 0.0,
+                "a fault-driven campaign needs repair_us > 0 (the crashed rank must \
+                 eventually rejoin)"
+            );
+        } else {
+            ensure!(
+                self.repair_us == 0.0,
+                "repair time without an MTBF is inert — set mtbf_us too"
+            );
+        }
+        match self.policy {
+            CheckpointPolicy::Off => ensure!(
+                self.ckpt_cost_us == 0.0,
+                "checkpoint cost without a checkpoint policy is inert — pick fixed or \
+                 young-daly"
+            ),
+            CheckpointPolicy::Fixed { period_us } => {
+                ensure!(
+                    period_us.is_finite() && period_us > 0.0,
+                    "fixed checkpoint period must be finite and > 0 us (got {period_us})"
+                );
+                ensure!(self.ckpt_cost_us > 0.0, "a checkpoint policy needs a cost > 0 us");
+            }
+            CheckpointPolicy::YoungDaly => {
+                ensure!(self.ckpt_cost_us > 0.0, "a checkpoint policy needs a cost > 0 us");
+                ensure!(
+                    self.mtbf_us > 0.0,
+                    "young-daly needs an MTBF to optimize against (mtbf_us > 0)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The outcome of a whole training campaign.  All `SimTime` buckets
+/// conserve the clock exactly: `productive + rollback_lost + recovery +
+/// rejoin_rebuild + checkpoint_overhead == makespan`.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub strategy: String,
+    pub world: usize,
+    /// Committed iterations (== the spec's target on success).
+    pub committed: usize,
+    /// Iterations actually run, including replays of rolled-back work.
+    pub attempted: usize,
+    /// Commits discarded by rollbacks.
+    pub discarded: usize,
+    pub crashes: usize,
+    pub rejoins: usize,
+    /// Arrivals suppressed because a rank was already down (or a rejoin
+    /// barrier was in progress) — at most one concurrent failure.
+    pub suppressed: usize,
+    pub checkpoints: usize,
+    /// Resolved checkpoint interval, µs (0 = checkpointing off).
+    pub checkpoint_interval_us: f64,
+    pub makespan: SimTime,
+    pub productive: SimTime,
+    pub rollback_lost: SimTime,
+    /// Detect + backoff + shrink-rebuild time inside crashed iterations.
+    pub recovery: SimTime,
+    pub rejoin_rebuild: SimTime,
+    pub checkpoint_overhead: SimTime,
+    /// Images of committed steps (world-at-commit × per-GPU batch each).
+    pub images: f64,
+    pub goodput_imgs_per_sec: f64,
+    pub effective_iters_per_sec: f64,
+    /// Fault-free throughput at the full world.
+    pub fault_free_imgs_per_sec: f64,
+    /// Fault-free throughput at world − 1 (0.0 if never visited).
+    pub degraded_imgs_per_sec: f64,
+    pub min_world: usize,
+    /// `(time, world)` at every world-size change, starting `(0, world)`.
+    pub world_timeline: Vec<(SimTime, usize)>,
+    /// Engine events actually executed (cache misses, crashes, rejoins).
+    pub engine_events: u64,
+    /// Representative trace when a `TraceGuard` was active: the first
+    /// crashed iteration's, or the first plain iteration's.
+    pub trace: Option<Arc<TraceReport>>,
+}
+
+/// Byte-level equality for the determinism harness: every scalar field
+/// plus the trace compared by its Chrome JSON bytes.
+impl PartialEq for CampaignReport {
+    fn eq(&self, o: &Self) -> bool {
+        let trace_eq = match (&self.trace, &o.trace) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.chrome_json == b.chrome_json,
+            _ => false,
+        };
+        self.strategy == o.strategy
+            && self.world == o.world
+            && self.committed == o.committed
+            && self.attempted == o.attempted
+            && self.discarded == o.discarded
+            && self.crashes == o.crashes
+            && self.rejoins == o.rejoins
+            && self.suppressed == o.suppressed
+            && self.checkpoints == o.checkpoints
+            && self.checkpoint_interval_us == o.checkpoint_interval_us
+            && self.makespan == o.makespan
+            && self.productive == o.productive
+            && self.rollback_lost == o.rollback_lost
+            && self.recovery == o.recovery
+            && self.rejoin_rebuild == o.rejoin_rebuild
+            && self.checkpoint_overhead == o.checkpoint_overhead
+            && self.images == o.images
+            && self.goodput_imgs_per_sec == o.goodput_imgs_per_sec
+            && self.effective_iters_per_sec == o.effective_iters_per_sec
+            && self.fault_free_imgs_per_sec == o.fault_free_imgs_per_sec
+            && self.degraded_imgs_per_sec == o.degraded_imgs_per_sec
+            && self.min_world == o.min_world
+            && self.world_timeline == o.world_timeline
+            && self.engine_events == o.engine_events
+            && trace_eq
+    }
+}
+
+impl CampaignReport {
+    /// The non-productive clock: everything a fault-free campaign would
+    /// not have paid.
+    pub fn overhead(&self) -> SimTime {
+        self.rollback_lost + self.recovery + self.rejoin_rebuild + self.checkpoint_overhead
+    }
+
+    /// Deterministic JSON document (the CI `--report` artifact).
+    pub fn to_json(&self) -> Json {
+        let timeline = Json::Arr(
+            self.world_timeline
+                .iter()
+                .map(|&(t, w)| Json::Arr(vec![json::num(t.as_us()), json::num(w as f64)]))
+                .collect(),
+        );
+        json::obj(vec![
+            ("schema", json::s("mpi-dnn-train/campaign/v1")),
+            ("strategy", json::s(&self.strategy)),
+            ("world", json::num(self.world as f64)),
+            ("committed", json::num(self.committed as f64)),
+            ("attempted", json::num(self.attempted as f64)),
+            ("discarded", json::num(self.discarded as f64)),
+            ("crashes", json::num(self.crashes as f64)),
+            ("rejoins", json::num(self.rejoins as f64)),
+            ("suppressed", json::num(self.suppressed as f64)),
+            ("checkpoints", json::num(self.checkpoints as f64)),
+            ("checkpoint_interval_us", json::num(self.checkpoint_interval_us)),
+            ("makespan_us", json::num(self.makespan.as_us())),
+            ("productive_us", json::num(self.productive.as_us())),
+            ("rollback_lost_us", json::num(self.rollback_lost.as_us())),
+            ("recovery_us", json::num(self.recovery.as_us())),
+            ("rejoin_rebuild_us", json::num(self.rejoin_rebuild.as_us())),
+            ("checkpoint_overhead_us", json::num(self.checkpoint_overhead.as_us())),
+            ("images", json::num(self.images)),
+            ("goodput_imgs_per_sec", json::num(self.goodput_imgs_per_sec)),
+            ("effective_iters_per_sec", json::num(self.effective_iters_per_sec)),
+            ("fault_free_imgs_per_sec", json::num(self.fault_free_imgs_per_sec)),
+            ("degraded_imgs_per_sec", json::num(self.degraded_imgs_per_sec)),
+            ("min_world", json::num(self.min_world as f64)),
+            ("engine_events", json::num(self.engine_events as f64)),
+            ("world_timeline", timeline),
+        ])
+    }
+}
+
+/// The fault-free steady state is world-determined, so the campaign
+/// caches one plain iteration per visited world size ({full, full−1})
+/// instead of re-simulating N identical iterations.
+struct CachedIter {
+    iter: SimTime,
+    imgs_per_sec: f64,
+    trace: Option<Arc<TraceReport>>,
+}
+
+/// Hard ceiling on replayed work: a campaign that attempts 64× its
+/// target plus slack is thrashing (rollback outpacing progress — e.g.
+/// MTBF far below the iteration time), which is a configuration error,
+/// not a result.
+fn attempt_ceiling(iters: usize) -> usize {
+    iters.saturating_mul(64).saturating_add(1024)
+}
+
+/// Run a full training campaign of `sc.campaign` over `strategy`.
+///
+/// The per-iteration scenario is `sc` with the campaign surface
+/// stripped (campaign spec, fault plan, rejoin knob) — drawn crashes
+/// re-enter through per-iteration `FaultPlan`s carrying `sc.fault`'s
+/// detection/recovery knobs, exactly like a hand-written plan would.
+pub fn run_campaign(
+    strategy: &dyn Strategy,
+    ws: &WorldSpec,
+    sc: &Scenario,
+) -> Result<CampaignReport> {
+    let spec = sc.campaign.clone();
+    spec.validate()?;
+    ensure!(spec.iters > 0, "a campaign needs iters > 0 (set --campaign-iters)");
+    ensure!(ws.world >= 2, "a campaign needs a distributed run (world {} < 2)", ws.world);
+    if spec.mtbf_us > 0.0 {
+        ensure!(
+            ws.world >= 3,
+            "a fault-driven campaign needs world >= 3 (crash recovery rebuilds over \
+             the survivors)"
+        );
+    }
+    let full = ws.world;
+    let knobs = sc.fault.clone();
+    let mut sc_iter = sc.clone();
+    sc_iter.campaign = CampaignSpec::default();
+    sc_iter.fault = FaultPlan::default();
+    sc_iter.rejoin_rebuild_us = 0.0;
+
+    // the fault-free steady state is world-determined: one plain run
+    // per visited world size ({full, full−1}) serves the whole campaign
+    fn run_plain<'a>(
+        cache: &'a mut [Option<CachedIter>; 2],
+        events: &mut u64,
+        strategy: &dyn Strategy,
+        ws: &WorldSpec,
+        sc_iter: &Scenario,
+        full: usize,
+        w: usize,
+    ) -> Result<&'a CachedIter> {
+        let slot = if w == full { 0 } else { 1 };
+        if cache[slot].is_none() {
+            let mut ws_w = ws.clone();
+            ws_w.world = w;
+            let r = strategy.iteration_in(&ws_w, sc_iter)?;
+            *events += r.engine_events;
+            cache[slot] =
+                Some(CachedIter { iter: r.iter, imgs_per_sec: r.imgs_per_sec, trace: r.trace });
+        }
+        Ok(cache[slot].as_ref().expect("just filled"))
+    }
+
+    let mut engine_events: u64 = 0;
+    let mut cache: [Option<CachedIter>; 2] = [None, None]; // [full, full−1]
+
+    // measured per-iteration cost at the full world: the checkpoint
+    // policies' input and the empty-campaign identity's unit
+    let base = run_plain(&mut cache, &mut engine_events, strategy, ws, &sc_iter, full, full)?;
+    let base_iter = base.iter;
+    let fault_free_rate = base.imgs_per_sec;
+    let plain_trace = base.trace.clone();
+    ensure!(base_iter > SimTime::ZERO, "degenerate iteration: zero duration");
+
+    // resolve the checkpoint policy to a whole number of iterations
+    let tau_us = match spec.policy {
+        CheckpointPolicy::Off => f64::INFINITY,
+        CheckpointPolicy::Fixed { period_us } => period_us,
+        CheckpointPolicy::YoungDaly => {
+            (2.0 * spec.ckpt_cost_us * (spec.mtbf_us / full as f64)).sqrt()
+        }
+    };
+    let (interval_iters, interval_us) = if tau_us.is_finite() {
+        let n = (tau_us / base_iter.as_us()).round().max(1.0) as usize;
+        (n, n as f64 * base_iter.as_us())
+    } else {
+        (usize::MAX, 0.0)
+    };
+
+    let mut stream = FaultStream::new(full, spec.mtbf_us, spec.seed);
+    let mut repair_rng = Rng::new(spec.seed ^ 0x4E4A_0123);
+
+    let mut t = SimTime::ZERO;
+    let (mut committed, mut attempted, mut discarded) = (0usize, 0usize, 0usize);
+    let (mut crashes, mut rejoins, mut suppressed, mut checkpoints) = (0usize, 0usize, 0usize, 0);
+    let mut productive = SimTime::ZERO;
+    let mut rollback_lost = SimTime::ZERO;
+    let mut recovery = SimTime::ZERO;
+    let mut rejoin_rebuild = SimTime::ZERO;
+    let mut checkpoint_overhead = SimTime::ZERO;
+    let mut images = 0.0f64;
+    // productive span + images of each commit since the last checkpoint
+    // — exactly what a crash rolls back
+    let mut since_ckpt: Vec<(SimTime, f64)> = Vec::new();
+    let mut down: Option<SimTime> = None; // repair-completion time
+    let mut min_world = full;
+    let mut world_timeline = vec![(SimTime::ZERO, full)];
+    let mut crash_trace: Option<Arc<TraceReport>> = None;
+
+    while committed < spec.iters {
+        attempted += 1;
+        ensure!(
+            attempted <= attempt_ceiling(spec.iters),
+            "campaign is thrashing: {attempted} attempts for {} targets (MTBF {} us \
+             below the iteration time?)",
+            spec.iters,
+            spec.mtbf_us
+        );
+        let rejoining = matches!(down, Some(at) if t >= at);
+        let w = if down.is_some() && !rejoining { full - 1 } else { full };
+
+        // drawn arrivals landing in this iteration's fault-free window;
+        // only one fires, and none while degraded or during a rejoin
+        // barrier (at most one concurrent failure)
+        let window =
+            run_plain(&mut cache, &mut engine_events, strategy, ws, &sc_iter, full, w)?.iter;
+        let mut crash: Option<(usize, f64)> = None;
+        if let Some(st) = stream.as_mut() {
+            while st.peek_us() < (t + window).as_us() {
+                let (rank, at_us) = st.pop();
+                if down.is_some() || rejoining || crash.is_some() {
+                    suppressed += 1;
+                    continue;
+                }
+                // arrivals that fell into non-iteration spans (checkpoint
+                // writes, recovery tails) fire at the next iteration start
+                crash = Some((rank, (at_us - t.as_us()).max(1.0)));
+            }
+        }
+
+        let t_start = t;
+        if rejoining {
+            // --- elastic rejoin: grow-back rebuild to the full world ---
+            let mut sc_r = sc_iter.clone();
+            sc_r.rejoin_rebuild_us = knobs.rebuild_us.max(1e-3);
+            let r = strategy.iteration_in(ws, &sc_r)?;
+            engine_events += r.engine_events;
+            let span = r.iter;
+            t += span;
+            // the rebuild overlaps compute, so only the excess over the
+            // fault-free full-world iteration is grow-back cost
+            let extra = span.saturating_sub(base_iter);
+            rejoin_rebuild += extra;
+            let prod = span - extra;
+            productive += prod;
+            let imgs = full as f64 * ws.batch_per_gpu as f64;
+            images += imgs;
+            since_ckpt.push((prod, imgs));
+            committed += 1;
+            rejoins += 1;
+            down = None;
+            world_timeline.push((t_start, full));
+        } else if let Some((rank, at_us)) = crash {
+            // --- rollback to the last checkpoint ---
+            for (span, imgs) in since_ckpt.drain(..) {
+                productive = productive - span;
+                rollback_lost += span;
+                images -= imgs;
+                committed -= 1;
+                discarded += 1;
+            }
+            // --- the crashed iteration: PR 8 shrink recovery; its
+            // replayed collectives complete over world−1 and the step
+            // commits as the first recomputed one ---
+            let mut sc_f = sc_iter.clone();
+            sc_f.fault = FaultPlan::crash_with_knobs_of(&knobs, rank, at_us);
+            let r = strategy.iteration_in(ws, &sc_f)?;
+            engine_events += r.engine_events;
+            let f = r.fault.ok_or_else(|| anyhow!("crashed iteration returned no FaultReport"))?;
+            if crash_trace.is_none() {
+                crash_trace = r.trace.clone();
+            }
+            let span = r.iter;
+            t += span;
+            let rec = f.recover.min(span);
+            recovery += rec;
+            let prod = span - rec;
+            productive += prod;
+            let imgs = (full - 1) as f64 * ws.batch_per_gpu as f64;
+            images += imgs;
+            since_ckpt.push((prod, imgs));
+            committed += 1;
+            crashes += 1;
+            min_world = min_world.min(full - 1);
+            world_timeline.push((t_start + f.failed_at, full - 1));
+            // seeded repair draw: uniform in [0.5, 1.5) × mean
+            let repair = SimTime::from_us(spec.repair_us * (0.5 + repair_rng.next_f64()));
+            down = Some(t + repair);
+        } else {
+            // --- plain iteration at the current world ---
+            let c = run_plain(&mut cache, &mut engine_events, strategy, ws, &sc_iter, full, w)?;
+            let span = c.iter;
+            t += span;
+            productive += span;
+            let imgs = w as f64 * ws.batch_per_gpu as f64;
+            images += imgs;
+            since_ckpt.push((span, imgs));
+            committed += 1;
+        }
+
+        // --- checkpoint policy: pay the cost every `interval` commits ---
+        if since_ckpt.len() >= interval_iters {
+            let cost = SimTime::from_us(spec.ckpt_cost_us);
+            t += cost;
+            checkpoint_overhead += cost;
+            checkpoints += 1;
+            since_ckpt.clear();
+        }
+    }
+
+    let makespan = t;
+    // clock conservation: every nanosecond is attributed exactly once
+    ensure!(
+        productive + rollback_lost + recovery + rejoin_rebuild + checkpoint_overhead == makespan,
+        "campaign clock leak: buckets do not sum to the makespan"
+    );
+    ensure!(committed == spec.iters, "campaign ended at {committed}/{} commits", spec.iters);
+
+    let degraded_rate = match &cache[1] {
+        Some(c) => c.imgs_per_sec,
+        None => 0.0,
+    };
+    Ok(CampaignReport {
+        strategy: strategy.name(),
+        world: full,
+        committed,
+        attempted,
+        discarded,
+        crashes,
+        rejoins,
+        suppressed,
+        checkpoints,
+        checkpoint_interval_us: interval_us,
+        makespan,
+        productive,
+        rollback_lost,
+        recovery,
+        rejoin_rebuild,
+        checkpoint_overhead,
+        images,
+        goodput_imgs_per_sec: images / makespan.as_secs(),
+        effective_iters_per_sec: committed as f64 / makespan.as_secs(),
+        fault_free_imgs_per_sec: fault_free_rate,
+        degraded_imgs_per_sec: degraded_rate,
+        min_world,
+        world_timeline,
+        engine_events,
+        trace: crash_trace.or(plain_trace),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::comm::MpiFlavor;
+    use crate::models::mobilenet::mobilenet_v1;
+    use crate::strategies::Horovod;
+
+    fn ws(world: usize) -> WorldSpec {
+        WorldSpec::new(presets::ri2(), mobilenet_v1(), world)
+    }
+
+    fn campaign_sc(spec: CampaignSpec) -> Scenario {
+        Scenario { campaign: spec, ..Scenario::default() }
+    }
+
+    #[test]
+    fn empty_campaign_makespan_is_n_plain_iterations_exactly() {
+        let s = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let n = 37;
+        let sc = campaign_sc(CampaignSpec { iters: n, ..CampaignSpec::default() });
+        let r = run_campaign(&s, &ws(8), &sc).expect("campaign runs");
+        let one = s.iteration_in(&ws(8), &Scenario::default()).expect("plain");
+        assert_eq!(r.makespan.0, one.iter.0 * n as u64, "bit-identical to N plain iterations");
+        assert_eq!(r.productive, r.makespan);
+        assert_eq!(r.overhead(), SimTime::ZERO);
+        assert_eq!((r.crashes, r.rejoins, r.checkpoints), (0, 0, 0));
+    }
+
+    #[test]
+    fn young_daly_interval_follows_the_square_root_law() {
+        // τ* = √(2·C·M), M = mtbf/world: C = 500 µs, mtbf = 8e5 µs,
+        // world 8 ⇒ M = 1e5 ⇒ τ* = 10_000 µs
+        let s = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let spec = CampaignSpec {
+            iters: 20,
+            mtbf_us: 800_000.0,
+            seed: 11,
+            policy: CheckpointPolicy::YoungDaly,
+            ckpt_cost_us: 500.0,
+            repair_us: 10_000.0,
+        };
+        let r = run_campaign(&s, &ws(8), &campaign_sc(spec)).expect("campaign runs");
+        let one = s.iteration_in(&ws(8), &Scenario::default()).unwrap().iter.as_us();
+        let expect = (10_000.0f64 / one).round().max(1.0) * one;
+        assert!(
+            (r.checkpoint_interval_us - expect).abs() < 1e-6,
+            "interval {} != √(2CM) rounded to iterations {expect}",
+            r.checkpoint_interval_us
+        );
+    }
+
+    #[test]
+    fn crashes_shrink_then_rejoin_grows_back() {
+        let s = Horovod::mpi(MpiFlavor::Mvapich2GdrOpt);
+        let spec = CampaignSpec {
+            iters: 40,
+            mtbf_us: 40_000.0, // aggressive: several crashes over the run
+            seed: 3,
+            policy: CheckpointPolicy::Fixed { period_us: 5_000.0 },
+            ckpt_cost_us: 200.0,
+            repair_us: 4_000.0,
+        };
+        let r = run_campaign(&s, &ws(8), &campaign_sc(spec)).expect("campaign runs");
+        assert!(r.crashes >= 1, "MTBF regime must produce crashes (got {})", r.crashes);
+        assert!(r.rejoins >= 1, "repaired ranks must rejoin (got {})", r.rejoins);
+        assert_eq!(r.min_world, 7, "one concurrent failure: world oscillates 8 ↔ 7");
+        assert_eq!(r.committed, 40);
+        assert_eq!(
+            r.productive + r.rollback_lost + r.recovery + r.rejoin_rebuild
+                + r.checkpoint_overhead,
+            r.makespan,
+            "clock conservation"
+        );
+        // the timeline records every shrink and grow-back
+        let shrinks = r.world_timeline.iter().filter(|&&(_, w)| w == 7).count();
+        let grows = r.world_timeline.iter().filter(|&&(_, w)| w == 8).count();
+        assert_eq!(shrinks, r.crashes);
+        assert_eq!(grows, 1 + r.rejoins);
+        // goodput bound: no campaign outruns the best fault-free rate
+        let bound = r.fault_free_imgs_per_sec.max(r.degraded_imgs_per_sec);
+        assert!(r.goodput_imgs_per_sec <= bound * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn campaign_spec_validation_rejects_inert_combinations() {
+        assert!(CampaignSpec::default().validate().is_ok());
+        // knobs without iters are inert
+        let s = CampaignSpec { mtbf_us: 1e5, ..CampaignSpec::default() };
+        assert!(s.validate().is_err());
+        // faults without a repair path
+        let s = CampaignSpec { iters: 10, mtbf_us: 1e5, ..CampaignSpec::default() };
+        assert!(s.validate().is_err());
+        // checkpoint cost without a policy
+        let s = CampaignSpec { iters: 10, ckpt_cost_us: 100.0, ..CampaignSpec::default() };
+        assert!(s.validate().is_err());
+        // young-daly needs an MTBF
+        let s = CampaignSpec {
+            iters: 10,
+            policy: CheckpointPolicy::YoungDaly,
+            ckpt_cost_us: 100.0,
+            ..CampaignSpec::default()
+        };
+        assert!(s.validate().is_err());
+        // a fully specified campaign validates
+        let s = CampaignSpec {
+            iters: 10,
+            mtbf_us: 1e5,
+            seed: 1,
+            policy: CheckpointPolicy::YoungDaly,
+            ckpt_cost_us: 100.0,
+            repair_us: 1e4,
+        };
+        assert!(s.validate().is_ok());
+    }
+}

@@ -485,6 +485,28 @@ impl Engine {
         self.now
     }
 
+    /// [`Engine::run`] with an event-budget watchdog (§Robustness chaos
+    /// invariant: the queue must drain).  Executes identically to `run`
+    /// — same order, same clock — but errors out once more than
+    /// `budget` events execute in this call, turning a scheduling
+    /// livelock (events re-arming events forever) into a diagnosable
+    /// failure instead of a hang.
+    pub fn run_budgeted(&mut self, budget: u64) -> crate::util::error::Result<SimTime> {
+        let start = self.executed;
+        while let Some((at, _seq, kind)) = self.next_event() {
+            self.now = at;
+            self.executed += 1;
+            crate::ensure!(
+                self.executed - start <= budget,
+                "event-queue watchdog tripped: {budget} events executed without draining \
+                 (clock {}) — scheduling livelock",
+                self.now
+            );
+            self.dispatch(kind);
+        }
+        Ok(self.now)
+    }
+
     /// Run until the event queue drains *or* the next event lies past
     /// `deadline` — that event is stashed and replayed by the next
     /// run call, so pausing is exact and order-preserving.  The clock

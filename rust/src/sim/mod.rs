@@ -10,17 +10,19 @@
 //! wall-clock anywhere.
 
 pub mod calq;
+pub mod campaign;
 pub mod engine;
 pub mod fault;
 pub mod time;
 pub mod trace;
 
 pub use calq::CalendarQueue;
+pub use campaign::{run_campaign, CampaignReport, CampaignSpec, CheckpointPolicy};
 pub use engine::{
     Action, Engine, EngineHook, GateId, HookId, JoinId, LaneDriver, LaneSetId, OnDone, ProgId,
     ProgStep, ProgramLanes, ResourceId, ServiceStats, TimerId,
 };
-pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultStream};
 pub use time::SimTime;
 pub use trace::{
     IterationParts, PathBucket, SpanKind, TraceGuard, TraceReport, TraceSpan, Tracer,

@@ -233,6 +233,19 @@ impl Strategy for Baidu {
                 &|ws, sc| self.graph_items(ws, sc),
             );
         }
+        if sc.rejoin_rebuild_us > 0.0 {
+            // elastic rejoin (§Robustness campaign): the grown world's
+            // templates re-form before any ring launches; zero rebuild
+            // never reaches this branch
+            return super::recovery::run_rejoin_collective(
+                self.name(),
+                ws,
+                sc,
+                self.runtime_tax,
+                self.skew_us_per_rank,
+                &|ws, sc| self.graph_items(ws, sc),
+            );
+        }
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));

@@ -536,6 +536,14 @@ impl Strategy for PsStrategy {
             // reaches this branch, so the path below stays bit-identical
             return self.iteration_faulted(ws, sc);
         }
+        if sc.rejoin_rebuild_us > 0.0 {
+            // elastic rejoin (§Robustness campaign): the repaired rank's
+            // worker + parameter server rejoin at the step boundary, so
+            // the shard plan re-spreads over the full world before any
+            // push/pull RPC can issue; zero rebuild never reaches this
+            // branch
+            return self.iteration_rejoin(ws, sc);
+        }
         if ws.world == 1 {
             let iter = SimTime::from_us(ws.compute_time().as_us() * sc.compute_stretch());
             return Ok(IterationReport::from_times(self.name(), ws, iter));
@@ -568,6 +576,47 @@ impl Strategy for PsStrategy {
 }
 
 impl PsStrategy {
+    /// One elastic-rejoin PS iteration (§Robustness campaign): the
+    /// repaired rank's tasks re-register and the shard plan re-spreads
+    /// over the grown world before any RPC issues, so every shard
+    /// exchange's release is offset by the rebuild window.  Workers keep
+    /// computing while the registry settles — the compute side is
+    /// untouched, mirroring the allreduce families' grow-back model.
+    fn iteration_rejoin(&self, ws: &WorldSpec, sc: &Scenario) -> Result<IterationReport> {
+        crate::ensure!(
+            ws.world >= 2,
+            "elastic rejoin needs a distributed run (world {} < 2)",
+            ws.world
+        );
+        let rebuild = SimTime::from_us(sc.rejoin_rebuild_us);
+        let mut sc_run = sc.clone();
+        sc_run.rejoin_rebuild_us = 0.0;
+        let mut engine = Engine::new();
+        let fabric = PsFabric::install_placed(&mut engine, ws.world, ws.cluster.placement());
+        engine.trace_mark(crate::sim::SpanKind::Rebuild, SimTime::ZERO, rebuild);
+        let job = self.schedule_job(ws, &sc_run, &mut engine, &fabric, rebuild)?;
+        engine.run_budgeted(super::recovery::DRAIN_BUDGET)?;
+        let comm_end = job.comm_end(&engine)?.max(rebuild);
+        let trace = JobTrace { comm_end, staging_us: 0.0 };
+        let parts = super::close_iteration_parts(
+            ws,
+            &sc_run,
+            &trace,
+            SimTime::ZERO,
+            self.runtime_tax,
+            self.skew_us_per_rank,
+        );
+        let mut report = IterationReport::from_times(self.name(), ws, parts.iter);
+        report.engine_events = engine.executed();
+        report.resource_util.push(agg_util(&engine, fabric.in_ports(), "ps-nic-in"));
+        report.resource_util.push(agg_util(&engine, fabric.out_ports(), "ps-nic-out"));
+        if let Some(tx) = &job.worker_tx {
+            report.resource_util.push(agg_util(&engine, tx, "worker-mpi-thread"));
+        }
+        report.attach_trace(&mut engine, parts);
+        Ok(report)
+    }
+
     /// One fault-injected PS iteration (§Robustness).  The RPC view of
     /// the shared fault model: a transient link flap FIFO-holds the
     /// port's NIC queues for the window, so in-flight pushes/pulls look

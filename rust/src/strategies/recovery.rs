@@ -44,6 +44,12 @@ use crate::util::error::Result;
 /// (possibly shrunk) world.
 pub(crate) type ItemsFor<'a> = &'a dyn Fn(&WorldSpec, &Scenario) -> Result<Vec<GraphWork>>;
 
+/// Event budget for the recovery/rejoin engine runs: far above any
+/// legitimate single-iteration count (a world-128 fault run executes
+/// ~10M events), so tripping it means a scheduling livelock, not a big
+/// run (§Robustness chaos invariant: the queue must drain).
+pub(crate) const DRAIN_BUDGET: u64 = 100_000_000;
+
 /// Run one fault-injected iteration of an allreduce-family strategy.
 pub(crate) fn run_faulted_collective(
     name: String,
@@ -132,7 +138,7 @@ pub(crate) fn run_faulted_collective(
             })
             .collect();
         let job2 = LaneJob::graphs(&mut e, &res2, sc_run.lanes(), tail, rebuild_end);
-        e.run();
+        e.run_budgeted(DRAIN_BUDGET)?;
 
         // recovery extends the timeline even when no collective was
         // left to replay (crash after the comm phase finished)
@@ -166,7 +172,7 @@ pub(crate) fn run_faulted_collective(
         Ok(report)
     } else {
         // --- transient faults only: the full world survives ---
-        e.run();
+        e.run_budgeted(DRAIN_BUDGET)?;
         let detect = SimTime::from_us(plan.detect_timeout_us);
         for ev in &plan.events {
             let t0 = SimTime::from_us(ev.at_us);
@@ -223,6 +229,52 @@ pub(crate) fn run_faulted_collective(
         });
         Ok(report)
     }
+}
+
+/// Run one elastic-rejoin iteration of an allreduce-family strategy
+/// (§Robustness campaign): the repaired rank rejoins at the iteration
+/// boundary, so the collective templates are re-formed over the grown
+/// (full) world before any collective can launch.  The grow-back
+/// rebuild overlaps compute — survivors keep producing gradients while
+/// the communicator re-forms — so every collective's release is offset
+/// by the rebuild window and the compute side is untouched.  The
+/// rebuild interval rides the recovery track as a `Rebuild` mark, same
+/// as the shrink path's.
+///
+/// Only entered with `sc.rejoin_rebuild_us > 0` and an empty fault plan
+/// — the zero-rebuild guarantee mirrors the empty-plan one and lives in
+/// the callers' routing.
+pub(crate) fn run_rejoin_collective(
+    name: String,
+    ws: &WorldSpec,
+    sc: &Scenario,
+    runtime_tax: f64,
+    skew_us_per_rank: f64,
+    items_for: ItemsFor,
+) -> Result<IterationReport> {
+    crate::ensure!(
+        ws.world >= 2,
+        "elastic rejoin needs a distributed run (world {} < 2)",
+        ws.world
+    );
+    let rebuild = SimTime::from_us(sc.rejoin_rebuild_us);
+    let mut sc_run = sc.clone();
+    sc_run.rejoin_rebuild_us = 0.0;
+
+    let mut e = Engine::new();
+    let res = GraphResources::install_placed(&mut e, ws.world, ws.cluster.placement());
+    let items = items_for(ws, &sc_run)?;
+    e.trace_mark(SpanKind::Rebuild, SimTime::ZERO, rebuild);
+    let job = LaneJob::graphs(&mut e, &res, sc_run.lanes(), items, rebuild);
+    e.run_budgeted(DRAIN_BUDGET)?;
+
+    // the rebuild extends the comm timeline even if no collective runs
+    let comm_end = job.trace(&e)?.comm_end.max(rebuild);
+    let trace = JobTrace { comm_end, staging_us: job.staging_us };
+    let parts =
+        super::close_iteration_parts(ws, &sc_run, &trace, SimTime::ZERO, runtime_tax, skew_us_per_rank);
+    let util = res.utilization(&e);
+    Ok(super::report_with_comm_thread(name, ws, parts, util, &mut e, job.set()))
 }
 
 /// A failed rail's traffic fails over onto the node's surviving rails:

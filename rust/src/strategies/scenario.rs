@@ -25,7 +25,7 @@ use super::{GraphWork, JobTrace, LaneJob, Strategy, WorldSpec};
 use crate::comm::commop::ResourceUse;
 use crate::comm::graph::{GraphOverlay, GraphResources};
 use crate::ensure;
-use crate::sim::{Engine, FaultPlan, SimTime};
+use crate::sim::{CampaignSpec, Engine, FaultPlan, SimTime};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
 
@@ -80,6 +80,17 @@ pub struct Scenario {
     /// empty plan routes every strategy through the exact pre-fault code
     /// path — bit-identical to the plan not existing.
     pub fault: FaultPlan,
+    /// Sustained-failure training campaign (§Robustness campaign):
+    /// `iters > 0` runs N iterations under a seeded MTBF crash stream
+    /// with checkpoint policies and elastic rejoin.  The default (off)
+    /// is inert; `iteration_in` never reads it — the campaign runner
+    /// (`sim::campaign::run_campaign`) is the only consumer.
+    pub campaign: CampaignSpec,
+    /// Grow-back rebuild cost of an elastic-rejoin iteration, µs
+    /// (§Robustness campaign): `> 0` re-forms the collective templates /
+    /// shard plan over the grown world before any comm launches.  Set by
+    /// the campaign runner; `0` routes the exact plain path.
+    pub rejoin_rebuild_us: f64,
 }
 
 impl Default for Scenario {
@@ -98,6 +109,8 @@ impl Default for Scenario {
             depth: 0,
             rpc_window: 0,
             fault: FaultPlan::default(),
+            campaign: CampaignSpec::default(),
+            rejoin_rebuild_us: 0.0,
         }
     }
 }
@@ -205,6 +218,40 @@ impl Scenario {
             ensure!(
                 self.second_job_offset_us == 0.0,
                 "second_job_offset_us without second_job is inert — enable second_job too"
+            );
+        }
+        // §Robustness campaign knobs: the same inert-combination policy.
+        // Campaign and rejoin surfaces only compose with scenarios that
+        // carry a fault surface — a two-job run or an explicit fault
+        // plan would silently race the campaign's own clock/stream.
+        self.campaign.validate()?;
+        if !self.campaign.is_off() {
+            ensure!(
+                self.fault.is_empty(),
+                "a campaign draws its own seeded fault stream — an explicit fault plan \
+                 would race it (drop the --fault events; the plan's recovery knobs still \
+                 apply to drawn crashes)"
+            );
+            ensure!(
+                !self.second_job,
+                "campaign + second_job cannot combine: the campaign clock owns the fabric"
+            );
+        }
+        ensure!(
+            self.rejoin_rebuild_us.is_finite() && self.rejoin_rebuild_us >= 0.0,
+            "rejoin rebuild cost must be finite and >= 0 us (got {})",
+            self.rejoin_rebuild_us
+        );
+        if self.rejoin_rebuild_us > 0.0 {
+            ensure!(
+                self.fault.is_empty(),
+                "rejoin rebuild and an injected fault plan cannot share an iteration — \
+                 the grow-back happens at a clean step boundary"
+            );
+            ensure!(
+                !self.second_job,
+                "rejoin rebuild + second_job cannot combine: the two-job runner never \
+                 reads the rejoin surface"
             );
         }
         self.fault.validate_knobs()

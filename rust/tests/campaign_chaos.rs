@@ -1,0 +1,198 @@
+//! §Robustness chaos harness: randomized sustained-failure training
+//! campaigns across every strategy family, pinned to five invariants —
+//!
+//!  1. **no deadlock** — every campaign completes under the engine's
+//!     drain watchdog (`run_campaign` returns `Ok`, never hangs);
+//!  2. **conservation across rebuilds** — the campaign clock is
+//!     conserved exactly: productive + rollback + recovery + rejoin
+//!     rebuild + checkpoint overhead == makespan, and every attempt is
+//!     either committed or discarded, never lost;
+//!  3. **goodput bound** — goodput never exceeds the best fault-free
+//!     throughput of any visited world size;
+//!  4. **same-seed bit-determinism** — re-running a config reproduces
+//!     the `CampaignReport` byte-for-byte (trace included);
+//!  5. **empty-campaign pin** — a fault-free, checkpoint-free campaign
+//!     of N iterations is bit-identical to N plain iterations.
+
+use mpi_dnn_train::cluster::presets;
+use mpi_dnn_train::models::mobilenet;
+use mpi_dnn_train::sim::trace::validate_chrome_json;
+use mpi_dnn_train::sim::{run_campaign, CampaignReport, CampaignSpec, CheckpointPolicy, TraceGuard};
+use mpi_dnn_train::strategies::{all_strategies, by_name, Scenario, Strategy, WorldSpec};
+use mpi_dnn_train::util::prng::Rng;
+
+fn ws_at(world: usize) -> WorldSpec {
+    WorldSpec::new(presets::ri2(), mobilenet::mobilenet_v1(), world)
+}
+
+fn campaign_sc(spec: CampaignSpec) -> Scenario {
+    let sc = Scenario { campaign: spec, ..Scenario::default() };
+    sc.validate().expect("generated specs must be valid");
+    sc
+}
+
+/// The five-invariant check every chaos campaign runs through.
+fn assert_invariants(r: &CampaignReport, spec: &CampaignSpec, label: &str) {
+    // invariant 2a: exact clock conservation across all buckets
+    let buckets = r.productive.0
+        + r.rollback_lost.0
+        + r.recovery.0
+        + r.rejoin_rebuild.0
+        + r.checkpoint_overhead.0;
+    assert_eq!(
+        buckets, r.makespan.0,
+        "{label}: clock not conserved (buckets {buckets} vs makespan {})",
+        r.makespan.0
+    );
+    // invariant 2b: every attempt commits or is discarded, never lost
+    assert_eq!(
+        r.attempted,
+        r.committed + r.discarded,
+        "{label}: attempts leaked (attempted {} != committed {} + discarded {})",
+        r.attempted,
+        r.committed,
+        r.discarded
+    );
+    assert_eq!(r.committed, spec.iters, "{label}: campaign must reach its target");
+    // invariant 3: goodput never beats the best fault-free rate of any
+    // visited world (PS throughput is not monotone in world size)
+    let bound = r.fault_free_imgs_per_sec.max(r.degraded_imgs_per_sec);
+    assert!(
+        r.goodput_imgs_per_sec <= bound * (1.0 + 1e-9),
+        "{label}: goodput {} exceeds the fault-free bound {bound}",
+        r.goodput_imgs_per_sec
+    );
+    // structural sanity: the timeline opens at (0, world), rejoins never
+    // outnumber crashes, and a fault-free campaign has neither
+    assert_eq!(r.world_timeline.first(), Some(&(mpi_dnn_train::sim::SimTime::ZERO, r.world)));
+    assert!(r.rejoins <= r.crashes, "{label}: {} rejoins > {} crashes", r.rejoins, r.crashes);
+    if spec.mtbf_us == 0.0 {
+        assert_eq!((r.crashes, r.rejoins, r.discarded), (0, 0, 0), "{label}: phantom faults");
+    }
+}
+
+/// Invariant 5, pinned per strategy: an `iters`-long campaign with no
+/// faults and no checkpoints is the same virtual time as `iters` plain
+/// iterations — bit-identical, not approximately.
+#[test]
+fn empty_campaign_is_bit_identical_to_plain_iterations_for_every_strategy() {
+    let iters = 23usize;
+    let mut covered = 0;
+    for s in all_strategies() {
+        let ws = ws_at(8);
+        let plain = match s.iteration(&ws) {
+            Ok(r) => r,
+            Err(_) => continue, // family unavailable on this fabric
+        };
+        let spec = CampaignSpec { iters, seed: 5, ..CampaignSpec::default() };
+        let r = run_campaign(s.as_ref(), &ws, &campaign_sc(spec.clone())).unwrap();
+        assert_invariants(&r, &spec, &s.name());
+        assert_eq!(
+            r.makespan.0,
+            plain.iter.0 * iters as u64,
+            "{}: empty campaign must be exactly {iters} plain iterations",
+            s.name()
+        );
+        assert_eq!(r.productive, r.makespan, "{}: all time is productive", s.name());
+        assert_eq!(r.checkpoints, 0);
+        covered += 1;
+    }
+    assert!(covered >= 6, "only {covered} strategies ran the empty-campaign pin");
+}
+
+/// The chaos sweep: ≥100 randomized campaigns — world, strategy, length,
+/// failure rate, checkpoint policy and repair time all drawn from a
+/// seeded stream — each checked against the invariants, with every 10th
+/// config re-run and compared byte-for-byte (invariant 4).
+#[test]
+fn randomized_campaigns_hold_the_chaos_invariants() {
+    let strategies = all_strategies();
+    let mut ran = 0usize;
+    let mut config = 0usize;
+    while ran < 110 {
+        assert!(config < 400, "too many unavailable configs ({ran} of 110 ran)");
+        let i = config;
+        config += 1;
+        let mut rng = Rng::new(0xC4A0_5EED ^ (i as u64).wrapping_mul(0x9E37_79B9));
+        let s = &strategies[i % strategies.len()];
+        let world = 4 + rng.next_below(5) as usize; // 4..=8
+        let ws = ws_at(world);
+        let base = match s.iteration(&ws) {
+            Ok(r) => r,
+            Err(_) => continue, // family unavailable at this point
+        };
+        let iter_us = base.iter.as_us();
+        let iters = 10 + rng.next_below(31) as usize; // 10..=40
+        let faulty = rng.next_below(4) != 0; // 3 in 4 campaigns see crashes
+        let mtbf_us = if faulty {
+            // system MTBF of 5–50 iterations, expressed per rank
+            (5.0 + 45.0 * rng.next_f64()) * iter_us * world as f64
+        } else {
+            0.0
+        };
+        let repair_us = if faulty { (2.0 + 10.0 * rng.next_f64()) * iter_us } else { 0.0 };
+        let policy = match rng.next_below(3) {
+            0 => CheckpointPolicy::Off,
+            1 => CheckpointPolicy::Fixed { period_us: (0.5 + 4.0 * rng.next_f64()) * iter_us },
+            // young-daly needs an MTBF to optimize against
+            _ if faulty => CheckpointPolicy::YoungDaly,
+            _ => CheckpointPolicy::Fixed { period_us: (0.5 + 4.0 * rng.next_f64()) * iter_us },
+        };
+        let ckpt_cost_us = match policy {
+            CheckpointPolicy::Off => 0.0,
+            _ => (0.2 + 1.5 * rng.next_f64()) * iter_us,
+        };
+        let spec = CampaignSpec {
+            iters,
+            mtbf_us,
+            seed: rng.next_u64(),
+            policy,
+            ckpt_cost_us,
+            repair_us,
+        };
+        let label = format!("config {i} ({} world {world} iters {iters})", s.name());
+        // invariant 1: completes under the drain watchdog
+        let r = run_campaign(s.as_ref(), &ws, &campaign_sc(spec.clone()))
+            .unwrap_or_else(|e| panic!("{label}: campaign failed: {e:#}"));
+        assert_invariants(&r, &spec, &label);
+        // invariant 4 on a sample: same config ⇒ byte-identical report
+        if ran % 10 == 0 {
+            let again = run_campaign(s.as_ref(), &ws, &campaign_sc(spec.clone())).unwrap();
+            assert!(r == again, "{label}: same-seed re-run diverged");
+        }
+        ran += 1;
+    }
+}
+
+/// Satellite 3: seeded fault-stream determinism per strategy family —
+/// the same seed and config produce a byte-identical `CampaignReport`,
+/// JSON export and Chrome trace across two traced runs.
+#[test]
+fn traced_campaigns_are_seed_deterministic_per_family() {
+    for name in ["horovod-mpi-opt", "baidu", "grpc+mpi"] {
+        let s = by_name(name).unwrap();
+        let ws = ws_at(6);
+        let spec = CampaignSpec {
+            iters: 18,
+            mtbf_us: 40_000.0,
+            seed: 77,
+            policy: CheckpointPolicy::YoungDaly,
+            ckpt_cost_us: 400.0,
+            repair_us: 6_000.0,
+        };
+        let run = || {
+            let _t = TraceGuard::new();
+            run_campaign(s.as_ref(), &ws, &campaign_sc(spec.clone())).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert!(a == b, "{name}: same-seed campaign reports diverged");
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{name}: JSON diverged");
+        let ta = a.trace.as_ref().unwrap_or_else(|| panic!("{name}: no trace attached"));
+        let tb = b.trace.as_ref().unwrap();
+        assert_eq!(ta.chrome_json, tb.chrome_json, "{name}: Chrome exports diverged");
+        validate_chrome_json(&ta.chrome_json)
+            .unwrap_or_else(|e| panic!("{name}: invalid Chrome export: {e:#}"));
+        assert_invariants(&a, &spec, name);
+    }
+}
